@@ -1,0 +1,55 @@
+//! Quantizer playground — the §V-A distortion study, interactively.
+//!
+//! ```bash
+//! cargo run --release --example quant_playground -- [--size 128] [--trials 20]
+//! ```
+//!
+//! Sweeps every codec over R = 1..6 on i.i.d. and correlated Gaussian
+//! matrices (the Fig. 4/5 workloads), printing per-entry MSE plus the
+//! exact realized bits/entry, and the Theorem 1 predicted error for
+//! UVeQFed.
+
+use uveqfed::data::{correlated_matrix, exp_decay_sigma, gaussian_matrix};
+use uveqfed::metrics::CsvTable;
+use uveqfed::quantizer::{self, measure_distortion};
+use uveqfed::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("quant_playground", "codec distortion sweeps (Figs. 4–5 workloads)")
+        .opt("size", "128", "matrix side")
+        .opt("trials", "20", "averaging trials")
+        .opt("codecs", "uveqfed-l2,uveqfed-l1,qsgd,rotation,subsample", "comma-separated codecs");
+    let args = cli.parse_env();
+    let n = args.get_usize("size");
+    let trials = args.get_usize("trials");
+    let codecs: Vec<&str> = args.get("codecs").split(',').collect();
+
+    for correlated in [false, true] {
+        let label = if correlated { "correlated (ΣHΣᵀ)" } else { "i.i.d." };
+        println!("\n=== {label} Gaussian {n}×{n}, {trials} trials ===");
+        let mut header = vec!["rate".to_string()];
+        header.extend(codecs.iter().map(|c| c.to_string()));
+        let mut table =
+            CsvTable::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for rate in 1..=6 {
+            let mut row = vec![rate as f64];
+            for name in &codecs {
+                let codec = quantizer::by_name(name);
+                let mut mse = 0.0;
+                for t in 0..trials {
+                    let mut h = gaussian_matrix(n, 900 + t as u64);
+                    if correlated {
+                        let sigma = exp_decay_sigma(n, 0.2);
+                        h = correlated_matrix(&h, &sigma, n);
+                    }
+                    mse +=
+                        measure_distortion(codec.as_ref(), &h, rate as f64, 17, t as u64).mse
+                            / trials as f64;
+                }
+                row.push(mse);
+            }
+            table.push(row);
+        }
+        println!("{}", table.to_pretty());
+    }
+}

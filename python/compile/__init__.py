@@ -1,0 +1,5 @@
+"""L2 — build-time JAX model definitions + AOT lowering for UVeQFed.
+
+Never imported at runtime: `make artifacts` runs `python -m compile.aot`
+once, producing HLO-text artifacts the Rust coordinator loads via PJRT.
+"""

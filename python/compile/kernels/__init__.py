@@ -1,0 +1,7 @@
+"""L1 — Pallas kernels (build-time only; lowered into the L2 HLO graphs).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is both the correctness path and the
+only executable lowering in this image. Real-TPU performance is estimated
+structurally (VMEM footprint / op counts) in DESIGN.md §Perf.
+"""

@@ -1,0 +1,107 @@
+"""Fused dense layer (matmul + bias + sigmoid) as a Pallas kernel.
+
+Used for the hidden layer of the MNIST MLP (§V-B architecture). The fusion
+expresses, at kernel level, what XLA would fuse anyway on CPU — but on TPU
+it pins the schedule: x-tile and the full W panel live in VMEM, the matmul
+hits the MXU in bf16-eligible shape, and the sigmoid epilogue runs on the
+VPU before the result ever leaves VMEM.
+
+Grid: 1-D over batch tiles (the paper's layer is 784×50 — W is only 157 KiB
+f32, fitting VMEM whole, so only the batch dimension is tiled).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BATCH_TILE = 128
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    z = x @ w + b[None, :]
+    o_ref[...] = 1.0 / (1.0 + jnp.exp(-z))
+
+
+def _sigmoid_bwd_kernel(da_ref, a_ref, dz_ref):
+    """Fused sigmoid-gradient epilogue: dz = da · a · (1 − a)."""
+    a = a_ref[...]
+    dz_ref[...] = da_ref[...] * a * (1.0 - a)
+
+
+def _pallas_forward(x, w, b, interpret):
+    n, d = x.shape
+    dh = w.shape[1]
+    pad = (-n) % BATCH_TILE
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)], axis=0)
+    npad = x.shape[0]
+    out = pl.pallas_call(
+        _dense_kernel,
+        grid=(npad // BATCH_TILE,),
+        in_specs=[
+            pl.BlockSpec((BATCH_TILE, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, dh), lambda i: (0, 0)),
+            pl.BlockSpec((dh,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BATCH_TILE, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad, dh), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)
+    return out[:n]
+
+
+def _pallas_sigmoid_bwd(da, a, interpret):
+    n, dh = da.shape
+    pad = (-n) % BATCH_TILE
+    if pad:
+        z = jnp.zeros((pad, dh), da.dtype)
+        da = jnp.concatenate([da, z], axis=0)
+        a = jnp.concatenate([a, z], axis=0)
+    npad = da.shape[0]
+    dz = pl.pallas_call(
+        _sigmoid_bwd_kernel,
+        grid=(npad // BATCH_TILE,),
+        in_specs=[
+            pl.BlockSpec((BATCH_TILE, dh), lambda i: (i, 0)),
+            pl.BlockSpec((BATCH_TILE, dh), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BATCH_TILE, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad, dh), jnp.float32),
+        interpret=interpret,
+    )(da, a)
+    return dz[:n]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense_sigmoid(x, w, b, interpret=True):
+    """`sigmoid(x @ w + b)` with batch-tiled Pallas execution.
+
+    Pads the batch to a BATCH_TILE multiple internally; output shape
+    matches the input batch. Differentiable via a custom VJP (Pallas
+    interpret-mode calls have no built-in reverse rule): the backward pass
+    fuses the sigmoid gradient in a second Pallas kernel and leaves the
+    two transport matmuls to XLA.
+    """
+    return _pallas_forward(x, w, b, interpret)
+
+
+def _dense_fwd(x, w, b, interpret):
+    a = _pallas_forward(x, w, b, interpret)
+    return a, (x, w, a)
+
+
+def _dense_bwd(interpret, res, da):
+    x, w, a = res
+    dz = _pallas_sigmoid_bwd(da, a, interpret)
+    dx = dz @ w.T
+    dw = x.T @ dz
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+dense_sigmoid.defvjp(_dense_fwd, _dense_bwd)

@@ -1,0 +1,107 @@
+"""Dithered lattice quantization as a Pallas kernel (UVeQFed steps E2–E3).
+
+The hot spot of UVeQFed's encoder is the per-sub-vector nearest-lattice-
+point search. It is embarrassingly parallel over the M = m/L sub-vectors,
+so the kernel tiles M into VMEM-sized blocks and vectorizes the candidate
+scan across the tile:
+
+    y      = hbar / s + dither              # dithered, scale-normalized
+    l0     = round(y @ Ginv^T)              # Babai rounding
+    l*     = argmin_{o in offsets} ||y - (l0+o) @ G^T||   # exact NN
+    recon  = (l* @ G^T - dither) * s        # subtractive-dither decode
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the 2×2 basis transforms are
+expressed as tile-wide matmuls (MXU-eligible), the offset scan is
+vectorized elementwise work on the VPU, and BlockSpec streams HBM→VMEM in
+`TILE`-row blocks. interpret=True for CPU execution.
+
+The offset search radius is 2 (25 candidates for L=2), matching the Rust
+coordinator's `GenericLattice` so the two implementations are
+interchangeable — `rust/tests/integration_parity.rs` checks agreement on
+the same inputs through the AOT artifact.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Paper §V-A hexagonal lattice, G = [2, 0; 1, 1/sqrt(3)] in MATLAB
+# row-basis notation. We generate the SAME lattice through its
+# Lagrange-reduced basis (1, 1/√3), (1, −1/√3) stored as columns — must
+# match rust lattice::paper_hexagonal (see its doc comment for why).
+HEX_G = np.array(
+    [[1.0, 1.0], [1.0 / np.sqrt(3.0), -1.0 / np.sqrt(3.0)]], dtype=np.float32
+)
+HEX_GINV = np.linalg.inv(HEX_G).astype(np.float32)
+
+# Offset cube {-2..2}^2, fixed order (row-major) — must match the search
+# the reference uses. 25 candidates.
+RADIUS = 2
+OFFSETS = np.array(
+    [[dx, dy] for dx in range(-RADIUS, RADIUS + 1) for dy in range(-RADIUS, RADIUS + 1)],
+    dtype=np.float32,
+)  # [25, 2]
+
+TILE = 512  # rows per VMEM block: 512×2 f32 ≈ 4 KiB per operand
+
+
+def _quant_kernel(hbar_ref, dither_ref, s_ref, g_ref, ginv_ref, off_ref, out_ref):
+    """One TILE×L block: dither, Babai + offset scan, reconstruct."""
+    s = s_ref[0]
+    g = g_ref[...]
+    ginv = ginv_ref[...]
+    offsets = off_ref[...]
+    y = hbar_ref[...] / s + dither_ref[...]          # [T, 2]
+    # Babai rounding in basis coordinates: l0 = round(y @ Ginv^T).
+    l0 = jnp.round(y @ ginv.T)                       # [T, 2]  (MXU 2x2)
+    base_p = l0 @ g.T                                # Babai point
+    # Unrolled masked min-scan over the 25 candidate offsets. Deliberately
+    # NOT argmin + take_along_axis: xla_extension 0.5.1 (the AOT runtime)
+    # miscompiles that gather pattern (~17% wrong lanes); elementwise
+    # selects lower identically everywhere.
+    n_off = offsets.shape[0]
+    best_d = jnp.full(y.shape[:1], jnp.inf, y.dtype)
+    best_p = base_p
+    for k in range(n_off):
+        cand = base_p + (offsets[k] @ g.T)[None, :]  # [T, 2]
+        d = jnp.sum((y - cand) ** 2, axis=-1)        # [T]
+        mask = d < best_d
+        best_d = jnp.where(mask, d, best_d)
+        best_p = jnp.where(mask[:, None], cand, best_p)
+    # Subtractive-dither decode, back to the caller's scale.
+    out_ref[...] = (best_p - dither_ref[...]) * s
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def quantize_hex(hbar, dither, s, interpret=True):
+    """Dithered hex-lattice quantize-and-decode of `[M, 2]` sub-vectors.
+
+    Returns the reconstructed sub-vectors `(Q(hbar/s + z) - z) * s` — i.e.
+    the decoder output *before* the ζ‖h‖ rescale. `M` must be a multiple
+    of TILE for the block grid; aot.py pads.
+    """
+    m = hbar.shape[0]
+    assert hbar.shape == (m, 2) and dither.shape == (m, 2)
+    assert m % TILE == 0, f"M={m} must be a multiple of {TILE}"
+    g = jnp.asarray(HEX_G)
+    ginv = jnp.asarray(HEX_GINV)
+    offsets = jnp.asarray(OFFSETS)
+    n_off = offsets.shape[0]
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(m // TILE,),
+        in_specs=[
+            pl.BlockSpec((TILE, 2), lambda i: (i, 0)),
+            pl.BlockSpec((TILE, 2), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),       # scale, broadcast
+            pl.BlockSpec((2, 2), lambda i: (0, 0)),   # G
+            pl.BlockSpec((2, 2), lambda i: (0, 0)),   # G^-1
+            pl.BlockSpec((n_off, 2), lambda i: (0, 0)),  # offset table
+        ],
+        out_specs=pl.BlockSpec((TILE, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 2), jnp.float32),
+        interpret=interpret,
+    )(hbar, dither, s, g, ginv, offsets)

@@ -1,0 +1,65 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels.
+
+These are the CORE correctness references: `python/tests/test_kernels.py`
+asserts the Pallas kernels match them across shapes and dtypes, and the
+Rust coordinator's native implementations are cross-checked against the
+same math through the AOT parity artifact.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .lattice_quant import HEX_G, HEX_GINV, OFFSETS
+
+
+def quantize_hex_ref(hbar, dither, s):
+    """Reference dithered hex-lattice quantization (vectorized jnp).
+
+    Same contract as `lattice_quant.quantize_hex`, no tiling constraint.
+    """
+    hbar = jnp.asarray(hbar, jnp.float32)
+    dither = jnp.asarray(dither, jnp.float32)
+    g = jnp.asarray(HEX_G)
+    ginv = jnp.asarray(HEX_GINV)
+    offsets = jnp.asarray(OFFSETS)
+    y = hbar / s + dither
+    l0 = jnp.round(y @ ginv.T)
+    base_p = l0 @ g.T
+    # Same masked min-scan arithmetic as the kernel (bit-identical fp
+    # operation order), so the "matches exactly" test is meaningful.
+    best_d = jnp.full(y.shape[:1], jnp.inf, y.dtype)
+    best_p = base_p
+    for k in range(offsets.shape[0]):
+        cand = base_p + (offsets[k] @ g.T)[None, :]
+        d = jnp.sum((y - cand) ** 2, axis=-1)
+        mask = d < best_d
+        best_d = jnp.where(mask, d, best_d)
+        best_p = jnp.where(mask[:, None], cand, best_p)
+    return (best_p - dither) * s
+
+
+def quantize_hex_numpy(hbar, dither, s):
+    """Double-precision numpy oracle with exhaustive neighbor search —
+    independent of jax entirely (guards against shared bugs)."""
+    g = HEX_G.astype(np.float64)
+    ginv = HEX_GINV.astype(np.float64)
+    y = hbar.astype(np.float64) / s + dither.astype(np.float64)
+    out = np.zeros_like(y)
+    r = 3  # wider than the kernel: certifies radius-2 is sufficient
+    for i in range(y.shape[0]):
+        l0 = np.round(ginv @ y[i])
+        best, best_d = None, np.inf
+        for dx in range(-r, r + 1):
+            for dy in range(-r, r + 1):
+                l = l0 + np.array([dx, dy])
+                p = g @ l
+                d = np.sum((y[i] - p) ** 2)
+                if d < best_d:
+                    best_d, best = d, p
+        out[i] = (best - dither[i].astype(np.float64)) * s
+    return out.astype(np.float32)
+
+
+def dense_sigmoid_ref(x, w, b):
+    """Reference for the fused dense layer: sigmoid(x @ w + b)."""
+    return 1.0 / (1.0 + jnp.exp(-(x @ w + b)))

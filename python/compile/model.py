@@ -1,0 +1,230 @@
+"""L2 — the paper's models in JAX, calling the L1 Pallas kernels.
+
+Two architectures (Table I):
+* MNIST — fully-connected 784–50–10, sigmoid hidden (Pallas fused dense
+  kernel), softmax cross-entropy, full-batch GD;
+* CIFAR — the 5-layer conv net of [56]: 3 conv (5×5) + 2 FC, ReLU +
+  2×2 maxpool, mini-batch SGD.
+
+Everything operates on FLAT parameter vectors — the exact layout the Rust
+coordinator quantizes (`models/mlp.rs` documents the same order).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.dense import dense_sigmoid
+
+
+# --------------------------------------------------------------------------
+# MNIST MLP (784-H-10, sigmoid)
+# --------------------------------------------------------------------------
+
+class MlpSpec:
+    def __init__(self, inp=784, hidden=50, out=10):
+        self.inp, self.hidden, self.out = inp, hidden, out
+
+    @property
+    def sizes(self):
+        i, h, o = self.inp, self.hidden, self.out
+        return [(i * h), h, (h * o), o]
+
+    @property
+    def num_params(self):
+        return sum(self.sizes)
+
+    def unflatten(self, w):
+        i, h, o = self.inp, self.hidden, self.out
+        s = self.sizes
+        ofs = np.cumsum([0] + s)
+        w1 = w[ofs[0]:ofs[1]].reshape(i, h)
+        b1 = w[ofs[1]:ofs[2]]
+        w2 = w[ofs[2]:ofs[3]].reshape(h, o)
+        b2 = w[ofs[3]:ofs[4]]
+        return w1, b1, w2, b2
+
+    def init(self, seed):
+        """Glorot init matching rust/src/models/mlp.rs (same structure; the
+        artifact init blob is authoritative for cross-language runs)."""
+        i, h, o = self.inp, self.hidden, self.out
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        w1 = jax.random.normal(k1, (i, h)) * np.sqrt(2.0 / (i + h))
+        w2 = jax.random.normal(k2, (h, o)) * np.sqrt(2.0 / (h + o))
+        return jnp.concatenate(
+            [w1.reshape(-1), jnp.zeros(h), w2.reshape(-1), jnp.zeros(o)]
+        ).astype(jnp.float32)
+
+
+def mlp_logits(spec: MlpSpec, w, x, *, use_pallas=True, interpret=True):
+    w1, b1, w2, b2 = spec.unflatten(w)
+    if use_pallas:
+        a1 = dense_sigmoid(x, w1, b1, interpret=interpret)
+    else:
+        a1 = jax.nn.sigmoid(x @ w1 + b1)
+    return a1 @ w2 + b2
+
+
+def mlp_loss(spec: MlpSpec, w, x, y_onehot, **kw):
+    logits = mlp_logits(spec, w, x, **kw)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def mlp_step(spec: MlpSpec, w, x, y_onehot, lr, **kw):
+    """One full-batch GD step: w ← w − lr·∇F(w). AOT entry point."""
+    g = jax.grad(lambda ww: mlp_loss(spec, ww, x, y_onehot, **kw))(w)
+    return (w - lr * g,)
+
+
+def mlp_eval(spec: MlpSpec, w, x, **kw):
+    return (mlp_logits(spec, w, x, **kw),)
+
+
+# --------------------------------------------------------------------------
+# CIFAR 5-layer CNN ([56]: conv32-conv32-conv64 + fc64 + fc10)
+# --------------------------------------------------------------------------
+
+class CnnSpec:
+    """3 conv layers (5×5, SAME) with 2×2 maxpool after each, then
+    fc(1024→64), fc(64→10). Input NCHW [n, 3, 32, 32]."""
+
+    LAYERS = [
+        ("conv", 3, 32, 5),
+        ("conv", 32, 32, 5),
+        ("conv", 32, 64, 5),
+        ("fc", 64 * 4 * 4, 64),
+        ("fc", 64, 10),
+    ]
+
+    @property
+    def shapes(self):
+        out = []
+        for l in self.LAYERS:
+            if l[0] == "conv":
+                _, cin, cout, k = l
+                out.append(((cout, cin, k, k), (cout,)))
+            else:
+                _, din, dout = l
+                out.append(((din, dout), (dout,)))
+        return out
+
+    @property
+    def num_params(self):
+        return sum(int(np.prod(ws)) + int(np.prod(bs)) for ws, bs in self.shapes)
+
+    def unflatten(self, w):
+        parts = []
+        ofs = 0
+        for ws, bs in self.shapes:
+            nw = int(np.prod(ws))
+            nb = int(np.prod(bs))
+            parts.append((w[ofs:ofs + nw].reshape(ws), w[ofs + nw:ofs + nw + nb]))
+            ofs += nw + nb
+        return parts
+
+    def init(self, seed):
+        key = jax.random.PRNGKey(seed)
+        chunks = []
+        for ws, bs in self.shapes:
+            key, sub = jax.random.split(key)
+            fan_in = int(np.prod(ws[1:])) if len(ws) == 4 else ws[0]
+            wv = jax.random.normal(sub, ws) * np.sqrt(2.0 / fan_in)
+            chunks.append(wv.reshape(-1))
+            chunks.append(jnp.zeros(int(np.prod(bs))))
+        return jnp.concatenate(chunks).astype(jnp.float32)
+
+
+def cnn_logits(spec: CnnSpec, w, x):
+    """x: [n, 3, 32, 32] NCHW."""
+    parts = spec.unflatten(w)
+    h = x
+    for (wv, bv), layer in zip(parts, spec.LAYERS):
+        if layer[0] == "conv":
+            h = jax.lax.conv_general_dilated(
+                h, wv, window_strides=(1, 1), padding="SAME",
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            ) + bv[None, :, None, None]
+            h = jax.nn.relu(h)
+            h = jax.lax.reduce_window(
+                h, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+            )
+        else:
+            if h.ndim == 4:
+                h = h.reshape(h.shape[0], -1)
+            h = h @ wv + bv
+            if layer[2] != 10:
+                h = jax.nn.relu(h)
+    return h
+
+
+def cnn_loss(spec: CnnSpec, w, x, y_onehot):
+    logits = cnn_logits(spec, w, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def cnn_step(spec: CnnSpec, w, x, y_onehot, lr):
+    g = jax.grad(lambda ww: cnn_loss(spec, ww, x, y_onehot))(w)
+    return (w - lr * g,)
+
+
+def cnn_eval(spec: CnnSpec, w, x):
+    return (cnn_logits(spec, w, x),)
+
+
+# --------------------------------------------------------------------------
+# Entry-point factories used by aot.py (fixed shapes per artifact)
+# --------------------------------------------------------------------------
+
+def mnist_entry_points(hidden=50, step_batches=(500, 1000), eval_batch=500,
+                       use_pallas=True):
+    spec = MlpSpec(hidden=hidden)
+    kw = dict(use_pallas=use_pallas, interpret=True)
+    entries = []
+    for b in step_batches:
+        fn = partial(mlp_step, spec, **kw)
+        args = (
+            jax.ShapeDtypeStruct((spec.num_params,), jnp.float32),
+            jax.ShapeDtypeStruct((b, spec.inp), jnp.float32),
+            jax.ShapeDtypeStruct((b, spec.out), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+        meta = dict(kind="step", model="mnist", batch=b,
+                    features=spec.inp, classes=spec.out, params=spec.num_params)
+        entries.append((f"mnist_step_b{b}", fn, args, meta))
+    fn = partial(mlp_eval, spec, **kw)
+    args = (
+        jax.ShapeDtypeStruct((spec.num_params,), jnp.float32),
+        jax.ShapeDtypeStruct((eval_batch, spec.inp), jnp.float32),
+    )
+    meta = dict(kind="eval", model="mnist", batch=eval_batch,
+                features=spec.inp, classes=spec.out, params=spec.num_params)
+    entries.append(("mnist_eval", fn, args, meta))
+    return spec, entries
+
+
+def cifar_entry_points(step_batch=60, eval_batch=200):
+    spec = CnnSpec()
+    entries = []
+    fn = partial(cnn_step, spec)
+    args = (
+        jax.ShapeDtypeStruct((spec.num_params,), jnp.float32),
+        jax.ShapeDtypeStruct((step_batch, 3, 32, 32), jnp.float32),
+        jax.ShapeDtypeStruct((step_batch, 10), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    meta = dict(kind="step", model="cifar", batch=step_batch,
+                features=3 * 32 * 32, classes=10, params=spec.num_params)
+    entries.append((f"cifar_step_b{step_batch}", fn, args, meta))
+    fn = partial(cnn_eval, spec)
+    args = (
+        jax.ShapeDtypeStruct((spec.num_params,), jnp.float32),
+        jax.ShapeDtypeStruct((eval_batch, 3, 32, 32), jnp.float32),
+    )
+    meta = dict(kind="eval", model="cifar", batch=eval_batch,
+                features=3 * 32 * 32, classes=10, params=spec.num_params)
+    entries.append(("cifar_eval", fn, args, meta))
+    return spec, entries

@@ -1,0 +1,70 @@
+"""AOT pipeline: HLO text emission sanity (fast subset; the full artifact
+build runs via `make artifacts`)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.kernels import lattice_quant as LQ
+
+
+def test_hlo_text_emitted_for_small_step():
+    spec = M.MlpSpec(inp=16, hidden=4, out=3)
+    args = (
+        jax.ShapeDtypeStruct((spec.num_params,), jnp.float32),
+        jax.ShapeDtypeStruct((8, 16), jnp.float32),
+        jax.ShapeDtypeStruct((8, 3), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    text = aot.to_hlo_text(
+        lambda w, x, y, lr: M.mlp_step(spec, w, x, y, lr, use_pallas=False), args
+    )
+    assert "HloModule" in text
+    assert "f32[" in text
+
+
+def test_hlo_text_for_pallas_kernel():
+    m = LQ.TILE
+    args = (
+        jax.ShapeDtypeStruct((m, 2), jnp.float32),
+        jax.ShapeDtypeStruct((m, 2), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )
+    text = aot.to_hlo_text(lambda h, d, s: (LQ.quantize_hex(h, d, s),), args)
+    assert "HloModule" in text
+    # interpret-mode pallas must lower to plain HLO, no mosaic custom-call
+    assert "mosaic" not in text.lower()
+
+
+def test_manifest_format(tmp_path):
+    lines = []
+    spec = M.MlpSpec(inp=16, hidden=4, out=3)
+    args = (
+        jax.ShapeDtypeStruct((spec.num_params,), jnp.float32),
+        jax.ShapeDtypeStruct((4, 16), jnp.float32),
+    )
+    aot.write_artifact(
+        str(tmp_path), "tiny_eval",
+        lambda w, x: M.mlp_eval(spec, w, x, use_pallas=False), args,
+        dict(kind="eval", model="tiny", batch=4, params=spec.num_params),
+        lines,
+    )
+    assert (tmp_path / "tiny_eval.hlo.txt").exists()
+    assert lines[0].startswith("tiny_eval kind=eval model=tiny batch=4")
+    assert lines[0].endswith("file=tiny_eval.hlo.txt")
+
+
+def test_init_blob_roundtrip(tmp_path):
+    spec = M.MlpSpec(inp=8, hidden=3, out=2)
+    init = np.asarray(spec.init(7), dtype=np.float32)
+    p = tmp_path / "x_init.f32"
+    init.tofile(p)
+    back = np.fromfile(p, dtype=np.float32)
+    np.testing.assert_array_equal(init, back)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

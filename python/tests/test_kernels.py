@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas kernels vs pure-jnp/numpy oracles.
+
+Hypothesis sweeps shapes/scales; allclose against ref.py is the core
+correctness signal for the kernels that get lowered into the artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense as D
+from compile.kernels import lattice_quant as LQ
+from compile.kernels import ref
+
+
+def _mk_inputs(m, seed, scale=0.37, spread=1.0):
+    rng = np.random.default_rng(seed)
+    hbar = (rng.normal(size=(m, 2)) * spread).astype(np.float32)
+    # dither within the basic cell scale: fold uniform parallelepiped noise
+    dither = (rng.uniform(size=(m, 2)).astype(np.float32) - 0.5) * 0.5
+    return hbar, dither, np.float32(scale)
+
+
+class TestLatticeQuant:
+    def test_matches_jnp_ref_exactly(self):
+        hbar, dither, s = _mk_inputs(LQ.TILE * 4, 0)
+        out = np.array(LQ.quantize_hex(hbar, dither, jnp.array([s])))
+        r = np.array(ref.quantize_hex_ref(hbar, dither, s))
+        np.testing.assert_allclose(out, r, rtol=0, atol=0)
+
+    def test_matches_float64_numpy_oracle(self):
+        hbar, dither, s = _mk_inputs(LQ.TILE, 1)
+        out = np.array(LQ.quantize_hex(hbar, dither, jnp.array([s])))
+        npy = ref.quantize_hex_numpy(hbar, dither, float(s))
+        # f32 vs f64 boundary flips are measure-zero on random data
+        mismatch = (np.abs(out - npy).max(axis=1) > 1e-4).mean()
+        assert mismatch < 1e-3, f"mismatch fraction {mismatch}"
+
+    def test_quantization_error_bounded_by_covering_radius(self):
+        hbar, dither, s = _mk_inputs(LQ.TILE, 2)
+        out = np.array(LQ.quantize_hex(hbar, dither, jnp.array([s])))
+        # ||Q(y) - y|| <= covering radius of s·Λ; bound loosely by s·||G||.
+        err = np.linalg.norm(out - hbar, axis=1)
+        bound = float(s) * np.linalg.norm(LQ.HEX_G, 2)
+        assert err.max() <= bound, (err.max(), bound)
+
+    def test_lattice_points_are_fixed_points(self):
+        # If hbar/s + z is itself a lattice point, output = hbar exactly.
+        rng = np.random.default_rng(3)
+        l = rng.integers(-5, 6, size=(LQ.TILE, 2)).astype(np.float32)
+        pts = l @ LQ.HEX_G.T  # lattice points
+        s = np.float32(0.25)
+        hbar = (pts * s).astype(np.float32)
+        dither = np.zeros_like(hbar)
+        out = np.array(LQ.quantize_hex(hbar, dither, jnp.array([s])))
+        np.testing.assert_allclose(out, hbar, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        tiles=st.integers(min_value=1, max_value=4),
+        seed=st.integers(min_value=0, max_value=2**31),
+        scale=st.floats(min_value=0.01, max_value=4.0),
+        spread=st.floats(min_value=0.1, max_value=10.0),
+    )
+    def test_hypothesis_sweep_matches_ref(self, tiles, seed, scale, spread):
+        hbar, dither, s = _mk_inputs(LQ.TILE * tiles, seed, scale, spread)
+        out = np.array(LQ.quantize_hex(hbar, dither, jnp.array([s])))
+        r = np.array(ref.quantize_hex_ref(hbar, dither, s))
+        np.testing.assert_allclose(out, r, rtol=0, atol=0)
+
+    def test_subtractive_dither_error_uniformity(self):
+        # ε = Q(h̄+z) − z − h̄ must be zero-mean with energy σ̄²·s² per
+        # sub-vector, independent of the input distribution (Thm 1 driver).
+        m = LQ.TILE * 8
+        rng = np.random.default_rng(5)
+        hbar = (rng.exponential(size=(m, 2)) - 1.0).astype(np.float32)  # non-Gaussian!
+        # proper Unif(P0) dither via mod-Λ folding
+        u = rng.uniform(size=(m, 2)).astype(np.float32) @ LQ.HEX_G.T.astype(np.float32)
+        z = u - np.array(ref.quantize_hex_ref(u, np.zeros_like(u), 1.0))
+        s = np.float32(0.5)
+        out = np.array(LQ.quantize_hex(hbar, (z / s).astype(np.float32), jnp.array([s])))
+        eps = out - hbar
+        assert abs(eps.mean()) < 0.01
+        # per-subvector error energy ≈ s²·σ̄²(hex). σ̄²(hex-paper) ≈ computed
+        # by the rust side; here just check scale-invariance structure:
+        energy = (eps ** 2).sum(axis=1).mean()
+        assert 0.0 < energy < (float(s) ** 2) * np.linalg.norm(LQ.HEX_G, 2) ** 2
+
+
+class TestDense:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(300, 64)).astype(np.float32)
+        w = rng.normal(size=(64, 50)).astype(np.float32) * 0.1
+        b = rng.normal(size=(50,)).astype(np.float32)
+        out = np.array(D.dense_sigmoid(x, w, b))
+        r = np.array(ref.dense_sigmoid_ref(x, w, b))
+        np.testing.assert_allclose(out, r, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=300),
+        d=st.integers(min_value=1, max_value=96),
+        h=st.integers(min_value=1, max_value=64),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_shapes(self, n, d, h, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        w = (rng.normal(size=(d, h)) * 0.2).astype(np.float32)
+        b = rng.normal(size=(h,)).astype(np.float32)
+        out = np.array(D.dense_sigmoid(x, w, b))
+        r = np.array(ref.dense_sigmoid_ref(x, w, b))
+        assert out.shape == (n, h)
+        np.testing.assert_allclose(out, r, rtol=1e-5, atol=1e-6)
+
+    def test_gradient_matches_plain_jnp(self):
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(64, 32)).astype(np.float32)
+        w = (rng.normal(size=(32, 20)) * 0.2).astype(np.float32)
+        b = rng.normal(size=(20,)).astype(np.float32)
+
+        def loss_pallas(w, b):
+            return jnp.sum(D.dense_sigmoid(x, w, b) ** 2)
+
+        def loss_ref(w, b):
+            return jnp.sum(ref.dense_sigmoid_ref(x, w, b) ** 2)
+
+        gw_p, gb_p = jax.grad(loss_pallas, argnums=(0, 1))(w, b)
+        gw_r, gb_r = jax.grad(loss_ref, argnums=(0, 1))(w, b)
+        np.testing.assert_allclose(np.array(gw_p), np.array(gw_r), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.array(gb_p), np.array(gb_r), rtol=1e-4, atol=1e-5)
+
+    def test_saturation_is_stable(self):
+        x = np.full((4, 4), 100.0, np.float32)
+        w = np.eye(4, dtype=np.float32)
+        b = np.zeros(4, np.float32)
+        out = np.array(D.dense_sigmoid(x, w, b))
+        assert np.all(np.isfinite(out))
+        assert np.all(out > 0.999)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,109 @@
+"""L2 correctness: model shapes, parameter layout, and training steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def _batch(n, d, classes, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32) * 0.5
+    y = np.zeros((n, classes), np.float32)
+    y[np.arange(n), rng.integers(0, classes, n)] = 1.0
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+class TestMlp:
+    def test_param_count_matches_paper(self):
+        spec = M.MlpSpec(hidden=50)
+        assert spec.num_params == 39_760
+
+    def test_flatten_unflatten_roundtrip(self):
+        spec = M.MlpSpec(hidden=13)
+        w = spec.init(0)
+        w1, b1, w2, b2 = spec.unflatten(w)
+        re = jnp.concatenate([w1.reshape(-1), b1, w2.reshape(-1), b2])
+        np.testing.assert_array_equal(np.array(w), np.array(re))
+
+    def test_step_reduces_loss(self):
+        spec = M.MlpSpec(hidden=16)
+        w = spec.init(1)
+        x, y = _batch(64, 784, 10)
+        l0 = float(M.mlp_loss(spec, w, x, y, use_pallas=False))
+        for _ in range(10):
+            (w,) = M.mlp_step(spec, w, x, y, jnp.float32(0.5), use_pallas=False)
+        l1 = float(M.mlp_loss(spec, w, x, y, use_pallas=False))
+        assert l1 < l0
+
+    def test_pallas_and_jnp_paths_agree(self):
+        spec = M.MlpSpec(hidden=16)
+        w = spec.init(2)
+        x, y = _batch(96, 784, 10, seed=3)
+        lp = float(M.mlp_loss(spec, w, x, y, use_pallas=True))
+        lr = float(M.mlp_loss(spec, w, x, y, use_pallas=False))
+        assert abs(lp - lr) < 1e-5
+        (wp,) = M.mlp_step(spec, w, x, y, jnp.float32(0.1), use_pallas=True)
+        (wr,) = M.mlp_step(spec, w, x, y, jnp.float32(0.1), use_pallas=False)
+        np.testing.assert_allclose(np.array(wp), np.array(wr), rtol=1e-4, atol=1e-6)
+
+    def test_eval_shapes(self):
+        spec = M.MlpSpec(hidden=8)
+        w = spec.init(0)
+        x, _ = _batch(32, 784, 10)
+        (logits,) = M.mlp_eval(spec, w, x, use_pallas=False)
+        assert logits.shape == (32, 10)
+
+
+class TestCnn:
+    def test_param_count(self):
+        spec = M.CnnSpec()
+        # conv1 32·3·25+32, conv2 32·32·25+32, conv3 64·32·25+64,
+        # fc1 1024·64+64, fc2 64·10+10
+        expect = (32 * 3 * 25 + 32) + (32 * 32 * 25 + 32) + (64 * 32 * 25 + 64) \
+            + (1024 * 64 + 64) + (64 * 10 + 10)
+        assert spec.num_params == expect
+
+    def test_logits_shape(self):
+        spec = M.CnnSpec()
+        w = spec.init(0)
+        x = jnp.zeros((4, 3, 32, 32), jnp.float32)
+        (logits,) = M.cnn_eval(spec, w, x)
+        assert logits.shape == (4, 10)
+
+    def test_step_reduces_loss(self):
+        spec = M.CnnSpec()
+        w = spec.init(1)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.uniform(size=(16, 3, 32, 32)).astype(np.float32))
+        y = np.zeros((16, 10), np.float32)
+        y[np.arange(16), rng.integers(0, 10, 16)] = 1.0
+        y = jnp.asarray(y)
+        l0 = float(M.cnn_loss(spec, w, x, y))
+        for _ in range(5):
+            (w,) = M.cnn_step(spec, w, x, y, jnp.float32(0.05))
+        assert float(M.cnn_loss(spec, w, x, y)) < l0
+
+    def test_init_deterministic(self):
+        spec = M.CnnSpec()
+        np.testing.assert_array_equal(np.array(spec.init(3)), np.array(spec.init(3)))
+
+
+class TestEntryPoints:
+    def test_mnist_entries_cover_batches(self):
+        spec, entries = M.mnist_entry_points(step_batches=(100, 200), eval_batch=50)
+        names = [e[0] for e in entries]
+        assert names == ["mnist_step_b100", "mnist_step_b200", "mnist_eval"]
+        for _, _, args, meta in entries:
+            assert meta["params"] == spec.num_params
+
+    def test_cifar_entries(self):
+        spec, entries = M.cifar_entry_points(step_batch=30, eval_batch=40)
+        assert entries[0][3]["batch"] == 30
+        assert entries[1][3]["batch"] == 40
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

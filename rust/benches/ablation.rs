@@ -1,0 +1,123 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Dither subtraction** (the paper's §III-B claim vs QSGD): measure
+//!    distortion with/without subtracting the dither at the decoder.
+//! 2. **Lattice dimension** L ∈ {1, 2, 4, 8} at fixed rate on correlated
+//!    data (where vector quantization pays).
+//! 3. **Entropy coder choice** for UVeQFed's index stream: adaptive range
+//!    coder vs Elias-γ vs two-pass Huffman (bits/entry at equal content).
+//! 4. **Coordinate decorrelation** on/off: what the residual-prediction
+//!    transform buys the order-0 coder.
+
+use uveqfed::bench::{run, BenchConfig};
+use uveqfed::data::{correlated_matrix, exp_decay_sigma, gaussian_matrix};
+use uveqfed::entropy::elias::EliasGamma;
+use uveqfed::entropy::huffman::HuffmanCoder;
+use uveqfed::entropy::range::AdaptiveRangeCoder;
+use uveqfed::entropy::{BitWriter, IntCoder};
+use uveqfed::prng::{Rng, Xoshiro256pp};
+use uveqfed::quantizer::{measure_distortion, UVeQFed};
+
+fn main() {
+    let cfg = BenchConfig { warmup_iters: 0, measure_iters: 1, max_secs: 300.0 };
+    let trials = 10;
+
+    // --- 1. dither subtraction ---------------------------------------
+    println!("# ablation 1: subtractive vs non-subtractive dither (R=2, iid)");
+    let mut sub = 0.0;
+    let mut nosub = 0.0;
+    run("ablation/dither-subtraction", cfg, || {
+        sub = 0.0;
+        nosub = 0.0;
+        for t in 0..trials {
+            let h = gaussian_matrix(64, 800 + t as u64);
+            sub += measure_distortion(&UVeQFed::hexagonal(), &h, 2.0, t as u64, 0).mse
+                / trials as f64;
+            nosub += measure_distortion(
+                &UVeQFed::hexagonal().non_subtractive(),
+                &h,
+                2.0,
+                t as u64,
+                0,
+            )
+            .mse
+                / trials as f64;
+        }
+    });
+    println!(
+        "    subtractive {sub:.5}  non-subtractive {nosub:.5}  gain ×{:.2}",
+        nosub / sub
+    );
+    assert!(sub < nosub, "dither subtraction must reduce distortion");
+
+    // --- 2. lattice dimension ----------------------------------------
+    println!("\n# ablation 2: lattice dimension at R=3, correlated data");
+    let sigma = exp_decay_sigma(64, 0.2);
+    for (name, codec) in [
+        ("L=1 scalar", UVeQFed::scalar()),
+        ("L=2 hex", UVeQFed::hexagonal()),
+        ("L=4 D4", UVeQFed::d4()),
+        ("L=8 E8", UVeQFed::e8()),
+    ] {
+        let mut mse = 0.0;
+        run(&format!("ablation/lattice-dim/{name}"), cfg, || {
+            mse = 0.0;
+            for t in 0..trials {
+                let h0 = gaussian_matrix(64, 900 + t as u64);
+                let h = correlated_matrix(&h0, &sigma, 64);
+                mse += measure_distortion(&codec, &h, 3.0, t as u64, 0).mse / trials as f64;
+            }
+        });
+        println!("    {name}: {mse:.5}");
+    }
+
+    // --- 3. entropy coder choice -------------------------------------
+    println!("\n# ablation 3: index-stream coder (bits/symbol on a lattice-coord stream)");
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let stream: Vec<i64> =
+        (0..100_000).map(|_| (rng.normal() * 1.2).round() as i64).collect();
+    let h_emp = uveqfed::entropy::empirical_entropy(&stream);
+    for coder in
+        [&AdaptiveRangeCoder::with_dims(2) as &dyn IntCoder, &EliasGamma, &HuffmanCoder]
+    {
+        let mut bits = 0usize;
+        run(&format!("ablation/coder/{}", coder.name()), cfg, || {
+            let mut w = BitWriter::new();
+            coder.encode(&stream, &mut w);
+            bits = w.bit_len();
+        });
+        println!(
+            "    {}: {:.4} bits/sym (empirical entropy {h_emp:.4})",
+            coder.name(),
+            bits as f64 / stream.len() as f64
+        );
+    }
+
+    // --- 4. coordinate decorrelation ---------------------------------
+    println!("\n# ablation 4: coordinate decorrelation (hex, R=2, iid)");
+    // with: the default codec; without: measured via the D4 pathway is not
+    // switchable at runtime, so emulate by comparing coded size of raw vs
+    // decorrelated coordinate streams from the same lattice.
+    use uveqfed::lattice::{self, Lattice};
+    let lat = lattice::paper_hexagonal();
+    let mut rng = Xoshiro256pp::seed_from_u64(6);
+    let mut raw = Vec::new();
+    let mut dec = Vec::new();
+    for _ in 0..50_000 {
+        let y = [rng.normal() * 1.5, rng.normal() * 1.5];
+        let mut c = lat.nearest(&y);
+        raw.extend_from_slice(&c);
+        lat.decorrelate(&mut c);
+        dec.extend_from_slice(&c);
+    }
+    let coder = AdaptiveRangeCoder::with_dims(2);
+    let bits_of = |xs: &[i64]| {
+        let mut w = BitWriter::new();
+        coder.encode(xs, &mut w);
+        w.bit_len() as f64 / (xs.len() / 2) as f64
+    };
+    let b_raw = bits_of(&raw);
+    let b_dec = bits_of(&dec);
+    println!("    raw coords {b_raw:.4} bits/subvec  decorrelated {b_dec:.4} bits/subvec  saved {:.4}", b_raw - b_dec);
+    assert!(b_dec <= b_raw + 1e-9, "decorrelation must not inflate the stream");
+}

@@ -1,0 +1,50 @@
+//! Codec micro-benchmarks: encode/decode throughput for every update
+//! codec at R ∈ {2, 4} on a 39,760-entry update (the MNIST MLP size).
+//! This is the §Perf L3 hot-path baseline.
+
+use uveqfed::bench::{run, BenchConfig};
+use uveqfed::prng::{Normal, Xoshiro256pp};
+use uveqfed::quantizer::{self, CodecContext};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let m = 39_760usize;
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let h = Normal::new(0.0, 0.02).vec_f32(&mut rng, m);
+    let mb = m as f64 * 4.0 / 1e6;
+
+    println!("# codec_micro — {m}-entry update ({mb:.2} MB f32)");
+    for name in [
+        "uveqfed-l1",
+        "uveqfed-l2",
+        "uveqfed-l4",
+        "uveqfed-l8",
+        "qsgd",
+        "rotation",
+        "subsample",
+        "terngrad",
+        "signsgd",
+        "topk",
+    ] {
+        for rate in [2.0, 4.0] {
+            let codec = quantizer::by_name(name);
+            let ctx = CodecContext::new(0, 0, 5, rate);
+            // warm the rate-controller hint before timing
+            let enc0 = codec.encode(&h, &ctx);
+            let r = run(&format!("encode/{name}/r{rate}"), cfg, || {
+                let ctx = CodecContext::new(0, 0, 5, rate);
+                std::hint::black_box(codec.encode(&h, &ctx));
+            });
+            println!(
+                "    ↳ {:.1} MB/s encode, {:.3} bits/entry realized",
+                mb / r.median_secs,
+                enc0.bits as f64 / m as f64
+            );
+            let r = run(&format!("decode/{name}/r{rate}"), cfg, || {
+                let ctx = CodecContext::new(0, 0, 5, rate);
+                std::hint::black_box(codec.decode(&enc0, m, &ctx));
+            });
+            println!("    ↳ {:.1} MB/s decode", mb / r.median_secs);
+        }
+    }
+}

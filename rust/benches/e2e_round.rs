@@ -1,0 +1,85 @@
+//! End-to-end federated round benchmark: isolates coordinator cost
+//! (fan-out + codec + uplink + aggregation) from model compute, and
+//! measures the full round with the real MLP — the §Perf L3 target
+//! ("the coordinator must never dominate a round").
+
+use uveqfed::bench::{run, BenchConfig};
+use uveqfed::coordinator::RoundDriver;
+use uveqfed::data::{partition, Dataset, PartitionScheme, SynthMnist};
+use uveqfed::fl::{NativeTrainer, Trainer};
+use uveqfed::models::{EvalReport, MlpMnist};
+use uveqfed::quantizer;
+
+/// Trainer that does no compute: isolates coordinator + codec cost.
+struct NoopTrainer {
+    m: usize,
+}
+
+impl Trainer for NoopTrainer {
+    fn num_params(&self) -> usize {
+        self.m
+    }
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        use uveqfed::prng::{Normal, Xoshiro256pp};
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        Normal::new(0.0, 0.02).vec_f32(&mut rng, self.m)
+    }
+    fn local_update(
+        &self,
+        w0: &[f32],
+        _shard: &Dataset,
+        _tau: usize,
+        lr: f32,
+        _batch: usize,
+        seed: u64,
+    ) -> Vec<f32> {
+        // pretend-update: deterministic pseudo-gradient
+        use uveqfed::prng::{Normal, Xoshiro256pp};
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let g = Normal::new(0.0, 0.01).vec_f32(&mut rng, self.m);
+        w0.iter().zip(g).map(|(&w, gv)| w - lr * gv).collect()
+    }
+    fn evaluate(&self, _w: &[f32], _ds: &Dataset) -> EvalReport {
+        EvalReport { loss: 0.0, accuracy: 0.0 }
+    }
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let k = 10usize;
+    let m = 39_760usize;
+    let gen = SynthMnist::new(1);
+    let ds = gen.dataset(k * 100);
+    let shards = partition(&ds, k, 100, PartitionScheme::Iid, 1);
+    let alphas = vec![1.0 / k as f64; k];
+
+    println!("# e2e_round — K={k}, m={m}");
+    for name in ["uveqfed-l2", "qsgd", "identity"] {
+        let codec = quantizer::by_name(name);
+        // Coordinator-only (noop trainer).
+        let noop = NoopTrainer { m };
+        let mut w = noop.init_params(1);
+        let driver = RoundDriver::new(1, 2.0, 8);
+        let mut round = 0u64;
+        let r = run(&format!("round-coordinator-only/{name}"), cfg, || {
+            driver.run_round(round, &mut w, &shards, &noop, codec.as_ref(), &alphas, 1, 0.1, 0);
+            round += 1;
+        });
+        println!(
+            "    ↳ {:.2} ms/round coordinator+codec ({:.1} MB/s codec throughput)",
+            r.median_secs * 1e3,
+            k as f64 * m as f64 * 4.0 / 1e6 / r.median_secs
+        );
+    }
+    // Full round with real model compute.
+    let trainer = NativeTrainer::new(MlpMnist::new(50));
+    let codec = quantizer::by_name("uveqfed-l2");
+    let mut w = trainer.init_params(1);
+    let driver = RoundDriver::new(1, 2.0, 8);
+    let mut round = 0u64;
+    let r = run("round-full-mlp/uveqfed-l2", cfg, || {
+        driver.run_round(round, &mut w, &shards, &trainer, codec.as_ref(), &alphas, 1, 0.1, 0);
+        round += 1;
+    });
+    println!("    ↳ {:.2} ms/round with MLP local training", r.median_secs * 1e3);
+}

@@ -1,0 +1,50 @@
+//! Fig. 4 regenerator benchmark: distortion vs rate on i.i.d. Gaussian
+//! 128×128 data — times the full sweep and emits the figure CSV.
+
+use uveqfed::bench::{run, BenchConfig};
+use uveqfed::data::gaussian_matrix;
+use uveqfed::metrics::CsvTable;
+use uveqfed::quantizer::{self, measure_distortion};
+
+fn main() {
+    let cfg = BenchConfig { warmup_iters: 0, measure_iters: 1, max_secs: 600.0 };
+    let _ = BenchConfig::from_env();
+    let trials = if std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+        5
+    } else {
+        25
+    };
+    let codecs = ["uveqfed-l2", "uveqfed-l1", "qsgd", "rotation", "subsample"];
+    let mut header = vec!["rate"];
+    header.extend(codecs);
+    let mut table = CsvTable::new(&header);
+
+    run("fig4/full-sweep", cfg, || {
+        table.rows.clear();
+        for rate in 1..=6 {
+            let mut row = vec![rate as f64];
+            for name in &codecs {
+                let codec = quantizer::by_name(name);
+                let mut mse = 0.0;
+                for t in 0..trials {
+                    let h = gaussian_matrix(128, 4000 + t as u64);
+                    mse += measure_distortion(codec.as_ref(), &h, rate as f64, 3, t as u64)
+                        .mse
+                        / trials as f64;
+                }
+                row.push(mse);
+            }
+            table.push(row);
+        }
+    });
+    let path = uveqfed::bench::results_dir().join("fig4_distortion_iid.csv");
+    table.write_file(&path).expect("write");
+    println!("{}", table.to_pretty());
+    println!("→ {}", path.display());
+    // Shape assertions (the paper's ordering must hold or the bench FAILS).
+    for row in &table.rows {
+        assert!(row[1] < row[3], "UVeQFed L=2 must beat QSGD at R={}", row[0]);
+        assert!(row[1] < row[5], "UVeQFed L=2 must beat subsampling at R={}", row[0]);
+    }
+    println!("shape check: UVeQFed-L2 < QSGD and < subsample at every rate ✓");
+}

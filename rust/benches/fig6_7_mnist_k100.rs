@@ -1,0 +1,80 @@
+//! Figs. 6–7 regenerator benchmark: MNIST convergence at K=100 (reduced
+//! to K=20 here unless UVEQFED_FULL=1; BENCH_QUICK=1 shrinks further).
+//! Emits the accuracy-vs-round CSVs and checks the headline ordering:
+//! UVeQFed L=2 converges at least as well as QSGD at both rates.
+
+use uveqfed::bench::{run, BenchConfig};
+use uveqfed::data::{partition, PartitionScheme, SynthMnist};
+use uveqfed::fl::{run_federated, FlConfig, LrSchedule, NativeTrainer};
+use uveqfed::metrics::CsvTable;
+use uveqfed::models::MlpMnist;
+use uveqfed::quantizer;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let full = std::env::var("UVEQFED_FULL").map(|v| v == "1").unwrap_or(false);
+    let (k, n_per_user, rounds) = if full {
+        (100, 500, 200)
+    } else if quick {
+        (8, 100, 25)
+    } else {
+        (20, 200, 60)
+    };
+    let cfg_bench = BenchConfig { warmup_iters: 0, measure_iters: 1, max_secs: 1800.0 };
+
+    let gen = SynthMnist::new(6);
+    let ds = gen.dataset(k * n_per_user);
+    let test = gen.test_dataset(500);
+    let shards = partition(&ds, k, n_per_user, PartitionScheme::Iid, 6);
+    let trainer = NativeTrainer::new(MlpMnist::new(50));
+
+    for rate in [2.0f64, 4.0] {
+        let fig = if rate == 2.0 { 6 } else { 7 };
+        let mut results: Vec<(&str, f64, Vec<f64>)> = Vec::new();
+        for name in ["uveqfed-l2", "uveqfed-l1", "qsgd", "subsample", "identity"] {
+            let codec = quantizer::by_name(name);
+            let cfg = FlConfig {
+                users: k,
+                rounds,
+                local_steps: 1,
+                batch_size: 0,
+                lr: LrSchedule::Const(0.5),
+                rate,
+                seed: 6,
+                workers: 8,
+                eval_every: (rounds / 20).max(1),
+                verbose: false,
+            };
+            let mut best = 0.0;
+            let mut curve = Vec::new();
+            run(&format!("fig{fig}/{name}"), cfg_bench, || {
+                let h = run_federated(&cfg, &trainer, &shards, &test, codec.as_ref());
+                best = h.best_accuracy();
+                curve = h.rows.iter().map(|r| r.test_accuracy).collect();
+            });
+            println!("    ↳ best accuracy {best:.4}");
+            results.push((name, best, curve));
+        }
+        // CSV
+        let mut header = vec!["eval_idx".to_string()];
+        header.extend(results.iter().map(|(n, _, _)| format!("acc_{n}")));
+        let mut t = CsvTable::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for i in 0..results[0].2.len() {
+            let mut row = vec![i as f64];
+            for (_, _, c) in &results {
+                row.push(c.get(i).copied().unwrap_or(f64::NAN));
+            }
+            t.push(row);
+        }
+        let path = uveqfed::bench::results_dir().join(format!("fig{fig}_mnist_k{k}_r{rate}.csv"));
+        t.write_file(&path).expect("write");
+        println!("→ {}", path.display());
+        // Shape check: UVeQFed-L2 within noise of the best quantized run.
+        let uv = results[0].1;
+        let qsgd = results[2].1;
+        let sub = results[3].1;
+        assert!(uv + 0.03 >= qsgd, "fig{fig}: uveqfed {uv} far below qsgd {qsgd}");
+        assert!(uv + 0.03 >= sub, "fig{fig}: uveqfed {uv} far below subsample {sub}");
+        println!("shape check fig{fig}: UVeQFed-L2 ≥ baselines (±3pts) ✓");
+    }
+}

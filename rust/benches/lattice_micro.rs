@@ -1,0 +1,36 @@
+//! Lattice micro-benchmarks: nearest-point throughput and dither sampling
+//! for every lattice — the innermost loop of UVeQFed's encoder (§Perf L3).
+
+use uveqfed::bench::{run, BenchConfig};
+use uveqfed::lattice::{self, dither};
+use uveqfed::prng::{Rng, Xoshiro256pp};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let n_points = 100_000usize;
+
+    for name in ["scalar", "hex", "hex-a2", "cubic4", "d4", "e8"] {
+        let lat = lattice::by_name(name);
+        let l = lat.dim();
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let pts: Vec<f64> = (0..n_points * l).map(|_| rng.normal() * 3.0).collect();
+        let r = run(&format!("nearest/{name}"), cfg, || {
+            let mut acc = 0i64;
+            for i in 0..n_points {
+                let c = lat.nearest(&pts[i * l..(i + 1) * l]);
+                acc = acc.wrapping_add(c[0]);
+            }
+            std::hint::black_box(acc);
+        });
+        println!(
+            "    ↳ {:.2} M nearest-point ops/s ({:.1} M scalars/s)",
+            n_points as f64 / r.median_secs / 1e6,
+            (n_points * l) as f64 / r.median_secs / 1e6
+        );
+        let r = run(&format!("dither/{name}"), cfg, || {
+            let mut rng = Xoshiro256pp::seed_from_u64(3);
+            std::hint::black_box(dither::sample_dither_block(lat.as_ref(), &mut rng, 10_000));
+        });
+        println!("    ↳ {:.2} M dither vectors/s", 10_000.0 / r.median_secs / 1e6);
+    }
+}

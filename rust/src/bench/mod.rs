@@ -1,0 +1,119 @@
+//! Benchmark harness (criterion is not vendorable offline).
+//!
+//! `cargo bench` targets use [`Bench`] for timing micro/meso benchmarks
+//! with warmup, repetition, and robust statistics, and write figure data
+//! through `metrics::CsvTable`. Output format is one line per benchmark:
+//! `name  median  mean ± sem  (n iters)`.
+
+use crate::metrics::Timer;
+use crate::util::stats::{percentile, Welford};
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Abort measurement early once this much wall time is spent.
+    pub max_secs: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup_iters: 3, measure_iters: 15, max_secs: 20.0 }
+    }
+}
+
+impl BenchConfig {
+    /// Quick mode for CI-style smoke runs (env `BENCH_QUICK=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+            Self { warmup_iters: 1, measure_iters: 3, max_secs: 5.0 }
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_secs: f64,
+    pub mean_secs: f64,
+    pub sem_secs: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self, items: f64) -> f64 {
+        items / self.median_secs
+    }
+}
+
+/// Run a benchmark closure.
+pub fn run(name: &str, cfg: BenchConfig, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let wall = Timer::start();
+    let mut samples = Vec::with_capacity(cfg.measure_iters);
+    let mut acc = Welford::new();
+    for _ in 0..cfg.measure_iters {
+        let t = Timer::start();
+        f();
+        let dt = t.elapsed_secs();
+        samples.push(dt);
+        acc.push(dt);
+        if wall.elapsed_secs() > cfg.max_secs {
+            break;
+        }
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        median_secs: percentile(&samples, 50.0),
+        mean_secs: acc.mean(),
+        sem_secs: acc.sem(),
+        iters: samples.len(),
+    };
+    println!(
+        "{:<44} median {:>10.4} ms   mean {:>10.4} ± {:>7.4} ms   ({} iters)",
+        res.name,
+        res.median_secs * 1e3,
+        res.mean_secs * 1e3,
+        res.sem_secs * 1e3,
+        res.iters
+    );
+    res
+}
+
+/// Where figure CSVs land (`results/` by default, override with
+/// `UVEQFED_RESULTS_DIR`).
+pub fn results_dir() -> std::path::PathBuf {
+    std::env::var("UVEQFED_RESULTS_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("results"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let cfg = BenchConfig { warmup_iters: 1, measure_iters: 5, max_secs: 5.0 };
+        let r = run("noop-plus-sleep", cfg, || {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert!(r.median_secs >= 0.001);
+        assert!(r.iters >= 1);
+        assert!(r.throughput_per_sec(100.0) > 0.0);
+    }
+
+    #[test]
+    fn max_secs_caps_iterations() {
+        let cfg = BenchConfig { warmup_iters: 0, measure_iters: 1000, max_secs: 0.02 };
+        let r = run("capped", cfg, || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        });
+        assert!(r.iters < 1000);
+    }
+}

@@ -1,0 +1,106 @@
+//! The rate-constrained uplink of Fig. 1: a bit-metered channel that
+//! enforces the per-message budget `R·m` for rate-constrained codecs and
+//! tallies exact usage for the experiment reports.
+
+use crate::quantizer::Encoded;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct UplinkStats {
+    pub messages: usize,
+    pub total_bits: usize,
+    pub max_message_bits: usize,
+}
+
+/// Thread-safe uplink meter (clients transmit concurrently).
+#[derive(Debug)]
+pub struct UplinkChannel {
+    rate: f64,
+    enforce: bool,
+    messages: AtomicUsize,
+    total_bits: AtomicUsize,
+    max_bits: AtomicUsize,
+}
+
+impl UplinkChannel {
+    pub fn new(rate: f64, enforce: bool) -> Self {
+        Self {
+            rate,
+            enforce,
+            messages: AtomicUsize::new(0),
+            total_bits: AtomicUsize::new(0),
+            max_bits: AtomicUsize::new(0),
+        }
+    }
+
+    /// Account one uplink message of an `m`-parameter update. Panics if a
+    /// rate-constrained codec exceeded its budget — that is a codec bug,
+    /// and the experiments' honesty depends on catching it.
+    pub fn transmit(&self, user: u64, enc: &Encoded, m: usize) {
+        let budget = (self.rate * m as f64).floor() as usize;
+        if self.enforce {
+            assert!(
+                enc.bits <= budget,
+                "user {user}: uplink over budget ({} > {budget} bits)",
+                enc.bits
+            );
+        }
+        assert!(
+            enc.bits <= enc.bytes.len() * 8,
+            "bit accounting exceeds physical payload"
+        );
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.total_bits.fetch_add(enc.bits, Ordering::Relaxed);
+        self.max_bits.fetch_max(enc.bits, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> UplinkStats {
+        UplinkStats {
+            messages: self.messages.load(Ordering::Relaxed),
+            total_bits: self.total_bits.load(Ordering::Relaxed),
+            max_message_bits: self.max_bits.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enc(bits: usize) -> Encoded {
+        Encoded { bytes: vec![0; bits.div_ceil(8)], bits }
+    }
+
+    #[test]
+    fn accounting_accumulates() {
+        let ch = UplinkChannel::new(2.0, true);
+        ch.transmit(0, &enc(100), 100);
+        ch.transmit(1, &enc(150), 100);
+        let s = ch.stats();
+        assert_eq!(s.messages, 2);
+        assert_eq!(s.total_bits, 250);
+        assert_eq!(s.max_message_bits, 150);
+    }
+
+    #[test]
+    #[should_panic(expected = "over budget")]
+    fn over_budget_panics_when_enforced() {
+        let ch = UplinkChannel::new(1.0, true);
+        ch.transmit(0, &enc(101), 100);
+    }
+
+    #[test]
+    fn unconstrained_codec_not_enforced() {
+        let ch = UplinkChannel::new(1.0, false);
+        ch.transmit(0, &enc(100_000), 100);
+        assert_eq!(ch.stats().total_bits, 100_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "physical payload")]
+    fn phantom_bits_rejected() {
+        let ch = UplinkChannel::new(8.0, true);
+        let bad = Encoded { bytes: vec![0; 1], bits: 100 };
+        ch.transmit(0, &bad, 100);
+    }
+}

@@ -1,0 +1,110 @@
+//! Synthetic matrices for the §V-A distortion experiments (Figs. 4–5).
+
+use crate::prng::{Normal, Xoshiro256pp};
+
+/// `n × n` matrix with i.i.d. N(0,1) entries, row-major (the `H` of
+/// Fig. 4).
+pub fn gaussian_matrix(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    Normal::new(0.0, 1.0).vec_f32(&mut rng, n * n)
+}
+
+/// The exponentially-decaying correlation matrix of Fig. 5:
+/// `Σ_{i,j} = e^{−0.2·|i−j|}`, row-major.
+pub fn exp_decay_sigma(n: usize, decay: f64) -> Vec<f64> {
+    let mut s = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            s[i * n + j] = (-decay * (i as f64 - j as f64).abs()).exp();
+        }
+    }
+    s
+}
+
+/// `Σ · H · Σᵀ` for square `H` (f32) and `Σ` (f64), producing the
+/// correlated test data of Fig. 5.
+pub fn correlated_matrix(h: &[f32], sigma: &[f64], n: usize) -> Vec<f32> {
+    assert_eq!(h.len(), n * n);
+    assert_eq!(sigma.len(), n * n);
+    // t = Σ·H
+    let mut t = vec![0.0f64; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let s = sigma[i * n + k];
+            if s == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                t[i * n + j] += s * h[k * n + j] as f64;
+            }
+        }
+    }
+    // out = t·Σᵀ  → out[i][j] = Σ_k t[i][k]·sigma[j][k]
+    let mut out = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for k in 0..n {
+                acc += t[i * n + k] * sigma[j * n + k];
+            }
+            out[i * n + j] = acc as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_matrix_stats() {
+        let m = gaussian_matrix(128, 7);
+        let n = m.len() as f64;
+        let mean: f64 = m.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var: f64 = m.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn sigma_structure() {
+        let s = exp_decay_sigma(4, 0.2);
+        assert_eq!(s[0], 1.0);
+        assert!((s[1] - (-0.2f64).exp()).abs() < 1e-12);
+        // symmetric
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(s[i * 4 + j], s[j * 4 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn correlation_induces_neighbor_similarity() {
+        let h = gaussian_matrix(64, 9);
+        let sigma = exp_decay_sigma(64, 0.2);
+        let c = correlated_matrix(&h, &sigma, 64);
+        // Neighboring entries of ΣHΣᵀ must correlate more than in H.
+        let corr = |m: &[f32]| {
+            let pairs: Vec<(f64, f64)> = (0..64)
+                .flat_map(|i| (0..63).map(move |j| (i, j)))
+                .map(|(i, j)| (m[i * 64 + j] as f64, m[i * 64 + j + 1] as f64))
+                .collect();
+            let n = pairs.len() as f64;
+            let (ma, mb) = (
+                pairs.iter().map(|p| p.0).sum::<f64>() / n,
+                pairs.iter().map(|p| p.1).sum::<f64>() / n,
+            );
+            let cov: f64 =
+                pairs.iter().map(|p| (p.0 - ma) * (p.1 - mb)).sum::<f64>() / n;
+            let (va, vb) = (
+                pairs.iter().map(|p| (p.0 - ma).powi(2)).sum::<f64>() / n,
+                pairs.iter().map(|p| (p.1 - mb).powi(2)).sum::<f64>() / n,
+            );
+            cov / (va * vb).sqrt()
+        };
+        assert!(corr(&c) > 0.5, "correlated corr {}", corr(&c));
+        assert!(corr(&h).abs() < 0.1, "iid corr {}", corr(&h));
+    }
+}

@@ -1,0 +1,91 @@
+//! Dataset substrate: synthetic stand-ins for MNIST / CIFAR-10 plus the
+//! Gaussian matrices of the §V-A distortion study, and the data
+//! partitioners of §V-B.
+//!
+//! The image has no network access, so the real IDX/CIFAR archives cannot
+//! be fetched. The experiments in the paper measure *relative* behavior of
+//! update codecs under FedAvg; the procedural datasets below preserve what
+//! matters for that comparison — 10 classes, intra-class structure +
+//! noise, inter-class separation, same sample counts and image geometry —
+//! and are fully deterministic given a seed (see DESIGN.md §2 for the
+//! substitution argument).
+
+mod gaussian;
+mod partition;
+mod synth_cifar;
+mod synth_mnist;
+
+pub use gaussian::{correlated_matrix, exp_decay_sigma, gaussian_matrix};
+pub use partition::{partition, PartitionScheme};
+pub use synth_cifar::SynthCifar;
+pub use synth_mnist::SynthMnist;
+
+/// A labeled classification dataset in flattened row-major form.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// `n × d` features, row-major.
+    pub x: Vec<f32>,
+    /// `n` labels in `0..classes`.
+    pub y: Vec<u8>,
+    pub features: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn sample(&self, i: usize) -> (&[f32], u8) {
+        (&self.x[i * self.features..(i + 1) * self.features], self.y[i])
+    }
+
+    /// Extract the subset at `indices` (copying).
+    pub fn subset(&self, indices: &[usize]) -> Dataset {
+        let mut x = Vec::with_capacity(indices.len() * self.features);
+        let mut y = Vec::with_capacity(indices.len());
+        for &i in indices {
+            x.extend_from_slice(&self.x[i * self.features..(i + 1) * self.features]);
+            y.push(self.y[i]);
+        }
+        Dataset { x, y, features: self.features, classes: self.classes }
+    }
+
+    /// Per-class sample counts (label histogram).
+    pub fn label_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.classes];
+        for &y in &self.y {
+            h[y as usize] += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subset_preserves_rows() {
+        let ds = Dataset {
+            x: (0..12).map(|v| v as f32).collect(),
+            y: vec![0, 1, 2, 0],
+            features: 3,
+            classes: 3,
+        };
+        let s = ds.subset(&[1, 3]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.sample(0), (&[3.0f32, 4.0, 5.0][..], 1));
+        assert_eq!(s.sample(1), (&[9.0f32, 10.0, 11.0][..], 0));
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let ds = Dataset { x: vec![0.0; 5], y: vec![0, 1, 1, 2, 1], features: 1, classes: 3 };
+        assert_eq!(ds.label_histogram(), vec![1, 3, 1]);
+    }
+}

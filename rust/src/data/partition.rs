@@ -1,0 +1,232 @@
+//! Data partitioners — the i.i.d. and heterogeneous splits of §V-B.
+
+use super::Dataset;
+use crate::prng::{Rng, Xoshiro256pp};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PartitionScheme {
+    /// Shuffle globally, deal evenly: every user sees every label equally
+    /// often in expectation (the paper's "i.i.d. division").
+    Iid,
+    /// Deal the dataset *in order*: user k gets samples
+    /// `[k·n_k, (k+1)·n_k)`. Our generators emit label-major order, so
+    /// this reproduces the paper's "first user has the first 1000
+    /// samples" uneven label split.
+    Sequential,
+    /// At least `frac` of each user's samples come from one distinct
+    /// dominant label (the paper's CIFAR heterogeneous split, frac=0.25).
+    DominantLabel { frac: f64 },
+    /// Dirichlet(α) label distribution per user (standard FL benchmark
+    /// heterogeneity knob; extension beyond the paper).
+    Dirichlet { alpha: f64 },
+}
+
+/// Split `ds` into `k` user shards of `n_per_user` samples each.
+pub fn partition(
+    ds: &Dataset,
+    k: usize,
+    n_per_user: usize,
+    scheme: PartitionScheme,
+    seed: u64,
+) -> Vec<Dataset> {
+    assert!(k * n_per_user <= ds.len(), "not enough samples: {} < {}", ds.len(), k * n_per_user);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x9A87_17B3);
+    match scheme {
+        PartitionScheme::Iid => {
+            let mut idx: Vec<usize> = (0..ds.len()).collect();
+            rng.shuffle(&mut idx);
+            (0..k)
+                .map(|u| ds.subset(&idx[u * n_per_user..(u + 1) * n_per_user]))
+                .collect()
+        }
+        PartitionScheme::Sequential => (0..k)
+            .map(|u| {
+                let idx: Vec<usize> = (u * n_per_user..(u + 1) * n_per_user).collect();
+                ds.subset(&idx)
+            })
+            .collect(),
+        PartitionScheme::DominantLabel { frac } => {
+            // indices by class
+            let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.classes];
+            for (i, &y) in ds.y.iter().enumerate() {
+                by_class[y as usize].push(i);
+            }
+            for v in by_class.iter_mut() {
+                rng.shuffle(v);
+            }
+            let n_dom = (n_per_user as f64 * frac).ceil() as usize;
+            let mut cursors = vec![0usize; ds.classes];
+            let mut shards = Vec::with_capacity(k);
+            // remaining pool after dominant assignment, refilled lazily
+            let mut pool: Vec<usize> = Vec::new();
+            // First pass: take dominant blocks.
+            let mut dominant_take: Vec<Vec<usize>> = Vec::with_capacity(k);
+            for u in 0..k {
+                let c = u % ds.classes;
+                let take: Vec<usize> = by_class[c]
+                    [cursors[c]..(cursors[c] + n_dom).min(by_class[c].len())]
+                    .to_vec();
+                cursors[c] += take.len();
+                dominant_take.push(take);
+            }
+            // Pool = everything not consumed as dominant.
+            for (c, v) in by_class.iter().enumerate() {
+                pool.extend_from_slice(&v[cursors[c]..]);
+            }
+            rng.shuffle(&mut pool);
+            let mut pc = 0usize;
+            for dom in dominant_take.iter_mut() {
+                let need = n_per_user - dom.len();
+                dom.extend_from_slice(&pool[pc..pc + need]);
+                pc += need;
+                shards.push(ds.subset(dom));
+            }
+            shards
+        }
+        PartitionScheme::Dirichlet { alpha } => {
+            let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.classes];
+            for (i, &y) in ds.y.iter().enumerate() {
+                by_class[y as usize].push(i);
+            }
+            for v in by_class.iter_mut() {
+                rng.shuffle(v);
+            }
+            let mut cursors = vec![0usize; ds.classes];
+            let mut shards = Vec::with_capacity(k);
+            for _ in 0..k {
+                let probs = dirichlet(ds.classes, alpha, &mut rng);
+                let mut idx = Vec::with_capacity(n_per_user);
+                for _ in 0..n_per_user {
+                    // sample a class, fall back to whichever still has data
+                    let mut c = sample_categorical(&probs, &mut rng);
+                    let mut tries = 0;
+                    while cursors[c] >= by_class[c].len() && tries < ds.classes {
+                        c = (c + 1) % ds.classes;
+                        tries += 1;
+                    }
+                    if cursors[c] >= by_class[c].len() {
+                        break;
+                    }
+                    idx.push(by_class[c][cursors[c]]);
+                    cursors[c] += 1;
+                }
+                shards.push(ds.subset(&idx));
+            }
+            shards
+        }
+    }
+}
+
+/// Marsaglia–Tsang gamma sampler (shape ≥ 0), for Dirichlet draws.
+fn gamma_sample(shape: f64, rng: &mut Xoshiro256pp) -> f64 {
+    if shape < 1.0 {
+        // boost: Gamma(a) = Gamma(a+1)·U^{1/a}
+        let u: f64 = rng.uniform().max(1e-300);
+        return gamma_sample(shape + 1.0, rng) * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal();
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u: f64 = rng.uniform().max(1e-300);
+        if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+fn dirichlet(n: usize, alpha: f64, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    let g: Vec<f64> = (0..n).map(|_| gamma_sample(alpha, rng)).collect();
+    let sum: f64 = g.iter().sum::<f64>().max(1e-300);
+    g.into_iter().map(|v| v / sum).collect()
+}
+
+fn sample_categorical(probs: &[f64], rng: &mut Xoshiro256pp) -> usize {
+    let u = rng.uniform();
+    let mut acc = 0.0;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return i;
+        }
+    }
+    probs.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthMnist;
+
+    fn dataset() -> Dataset {
+        SynthMnist::new(5).dataset(1000)
+    }
+
+    #[test]
+    fn iid_split_is_balanced() {
+        let ds = dataset();
+        let shards = partition(&ds, 10, 100, PartitionScheme::Iid, 1);
+        assert_eq!(shards.len(), 10);
+        for s in &shards {
+            assert_eq!(s.len(), 100);
+            // every class present with roughly 10 samples
+            for &c in &s.label_histogram() {
+                assert!(c >= 2 && c <= 25, "unbalanced iid: {:?}", s.label_histogram());
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_split_is_heterogeneous() {
+        let ds = dataset(); // label-major order
+        let shards = partition(&ds, 10, 100, PartitionScheme::Sequential, 1);
+        // each shard should be dominated by one class (label-major blocks)
+        for s in &shards {
+            let h = s.label_histogram();
+            let max = *h.iter().max().unwrap();
+            assert!(max == 100, "expected pure-class shard, got {h:?}");
+        }
+    }
+
+    #[test]
+    fn dominant_label_fraction_enforced() {
+        let ds = dataset();
+        let shards =
+            partition(&ds, 10, 80, PartitionScheme::DominantLabel { frac: 0.25 }, 1);
+        for (u, s) in shards.iter().enumerate() {
+            let h = s.label_histogram();
+            assert!(
+                h[u % 10] >= 20,
+                "user {u}: dominant class {} has {} < 25%",
+                u % 10,
+                h[u % 10]
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_concentrates_for_small_alpha() {
+        let ds = dataset();
+        let sharp = partition(&ds, 5, 100, PartitionScheme::Dirichlet { alpha: 0.05 }, 2);
+        let flat = partition(&ds, 5, 100, PartitionScheme::Dirichlet { alpha: 100.0 }, 2);
+        let peak = |shards: &[Dataset]| {
+            shards
+                .iter()
+                .map(|s| *s.label_histogram().iter().max().unwrap() as f64 / s.len() as f64)
+                .sum::<f64>()
+                / shards.len() as f64
+        };
+        assert!(peak(&sharp) > peak(&flat) + 0.2, "{} vs {}", peak(&sharp), peak(&flat));
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversubscription_panics() {
+        let ds = dataset();
+        let _ = partition(&ds, 20, 100, PartitionScheme::Iid, 1);
+    }
+}

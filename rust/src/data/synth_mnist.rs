@@ -1,0 +1,222 @@
+//! Procedural MNIST stand-in: 28×28 grayscale "digits".
+//!
+//! Each class is a fixed stroke skeleton (a polyline of control points
+//! drawn from a per-class seeded RNG); samples render the skeleton with
+//! per-sample translation, control-point jitter, stroke-width variation
+//! and pixel noise. This yields a 10-class problem with the properties the
+//! FL experiments need: strong intra-class structure, inter-class
+//! separation, and enough sample variation that generalization is
+//! non-trivial. Fully deterministic given (seed, index).
+
+use super::Dataset;
+use crate::prng::{Rng, SplitMix64, Xoshiro256pp};
+
+pub const SIDE: usize = 28;
+pub const FEATURES: usize = SIDE * SIDE;
+pub const CLASSES: usize = 10;
+
+#[derive(Debug, Clone)]
+pub struct SynthMnist {
+    seed: u64,
+    /// Per-class skeletons: control points in image coordinates.
+    skeletons: Vec<Vec<(f32, f32)>>,
+}
+
+impl SynthMnist {
+    pub fn new(seed: u64) -> Self {
+        let mut skeletons = Vec::with_capacity(CLASSES);
+        for c in 0..CLASSES {
+            let mut sm = SplitMix64::new(seed ^ 0x5EED_0000 ^ (c as u64) << 32);
+            let mut rng = Xoshiro256pp::seed_from_u64(sm.next());
+            // 5–7 control points inside the central region.
+            let n_pts = 5 + rng.gen_index(3);
+            let pts: Vec<(f32, f32)> = (0..n_pts)
+                .map(|_| {
+                    (
+                        rng.uniform_range(6.0, 22.0) as f32,
+                        rng.uniform_range(6.0, 22.0) as f32,
+                    )
+                })
+                .collect();
+            skeletons.push(pts);
+        }
+        Self { seed, skeletons }
+    }
+
+    /// Render sample `index` of class `class` into a FEATURES-length
+    /// buffer in [0, 1].
+    pub fn render(&self, class: usize, index: u64) -> Vec<f32> {
+        let mut sm = SplitMix64::new(self.seed ^ index.wrapping_mul(0x9E3779B97F4A7C15) ^ ((class as u64) << 48));
+        let mut rng = Xoshiro256pp::seed_from_u64(sm.next());
+        let skel = &self.skeletons[class];
+
+        // per-sample transform
+        let dx = rng.uniform_range(-2.0, 2.0) as f32;
+        let dy = rng.uniform_range(-2.0, 2.0) as f32;
+        let width = rng.uniform_range(0.9, 1.6) as f32; // stroke sigma
+        let jitter = 0.8f32;
+
+        let pts: Vec<(f32, f32)> = skel
+            .iter()
+            .map(|&(x, y)| {
+                (
+                    x + dx + rng.normal_f32() * jitter,
+                    y + dy + rng.normal_f32() * jitter,
+                )
+            })
+            .collect();
+
+        let mut img = vec![0.0f32; FEATURES];
+        // march along segments, stamping gaussian blobs
+        for w in pts.windows(2) {
+            let (x0, y0) = w[0];
+            let (x1, y1) = w[1];
+            let len = ((x1 - x0).powi(2) + (y1 - y0).powi(2)).sqrt().max(1e-3);
+            let steps = (len * 2.0).ceil() as usize;
+            for s in 0..=steps {
+                let t = s as f32 / steps as f32;
+                let cx = x0 + t * (x1 - x0);
+                let cy = y0 + t * (y1 - y0);
+                stamp(&mut img, cx, cy, width);
+            }
+        }
+        // pixel noise + clamp
+        for v in img.iter_mut() {
+            *v += rng.normal_f32() * 0.08;
+            *v = v.clamp(0.0, 1.0);
+        }
+        img
+    }
+
+    /// Generate a dataset of `n` samples, grouped label-major (all class-0
+    /// samples first, then class-1, …) — the "sequential" heterogeneous
+    /// split of §V-B reads this order directly.
+    pub fn dataset(&self, n: usize) -> Dataset {
+        let per = n / CLASSES;
+        let mut x = Vec::with_capacity(n * FEATURES);
+        let mut y = Vec::with_capacity(n);
+        for c in 0..CLASSES {
+            let count = if c == CLASSES - 1 { n - per * (CLASSES - 1) } else { per };
+            for i in 0..count {
+                x.extend(self.render(c, i as u64));
+                y.push(c as u8);
+            }
+        }
+        Dataset { x, y, features: FEATURES, classes: CLASSES }
+    }
+
+    /// Held-out test set (disjoint sample indices).
+    pub fn test_dataset(&self, n: usize) -> Dataset {
+        let per = n / CLASSES;
+        let mut x = Vec::with_capacity(n * FEATURES);
+        let mut y = Vec::with_capacity(n);
+        for c in 0..CLASSES {
+            let count = if c == CLASSES - 1 { n - per * (CLASSES - 1) } else { per };
+            for i in 0..count {
+                x.extend(self.render(c, 1_000_000 + i as u64));
+                y.push(c as u8);
+            }
+        }
+        Dataset { x, y, features: FEATURES, classes: CLASSES }
+    }
+}
+
+fn stamp(img: &mut [f32], cx: f32, cy: f32, sigma: f32) {
+    let r = (2.5 * sigma).ceil() as i64;
+    let x0 = (cx.round() as i64 - r).max(0);
+    let x1 = (cx.round() as i64 + r).min(SIDE as i64 - 1);
+    let y0 = (cy.round() as i64 - r).max(0);
+    let y1 = (cy.round() as i64 + r).min(SIDE as i64 - 1);
+    let inv = 1.0 / (2.0 * sigma * sigma);
+    for yy in y0..=y1 {
+        for xx in x0..=x1 {
+            let d2 = (xx as f32 - cx).powi(2) + (yy as f32 - cy).powi(2);
+            let v = (-d2 * inv).exp() * 0.8;
+            let p = &mut img[yy as usize * SIDE + xx as usize];
+            *p = (*p + v).min(1.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_rendering() {
+        let g1 = SynthMnist::new(7);
+        let g2 = SynthMnist::new(7);
+        assert_eq!(g1.render(3, 11), g2.render(3, 11));
+    }
+
+    #[test]
+    fn different_samples_differ() {
+        let g = SynthMnist::new(7);
+        assert_ne!(g.render(3, 0), g.render(3, 1));
+        assert_ne!(g.render(3, 0), g.render(4, 0));
+    }
+
+    #[test]
+    fn values_in_unit_range() {
+        let g = SynthMnist::new(7);
+        let img = g.render(0, 0);
+        assert_eq!(img.len(), FEATURES);
+        assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // non-trivial content
+        let mass: f32 = img.iter().sum();
+        assert!(mass > 5.0, "image nearly empty: {mass}");
+    }
+
+    #[test]
+    fn dataset_label_major_order() {
+        let g = SynthMnist::new(7);
+        let ds = g.dataset(100);
+        assert_eq!(ds.len(), 100);
+        assert_eq!(ds.label_histogram(), vec![10; 10]);
+        // label-major: first 10 are class 0
+        assert!(ds.y[..10].iter().all(|&y| y == 0));
+        assert!(ds.y[10..20].iter().all(|&y| y == 1));
+    }
+
+    #[test]
+    fn classes_are_separable_by_nearest_prototype() {
+        // Nearest-class-mean classification on held-out samples must beat
+        // chance by a wide margin — the datasets must be learnable.
+        let g = SynthMnist::new(7);
+        let train = g.dataset(500);
+        let test = g.test_dataset(100);
+        // class means
+        let mut means = vec![vec![0.0f32; FEATURES]; CLASSES];
+        let mut counts = vec![0usize; CLASSES];
+        for i in 0..train.len() {
+            let (x, y) = train.sample(i);
+            counts[y as usize] += 1;
+            for (m, &v) in means[y as usize].iter_mut().zip(x) {
+                *m += v;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..test.len() {
+            let (x, y) = test.sample(i);
+            let pred = (0..CLASSES)
+                .min_by(|&a, &b| {
+                    let da: f32 =
+                        x.iter().zip(&means[a]).map(|(u, v)| (u - v) * (u - v)).sum();
+                    let db: f32 =
+                        x.iter().zip(&means[b]).map(|(u, v)| (u - v) * (u - v)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if pred == y as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.len() as f64;
+        assert!(acc > 0.6, "nearest-mean accuracy {acc} too low");
+    }
+}

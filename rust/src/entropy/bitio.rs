@@ -1,0 +1,232 @@
+//! MSB-first bit-level I/O over `Vec<u8>` buffers.
+//!
+//! This is the wire substrate for every codec in the repo: entropy coders,
+//! codec headers, and the uplink bit accounting all measure through the
+//! exact number of bits pushed here.
+
+/// Bit-level writer; bits are packed MSB-first within each byte.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Number of valid bits in the final partial byte (0..8); 0 means the
+    /// buffer is byte-aligned.
+    partial: u8,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        Self { buf: Vec::with_capacity(bytes), partial: 0 }
+    }
+
+    /// Total number of bits written so far.
+    pub fn bit_len(&self) -> usize {
+        if self.partial == 0 {
+            self.buf.len() * 8
+        } else {
+            (self.buf.len() - 1) * 8 + self.partial as usize
+        }
+    }
+
+    /// Push a single bit.
+    #[inline]
+    pub fn push_bit(&mut self, bit: bool) {
+        if self.partial == 0 {
+            self.buf.push(0);
+        }
+        if bit {
+            let last = self.buf.last_mut().unwrap();
+            *last |= 1 << (7 - self.partial);
+        }
+        self.partial = (self.partial + 1) % 8;
+    }
+
+    /// Push the low `n` bits of `v`, MSB first. `n <= 64`.
+    pub fn push_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        for i in (0..n).rev() {
+            self.push_bit((v >> i) & 1 == 1);
+        }
+    }
+
+    /// Push a whole byte (fast path when aligned).
+    pub fn push_byte(&mut self, b: u8) {
+        if self.partial == 0 {
+            self.buf.push(b);
+        } else {
+            self.push_bits(b as u64, 8);
+        }
+    }
+
+    /// Push a little-endian u32 (headers).
+    pub fn push_u32(&mut self, v: u32) {
+        for b in v.to_le_bytes() {
+            self.push_byte(b);
+        }
+    }
+
+    /// Push a little-endian u64.
+    pub fn push_u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.push_byte(b);
+        }
+    }
+
+    /// Push an f32 bit pattern.
+    pub fn push_f32(&mut self, v: f32) {
+        self.push_u32(v.to_bits());
+    }
+
+    /// Zero-pad to a byte boundary and return the buffer.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Borrow the current bytes (final byte may be partial, zero-padded).
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Bit-level reader matching [`BitWriter`]'s layout.
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Global bit cursor.
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bits consumed so far.
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining_bits(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+
+    /// Read one bit; reading past the end yields `false` (zero padding),
+    /// which matches the writer's implicit zero-fill and lets terminal
+    /// range-coder flushes read cleanly.
+    #[inline]
+    pub fn read_bit(&mut self) -> bool {
+        let byte = self.pos / 8;
+        let bit = self.pos % 8;
+        self.pos += 1;
+        if byte >= self.buf.len() {
+            return false;
+        }
+        (self.buf[byte] >> (7 - bit)) & 1 == 1
+    }
+
+    /// Read `n` bits MSB-first into the low bits of a u64.
+    pub fn read_bits(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 64);
+        let mut v = 0u64;
+        for _ in 0..n {
+            v = (v << 1) | self.read_bit() as u64;
+        }
+        v
+    }
+
+    pub fn read_byte(&mut self) -> u8 {
+        self.read_bits(8) as u8
+    }
+
+    pub fn read_u32(&mut self) -> u32 {
+        let mut b = [0u8; 4];
+        for x in &mut b {
+            *x = self.read_byte();
+        }
+        u32::from_le_bytes(b)
+    }
+
+    pub fn read_u64(&mut self) -> u64 {
+        let mut b = [0u8; 8];
+        for x in &mut b {
+            *x = self.read_byte();
+        }
+        u64::from_le_bytes(b)
+    }
+
+    pub fn read_f32(&mut self) -> f32 {
+        f32::from_bits(self.read_u32())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_roundtrip() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true];
+        for &b in &pattern {
+            w.push_bit(b);
+        }
+        assert_eq!(w.bit_len(), 9);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &b in &pattern {
+            assert_eq!(r.read_bit(), b);
+        }
+    }
+
+    #[test]
+    fn bits_roundtrip_various_widths() {
+        let mut w = BitWriter::new();
+        let vals = [(0b1011u64, 4u32), (0xFFFF, 16), (0, 1), (1, 1), (0x1234_5678_9ABC, 48)];
+        for &(v, n) in &vals {
+            w.push_bits(v, n);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &vals {
+            assert_eq!(r.read_bits(n), v);
+        }
+    }
+
+    #[test]
+    fn numeric_helpers_roundtrip() {
+        let mut w = BitWriter::new();
+        w.push_bit(true); // force misalignment
+        w.push_u32(0xDEADBEEF);
+        w.push_u64(0x0123_4567_89AB_CDEF);
+        w.push_f32(-1.5e-3);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_bit());
+        assert_eq!(r.read_u32(), 0xDEADBEEF);
+        assert_eq!(r.read_u64(), 0x0123_4567_89AB_CDEF);
+        assert_eq!(r.read_f32(), -1.5e-3);
+    }
+
+    #[test]
+    fn read_past_end_zero_fills() {
+        let bytes = [0b1000_0000u8];
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_bit());
+        for _ in 0..16 {
+            assert!(!r.read_bit());
+        }
+    }
+
+    #[test]
+    fn bit_len_counts_exactly() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.push_bits(0, 13);
+        assert_eq!(w.bit_len(), 13);
+        w.push_byte(0xAB);
+        assert_eq!(w.bit_len(), 21);
+    }
+}

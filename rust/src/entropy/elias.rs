@@ -1,0 +1,184 @@
+//! Elias universal integer codes (γ, δ, ω).
+//!
+//! QSGD [17] uses Elias(recursive) coding of the quantized levels; UVeQFed
+//! can use them as a one-pass alternative to the adaptive range coder. All
+//! codes here encode *positive* integers (≥ 1); signed lattice coordinates
+//! go through zig-zag + 1.
+
+use super::{unzigzag, zigzag, BitReader, BitWriter, IntCoder};
+
+/// Elias gamma: unary length prefix + binary remainder. Optimal for
+/// P(x) ∝ 2^{-2 log x} style heavy-tail distributions.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EliasGamma;
+
+/// Elias delta: gamma-coded length + binary remainder — asymptotically
+/// shorter than gamma for large values.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EliasDelta;
+
+/// Elias omega: recursive length encoding (the code QSGD references).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EliasOmega;
+
+#[inline]
+fn ilog2(x: u64) -> u32 {
+    63 - x.leading_zeros()
+}
+
+impl EliasGamma {
+    pub fn put(w: &mut BitWriter, x: u64) {
+        assert!(x >= 1, "Elias codes encode integers >= 1");
+        let n = ilog2(x);
+        for _ in 0..n {
+            w.push_bit(false);
+        }
+        w.push_bits(x, n + 1); // leading 1 + n remainder bits
+    }
+
+    pub fn get(r: &mut BitReader) -> u64 {
+        let mut n = 0u32;
+        while !r.read_bit() {
+            n += 1;
+            assert!(n < 64, "corrupt gamma code");
+        }
+        (1u64 << n) | r.read_bits(n)
+    }
+}
+
+impl EliasDelta {
+    pub fn put(w: &mut BitWriter, x: u64) {
+        assert!(x >= 1);
+        let n = ilog2(x);
+        EliasGamma::put(w, (n + 1) as u64);
+        w.push_bits(x & !(1u64 << n), n); // remainder without leading 1
+    }
+
+    pub fn get(r: &mut BitReader) -> u64 {
+        let len = EliasGamma::get(r) as u32 - 1;
+        (1u64 << len) | r.read_bits(len)
+    }
+}
+
+impl EliasOmega {
+    pub fn put(w: &mut BitWriter, x: u64) {
+        assert!(x >= 1);
+        // Build groups back-to-front.
+        let mut groups: Vec<(u64, u32)> = Vec::new();
+        let mut k = x;
+        while k > 1 {
+            let n = ilog2(k);
+            groups.push((k, n + 1));
+            k = n as u64;
+        }
+        for &(v, bits) in groups.iter().rev() {
+            w.push_bits(v, bits);
+        }
+        w.push_bit(false); // terminator
+    }
+
+    pub fn get(r: &mut BitReader) -> u64 {
+        let mut n = 1u64;
+        loop {
+            if !r.read_bit() {
+                return n;
+            }
+            // The bit we just read is the leading 1 of a (n+1)-bit group.
+            let rest = r.read_bits(n as u32);
+            n = (1u64 << n) | rest;
+        }
+    }
+}
+
+macro_rules! impl_int_coder {
+    ($t:ty, $name:literal) => {
+        impl IntCoder for $t {
+            fn encode(&self, xs: &[i64], w: &mut BitWriter) {
+                for &x in xs {
+                    <$t>::put(w, zigzag(x) + 1);
+                }
+            }
+            fn decode(&self, n: usize, r: &mut BitReader) -> Vec<i64> {
+                (0..n).map(|_| unzigzag(<$t>::get(r) - 1)).collect()
+            }
+            fn name(&self) -> &'static str {
+                $name
+            }
+        }
+    };
+}
+
+impl_int_coder!(EliasGamma, "elias-gamma");
+impl_int_coder!(EliasDelta, "elias-delta");
+impl_int_coder!(EliasOmega, "elias-omega");
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_one<F: Fn(&mut BitWriter, u64), G: Fn(&mut BitReader) -> u64>(
+        put: F,
+        get: G,
+    ) {
+        let vals: Vec<u64> = (1..200)
+            .chain([255, 256, 257, 1023, 1024, 65535, 1 << 20, (1 << 40) + 17])
+            .collect();
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            put(&mut w, v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(get(&mut r), v);
+        }
+    }
+
+    #[test]
+    fn gamma_roundtrip() {
+        roundtrip_one(EliasGamma::put, EliasGamma::get);
+    }
+
+    #[test]
+    fn delta_roundtrip() {
+        roundtrip_one(EliasDelta::put, EliasDelta::get);
+    }
+
+    #[test]
+    fn omega_roundtrip() {
+        roundtrip_one(EliasOmega::put, EliasOmega::get);
+    }
+
+    #[test]
+    fn gamma_known_lengths() {
+        // γ(1) = "1" (1 bit), γ(2) = "010" (3), γ(3)="011", γ(4)="00100" (5).
+        for (v, bits) in [(1u64, 1usize), (2, 3), (3, 3), (4, 5), (7, 5), (8, 7)] {
+            let mut w = BitWriter::new();
+            EliasGamma::put(&mut w, v);
+            assert_eq!(w.bit_len(), bits, "gamma({v})");
+        }
+    }
+
+    #[test]
+    fn signed_int_coder_roundtrip() {
+        let xs: Vec<i64> = (-50..=50).chain([1000, -1000, 123456, -654321]).collect();
+        for coder in [&EliasGamma as &dyn IntCoder, &EliasDelta, &EliasOmega] {
+            let mut w = BitWriter::new();
+            coder.encode(&xs, &mut w);
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            assert_eq!(coder.decode(xs.len(), &mut r), xs, "{}", coder.name());
+        }
+    }
+
+    #[test]
+    fn delta_beats_gamma_for_large_values() {
+        let mut wg = BitWriter::new();
+        let mut wd = BitWriter::new();
+        for v in [100_000u64, 1 << 30, 1 << 45] {
+            EliasGamma::put(&mut wg, v);
+            EliasDelta::put(&mut wd, v);
+        }
+        assert!(wd.bit_len() < wg.bit_len());
+    }
+}

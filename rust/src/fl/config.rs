@@ -1,0 +1,120 @@
+//! Federated run configuration + learning-rate schedules.
+
+use crate::data::Dataset;
+use crate::util::config::Config;
+
+/// Learning-rate schedule.
+#[derive(Debug, Clone, Copy)]
+pub enum LrSchedule {
+    /// Constant η (the §V experiments).
+    Const(f64),
+    /// `η_t = β/(t+γ)` — the Theorem 3 schedule with `β = τ/ρ_c`,
+    /// `γ = τ·max(1, 4ρ_s/ρ_c)`.
+    InvT { beta: f64, gamma: f64 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, t: usize) -> f32 {
+        match *self {
+            LrSchedule::Const(eta) => eta as f32,
+            LrSchedule::InvT { beta, gamma } => (beta / (t as f64 + gamma)) as f32,
+        }
+    }
+}
+
+/// Full federated experiment configuration (Table I fields + systems
+/// knobs).
+#[derive(Debug, Clone)]
+pub struct FlConfig {
+    /// Number of users K.
+    pub users: usize,
+    /// Aggregation rounds (each = τ local iterations).
+    pub rounds: usize,
+    /// τ — local steps between aggregations.
+    pub local_steps: usize,
+    /// Mini-batch size per local step (0 = full local dataset, i.e. GD).
+    pub batch_size: usize,
+    pub lr: LrSchedule,
+    /// Quantization rate R (bits per model parameter).
+    pub rate: f64,
+    pub seed: u64,
+    /// Client-fan-out worker threads.
+    pub workers: usize,
+    /// Evaluate every this many rounds.
+    pub eval_every: usize,
+    pub verbose: bool,
+}
+
+impl FlConfig {
+    /// Weighting coefficients α_k ∝ n_k (the federated-averaging default).
+    pub fn alphas(&self, shards: &[Dataset]) -> Vec<f64> {
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        shards.iter().map(|s| s.len() as f64 / total as f64).collect()
+    }
+
+    /// Load from a `[fl]` section of a TOML config.
+    pub fn from_config(c: &Config) -> Self {
+        Self {
+            users: c.usize_or("fl.users", 10),
+            rounds: c.usize_or("fl.rounds", 100),
+            local_steps: c.usize_or("fl.local_steps", 1),
+            batch_size: c.usize_or("fl.batch_size", 0),
+            lr: LrSchedule::Const(c.f64_or("fl.step_size", 1e-2)),
+            rate: c.f64_or("quantizer.rate", 2.0),
+            seed: c.i64_or("fl.seed", 1) as u64,
+            workers: c.usize_or("fl.workers", crate::util::threadpool::default_workers()),
+            eval_every: c.usize_or("fl.eval_every", 5),
+            verbose: c.bool_or("fl.verbose", false),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules() {
+        let c = LrSchedule::Const(0.1);
+        assert_eq!(c.at(0), 0.1);
+        assert_eq!(c.at(100), 0.1);
+        let d = LrSchedule::InvT { beta: 10.0, gamma: 10.0 };
+        assert_eq!(d.at(0), 1.0);
+        assert!(d.at(90) <= 0.1 + 1e-9);
+    }
+
+    #[test]
+    fn alphas_proportional_to_shard_size() {
+        let mk = |n: usize| Dataset {
+            x: vec![0.0; n],
+            y: vec![0; n],
+            features: 1,
+            classes: 1,
+        };
+        let cfg = FlConfig {
+            users: 2,
+            rounds: 1,
+            local_steps: 1,
+            batch_size: 0,
+            lr: LrSchedule::Const(0.1),
+            rate: 2.0,
+            seed: 1,
+            workers: 1,
+            eval_every: 1,
+            verbose: false,
+        };
+        let a = cfg.alphas(&[mk(30), mk(10)]);
+        assert!((a[0] - 0.75).abs() < 1e-12);
+        assert!((a[1] - 0.25).abs() < 1e-12);
+        assert!((a.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_config_defaults() {
+        let c = Config::parse("[fl]\nusers = 3\nrounds = 7").unwrap();
+        let f = FlConfig::from_config(&c);
+        assert_eq!(f.users, 3);
+        assert_eq!(f.rounds, 7);
+        assert_eq!(f.local_steps, 1);
+    }
+}

@@ -1,0 +1,134 @@
+//! Local-training abstraction: how a client turns `(w_t, shard)` into
+//! `w̃_{t+τ}`. Two implementations exist — [`NativeTrainer`] (pure Rust
+//! models, used for theory workloads and as an oracle) and
+//! `runtime::HloTrainer` (the production path through the AOT-compiled JAX
+//! graphs).
+
+use crate::data::Dataset;
+use crate::models::{EvalReport, Model};
+use crate::prng::{Rng, SplitMix64, Xoshiro256pp};
+
+/// Client-side local training + server-side evaluation interface.
+pub trait Trainer: Send + Sync {
+    fn num_params(&self) -> usize;
+
+    fn init_params(&self, seed: u64) -> Vec<f32>;
+
+    /// Run `tau` local SGD steps from `w0` on `shard`; `batch_size == 0`
+    /// means full-batch gradient descent. `seed` derives the local
+    /// mini-batch sampling stream (i_t^{(k)} in §IV-A).
+    fn local_update(
+        &self,
+        w0: &[f32],
+        shard: &Dataset,
+        tau: usize,
+        lr: f32,
+        batch_size: usize,
+        seed: u64,
+    ) -> Vec<f32>;
+
+    fn evaluate(&self, w: &[f32], ds: &Dataset) -> EvalReport;
+
+    /// Upper bound on concurrent `local_update` calls (PJRT executables
+    /// serialize; native models parallelize freely).
+    fn max_workers(&self) -> usize {
+        usize::MAX
+    }
+}
+
+/// Pure-Rust trainer over any [`Model`].
+pub struct NativeTrainer<M: Model> {
+    model: M,
+}
+
+impl<M: Model> NativeTrainer<M> {
+    pub fn new(model: M) -> Self {
+        Self { model }
+    }
+
+    pub fn model(&self) -> &M {
+        &self.model
+    }
+}
+
+impl<M: Model> Trainer for NativeTrainer<M> {
+    fn num_params(&self) -> usize {
+        self.model.num_params()
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        self.model.init_params(seed)
+    }
+
+    fn local_update(
+        &self,
+        w0: &[f32],
+        shard: &Dataset,
+        tau: usize,
+        lr: f32,
+        batch_size: usize,
+        seed: u64,
+    ) -> Vec<f32> {
+        let mut w = w0.to_vec();
+        let mut grad = vec![0.0f32; w.len()];
+        let mut rng = Xoshiro256pp::seed_from_u64(SplitMix64::new(seed).next());
+        let full: Vec<usize> = (0..shard.len()).collect();
+        for _ in 0..tau {
+            let batch: Vec<usize> = if batch_size == 0 || batch_size >= shard.len() {
+                full.clone()
+            } else {
+                (0..batch_size).map(|_| rng.gen_index(shard.len())).collect()
+            };
+            self.model.gradient(&w, shard, &batch, &mut grad);
+            for (wv, &g) in w.iter_mut().zip(grad.iter()) {
+                *wv -= lr * g;
+            }
+        }
+        w
+    }
+
+    fn evaluate(&self, w: &[f32], ds: &Dataset) -> EvalReport {
+        self.model.evaluate(w, ds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthMnist;
+    use crate::models::LogReg;
+
+    #[test]
+    fn local_update_descends() {
+        let ds = SynthMnist::new(21).dataset(100);
+        let model = LogReg::new(ds.features, ds.classes, 1e-3);
+        let tr = NativeTrainer::new(model);
+        let w0 = tr.init_params(1);
+        let l0 = tr.evaluate(&w0, &ds).loss;
+        let w1 = tr.local_update(&w0, &ds, 10, 0.5, 0, 3);
+        let l1 = tr.evaluate(&w1, &ds).loss;
+        assert!(l1 < l0, "{l1} !< {l0}");
+    }
+
+    #[test]
+    fn minibatch_path_deterministic_given_seed() {
+        let ds = SynthMnist::new(21).dataset(60);
+        let model = LogReg::new(ds.features, ds.classes, 1e-3);
+        let tr = NativeTrainer::new(model);
+        let w0 = tr.init_params(1);
+        let a = tr.local_update(&w0, &ds, 5, 0.1, 8, 42);
+        let b = tr.local_update(&w0, &ds, 5, 0.1, 8, 42);
+        let c = tr.local_update(&w0, &ds, 5, 0.1, 8, 43);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn tau_zero_is_identity() {
+        let ds = SynthMnist::new(21).dataset(30);
+        let model = LogReg::new(ds.features, ds.classes, 1e-3);
+        let tr = NativeTrainer::new(model);
+        let w0 = tr.init_params(1);
+        assert_eq!(tr.local_update(&w0, &ds, 0, 0.1, 0, 1), w0);
+    }
+}

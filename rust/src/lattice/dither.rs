@@ -1,0 +1,116 @@
+//! `Unif(P₀)` dither generation (UVeQFed step **E2**).
+//!
+//! The subtractive-dither machinery requires dither vectors uniform over
+//! the basic (Voronoi) cell `P₀`. Direct rejection sampling against a
+//! Voronoi cell is awkward for general lattices; instead we use the exact
+//! *mod-Λ fold*: if `U` is uniform over any fundamental cell of Λ (we use
+//! the parallelepiped `G·[0,1)^L`), then `U − Q_Λ(U)` is uniform over the
+//! Voronoi region `P₀`. This is the standard construction behind dithered
+//! lattice codes (Zamir & Feder) and works for every lattice we implement.
+
+use super::Lattice;
+use crate::prng::Rng;
+
+/// Draw one dither vector `z ~ Unif(P₀)` for `lat`.
+pub fn sample_dither<R: Rng + ?Sized>(lat: &dyn Lattice, rng: &mut R) -> Vec<f64> {
+    let l = lat.dim();
+    // u = G · v with v ~ Unif[0,1)^L  (uniform over the fundamental
+    // parallelepiped).
+    let v: Vec<f64> = (0..l).map(|_| rng.uniform()).collect();
+    let g = lat.generator_row_major();
+    let mut u = vec![0.0; l];
+    for i in 0..l {
+        let mut s = 0.0;
+        for j in 0..l {
+            s += g[i * l + j] * v[j];
+        }
+        u[i] = s;
+    }
+    let q = lat.quantize(&u);
+    u.iter().zip(&q).map(|(a, b)| a - b).collect()
+}
+
+/// Fill a `[M, L]` row-major buffer with i.i.d. dither vectors.
+pub fn sample_dither_block<R: Rng + ?Sized>(
+    lat: &dyn Lattice,
+    rng: &mut R,
+    m: usize,
+) -> Vec<f64> {
+    let l = lat.dim();
+    let mut out = Vec::with_capacity(m * l);
+    for _ in 0..m {
+        out.extend(sample_dither(lat, rng));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::{self, Lattice};
+    use crate::prng::Xoshiro256pp;
+
+    /// Dither samples must lie inside the Voronoi cell: each sample is at
+    /// least as close to 0 as to any other lattice point.
+    fn assert_in_voronoi(lat: &dyn Lattice, z: &[f64]) {
+        let q = lat.quantize(z);
+        let dz: f64 = z.iter().map(|v| v * v).sum();
+        let dq: f64 = z.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum();
+        // Nearest lattice point to z must be 0 (up to boundary ties).
+        assert!(dq + 1e-9 >= dz || q.iter().all(|&v| v.abs() < 1e-9), "z={z:?} q={q:?}");
+    }
+
+    #[test]
+    fn dither_in_cell_all_lattices() {
+        let mut rng = Xoshiro256pp::seed_from_u64(51);
+        for name in ["scalar", "hex", "d4", "e8"] {
+            let lat = lattice::by_name(name);
+            for _ in 0..300 {
+                let z = sample_dither(lat.as_ref(), &mut rng);
+                assert_in_voronoi(lat.as_ref(), &z);
+            }
+        }
+    }
+
+    #[test]
+    fn dither_second_moment_matches_lattice_constant() {
+        // E‖z‖² must equal σ̄²_Λ (they are the same integral).
+        let lat = lattice::paper_hexagonal();
+        let mut rng = Xoshiro256pp::seed_from_u64(52);
+        let n = 100_000;
+        let mean_sq: f64 = (0..n)
+            .map(|_| {
+                let z = sample_dither(&lat, &mut rng);
+                z.iter().map(|v| v * v).sum::<f64>()
+            })
+            .sum::<f64>()
+            / n as f64;
+        let rel = (mean_sq - lat.second_moment()).abs() / lat.second_moment();
+        assert!(rel < 0.02, "MC={mean_sq} σ̄²={}", lat.second_moment());
+    }
+
+    #[test]
+    fn dither_mean_is_zero() {
+        // Voronoi cells are symmetric about the origin → zero-mean dither.
+        let lat = lattice::paper_hexagonal();
+        let mut rng = Xoshiro256pp::seed_from_u64(53);
+        let n = 100_000;
+        let mut mean = [0.0f64; 2];
+        for _ in 0..n {
+            let z = sample_dither(&lat, &mut rng);
+            mean[0] += z[0];
+            mean[1] += z[1];
+        }
+        let scale = lat.second_moment().sqrt();
+        assert!((mean[0] / n as f64).abs() < 0.01 * scale);
+        assert!((mean[1] / n as f64).abs() < 0.01 * scale);
+    }
+
+    #[test]
+    fn block_layout() {
+        let lat = lattice::paper_hexagonal();
+        let mut rng = Xoshiro256pp::seed_from_u64(54);
+        let block = sample_dither_block(&lat, &mut rng, 17);
+        assert_eq!(block.len(), 34);
+    }
+}

@@ -1,0 +1,282 @@
+//! The checkerboard lattice `D_n = {x ∈ Z^n : Σx_i even}`, with the O(n)
+//! exact decoder of Conway & Sloane (SPLAG §20.2): round every coordinate;
+//! if the rounded coordinate sum is odd, re-round the coordinate whose
+//! rounding error was largest to its second-nearest integer.
+//!
+//! `D4` is the densest lattice packing in dimension 4 and a natural
+//! extension point beyond the paper's L ≤ 2 experiments (the ablation
+//! benches sweep L ∈ {1, 2, 4, 8}).
+
+use super::Lattice;
+use std::sync::OnceLock;
+
+#[derive(Debug, Clone)]
+pub struct DnLattice {
+    n: usize,
+    scale: f64,
+    /// Row-major generator (transpose of the standard row-basis).
+    g: Vec<f64>,
+    g_inv: Vec<f64>,
+    /// Base (scale=1) second moment, shared per dimension.
+    base_moment: f64,
+    /// Coordinate decorrelation predictor (see `generic::predictor_from_ginv`).
+    predictor: Vec<f64>,
+}
+
+/// Cache of the scale-1 second moment per dimension (MC is deterministic,
+/// so this is a pure function of n).
+fn base_moment_for(n: usize) -> f64 {
+    static CACHE: OnceLock<std::sync::Mutex<std::collections::HashMap<usize, f64>>> =
+        OnceLock::new();
+    let cache = CACHE.get_or_init(|| std::sync::Mutex::new(std::collections::HashMap::new()));
+    let mut guard = cache.lock().unwrap();
+    *guard.entry(n).or_insert_with(|| {
+        let probe = DnLattice::new_unmeasured(n, 1.0);
+        super::moment::monte_carlo_second_moment(&probe, 400_000, 0xD4D4_0000 + n as u64)
+    })
+}
+
+impl DnLattice {
+    fn generator(n: usize) -> Vec<f64> {
+        // Standard basis rows (C&S): (−1,−1,0,…), (1,−1,0,…), (0,1,−1,…),…
+        // We store points = G·l with *columns* as basis vectors, i.e. G is
+        // the transpose of that row matrix.
+        let mut rows = vec![vec![0.0; n]; n];
+        rows[0][0] = -1.0;
+        rows[0][1] = -1.0;
+        for i in 1..n {
+            rows[i][i - 1] = 1.0;
+            rows[i][i] = -1.0;
+        }
+        let mut g = vec![0.0; n * n];
+        for (i, row) in rows.iter().enumerate() {
+            for j in 0..n {
+                g[j * n + i] = row[j]; // transpose
+            }
+        }
+        g
+    }
+
+    fn new_unmeasured(n: usize, scale: f64) -> Self {
+        assert!(n >= 2);
+        let mut g = Self::generator(n);
+        for v in g.iter_mut() {
+            *v *= scale;
+        }
+        let (g_inv, _) = invert(&g, n);
+        let predictor = super::generic::predictor_from_ginv(&g_inv, n);
+        Self { n, scale, g, g_inv, base_moment: f64::NAN, predictor }
+    }
+
+    pub fn new(n: usize, scale: f64) -> Self {
+        let mut lat = Self::new_unmeasured(n, scale);
+        lat.base_moment = base_moment_for(n);
+        lat
+    }
+
+    /// Decode to the nearest D_n point (in ambient coordinates).
+    fn decode_point(&self, x: &[f64]) -> Vec<f64> {
+        let s = self.scale;
+        let xs: Vec<f64> = x.iter().map(|v| v / s).collect();
+        let mut rounded: Vec<f64> = xs.iter().map(|v| v.round()).collect();
+        let sum: i64 = rounded.iter().map(|v| *v as i64).sum();
+        if sum.rem_euclid(2) != 0 {
+            // flip the worst coordinate to its second-nearest integer
+            let (mut worst, mut err) = (0usize, -1.0f64);
+            for (i, (&v, &r)) in xs.iter().zip(rounded.iter()).enumerate() {
+                let e = (v - r).abs();
+                if e > err {
+                    err = e;
+                    worst = i;
+                }
+            }
+            let v = xs[worst];
+            let r = rounded[worst];
+            rounded[worst] = if v >= r { r + 1.0 } else { r - 1.0 };
+        }
+        rounded.into_iter().map(|v| v * s).collect()
+    }
+}
+
+// Local copy of small-matrix inversion (kept private to avoid a pub dep
+// on generic.rs internals).
+fn invert(a: &[f64], n: usize) -> (Vec<f64>, f64) {
+    let mut m = a.to_vec();
+    let mut inv = vec![0.0; n * n];
+    for i in 0..n {
+        inv[i * n + i] = 1.0;
+    }
+    let mut det = 1.0;
+    for col in 0..n {
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if m[r * n + col].abs() > m[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        assert!(m[piv * n + col].abs() > 1e-12, "singular");
+        if piv != col {
+            for j in 0..n {
+                m.swap(col * n + j, piv * n + j);
+                inv.swap(col * n + j, piv * n + j);
+            }
+            det = -det;
+        }
+        let p = m[col * n + col];
+        det *= p;
+        for j in 0..n {
+            m[col * n + j] /= p;
+            inv[col * n + j] /= p;
+        }
+        for r in 0..n {
+            if r != col {
+                let f = m[r * n + col];
+                if f != 0.0 {
+                    for j in 0..n {
+                        m[r * n + j] -= f * m[col * n + j];
+                        inv[r * n + j] -= f * inv[col * n + j];
+                    }
+                }
+            }
+        }
+    }
+    (inv, det)
+}
+
+impl Lattice for DnLattice {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn nearest_into(&self, x: &[f64], out: &mut [i64]) {
+        let p = self.decode_point(x);
+        // l = G⁻¹ p, exact integers up to fp noise.
+        let n = self.n;
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += self.g_inv[i * n + j] * p[j];
+            }
+            out[i] = s.round() as i64;
+        }
+    }
+
+    fn point(&self, coords: &[i64]) -> Vec<f64> {
+        let n = self.n;
+        let mut p = vec![0.0; n];
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += self.g[i * n + j] * coords[j] as f64;
+            }
+            p[i] = s;
+        }
+        p
+    }
+
+    fn quantize(&self, x: &[f64]) -> Vec<f64> {
+        self.decode_point(x)
+    }
+
+    fn cell_volume(&self) -> f64 {
+        // |det D_n| = 2, scaled by s^n.
+        2.0 * self.scale.powi(self.n as i32)
+    }
+
+    fn second_moment(&self) -> f64 {
+        self.base_moment * self.scale * self.scale
+    }
+
+    fn generator_row_major(&self) -> Vec<f64> {
+        self.g.clone()
+    }
+
+    fn name(&self) -> String {
+        format!("d{}", self.n)
+    }
+
+    fn boxed_scaled(&self, s: f64) -> Box<dyn Lattice> {
+        let mut lat = DnLattice::new_unmeasured(self.n, self.scale * s);
+        lat.base_moment = self.base_moment;
+        Box::new(lat)
+    }
+
+    fn decorrelate(&self, c: &mut [i64]) {
+        super::generic::apply_decorrelate(&self.predictor, c, self.n);
+    }
+
+    fn recorrelate(&self, c: &mut [i64]) {
+        super::generic::apply_recorrelate(&self.predictor, c, self.n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Rng, Xoshiro256pp};
+
+    #[test]
+    fn points_have_even_coordinate_sum() {
+        let lat = DnLattice::new(4, 1.0);
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        for _ in 0..500 {
+            let x: Vec<f64> = (0..4).map(|_| rng.uniform_range(-5.0, 5.0)).collect();
+            let q = lat.quantize(&x);
+            let sum: i64 = q.iter().map(|v| v.round() as i64).sum();
+            assert_eq!(sum.rem_euclid(2), 0, "q={q:?}");
+            // every coordinate is an integer
+            for v in &q {
+                assert!((v - v.round()).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn decoder_is_nearest_vs_bruteforce() {
+        let lat = DnLattice::new(4, 0.7);
+        let mut rng = Xoshiro256pp::seed_from_u64(32);
+        for _ in 0..300 {
+            let x: Vec<f64> = (0..4).map(|_| rng.uniform_range(-2.0, 2.0)).collect();
+            let q = lat.quantize(&x);
+            let dq: f64 = x.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum();
+            // brute force over all integer points with even sum in a window
+            let mut best = f64::INFINITY;
+            let c: Vec<i64> = x.iter().map(|v| (v / 0.7).round() as i64).collect();
+            for d0 in -2..=2i64 {
+                for d1 in -2..=2i64 {
+                    for d2 in -2..=2i64 {
+                        for d3 in -2..=2i64 {
+                            let p = [c[0] + d0, c[1] + d1, c[2] + d2, c[3] + d3];
+                            if p.iter().sum::<i64>().rem_euclid(2) != 0 {
+                                continue;
+                            }
+                            let d: f64 = x
+                                .iter()
+                                .zip(p.iter())
+                                .map(|(a, &b)| (a - b as f64 * 0.7).powi(2))
+                                .sum();
+                            best = best.min(d);
+                        }
+                    }
+                }
+            }
+            assert!(dq <= best + 1e-9, "dq={dq} best={best}");
+        }
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let lat = DnLattice::new(4, 1.3);
+        let coords = vec![2i64, -1, 3, 0];
+        let p = lat.point(&coords);
+        assert_eq!(lat.nearest(&p), coords);
+    }
+
+    #[test]
+    fn d4_normalized_second_moment_near_known() {
+        // G(D4) ≈ 0.076603. σ̄² = G·L·V^{2/L}; V=2 at scale 1, L=4.
+        let lat = DnLattice::new(4, 1.0);
+        let g = lat.second_moment() / (4.0 * 2f64.powf(2.0 / 4.0));
+        assert!((g - 0.076603).abs() < 2e-3, "G={g}");
+    }
+}

@@ -1,0 +1,275 @@
+//! The Gosset lattice `E8 = D8 ∪ (D8 + ½·1)` with the exact two-coset
+//! decoder (Conway & Sloane SPLAG §20.3): decode in both cosets, keep the
+//! closer. E8 has the best quantization constant of any known dimension-8
+//! lattice (G ≈ 0.0717) — used by the ablation benches to show the paper's
+//! "higher-dimensional lattices quantize better" claim keeps paying beyond
+//! L = 2.
+
+use super::Lattice;
+use std::sync::OnceLock;
+
+#[derive(Debug, Clone)]
+pub struct E8Lattice {
+    scale: f64,
+    g: Vec<f64>,
+    g_inv: Vec<f64>,
+    base_moment: f64,
+    /// Coordinate decorrelation predictor (see `generic::predictor_from_ginv`).
+    predictor: Vec<f64>,
+}
+
+fn base_moment() -> f64 {
+    static M: OnceLock<f64> = OnceLock::new();
+    *M.get_or_init(|| {
+        let probe = E8Lattice::new_unmeasured(1.0);
+        super::moment::monte_carlo_second_moment(&probe, 400_000, 0xE8E8_0001)
+    })
+}
+
+/// Round all coordinates (f-procedure of C&S).
+fn round_all(x: &[f64]) -> Vec<f64> {
+    x.iter().map(|v| v.round()).collect()
+}
+
+/// Nearest D8 point to `x` (unit scale).
+fn decode_d8(x: &[f64]) -> Vec<f64> {
+    let mut r = round_all(x);
+    let sum: i64 = r.iter().map(|v| *v as i64).sum();
+    if sum.rem_euclid(2) != 0 {
+        let (mut worst, mut err) = (0usize, -1.0f64);
+        for (i, (&v, &ri)) in x.iter().zip(r.iter()).enumerate() {
+            let e = (v - ri).abs();
+            if e > err {
+                err = e;
+                worst = i;
+            }
+        }
+        let v = x[worst];
+        let ri = r[worst];
+        r[worst] = if v >= ri { ri + 1.0 } else { ri - 1.0 };
+    }
+    r
+}
+
+impl E8Lattice {
+    fn generator() -> Vec<f64> {
+        // Standard E8 basis rows; stored transposed (columns = basis).
+        let rows: [[f64; 8]; 8] = [
+            [2., 0., 0., 0., 0., 0., 0., 0.],
+            [-1., 1., 0., 0., 0., 0., 0., 0.],
+            [0., -1., 1., 0., 0., 0., 0., 0.],
+            [0., 0., -1., 1., 0., 0., 0., 0.],
+            [0., 0., 0., -1., 1., 0., 0., 0.],
+            [0., 0., 0., 0., -1., 1., 0., 0.],
+            [0., 0., 0., 0., 0., -1., 1., 0.],
+            [0.5, 0.5, 0.5, 0.5, 0.5, 0.5, 0.5, 0.5],
+        ];
+        let mut g = vec![0.0; 64];
+        for (i, row) in rows.iter().enumerate() {
+            for j in 0..8 {
+                g[j * 8 + i] = row[j];
+            }
+        }
+        g
+    }
+
+    fn new_unmeasured(scale: f64) -> Self {
+        let mut g = Self::generator();
+        for v in g.iter_mut() {
+            *v *= scale;
+        }
+        let (g_inv, _) = invert(&g, 8);
+        let predictor = super::generic::predictor_from_ginv(&g_inv, 8);
+        Self { scale, g, g_inv, base_moment: f64::NAN, predictor }
+    }
+
+    pub fn new(scale: f64) -> Self {
+        let mut lat = Self::new_unmeasured(scale);
+        lat.base_moment = base_moment();
+        lat
+    }
+
+    fn decode_point(&self, x: &[f64]) -> Vec<f64> {
+        let s = self.scale;
+        let xs: Vec<f64> = x.iter().map(|v| v / s).collect();
+        // Coset 0: D8.
+        let a = decode_d8(&xs);
+        // Coset ½: decode (x − ½) in D8, add ½ back.
+        let shifted: Vec<f64> = xs.iter().map(|v| v - 0.5).collect();
+        let mut b = decode_d8(&shifted);
+        for v in b.iter_mut() {
+            *v += 0.5;
+        }
+        let da: f64 = xs.iter().zip(&a).map(|(u, v)| (u - v) * (u - v)).sum();
+        let db: f64 = xs.iter().zip(&b).map(|(u, v)| (u - v) * (u - v)).sum();
+        let best = if da <= db { a } else { b };
+        best.into_iter().map(|v| v * s).collect()
+    }
+}
+
+fn invert(a: &[f64], n: usize) -> (Vec<f64>, f64) {
+    let mut m = a.to_vec();
+    let mut inv = vec![0.0; n * n];
+    for i in 0..n {
+        inv[i * n + i] = 1.0;
+    }
+    let mut det = 1.0;
+    for col in 0..n {
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if m[r * n + col].abs() > m[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        assert!(m[piv * n + col].abs() > 1e-12, "singular");
+        if piv != col {
+            for j in 0..n {
+                m.swap(col * n + j, piv * n + j);
+                inv.swap(col * n + j, piv * n + j);
+            }
+            det = -det;
+        }
+        let p = m[col * n + col];
+        det *= p;
+        for j in 0..n {
+            m[col * n + j] /= p;
+            inv[col * n + j] /= p;
+        }
+        for r in 0..n {
+            if r != col {
+                let f = m[r * n + col];
+                if f != 0.0 {
+                    for j in 0..n {
+                        m[r * n + j] -= f * m[col * n + j];
+                        inv[r * n + j] -= f * inv[col * n + j];
+                    }
+                }
+            }
+        }
+    }
+    (inv, det)
+}
+
+impl Lattice for E8Lattice {
+    fn dim(&self) -> usize {
+        8
+    }
+
+    fn nearest_into(&self, x: &[f64], out: &mut [i64]) {
+        let p = self.decode_point(x);
+        for i in 0..8 {
+            let mut s = 0.0;
+            for j in 0..8 {
+                s += self.g_inv[i * 8 + j] * p[j];
+            }
+            out[i] = s.round() as i64;
+        }
+    }
+
+    fn point(&self, coords: &[i64]) -> Vec<f64> {
+        let mut p = vec![0.0; 8];
+        for i in 0..8 {
+            let mut s = 0.0;
+            for j in 0..8 {
+                s += self.g[i * 8 + j] * coords[j] as f64;
+            }
+            p[i] = s;
+        }
+        p
+    }
+
+    fn quantize(&self, x: &[f64]) -> Vec<f64> {
+        self.decode_point(x)
+    }
+
+    fn cell_volume(&self) -> f64 {
+        // det E8 = 1, scaled.
+        self.scale.powi(8)
+    }
+
+    fn second_moment(&self) -> f64 {
+        self.base_moment * self.scale * self.scale
+    }
+
+    fn generator_row_major(&self) -> Vec<f64> {
+        self.g.clone()
+    }
+
+    fn name(&self) -> String {
+        "e8".to_string()
+    }
+
+    fn boxed_scaled(&self, s: f64) -> Box<dyn Lattice> {
+        let mut lat = E8Lattice::new_unmeasured(self.scale * s);
+        lat.base_moment = self.base_moment;
+        Box::new(lat)
+    }
+
+    fn decorrelate(&self, c: &mut [i64]) {
+        super::generic::apply_decorrelate(&self.predictor, c, 8);
+    }
+
+    fn recorrelate(&self, c: &mut [i64]) {
+        super::generic::apply_recorrelate(&self.predictor, c, 8);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Rng, Xoshiro256pp};
+
+    #[test]
+    fn points_are_valid_e8() {
+        // E8 points: either all-integer with even sum, or all-half-integer
+        // with coordinates ≡ ½ (mod 1) and sum even.
+        let lat = E8Lattice::new(1.0);
+        let mut rng = Xoshiro256pp::seed_from_u64(41);
+        for _ in 0..500 {
+            let x: Vec<f64> = (0..8).map(|_| rng.uniform_range(-3.0, 3.0)).collect();
+            let q = lat.quantize(&x);
+            let doubled: Vec<i64> = q.iter().map(|v| (2.0 * v).round() as i64).collect();
+            for (v, &d) in q.iter().zip(&doubled) {
+                assert!((2.0 * v - d as f64).abs() < 1e-9);
+            }
+            let all_int = doubled.iter().all(|d| d % 2 == 0);
+            let all_half = doubled.iter().all(|d| d.rem_euclid(2) == 1);
+            assert!(all_int || all_half, "q={q:?}");
+            let sum2: i64 = doubled.iter().sum();
+            assert_eq!(sum2.rem_euclid(4), 0, "sum of coords must be even: {q:?}");
+        }
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let lat = E8Lattice::new(0.9);
+        let coords = vec![1i64, -2, 0, 3, -1, 2, 0, 1];
+        let p = lat.point(&coords);
+        assert_eq!(lat.nearest(&p), coords);
+    }
+
+    #[test]
+    fn decoder_beats_cubic_rounding() {
+        // E8's quantization error must on average beat Z^8 at equal cell
+        // volume (that's the whole point of the lattice).
+        let e8 = E8Lattice::new(1.0);
+        let z8 = super::super::cubic(8, 1.0); // same cell volume = 1
+        let mut rng = Xoshiro256pp::seed_from_u64(42);
+        let (mut de, mut dz) = (0.0, 0.0);
+        for _ in 0..5000 {
+            let x: Vec<f64> = (0..8).map(|_| rng.uniform_range(-4.0, 4.0)).collect();
+            let qe = e8.quantize(&x);
+            let qz = z8.quantize(&x);
+            de += x.iter().zip(&qe).map(|(a, b)| (a - b) * (a - b)).sum::<f64>();
+            dz += x.iter().zip(&qz).map(|(a, b)| (a - b) * (a - b)).sum::<f64>();
+        }
+        assert!(de < dz, "E8 {de} vs Z8 {dz}");
+    }
+
+    #[test]
+    fn e8_normalized_second_moment_near_known() {
+        let lat = E8Lattice::new(1.0);
+        let g = lat.second_moment() / 8.0; // V = 1 → G = σ̄²/(L·V^{2/L})
+        assert!((g - 0.0716821).abs() < 2e-3, "G={g}");
+    }
+}

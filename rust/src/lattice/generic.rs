@@ -1,0 +1,468 @@
+//! Generic-generator lattice with exact nearest-point search.
+//!
+//! Nearest-point search is NP-hard in general dimension, but for the small,
+//! well-conditioned generators used here (L ≤ 4 in practice) Babai's
+//! rounding followed by a bounded integer offset search is exact once the
+//! search radius covers the basis' orthogonality defect. We compute a
+//! conservative radius from `‖G‖·‖G⁻¹‖` at construction and verify
+//! exactness against brute force in the test suite.
+
+use super::Lattice;
+
+#[derive(Debug, Clone)]
+pub struct GenericLattice {
+    dim: usize,
+    /// Row-major `L×L` generator; lattice points are `G · l` with `l∈Z^L`
+    /// (column-vector convention).
+    g: Vec<f64>,
+    /// Row-major inverse.
+    g_inv: Vec<f64>,
+    det_abs: f64,
+    /// Offset search radius for exact NN (0 for diagonal generators,
+    /// which decode by per-coordinate rounding).
+    radius: i64,
+    /// Diagonal fast path: per-coordinate rounding is exact.
+    diagonal: bool,
+    /// Precomputed offset displacement table: for each offset `o` in the
+    /// search cube, the vector `G·o` (len L each).
+    offsets: Vec<(Vec<i64>, Vec<f64>)>,
+    name: &'static str,
+    /// Cached second moment (computed lazily at construction via MC for
+    /// dims > 1 unless a closed form applies).
+    second_moment: f64,
+    /// Row-major strictly-lower-triangular prediction coefficients for
+    /// coordinate decorrelation: `pred_k = Σ_{j<k} a[k][j]·c_j` (empty for
+    /// diagonal generators). Derived from Σ = G⁻¹·G⁻ᵀ, the coordinate
+    /// covariance under white input.
+    predictor: Vec<f64>,
+}
+
+fn mat_vec(a: &[f64], x: &[f64], n: usize) -> Vec<f64> {
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = 0.0;
+        for j in 0..n {
+            s += a[i * n + j] * x[j];
+        }
+        y[i] = s;
+    }
+    y
+}
+
+/// Gauss-Jordan inverse + determinant for small matrices.
+fn invert(a: &[f64], n: usize) -> (Vec<f64>, f64) {
+    let mut m = a.to_vec();
+    let mut inv = vec![0.0; n * n];
+    for i in 0..n {
+        inv[i * n + i] = 1.0;
+    }
+    let mut det = 1.0;
+    for col in 0..n {
+        // partial pivot
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if m[r * n + col].abs() > m[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        assert!(m[piv * n + col].abs() > 1e-12, "singular generator matrix");
+        if piv != col {
+            for j in 0..n {
+                m.swap(col * n + j, piv * n + j);
+                inv.swap(col * n + j, piv * n + j);
+            }
+            det = -det;
+        }
+        let p = m[col * n + col];
+        det *= p;
+        for j in 0..n {
+            m[col * n + j] /= p;
+            inv[col * n + j] /= p;
+        }
+        for r in 0..n {
+            if r != col {
+                let f = m[r * n + col];
+                if f != 0.0 {
+                    for j in 0..n {
+                        m[r * n + j] -= f * m[col * n + j];
+                        inv[r * n + j] -= f * inv[col * n + j];
+                    }
+                }
+            }
+        }
+    }
+    (inv, det)
+}
+
+fn frobenius(a: &[f64]) -> f64 {
+    a.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Sequential linear-MMSE predictor coefficients from the coordinate
+/// covariance Σ = G⁻¹G⁻ᵀ (white input): `a_k = Σ_{<k,<k}⁻¹ Σ_{<k,k}`,
+/// returned row-major strictly lower triangular. Shared by every lattice
+/// that exposes coordinate decorrelation (generic, D_n, E8).
+pub(crate) fn predictor_from_ginv(g_inv: &[f64], dim: usize) -> Vec<f64> {
+    let mut sigma = vec![0.0; dim * dim];
+    for i in 0..dim {
+        for j in 0..dim {
+            let mut s = 0.0;
+            for t in 0..dim {
+                s += g_inv[i * dim + t] * g_inv[j * dim + t];
+            }
+            sigma[i * dim + j] = s;
+        }
+    }
+    let mut a = vec![0.0; dim * dim];
+    for k in 1..dim {
+        let mut sub = vec![0.0; k * k];
+        for i in 0..k {
+            for j in 0..k {
+                sub[i * k + j] = sigma[i * dim + j];
+            }
+        }
+        let (sub_inv, _) = invert(&sub, k);
+        for i in 0..k {
+            let mut s = 0.0;
+            for j in 0..k {
+                s += sub_inv[i * k + j] * sigma[j * dim + k];
+            }
+            a[k * dim + i] = s;
+        }
+    }
+    a
+}
+
+/// Apply residual prediction back-to-front (shared decorrelate impl).
+pub(crate) fn apply_decorrelate(pred: &[f64], c: &mut [i64], n: usize) {
+    if pred.is_empty() {
+        return;
+    }
+    for k in (1..n).rev() {
+        let mut p = 0.0;
+        for j in 0..k {
+            p += pred[k * n + j] * c[j] as f64;
+        }
+        c[k] -= p.round() as i64;
+    }
+}
+
+/// Inverse of [`apply_decorrelate`].
+pub(crate) fn apply_recorrelate(pred: &[f64], c: &mut [i64], n: usize) {
+    if pred.is_empty() {
+        return;
+    }
+    for k in 1..n {
+        let mut p = 0.0;
+        for j in 0..k {
+            p += pred[k * n + j] * c[j] as f64;
+        }
+        c[k] += p.round() as i64;
+    }
+}
+
+impl GenericLattice {
+    pub fn new(dim: usize, g_row_major: &[f64], name: &'static str) -> Self {
+        assert_eq!(g_row_major.len(), dim * dim);
+        let (g_inv, det) = invert(g_row_major, dim);
+        let diagonal = (0..dim)
+            .all(|i| (0..dim).all(|j| i == j || g_row_major[i * dim + j] == 0.0));
+        // Conservative exactness radius: the Babai error in coordinate space
+        // is bounded by ‖G⁻¹‖·(covering radius) and the covering radius by
+        // (√L/2)·‖G‖ (diagonal of a fundamental box). Round up, clamp to a
+        // sane maximum (search cost is (2r+1)^L). Diagonal generators skip
+        // the search entirely (rounding is exact); non-diagonal generic
+        // lattices are only supported in low dimension — higher-dimensional
+        // structured lattices (D4/E8) have dedicated O(L) decoders.
+        let radius = if diagonal {
+            0
+        } else {
+            assert!(
+                dim <= 4,
+                "GenericLattice offset search is exponential in dim; use DnLattice/E8Lattice"
+            );
+            let cond = frobenius(g_row_major) * frobenius(&g_inv);
+            ((cond * (dim as f64).sqrt() / 2.0).ceil() as i64).clamp(1, 2)
+        };
+        let predictor =
+            if diagonal { Vec::new() } else { predictor_from_ginv(&g_inv, dim) };
+        let mut lat = Self {
+            dim,
+            g: g_row_major.to_vec(),
+            g_inv,
+            det_abs: det.abs(),
+            radius,
+            diagonal,
+            offsets: Vec::new(),
+            name,
+            second_moment: f64::NAN,
+            predictor,
+        };
+        if !diagonal {
+            lat.offsets = lat.build_offsets();
+        }
+        lat.second_moment = if dim == 1 {
+            // Δ·Z: cell is [−Δ/2, Δ/2), σ̄² = Δ²/12.
+            lat.det_abs * lat.det_abs / 12.0
+        } else if lat.is_diagonal() {
+            // Δ·Z^L cube: σ̄² = L·Δ²/12 (Δ read off the diagonal; supports
+            // unequal diagonals too).
+            (0..dim).map(|i| lat.g[i * dim + i].powi(2) / 12.0).sum()
+        } else {
+            super::moment::monte_carlo_second_moment(&lat, 400_000, 0xD17E_5EED)
+        };
+        lat
+    }
+
+    fn is_diagonal(&self) -> bool {
+        let n = self.dim;
+        (0..n).all(|i| (0..n).all(|j| i == j || self.g[i * n + j] == 0.0))
+    }
+
+    fn build_offsets(&self) -> Vec<(Vec<i64>, Vec<f64>)> {
+        let n = self.dim;
+        let r = self.radius;
+        let mut out = Vec::new();
+        let width = (2 * r + 1) as usize;
+        let total = width.pow(n as u32);
+        for idx in 0..total {
+            let mut rem = idx;
+            let mut o = vec![0i64; n];
+            for d in 0..n {
+                o[d] = (rem % width) as i64 - r;
+                rem /= width;
+            }
+            let disp = {
+                let of: Vec<f64> = o.iter().map(|&v| v as f64).collect();
+                mat_vec(&self.g, &of, n)
+            };
+            out.push((o, disp));
+        }
+        // Sort by displacement norm so the common case (offset 0) is tried
+        // first and the scan can early-exit in the squared-distance compare.
+        out.sort_by(|a, b| {
+            let na: f64 = a.1.iter().map(|x| x * x).sum();
+            let nb: f64 = b.1.iter().map(|x| x * x).sum();
+            na.partial_cmp(&nb).unwrap()
+        });
+        out
+    }
+
+    /// Return the same lattice scaled by `s` (`s·Λ`).
+    pub fn scaled(&self, s: f64) -> GenericLattice {
+        assert!(s > 0.0);
+        let g: Vec<f64> = self.g.iter().map(|x| x * s).collect();
+        let mut lat = GenericLattice::new(self.dim, &g, self.name);
+        // σ̄² scales as s²; reuse the (possibly MC) base value for exact
+        // consistency between a lattice and its scalings.
+        lat.second_moment = self.second_moment * s * s;
+        lat
+    }
+
+    /// Babai rounding: `round(G⁻¹ x)` (kept for the brute-force tests).
+    #[cfg(test)]
+    fn babai(&self, x: &[f64]) -> Vec<i64> {
+        mat_vec(&self.g_inv, x, self.dim)
+            .into_iter()
+            .map(|v| if v.is_finite() { v.round() as i64 } else { 0 })
+            .collect()
+    }
+}
+
+impl Lattice for GenericLattice {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn nearest_into(&self, x: &[f64], out: &mut [i64]) {
+        debug_assert_eq!(x.len(), self.dim);
+        let n = self.dim;
+        if self.diagonal {
+            // Per-coordinate rounding is exact for Δ·Z^L. Saturating cast
+            // guards non-finite / extreme inputs.
+            for i in 0..n {
+                let v = x[i] / self.g[i * n + i];
+                out[i] = if v.is_finite() { v.round() as i64 } else { 0 };
+            }
+            return;
+        }
+        // Babai rounding + residual, stack-allocated up to dim 4 (generic
+        // non-diagonal lattices are constructor-capped at dim ≤ 4).
+        let mut base = [0i64; 4];
+        let mut res = [0.0f64; 4];
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += self.g_inv[i * n + j] * x[j];
+            }
+            base[i] = if s.is_finite() { s.round() as i64 } else { 0 };
+        }
+        for i in 0..n {
+            let mut p = 0.0;
+            for j in 0..n {
+                p += self.g[i * n + j] * base[j] as f64;
+            }
+            res[i] = x[i] - p;
+        }
+        let mut best_d = f64::INFINITY;
+        let mut best_idx = 0usize;
+        for (idx, (_, disp)) in self.offsets.iter().enumerate() {
+            let mut d = 0.0;
+            for i in 0..n {
+                let t = res[i] - disp[i];
+                d += t * t;
+                if d >= best_d {
+                    break;
+                }
+            }
+            if d < best_d {
+                best_d = d;
+                best_idx = idx;
+            }
+        }
+        let o = &self.offsets[best_idx].0;
+        for i in 0..n {
+            out[i] = base[i] + o[i];
+        }
+    }
+
+    fn point(&self, coords: &[i64]) -> Vec<f64> {
+        debug_assert_eq!(coords.len(), self.dim);
+        let cf: Vec<f64> = coords.iter().map(|&v| v as f64).collect();
+        mat_vec(&self.g, &cf, self.dim)
+    }
+
+    fn cell_volume(&self) -> f64 {
+        self.det_abs
+    }
+
+    fn second_moment(&self) -> f64 {
+        self.second_moment
+    }
+
+    fn generator_row_major(&self) -> Vec<f64> {
+        self.g.clone()
+    }
+
+    fn name(&self) -> String {
+        self.name.to_string()
+    }
+
+    fn boxed_scaled(&self, s: f64) -> Box<dyn Lattice> {
+        Box::new(self.scaled(s))
+    }
+
+    fn decorrelate(&self, c: &mut [i64]) {
+        apply_decorrelate(&self.predictor, c, self.dim);
+    }
+
+    fn recorrelate(&self, c: &mut [i64]) {
+        apply_recorrelate(&self.predictor, c, self.dim);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Rng, Xoshiro256pp};
+
+    /// Brute-force NN over a generous coordinate window.
+    fn brute_nearest(lat: &GenericLattice, x: &[f64], w: i64) -> Vec<i64> {
+        let base = lat.babai(x);
+        let n = lat.dim();
+        let mut best = base.clone();
+        let mut best_d = f64::INFINITY;
+        let width = (2 * w + 1) as usize;
+        for idx in 0..width.pow(n as u32) {
+            let mut rem = idx;
+            let mut c = base.clone();
+            for d in 0..n {
+                c[d] += (rem % width) as i64 - w;
+                rem /= width;
+            }
+            let p = lat.point(&c);
+            let d: f64 = x.iter().zip(&p).map(|(a, b)| (a - b) * (a - b)).sum();
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn nearest_matches_bruteforce_hex() {
+        let lat = super::super::paper_hexagonal();
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        for _ in 0..2000 {
+            let x = [rng.uniform_range(-8.0, 8.0), rng.uniform_range(-8.0, 8.0)];
+            let fast = lat.nearest(&x);
+            let brute = brute_nearest(&lat, &x, 4);
+            let pf = lat.point(&fast);
+            let pb = lat.point(&brute);
+            let df: f64 = x.iter().zip(&pf).map(|(a, b)| (a - b) * (a - b)).sum();
+            let db: f64 = x.iter().zip(&pb).map(|(a, b)| (a - b) * (a - b)).sum();
+            assert!(df <= db + 1e-12, "x={x:?} fast={fast:?} brute={brute:?}");
+        }
+    }
+
+    #[test]
+    fn nearest_matches_bruteforce_a2_scaled() {
+        let lat = super::super::a2_hexagonal().scaled(0.37);
+        let mut rng = Xoshiro256pp::seed_from_u64(22);
+        for _ in 0..1000 {
+            let x = [rng.uniform_range(-2.0, 2.0), rng.uniform_range(-2.0, 2.0)];
+            let fast = lat.quantize(&x);
+            let brute = lat.point(&brute_nearest(&lat, &x, 4));
+            let df: f64 = x.iter().zip(&fast).map(|(a, b)| (a - b) * (a - b)).sum();
+            let db: f64 = x.iter().zip(&brute).map(|(a, b)| (a - b) * (a - b)).sum();
+            assert!(df <= db + 1e-12);
+        }
+    }
+
+    #[test]
+    fn scaled_lattice_scales_everything() {
+        let base = super::super::paper_hexagonal();
+        let s = base.scaled(2.5);
+        assert!((s.cell_volume() - base.cell_volume() * 2.5 * 2.5).abs() < 1e-9);
+        assert!(
+            (s.second_moment() - base.second_moment() * 2.5 * 2.5).abs()
+                / s.second_moment()
+                < 1e-9
+        );
+        let p = s.point(&[1, -2]);
+        let pb = base.point(&[1, -2]);
+        assert!((p[0] - 2.5 * pb[0]).abs() < 1e-12);
+        assert!((p[1] - 2.5 * pb[1]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cubic_second_moment_closed_form() {
+        let lat = super::super::cubic(3, 0.8);
+        // σ̄² = L·Δ²/12 = 3·0.64/12 = 0.16
+        assert!((lat.second_moment() - 0.16).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hex_second_moment_matches_known_constant() {
+        // For any 2-D lattice, the dimensionless normalized second moment
+        // is G(Λ) = σ̄²/(L·V). A2 hexagonal: G = 5/(36√3) ≈ 0.0801875.
+        let lat = super::super::a2_hexagonal();
+        let g = lat.second_moment() / (2.0 * lat.cell_volume());
+        assert!((g - 5.0 / (36.0 * 3f64.sqrt())).abs() < 2e-3, "G={g}");
+    }
+
+    #[test]
+    fn tie_breaking_is_deterministic() {
+        let lat = super::super::scalar(1.0);
+        let a = lat.nearest(&[0.5]);
+        let b = lat.nearest(&[0.5]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn singular_generator_rejected() {
+        let _ = GenericLattice::new(2, &[1.0, 2.0, 2.0, 4.0], "bad");
+    }
+}

@@ -1,0 +1,61 @@
+//! Second-moment estimation for Voronoi cells.
+//!
+//! `σ̄²_Λ = ∫_{P₀}‖x‖² dx / ∫_{P₀} dx` (the paper's normalization, eq. after
+//! Thm 1) equals `E‖U‖²` for `U ~ Unif(P₀)`, which we estimate with the
+//! exact mod-Λ dither sampler. The seed is fixed so the value is a pure
+//! function of the lattice — important because σ̄² enters the theoretical
+//! bounds reported in EXPERIMENTS.md.
+
+use super::dither::sample_dither;
+use super::Lattice;
+use crate::prng::Xoshiro256pp;
+
+/// Deterministic Monte-Carlo estimate of `E‖U‖²`, `U ~ Unif(P₀)`.
+pub fn monte_carlo_second_moment(lat: &dyn Lattice, samples: usize, seed: u64) -> f64 {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut acc = 0.0f64;
+    for _ in 0..samples {
+        let z = sample_dither(lat, &mut rng);
+        acc += z.iter().map(|v| v * v).sum::<f64>();
+    }
+    acc / samples as f64
+}
+
+/// Dimensionless normalized second moment `G(Λ) = σ̄²/(L·V^{2/L})` — the
+/// figure of merit tabulated by Conway & Sloane. Exposed for the ablation
+/// report.
+pub fn dimensionless_g(lat: &dyn Lattice) -> f64 {
+    let l = lat.dim() as f64;
+    lat.second_moment() / (l * lat.cell_volume().powf(2.0 / l))
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lattice;
+
+    #[test]
+    fn scalar_g_is_one_twelfth() {
+        let lat = lattice::scalar(0.7);
+        let g = super::dimensionless_g(&lat);
+        assert!((g - 1.0 / 12.0).abs() < 1e-9, "G={g}");
+    }
+
+    #[test]
+    fn g_ordering_improves_with_dimension() {
+        // G(Z) > G(hex) > G(D4) > G(E8): the vector-quantization gain the
+        // paper banks on.
+        let gz = super::dimensionless_g(&lattice::scalar(1.0));
+        let gh = super::dimensionless_g(&lattice::a2_hexagonal());
+        let gd = super::dimensionless_g(&lattice::DnLattice::new(4, 1.0));
+        let ge = super::dimensionless_g(&lattice::E8Lattice::new(1.0));
+        assert!(gz > gh && gh > gd && gd > ge, "{gz} {gh} {gd} {ge}");
+    }
+
+    #[test]
+    fn mc_is_deterministic() {
+        let lat = lattice::paper_hexagonal();
+        let a = super::monte_carlo_second_moment(&lat, 10_000, 7);
+        let b = super::monte_carlo_second_moment(&lat, 10_000, 7);
+        assert_eq!(a, b);
+    }
+}

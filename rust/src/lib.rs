@@ -1,0 +1,38 @@
+//! # UVeQFed — Universal Vector Quantization for Federated Learning
+//!
+//! A production-grade reproduction of *Shlezinger, Chen, Eldar, Poor, Cui,
+//! "UVeQFed: Universal Vector Quantization for Federated Learning"* (IEEE
+//! TSP 2020) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the federated coordinator: round scheduling,
+//!   client fan-out, the UVeQFed codec and every baseline, the
+//!   rate-constrained uplink, aggregation, metrics;
+//! * **L2 (python/compile/model.py)** — JAX forward/backward graphs for the
+//!   paper's models, AOT-lowered to HLO text in `artifacts/`;
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (dithered lattice
+//!   quantization, fused dense layer) called from L2.
+//!
+//! Python never runs on the request path: `runtime::` loads the HLO
+//! artifacts once via PJRT and the rust binary is self-contained.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index, and
+//! `examples/` for end-to-end drivers.
+
+pub mod coordinator;
+pub mod data;
+pub mod entropy;
+pub mod fl;
+pub mod lattice;
+pub mod metrics;
+pub mod models;
+pub mod prng;
+pub mod quantizer;
+pub mod runtime;
+pub mod tensor;
+pub mod theory;
+pub mod util;
+
+pub mod bench;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

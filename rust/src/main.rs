@@ -1,0 +1,213 @@
+//! `uveqfed` — launcher CLI for the federated runtime.
+//!
+//! Subcommands:
+//! * `train`    — run a federated experiment from a TOML config
+//! * `distort`  — one-off codec distortion measurement
+//! * `info`     — print lattice/codec/runtime diagnostics
+//!
+//! Examples: `uveqfed train --config configs/fig6_mnist_k100_r2.toml`,
+//! `uveqfed distort --codec uveqfed-l2 --rate 2`.
+
+use uveqfed::data::{partition, PartitionScheme, SynthCifar, SynthMnist};
+use uveqfed::fl::{run_federated, FlConfig, NativeTrainer, Trainer};
+use uveqfed::lattice;
+use uveqfed::models::{CnnLite, LogReg, MlpMnist};
+use uveqfed::quantizer;
+use uveqfed::runtime;
+use uveqfed::util::cli::Cli;
+use uveqfed::util::config::Config;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    match sub {
+        "train" => cmd_train(rest),
+        "distort" => cmd_distort(rest),
+        "info" => cmd_info(),
+        _ => {
+            println!(
+                "uveqfed — Universal Vector Quantization for Federated Learning\n\n\
+                 subcommands:\n  train   --config <file> [--codec NAME] [--rate R] [--rounds N]\n  \
+                 distort --codec NAME --rate R [--size N]\n  info\n\n\
+                 See configs/*.toml for the paper's experiment setups."
+            );
+        }
+    }
+}
+
+fn cmd_train(argv: &[String]) {
+    let cli = Cli::new("uveqfed train", "run a federated experiment")
+        .req("config", "TOML config file (see configs/)")
+        .opt("codec", "", "override quantizer.kind")
+        .opt("rate", "", "override quantizer.rate")
+        .opt("rounds", "", "override fl.rounds")
+        .opt("out", "", "write history CSV here")
+        .flag("verbose", "per-eval logging");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let conf = Config::from_file(args.get("config")).expect("config load");
+    let mut flc = FlConfig::from_config(&conf);
+    flc.verbose = flc.verbose || args.has_flag("verbose");
+    if !args.get("rate").is_empty() {
+        flc.rate = args.get_f64("rate");
+    }
+    if !args.get("rounds").is_empty() {
+        flc.rounds = args.get_usize("rounds");
+    }
+    let codec_name = if args.get("codec").is_empty() {
+        conf.str_or("quantizer.kind", "uveqfed-l2")
+    } else {
+        args.get("codec").to_string()
+    };
+    let codec = quantizer::by_name(&codec_name);
+
+    let dataset = conf.str_or("data.dataset", "mnist");
+    let n_per_user = conf.usize_or("data.samples_per_user", 500);
+    let scheme = match conf.str_or("data.partition", "iid").as_str() {
+        "iid" => PartitionScheme::Iid,
+        "sequential" => PartitionScheme::Sequential,
+        "dominant" => PartitionScheme::DominantLabel {
+            frac: conf.f64_or("data.dominant_frac", 0.25),
+        },
+        "dirichlet" => PartitionScheme::Dirichlet {
+            alpha: conf.f64_or("data.dirichlet_alpha", 0.5),
+        },
+        other => panic!("unknown partition '{other}'"),
+    };
+    let seed = flc.seed;
+    let test_n = conf.usize_or("data.test_samples", 1000);
+
+    let (shards, test, trainer): (Vec<_>, _, Box<dyn Trainer>) = match dataset.as_str() {
+        "mnist" => {
+            let g = SynthMnist::new(seed);
+            let ds = g.dataset(flc.users * n_per_user);
+            let test = g.test_dataset(test_n);
+            let shards = partition(&ds, flc.users, n_per_user, scheme, seed);
+            let trainer: Box<dyn Trainer> = match conf.str_or("model.backend", "native").as_str()
+            {
+                "hlo" => Box::new(
+                    runtime::HloTrainer::load("mnist", conf.usize_or("model.step_batch", n_per_user))
+                        .expect("load HLO trainer (run `make artifacts`)"),
+                ),
+                _ => Box::new(NativeTrainer::new(MlpMnist::new(
+                    conf.usize_or("model.hidden", 50),
+                ))),
+            };
+            (shards, test, trainer)
+        }
+        "cifar" => {
+            let g = SynthCifar::new(seed);
+            let ds = g.dataset(flc.users * n_per_user);
+            let test = g.test_dataset(test_n);
+            let shards = partition(&ds, flc.users, n_per_user, scheme, seed);
+            let trainer: Box<dyn Trainer> = match conf.str_or("model.backend", "native").as_str()
+            {
+                "hlo" => Box::new(
+                    runtime::HloTrainer::load("cifar", conf.usize_or("model.step_batch", 60))
+                        .expect("load HLO trainer (run `make artifacts`)"),
+                ),
+                _ => Box::new(NativeTrainer::new(CnnLite::cifar())),
+            };
+            (shards, test, trainer)
+        }
+        "logreg-mnist" => {
+            let g = SynthMnist::new(seed);
+            let ds = g.dataset(flc.users * n_per_user);
+            let test = g.test_dataset(test_n);
+            let shards = partition(&ds, flc.users, n_per_user, scheme, seed);
+            let trainer: Box<dyn Trainer> = Box::new(NativeTrainer::new(LogReg::new(
+                ds.features,
+                ds.classes,
+                conf.f64_or("model.lambda", 1e-2) as f32,
+            )));
+            (shards, test, trainer)
+        }
+        other => panic!("unknown dataset '{other}'"),
+    };
+
+    println!(
+        "train: dataset={dataset} users={} rounds={} codec={} rate={}",
+        flc.users,
+        flc.rounds,
+        codec.name(),
+        flc.rate
+    );
+    let hist = run_federated(&flc, trainer.as_ref(), &shards, &test, codec.as_ref());
+    println!(
+        "final accuracy {:.4} | best {:.4} | uplink {:.3e} bits",
+        hist.final_accuracy(),
+        hist.best_accuracy(),
+        hist.rows.last().map(|r| r.uplink_bits).unwrap_or(0.0)
+    );
+    let out = args.get("out");
+    if !out.is_empty() {
+        hist.to_table().write_file(out).expect("write history");
+        println!("history → {out}");
+    }
+}
+
+fn cmd_distort(argv: &[String]) {
+    let cli = Cli::new("uveqfed distort", "measure codec distortion on Gaussian data")
+        .opt("codec", "uveqfed-l2", "codec name")
+        .opt("rate", "2", "bits per entry")
+        .opt("size", "128", "matrix side (size×size entries)")
+        .opt("trials", "10", "averaging trials")
+        .flag("correlated", "use ΣHΣᵀ correlated data (Fig. 5)");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let codec = quantizer::by_name(args.get("codec"));
+    let rate = args.get_f64("rate");
+    let n = args.get_usize("size");
+    let trials = args.get_usize("trials");
+    let mut mse = 0.0;
+    let mut bpe = 0.0;
+    for t in 0..trials {
+        let mut h = uveqfed::data::gaussian_matrix(n, 1000 + t as u64);
+        if args.has_flag("correlated") {
+            let sigma = uveqfed::data::exp_decay_sigma(n, 0.2);
+            h = uveqfed::data::correlated_matrix(&h, &sigma, n);
+        }
+        let rep = quantizer::measure_distortion(codec.as_ref(), &h, rate, 7, t as u64);
+        mse += rep.mse / trials as f64;
+        bpe += rep.bits_per_entry / trials as f64;
+    }
+    println!(
+        "codec={} rate={rate} size={n}x{n} trials={trials}\n  per-entry MSE {mse:.6e}\n  bits/entry  {bpe:.4}",
+        codec.name()
+    );
+}
+
+fn cmd_info() {
+    println!("uveqfed info");
+    println!("lattices:");
+    for name in ["scalar", "hex", "hex-a2", "cubic2", "d4", "e8"] {
+        let lat = lattice::by_name(name);
+        println!(
+            "  {name:<8} L={} det={:.4} σ̄²={:.6} G(Λ)={:.6}",
+            lat.dim(),
+            lat.cell_volume(),
+            lat.second_moment(),
+            lattice::moment::dimensionless_g(lat.as_ref()),
+        );
+    }
+    println!(
+        "codecs: uveqfed-l1/-l2/-l4/-l8, qsgd, rotation, subsample, terngrad, signsgd, topk, identity"
+    );
+    print!("artifacts: ");
+    if runtime::artifacts_available() {
+        println!("available at {:?}", runtime::artifacts_dir());
+    } else {
+        println!("NOT built (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,158 @@
+//! Metrics: wall-clock timers, counters, and CSV emission for experiment
+//! curves (the plotting inputs for every reproduced figure).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+/// Simple scoped timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+}
+
+/// Accumulating named counters/gauges for a run; rendered as a summary or
+/// merged into result JSON.
+#[derive(Debug, Default, Clone)]
+pub struct Counters {
+    vals: BTreeMap<String, f64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, key: &str, v: f64) {
+        *self.vals.entry(key.to_string()).or_insert(0.0) += v;
+    }
+
+    pub fn set(&mut self, key: &str, v: f64) {
+        self.vals.insert(key.to_string(), v);
+    }
+
+    pub fn get(&self, key: &str) -> f64 {
+        self.vals.get(key).copied().unwrap_or(0.0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.vals.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+}
+
+/// CSV table writer with a fixed header, used for figure data.
+#[derive(Debug, Clone)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.header.len(), "row width mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+            s.push_str(&cells.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn write_file(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+
+    /// Render as an aligned text table for terminal output.
+    pub fn to_pretty(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        let cells: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| r.iter().map(|v| format!("{v:.6}")).collect())
+            .collect();
+        for row in &cells {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut s = String::new();
+        for (h, w) in self.header.iter().zip(&widths) {
+            s.push_str(&format!("{h:>w$}  ", w = w));
+        }
+        s.push('\n');
+        for row in &cells {
+            for (c, w) in row.iter().zip(&widths) {
+                s.push_str(&format!("{c:>w$}  ", w = w));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut c = Counters::new();
+        c.add("bits", 10.0);
+        c.add("bits", 5.0);
+        c.set("rounds", 3.0);
+        assert_eq!(c.get("bits"), 15.0);
+        assert_eq!(c.get("rounds"), 3.0);
+        assert_eq!(c.get("missing"), 0.0);
+    }
+
+    #[test]
+    fn csv_rendering() {
+        let mut t = CsvTable::new(&["round", "acc"]);
+        t.push(vec![0.0, 0.1]);
+        t.push(vec![1.0, 0.5]);
+        assert_eq!(t.to_csv(), "round,acc\n0,0.1\n1,0.5\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut t = CsvTable::new(&["a"]);
+        t.push(vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+}

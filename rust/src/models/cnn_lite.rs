@@ -1,0 +1,307 @@
+//! A compact convolutional classifier (conv5×5 → ReLU → maxpool2 → FC →
+//! softmax) with hand-written backprop.
+//!
+//! Role: CPU-cheap conv-net oracle for tests and the artifact-free
+//! fallback of the CIFAR benches. The full 5-layer architecture of §V-B
+//! lives in `python/compile/model.py` (JAX autodiff) and runs through the
+//! PJRT runtime.
+
+use super::{EvalReport, Model};
+use crate::data::Dataset;
+use crate::prng::{Normal, Xoshiro256pp};
+
+#[derive(Debug, Clone)]
+pub struct CnnLite {
+    pub side: usize,
+    pub in_ch: usize,
+    pub filters: usize,
+    pub ksize: usize,
+    pub classes: usize,
+}
+
+impl CnnLite {
+    /// CIFAR-shaped default: 32×32×3 input, 8 filters of 5×5, 10 classes.
+    pub fn cifar() -> Self {
+        Self { side: 32, in_ch: 3, filters: 8, ksize: 5, classes: 10 }
+    }
+
+    fn conv_out(&self) -> usize {
+        self.side - self.ksize + 1
+    }
+
+    fn pool_out(&self) -> usize {
+        self.conv_out() / 2
+    }
+
+    fn flat_dim(&self) -> usize {
+        self.pool_out() * self.pool_out() * self.filters
+    }
+
+    fn wk_len(&self) -> usize {
+        self.filters * self.in_ch * self.ksize * self.ksize
+    }
+
+    /// Param layout: [conv W (F·C·k·k) | conv b (F) | fc W (flat·classes) |
+    /// fc b (classes)].
+    fn split<'a>(&self, w: &'a [f32]) -> (&'a [f32], &'a [f32], &'a [f32], &'a [f32]) {
+        let wk = self.wk_len();
+        let f = self.filters;
+        let fc = self.flat_dim() * self.classes;
+        (
+            &w[0..wk],
+            &w[wk..wk + f],
+            &w[wk + f..wk + f + fc],
+            &w[wk + f + fc..],
+        )
+    }
+
+    /// Forward one sample. Returns (conv pre-activations, pooled+flattened
+    /// activations with argmax indices for pool backprop, probs).
+    fn forward_sample(
+        &self,
+        w: &[f32],
+        x: &[f32],
+    ) -> (Vec<f32>, Vec<f32>, Vec<usize>, Vec<f32>) {
+        let (wc, bc, wf, bf) = self.split(w);
+        let (s, c_in, f, k) = (self.side, self.in_ch, self.filters, self.ksize);
+        let co = self.conv_out();
+        let po = self.pool_out();
+
+        // conv + ReLU
+        let mut conv = vec![0.0f32; f * co * co];
+        for fo in 0..f {
+            for oy in 0..co {
+                for ox in 0..co {
+                    let mut acc = bc[fo];
+                    for ci in 0..c_in {
+                        let base_w = ((fo * c_in) + ci) * k * k;
+                        let base_x = ci * s * s;
+                        for ky in 0..k {
+                            let xrow = base_x + (oy + ky) * s + ox;
+                            let wrow = base_w + ky * k;
+                            for kx in 0..k {
+                                acc += x[xrow + kx] * wc[wrow + kx];
+                            }
+                        }
+                    }
+                    conv[fo * co * co + oy * co + ox] = acc;
+                }
+            }
+        }
+        // ReLU + 2×2 maxpool, remembering argmax for backprop
+        let mut pooled = vec![0.0f32; f * po * po];
+        let mut arg = vec![0usize; f * po * po];
+        for fo in 0..f {
+            for py in 0..po {
+                for px in 0..po {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_i = 0;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let i = fo * co * co + (2 * py + dy) * co + (2 * px + dx);
+                            let v = conv[i].max(0.0);
+                            if v > best {
+                                best = v;
+                                best_i = i;
+                            }
+                        }
+                    }
+                    pooled[fo * po * po + py * po + px] = best;
+                    arg[fo * po * po + py * po + px] = best_i;
+                }
+            }
+        }
+        // FC + softmax
+        let mut z = vec![0.0f32; self.classes];
+        for j in 0..self.classes {
+            let mut acc = bf[j];
+            for (i, &p) in pooled.iter().enumerate() {
+                acc += p * wf[i * self.classes + j];
+            }
+            z[j] = acc;
+        }
+        let max = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in z.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in z.iter_mut() {
+            *v /= sum;
+        }
+        (conv, pooled, arg, z)
+    }
+}
+
+impl Model for CnnLite {
+    fn num_params(&self) -> usize {
+        self.wk_len() + self.filters + self.flat_dim() * self.classes + self.classes
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut w = Vec::with_capacity(self.num_params());
+        let fan_in = self.in_ch * self.ksize * self.ksize;
+        let gk = Normal::new(0.0, (2.0 / fan_in as f64).sqrt());
+        w.extend(gk.vec_f32(&mut rng, self.wk_len()));
+        w.extend(std::iter::repeat(0.0f32).take(self.filters));
+        let gf = Normal::new(0.0, (2.0 / (self.flat_dim() + self.classes) as f64).sqrt());
+        w.extend(gf.vec_f32(&mut rng, self.flat_dim() * self.classes));
+        w.extend(std::iter::repeat(0.0f32).take(self.classes));
+        w
+    }
+
+    fn gradient(&self, w: &[f32], ds: &Dataset, batch: &[usize], grad: &mut [f32]) {
+        grad.fill(0.0);
+        let (s, c_in, f, k) = (self.side, self.in_ch, self.filters, self.ksize);
+        let co = self.conv_out();
+        let flat = self.flat_dim();
+        let (_, _, wf, _) = self.split(w);
+        let wk = self.wk_len();
+        let inv_n = 1.0 / batch.len() as f32;
+
+        for &bi in batch {
+            let (x, y) = ds.sample(bi);
+            let (conv, pooled, arg, probs) = self.forward_sample(w, x);
+            // dz (classes)
+            let mut dz = probs;
+            dz[y as usize] -= 1.0;
+            for v in dz.iter_mut() {
+                *v *= inv_n;
+            }
+            // FC grads + dpool
+            let (gwf_off, gbf_off) = (wk + f, wk + f + flat * self.classes);
+            let mut dpool = vec![0.0f32; flat];
+            for (i, &p) in pooled.iter().enumerate() {
+                let row = &mut grad[gwf_off + i * self.classes..gwf_off + (i + 1) * self.classes];
+                let mut acc = 0.0f32;
+                for j in 0..self.classes {
+                    row[j] += p * dz[j];
+                    acc += wf[i * self.classes + j] * dz[j];
+                }
+                dpool[i] = acc;
+            }
+            for j in 0..self.classes {
+                grad[gbf_off + j] += dz[j];
+            }
+            // pool + ReLU backward → dconv (sparse at argmax)
+            let mut dconv = vec![0.0f32; f * co * co];
+            for (pi, &ci) in arg.iter().enumerate() {
+                if conv[ci] > 0.0 {
+                    dconv[ci] += dpool[pi];
+                }
+            }
+            // conv backward: accumulate weight + bias grads
+            for fo in 0..f {
+                let mut gb = 0.0f32;
+                for oy in 0..co {
+                    for ox in 0..co {
+                        let d = dconv[fo * co * co + oy * co + ox];
+                        if d == 0.0 {
+                            continue;
+                        }
+                        gb += d;
+                        for ci in 0..c_in {
+                            let base_w = ((fo * c_in) + ci) * k * k;
+                            let base_x = ci * s * s;
+                            for ky in 0..k {
+                                let xrow = base_x + (oy + ky) * s + ox;
+                                let wrow = base_w + ky * k;
+                                for kx in 0..k {
+                                    grad[wrow + kx] += d * x[xrow + kx];
+                                }
+                            }
+                        }
+                    }
+                }
+                grad[wk + fo] += gb;
+            }
+        }
+    }
+
+    fn evaluate(&self, w: &[f32], ds: &Dataset) -> EvalReport {
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        for i in 0..ds.len() {
+            let (x, y) = ds.sample(i);
+            let (_, _, _, probs) = self.forward_sample(w, x);
+            let p = probs[y as usize].max(1e-12);
+            loss += -(p as f64).ln();
+            let pred = probs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == y as usize {
+                correct += 1;
+            }
+        }
+        EvalReport {
+            loss: loss / ds.len() as f64,
+            accuracy: correct as f64 / ds.len() as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthCifar;
+    use crate::models::finite_diff_check;
+    use crate::prng::Rng;
+
+    fn tiny() -> (CnnLite, Dataset) {
+        // shrink everything for test speed
+        let model = CnnLite { side: 12, in_ch: 1, filters: 3, ksize: 3, classes: 4 };
+        // build a matching synthetic dataset: 12×12 single channel
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        for i in 0..24 {
+            let cls = i % 4;
+            for p in 0..144 {
+                let v = if (p / 12 + p % 12 + cls * 3) % 7 < 2 { 0.9 } else { 0.05 };
+                x.push(v + rng.normal_f32() * 0.05);
+            }
+            y.push(cls as u8);
+        }
+        (model, Dataset { x, y, features: 144, classes: 4 })
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let (m, ds) = tiny();
+        let w = m.init_params(3);
+        let probes: Vec<usize> =
+            (0..m.num_params()).step_by((m.num_params() / 19).max(1)).collect();
+        finite_diff_check(&m, &ds, &w, &probes, 0.12);
+    }
+
+    #[test]
+    fn learns_the_tiny_task() {
+        let (m, ds) = tiny();
+        let mut w = m.init_params(3);
+        let batch: Vec<usize> = (0..ds.len()).collect();
+        let mut grad = vec![0.0f32; m.num_params()];
+        let l0 = m.evaluate(&w, &ds).loss;
+        for _ in 0..60 {
+            m.gradient(&w, &ds, &batch, &mut grad);
+            for (wv, g) in w.iter_mut().zip(&grad) {
+                *wv -= 0.3 * g;
+            }
+        }
+        assert!(m.evaluate(&w, &ds).loss < l0 * 0.8);
+    }
+
+    #[test]
+    fn cifar_shape_params() {
+        let m = CnnLite::cifar();
+        // 8·3·25 + 8 + (14·14·8)·10 + 10 = 600+8+15680+10
+        assert_eq!(m.num_params(), 16_298);
+        let ds = SynthCifar::new(1).dataset(10);
+        let w = m.init_params(1);
+        let rep = m.evaluate(&w, &ds);
+        assert!(rep.loss.is_finite());
+    }
+}

@@ -1,0 +1,192 @@
+//! The §V-B MNIST architecture: fully-connected 784–H–10 with sigmoid
+//! hidden activation and softmax cross-entropy output (H = 50 in the
+//! paper). Native forward/backward; mirrors `python/compile/model.py`
+//! exactly so the HLO path can be cross-validated against it.
+//!
+//! Parameter layout (flat vector): `[w1 (784·H) | b1 (H) | w2 (H·10) |
+//! b2 (10)]`, matching the JAX side's `flatten_params` order.
+
+use super::{EvalReport, Model};
+use crate::data::Dataset;
+use crate::prng::{Normal, Xoshiro256pp};
+use crate::tensor::Matrix;
+
+#[derive(Debug, Clone)]
+pub struct MlpMnist {
+    pub input: usize,
+    pub hidden: usize,
+    pub output: usize,
+}
+
+impl MlpMnist {
+    pub fn new(hidden: usize) -> Self {
+        Self { input: 784, hidden, output: 10 }
+    }
+
+    pub fn with_dims(input: usize, hidden: usize, output: usize) -> Self {
+        Self { input, hidden, output }
+    }
+
+    fn split<'a>(&self, w: &'a [f32]) -> (&'a [f32], &'a [f32], &'a [f32], &'a [f32]) {
+        let (i, h, o) = (self.input, self.hidden, self.output);
+        let w1 = &w[0..i * h];
+        let b1 = &w[i * h..i * h + h];
+        let w2 = &w[i * h + h..i * h + h + h * o];
+        let b2 = &w[i * h + h + h * o..];
+        (w1, b1, w2, b2)
+    }
+
+    /// Forward pass for a batch: returns (hidden activations, probs).
+    fn forward(&self, w: &[f32], x: &Matrix) -> (Matrix, Matrix) {
+        let (i, h, o) = (self.input, self.hidden, self.output);
+        let (w1, b1, w2, b2) = self.split(w);
+        let w1m = Matrix::from_vec(i, h, w1.to_vec());
+        let w2m = Matrix::from_vec(h, o, w2.to_vec());
+        let mut a1 = x.matmul(&w1m);
+        a1.add_row_vec(b1);
+        let a1 = crate::tensor::sigmoid(&a1);
+        let mut z2 = a1.matmul(&w2m);
+        z2.add_row_vec(b2);
+        let probs = crate::tensor::softmax_rows(&z2);
+        (a1, probs)
+    }
+
+    fn batch_matrix(&self, ds: &Dataset, batch: &[usize]) -> (Matrix, Vec<u8>) {
+        let mut x = Vec::with_capacity(batch.len() * ds.features);
+        let mut y = Vec::with_capacity(batch.len());
+        for &i in batch {
+            let (xi, yi) = ds.sample(i);
+            x.extend_from_slice(xi);
+            y.push(yi);
+        }
+        (Matrix::from_vec(batch.len(), ds.features, x), y)
+    }
+}
+
+impl Model for MlpMnist {
+    fn num_params(&self) -> usize {
+        let (i, h, o) = (self.input, self.hidden, self.output);
+        i * h + h + h * o + o
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        let (i, h, o) = (self.input, self.hidden, self.output);
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut w = Vec::with_capacity(self.num_params());
+        // Glorot for each weight matrix, zeros for biases — the same init
+        // aot.py bakes into the artifacts.
+        let g1 = Normal::new(0.0, (2.0 / (i + h) as f64).sqrt());
+        w.extend(g1.vec_f32(&mut rng, i * h));
+        w.extend(std::iter::repeat(0.0f32).take(h));
+        let g2 = Normal::new(0.0, (2.0 / (h + o) as f64).sqrt());
+        w.extend(g2.vec_f32(&mut rng, h * o));
+        w.extend(std::iter::repeat(0.0f32).take(o));
+        w
+    }
+
+    fn gradient(&self, w: &[f32], ds: &Dataset, batch: &[usize], grad: &mut [f32]) {
+        let (i, h, o) = (self.input, self.hidden, self.output);
+        let n = batch.len();
+        let (x, y) = self.batch_matrix(ds, batch);
+        let (a1, probs) = self.forward(w, &x);
+        // dz2 = (probs − onehot)/n
+        let mut dz2 = probs;
+        for (r, &yi) in y.iter().enumerate() {
+            let v = dz2.get(r, yi as usize);
+            dz2.set(r, yi as usize, v - 1.0);
+        }
+        dz2.map_inplace(|v| v / n as f32);
+        let (_, _, w2, _) = self.split(w);
+        let w2m = Matrix::from_vec(h, o, w2.to_vec());
+        // grads
+        let gw2 = a1.t_matmul(&dz2); // h×o
+        let gb2 = dz2.col_sums();
+        let da1 = dz2.matmul_t(&w2m); // n×h
+        let dz1 = da1.hadamard(&crate::tensor::sigmoid_grad(&a1));
+        let gw1 = x.t_matmul(&dz1); // i×h
+        let gb1 = dz1.col_sums();
+
+        grad[0..i * h].copy_from_slice(gw1.data());
+        grad[i * h..i * h + h].copy_from_slice(&gb1);
+        grad[i * h + h..i * h + h + h * o].copy_from_slice(gw2.data());
+        grad[i * h + h + h * o..].copy_from_slice(&gb2);
+    }
+
+    fn evaluate(&self, w: &[f32], ds: &Dataset) -> EvalReport {
+        let batch: Vec<usize> = (0..ds.len()).collect();
+        // chunk to bound memory
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        for chunk in batch.chunks(512) {
+            let (x, y) = self.batch_matrix(ds, chunk);
+            let (_, probs) = self.forward(w, &x);
+            for (r, &yi) in y.iter().enumerate() {
+                let p = probs.get(r, yi as usize).max(1e-12);
+                loss += -(p as f64).ln();
+                let pred = probs
+                    .row(r)
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred == yi as usize {
+                    correct += 1;
+                }
+            }
+        }
+        EvalReport {
+            loss: loss / ds.len() as f64,
+            accuracy: correct as f64 / ds.len() as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthMnist;
+    use crate::models::finite_diff_check;
+
+    #[test]
+    fn param_count_matches_paper() {
+        // 784·50 + 50 + 50·10 + 10 = 39,760 parameters.
+        assert_eq!(MlpMnist::new(50).num_params(), 39_760);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let ds = SynthMnist::new(4).dataset(20);
+        let m = MlpMnist::new(8); // small hidden for speed
+        let w = m.init_params(9);
+        let probes: Vec<usize> =
+            (0..m.num_params()).step_by(m.num_params() / 23).collect();
+        finite_diff_check(&m, &ds, &w, &probes, 0.08);
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let ds = SynthMnist::new(4).dataset(200);
+        let m = MlpMnist::new(16);
+        let mut w = m.init_params(9);
+        let batch: Vec<usize> = (0..ds.len()).collect();
+        let mut grad = vec![0.0f32; m.num_params()];
+        let l0 = m.evaluate(&w, &ds).loss;
+        for _ in 0..80 {
+            m.gradient(&w, &ds, &batch, &mut grad);
+            for (wv, g) in w.iter_mut().zip(&grad) {
+                *wv -= 0.5 * g;
+            }
+        }
+        let rep = m.evaluate(&w, &ds);
+        assert!(rep.loss < l0 * 0.8, "{} vs {l0}", rep.loss);
+        assert!(rep.accuracy > 0.5, "acc {}", rep.accuracy);
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let m = MlpMnist::new(50);
+        assert_eq!(m.init_params(3), m.init_params(3));
+        assert_ne!(m.init_params(3), m.init_params(4));
+    }
+}

@@ -1,0 +1,105 @@
+//! Native model implementations.
+//!
+//! The *production* training path executes the AOT-compiled JAX graphs
+//! through `runtime::` (L2/L1 of the stack). The models here are pure-Rust
+//! and serve three roles:
+//!
+//! 1. **Theory workloads** — [`LogReg`] is ρ_c-strongly convex + ρ_s-smooth
+//!    (assumptions AS2–AS3), the setting where Theorem 3's O(1/t) bound
+//!    applies verbatim;
+//! 2. **Oracles** — [`MlpMnist`] mirrors the §V-B MNIST architecture
+//!    (784–50–10, sigmoid) and cross-checks the HLO path numerics;
+//! 3. **Fallbacks** — [`CnnLite`] is a small conv net used by tests and by
+//!    the CIFAR benches when artifacts are unavailable.
+//!
+//! All models share the flat-parameter [`Model`] interface the federated
+//! runtime consumes: weights are one `Vec<f32>`, gradients likewise — the
+//! shape the update codecs quantize.
+
+mod cnn_lite;
+mod logreg;
+mod mlp;
+
+pub use cnn_lite::CnnLite;
+pub use logreg::LogReg;
+pub use mlp::MlpMnist;
+
+use crate::data::Dataset;
+
+/// Evaluation summary on a dataset.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalReport {
+    pub loss: f64,
+    pub accuracy: f64,
+}
+
+/// A differentiable classifier over flat parameter vectors.
+pub trait Model: Send + Sync {
+    fn num_params(&self) -> usize;
+
+    /// Deterministic initialization.
+    fn init_params(&self, seed: u64) -> Vec<f32>;
+
+    /// Average gradient of the loss over `batch` (indices into `ds`),
+    /// written into `grad` (len = num_params).
+    fn gradient(&self, w: &[f32], ds: &Dataset, batch: &[usize], grad: &mut [f32]);
+
+    /// Loss + accuracy over an entire dataset.
+    fn evaluate(&self, w: &[f32], ds: &Dataset) -> EvalReport;
+}
+
+/// Finite-difference gradient check helper (tests only; exposed so the
+/// integration suite can reuse it against any model).
+pub fn finite_diff_check(
+    model: &dyn Model,
+    ds: &Dataset,
+    w: &[f32],
+    probe_coords: &[usize],
+    tol: f64,
+) {
+    let batch: Vec<usize> = (0..ds.len()).collect();
+    let mut grad = vec![0.0f32; model.num_params()];
+    model.gradient(w, ds, &batch, &mut grad);
+    let eps = 1e-3f32;
+    for &i in probe_coords {
+        let mut wp = w.to_vec();
+        wp[i] += eps;
+        let lp = model.evaluate(&wp, ds).loss;
+        wp[i] -= 2.0 * eps;
+        let lm = model.evaluate(&wp, ds).loss;
+        let fd = (lp - lm) / (2.0 * eps as f64);
+        let an = grad[i] as f64;
+        // Floor the denominator at 1e-3: below that, f32 forward-pass noise
+        // dominates the central difference and relative error is vacuous.
+        let denom = fd.abs().max(an.abs()).max(1e-3);
+        assert!(
+            (fd - an).abs() / denom < tol,
+            "coord {i}: finite-diff {fd} vs analytic {an}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthMnist;
+
+    #[test]
+    fn all_models_expose_consistent_shapes() {
+        let ds = SynthMnist::new(1).dataset(20);
+        let models: Vec<Box<dyn Model>> = vec![
+            Box::new(LogReg::new(ds.features, ds.classes, 1e-2)),
+            Box::new(MlpMnist::new(50)),
+        ];
+        for m in &models {
+            let w = m.init_params(3);
+            assert_eq!(w.len(), m.num_params());
+            let mut g = vec![0.0; m.num_params()];
+            m.gradient(&w, &ds, &[0, 1, 2], &mut g);
+            assert!(g.iter().any(|&v| v != 0.0));
+            let rep = m.evaluate(&w, &ds);
+            assert!(rep.loss.is_finite());
+            assert!((0.0..=1.0).contains(&rep.accuracy));
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! Distribution helpers layered on [`Rng`].
+
+use super::Rng;
+
+/// Gaussian with configurable mean / std-dev.
+#[derive(Debug, Clone, Copy)]
+pub struct Normal {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Normal {
+    pub fn new(mean: f64, std: f64) -> Self {
+        assert!(std >= 0.0);
+        Self { mean, std }
+    }
+
+    pub fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        self.mean + self.std * rng.normal()
+    }
+
+    /// Fill a slice with i.i.d. samples (f32).
+    pub fn fill_f32<R: Rng + ?Sized>(&self, rng: &mut R, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.sample(rng) as f32;
+        }
+    }
+
+    pub fn vec_f32<R: Rng + ?Sized>(&self, rng: &mut R, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        self.fill_f32(rng, &mut v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xoshiro256pp;
+
+    #[test]
+    fn normal_scaling() {
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let d = Normal::new(3.0, 2.0);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.05);
+        assert!((var - 4.0).abs() < 0.1);
+    }
+}

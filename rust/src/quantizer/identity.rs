@@ -1,0 +1,46 @@
+//! Unquantized passthrough — the "federated averaging without quantization
+//! constraints" reference curve in Figs. 6–11.
+
+use super::{CodecContext, Encoded, UpdateCodec};
+use crate::entropy::{BitReader, BitWriter};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IdentityCodec;
+
+impl UpdateCodec for IdentityCodec {
+    fn name(&self) -> String {
+        "identity".into()
+    }
+
+    fn encode(&self, h: &[f32], _ctx: &CodecContext) -> Encoded {
+        let mut w = BitWriter::with_capacity(h.len() * 4);
+        for &v in h {
+            w.push_f32(v);
+        }
+        let bits = w.bit_len();
+        Encoded { bytes: w.into_bytes(), bits }
+    }
+
+    fn decode(&self, msg: &Encoded, m: usize, _ctx: &CodecContext) -> Vec<f32> {
+        let mut r = BitReader::new(&msg.bytes);
+        (0..m).map(|_| r.read_f32()).collect()
+    }
+
+    fn rate_constrained(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lossless_roundtrip() {
+        let h = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE, 1e30];
+        let ctx = CodecContext::new(0, 0, 1, 2.0);
+        let enc = IdentityCodec.encode(&h, &ctx);
+        assert_eq!(enc.bits, h.len() * 32);
+        assert_eq!(IdentityCodec.decode(&enc, h.len(), &ctx), h);
+    }
+}

@@ -1,0 +1,179 @@
+//! Model-update compression codecs.
+//!
+//! The paper's contribution — [`UVeQFed`] (subtractive dithered lattice
+//! quantization, §III) — plus every baseline it is evaluated against in
+//! §V, behind one [`UpdateCodec`] interface so the federated runtime and
+//! the distortion benches can swap them freely:
+//!
+//! | codec | paper ref | module |
+//! |---|---|---|
+//! | UVeQFed (L = 1, 2, 4, 8) | §III | [`uveqfed`] |
+//! | QSGD | [17] | [`qsgd`] |
+//! | uniform + random rotation | [12] | [`rotation`] |
+//! | random subsampling + 3-bit uniform | [12] | [`subsample`] |
+//! | TernGrad-style ternary (extension) | [16] | [`terngrad`] |
+//! | sign-SGD with norm scaling (extension) | [21] | [`signsgd`] |
+//! | top-k sparsification (extension) | [13]–[15] | [`topk`] |
+//! | identity (unquantized FedAvg reference) | — | [`identity`] |
+//!
+//! Every encoder reports the **exact** number of bits it used; the uplink
+//! accounting in `fl::` and the distortion figures consume that number, so
+//! rate comparisons are honest (headers included).
+
+pub mod identity;
+pub mod qsgd;
+pub mod rate;
+pub mod rotation;
+pub mod signsgd;
+pub mod subsample;
+pub mod terngrad;
+pub mod topk;
+pub mod uveqfed;
+
+pub use identity::IdentityCodec;
+pub use qsgd::Qsgd;
+pub use rotation::RotationUniform;
+pub use signsgd::SignSgd;
+pub use subsample::SubsampleUniform;
+pub use terngrad::TernGrad;
+pub use topk::TopK;
+pub use uveqfed::UVeQFed;
+
+use crate::prng::CommonRandomness;
+
+/// Everything an encoder/decoder pair shares per (user, round) message:
+/// the common-randomness source (assumption A3) and the rate budget.
+#[derive(Debug, Clone, Copy)]
+pub struct CodecContext {
+    pub user: u64,
+    pub round: u64,
+    pub crand: CommonRandomness,
+    /// Bit budget per tensor entry (the paper's quantization rate `R`).
+    pub rate: f64,
+}
+
+impl CodecContext {
+    pub fn new(user: u64, round: u64, seed: u64, rate: f64) -> Self {
+        Self { user, round, crand: CommonRandomness::new(seed), rate }
+    }
+
+    /// Total bit budget for an `m`-entry update.
+    pub fn budget_bits(&self, m: usize) -> usize {
+        (self.rate * m as f64).floor() as usize
+    }
+}
+
+/// An encoded model update plus exact accounting.
+#[derive(Debug, Clone)]
+pub struct Encoded {
+    pub bytes: Vec<u8>,
+    /// Exact bits used (≤ bytes.len()*8; the tail byte may be padding).
+    pub bits: usize,
+}
+
+impl Encoded {
+    pub fn bits_per_entry(&self, m: usize) -> f64 {
+        self.bits as f64 / m as f64
+    }
+}
+
+/// A lossy model-update codec. Encoders MUST stay within
+/// `ctx.budget_bits(h.len())` unless the codec is explicitly exempt
+/// (identity) — the runtime asserts this on every uplink message.
+pub trait UpdateCodec: Send + Sync {
+    fn name(&self) -> String;
+
+    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded;
+
+    /// Decode an update of known length `m` (the server knows the model).
+    fn decode(&self, msg: &Encoded, m: usize, ctx: &CodecContext) -> Vec<f32>;
+
+    /// Whether the codec respects the bit budget (identity does not).
+    fn rate_constrained(&self) -> bool {
+        true
+    }
+}
+
+/// Construct a codec from a config-style name. Lattice dims for UVeQFed
+/// are selected by suffix: `uveqfed-l1`, `uveqfed-l2` (hex), `uveqfed-l4`
+/// (D4), `uveqfed-l8` (E8).
+pub fn by_name(name: &str) -> Box<dyn UpdateCodec> {
+    match name {
+        "uveqfed-l1" => Box::new(UVeQFed::scalar()),
+        "uveqfed" | "uveqfed-l2" => Box::new(UVeQFed::hexagonal()),
+        "uveqfed-l4" => Box::new(UVeQFed::d4()),
+        "uveqfed-l8" => Box::new(UVeQFed::e8()),
+        "qsgd" => Box::new(Qsgd::default()),
+        "rotation" => Box::new(RotationUniform::default()),
+        "subsample" => Box::new(SubsampleUniform::default()),
+        "terngrad" => Box::new(TernGrad::default()),
+        "signsgd" => Box::new(SignSgd::default()),
+        "topk" => Box::new(TopK::default()),
+        "identity" | "none" => Box::new(IdentityCodec),
+        other => panic!("unknown codec '{other}'"),
+    }
+}
+
+/// Measure per-entry quantization MSE of `codec` on `data` at `rate` —
+/// the quantity plotted in Figs. 4–5.
+pub fn measure_distortion(
+    codec: &dyn UpdateCodec,
+    data: &[f32],
+    rate: f64,
+    seed: u64,
+    round: u64,
+) -> DistortionReport {
+    let ctx = CodecContext::new(0, round, seed, rate);
+    let enc = codec.encode(data, &ctx);
+    let dec = codec.decode(&enc, data.len(), &ctx);
+    DistortionReport {
+        mse: crate::util::stats::mse(data, &dec),
+        bits: enc.bits,
+        bits_per_entry: enc.bits_per_entry(data.len()),
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct DistortionReport {
+    /// Per-entry squared error.
+    pub mse: f64,
+    pub bits: usize,
+    pub bits_per_entry: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_constructs_all() {
+        for n in [
+            "uveqfed-l1",
+            "uveqfed-l2",
+            "uveqfed-l4",
+            "uveqfed-l8",
+            "qsgd",
+            "rotation",
+            "subsample",
+            "terngrad",
+            "signsgd",
+            "topk",
+            "identity",
+        ] {
+            let c = by_name(n);
+            assert!(!c.name().is_empty());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_codec_panics() {
+        let _ = by_name("nope");
+    }
+
+    #[test]
+    fn budget_math() {
+        let ctx = CodecContext::new(0, 0, 1, 2.0);
+        assert_eq!(ctx.budget_bits(100), 200);
+    }
+}

@@ -1,0 +1,150 @@
+//! Rate-targeting search shared by the variable-resolution codecs.
+//!
+//! The paper meets the bit constraint by "scaling G such that the
+//! resulting codewords use less than R·m bits" (§V-A). We implement that
+//! as a monotone search over the lattice scale `s`: coarser lattices
+//! (larger `s`) produce lower-entropy index streams and fewer coded bits,
+//! so the feasible set `{s : bits(s) ≤ budget}` is an interval `[s*, ∞)`
+//! and we want its left edge (finest feasible lattice).
+//!
+//! The search uses a cheap entropy-based size estimate for bracketing and
+//! bisection, then verifies with the exact coder, nudging coarser until the
+//! exact encoding fits. A cross-round warm-start hint (atomic, shared
+//! across clients of the same codec instance) collapses the search to a
+//! couple of probes in steady state because update statistics drift slowly
+//! between FL rounds.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Warm-start cell: stores the last accepted scale as f64 bits.
+#[derive(Debug, Default)]
+pub struct ScaleHint {
+    bits: AtomicU64,
+}
+
+impl ScaleHint {
+    pub fn new() -> Self {
+        Self { bits: AtomicU64::new(0) }
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        let b = self.bits.load(Ordering::Relaxed);
+        if b == 0 {
+            None
+        } else {
+            Some(f64::from_bits(b))
+        }
+    }
+
+    pub fn set(&self, s: f64) {
+        self.bits.store(s.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Find the (approximately) smallest `s` in `[lo_bound, ∞)` with
+/// `cost(s) ≤ budget`, where `cost` is non-increasing in `s`.
+///
+/// `cost` is the *estimated* bit count; `exact` the exact one. Returns the
+/// accepted scale. Panics only if no scale up to `lo_bound · 2^60` fits —
+/// which cannot happen for entropy-coded streams (all-zero indices cost
+/// O(M) bits).
+pub fn search_scale(
+    budget: usize,
+    init: f64,
+    cost: impl Fn(f64) -> usize,
+    exact: impl Fn(f64) -> usize,
+) -> f64 {
+    assert!(init > 0.0 && init.is_finite());
+    // Bracket: grow/shrink geometrically until we straddle the budget.
+    let mut lo = init; // may be infeasible (too fine)
+    let mut hi = init; // will be feasible (coarse enough)
+    if cost(hi) > budget {
+        let mut iters = 0;
+        while cost(hi) > budget {
+            hi *= 2.0;
+            iters += 1;
+            assert!(iters < 64, "rate search diverged (budget {budget})");
+        }
+        lo = hi / 2.0;
+    } else {
+        // Shrinking is bounded: past ~20 halvings the added resolution is
+        // below f32 reconstruction noise, and sparse inputs (whose index
+        // entropy barely grows as s → 0) would otherwise drive s to a
+        // subnormal and blow up the coordinate magnitudes.
+        let mut iters = 0;
+        loop {
+            let cand = lo / 2.0;
+            if cost(cand) > budget || iters >= 20 {
+                break;
+            }
+            lo = cand;
+            iters += 1;
+        }
+        // lo is feasible; make it the hi edge and probe below.
+        hi = lo;
+        lo /= 2.0;
+    }
+    // Bisect on log-scale: hi stays feasible, lo infeasible. 12 steps
+    // give a 2^(1/2^12)≈1.0002 bracket on s — far below the precision
+    // that matters for the coded size (§Perf: halved from 24, <0.1%
+    // rate-utilization change, 2× fewer estimate passes).
+    for _ in 0..12 {
+        let mid = (lo * hi).sqrt();
+        if cost(mid) <= budget {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    // Exact verification: entropy estimates can undershoot the true coded
+    // size; coarsen gently first (the common off-by-a-few-percent case),
+    // then geometrically (degenerate estimates, e.g. ultra-sparse inputs),
+    // so termination is guaranteed for any monotone `exact`.
+    let mut s = hi;
+    let mut iters = 0;
+    while exact(s) > budget {
+        s *= if iters < 40 { 1.07 } else { 2.0 };
+        iters += 1;
+        assert!(iters < 200, "exact rate verification diverged");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_left_edge_of_feasible_set() {
+        // cost(s) = ceil(1000 / s); budget 100 → s* = 10.
+        let cost = |s: f64| (1000.0 / s).ceil() as usize;
+        let s = search_scale(100, 1.0, cost, cost);
+        assert!(cost(s) <= 100);
+        assert!(s < 10.6, "s={s} too coarse");
+    }
+
+    #[test]
+    fn warm_start_from_feasible_side() {
+        let cost = |s: f64| (1000.0 / s).ceil() as usize;
+        let s = search_scale(100, 500.0, cost, cost);
+        assert!(cost(s) <= 100);
+        assert!(s < 10.6, "s={s}");
+    }
+
+    #[test]
+    fn exact_coarsening_applied() {
+        // Estimated cost says everything fits; exact disagrees below 5.
+        let est = |_s: f64| 0usize;
+        let exact = |s: f64| if s < 5.0 { 1000 } else { 10 };
+        let s = search_scale(100, 1.0, est, exact);
+        assert!(exact(s) <= 100);
+    }
+
+    #[test]
+    fn hint_roundtrip() {
+        let h = ScaleHint::new();
+        assert!(h.get().is_none());
+        h.set(0.125);
+        assert_eq!(h.get(), Some(0.125));
+    }
+}

@@ -1,0 +1,65 @@
+//! signSGD with norm scaling [21] (extension baseline): one sign bit per
+//! coordinate, reconstructed as `sign(h_i) · ‖h‖₁/m` (the ℓ1-scaled
+//! variant, which is the unbiased-magnitude flavor used in FL studies).
+
+use super::{CodecContext, Encoded, UpdateCodec};
+use crate::entropy::{BitReader, BitWriter};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SignSgd;
+
+impl UpdateCodec for SignSgd {
+    fn name(&self) -> String {
+        "signsgd".into()
+    }
+
+    fn encode(&self, h: &[f32], _ctx: &CodecContext) -> Encoded {
+        let l1: f64 = h.iter().map(|&v| v.abs() as f64).sum();
+        let mut w = BitWriter::with_capacity(h.len() / 8 + 8);
+        w.push_f32((l1 / h.len().max(1) as f64) as f32);
+        for &v in h {
+            w.push_bit(v < 0.0);
+        }
+        let bits = w.bit_len();
+        Encoded { bytes: w.into_bytes(), bits }
+    }
+
+    fn decode(&self, msg: &Encoded, m: usize, _ctx: &CodecContext) -> Vec<f32> {
+        let mut r = BitReader::new(&msg.bytes);
+        let mag = r.read_f32();
+        (0..m).map(|_| if r.read_bit() { -mag } else { mag }).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Normal, Xoshiro256pp};
+
+    #[test]
+    fn roundtrip_signs_and_magnitude() {
+        let mut rng = Xoshiro256pp::seed_from_u64(111);
+        let h = Normal::new(0.0, 2.0).vec_f32(&mut rng, 1024);
+        let ctx = CodecContext::new(0, 0, 1, 2.0);
+        let enc = SignSgd.encode(&h, &ctx);
+        assert_eq!(enc.bits, 32 + 1024);
+        let dec = SignSgd.decode(&enc, h.len(), &ctx);
+        for (&a, &b) in h.iter().zip(&dec) {
+            assert_eq!(a < 0.0, b < 0.0);
+        }
+        let mag = dec[0].abs();
+        let l1_mean: f32 = h.iter().map(|v| v.abs()).sum::<f32>() / 1024.0;
+        assert!((mag - l1_mean).abs() < 1e-3);
+    }
+
+    #[test]
+    fn preserves_descent_direction() {
+        let mut rng = Xoshiro256pp::seed_from_u64(112);
+        let h = Normal::new(0.0, 1.0).vec_f32(&mut rng, 4096);
+        let ctx = CodecContext::new(0, 0, 1, 2.0);
+        let enc = SignSgd.encode(&h, &ctx);
+        let dec = SignSgd.decode(&enc, h.len(), &ctx);
+        let dot: f64 = h.iter().zip(&dec).map(|(&a, &b)| (a * b) as f64).sum();
+        assert!(dot > 0.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! TernGrad-style ternary quantization [16] (extension baseline).
+//!
+//! Coordinates are mapped to `{−1, 0, +1}·max|h|` with probabilistic
+//! rounding `P(±1) = |h_i|/max|h|` (unbiased). The ternary stream is
+//! entropy-coded with the adaptive range coder, so the realized rate is
+//! usually well below 2 bits/entry.
+
+use super::{CodecContext, Encoded, UpdateCodec};
+use crate::entropy::range::AdaptiveRangeCoder;
+use crate::entropy::{BitReader, BitWriter, IntCoder};
+use crate::prng::{Rng, StreamKind};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TernGrad;
+
+impl UpdateCodec for TernGrad {
+    fn name(&self) -> String {
+        "terngrad".into()
+    }
+
+    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+        let max = h.iter().fold(0.0f32, |a, &b| a.max(b.abs())) as f64;
+        let mut w = BitWriter::new();
+        w.push_f32(max as f32);
+        if max == 0.0 {
+            let bits = w.bit_len();
+            return Encoded { bytes: w.into_bytes(), bits };
+        }
+        let mut rng = ctx.crand.stream(ctx.user, ctx.round, StreamKind::Rounding);
+        let syms: Vec<i64> = h
+            .iter()
+            .map(|&v| {
+                let p = (v.abs() as f64) / max;
+                if rng.uniform() < p {
+                    if v >= 0.0 {
+                        1
+                    } else {
+                        -1
+                    }
+                } else {
+                    0
+                }
+            })
+            .collect();
+        AdaptiveRangeCoder::default().encode(&syms, &mut w);
+        let bits = w.bit_len();
+        Encoded { bytes: w.into_bytes(), bits }
+    }
+
+    fn decode(&self, msg: &Encoded, m: usize, _ctx: &CodecContext) -> Vec<f32> {
+        let mut r = BitReader::new(&msg.bytes);
+        let max = r.read_f32() as f64;
+        if max == 0.0 {
+            return vec![0.0; m];
+        }
+        AdaptiveRangeCoder::default()
+            .decode(m, &mut r)
+            .into_iter()
+            .map(|s| (s as f64 * max) as f32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Normal, Xoshiro256pp};
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        Normal::new(0.0, 1.0).vec_f32(&mut rng, n)
+    }
+
+    #[test]
+    fn roundtrip_values_ternary() {
+        let h = gaussian(2048, 101);
+        let ctx = CodecContext::new(0, 0, 5, 2.0);
+        let enc = TernGrad.encode(&h, &ctx);
+        let dec = TernGrad.decode(&enc, h.len(), &ctx);
+        let max = h.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        for &v in &dec {
+            let n = v / max;
+            assert!(
+                (n.abs() < 1e-6) || ((n.abs() - 1.0).abs() < 1e-6),
+                "non-ternary value {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let h = gaussian(128, 102);
+        let rounds = 600;
+        let mut mean = vec![0.0f64; h.len()];
+        for round in 0..rounds {
+            let ctx = CodecContext::new(0, round, 5, 2.0);
+            let enc = TernGrad.encode(&h, &ctx);
+            let dec = TernGrad.decode(&enc, h.len(), &ctx);
+            for (m, &d) in mean.iter_mut().zip(&dec) {
+                *m += d as f64 / rounds as f64;
+            }
+        }
+        let bias: f64 = h
+            .iter()
+            .zip(&mean)
+            .map(|(&a, &b)| (a as f64 - b).powi(2))
+            .sum::<f64>()
+            / h.len() as f64;
+        assert!(bias < 0.05, "bias^2 {bias}");
+    }
+
+    #[test]
+    fn rate_under_two_bits() {
+        let h = gaussian(8192, 103);
+        let ctx = CodecContext::new(0, 0, 5, 2.0);
+        let enc = TernGrad.encode(&h, &ctx);
+        assert!(enc.bits_per_entry(h.len()) <= 2.0, "{}", enc.bits_per_entry(h.len()));
+    }
+}

@@ -1,0 +1,130 @@
+//! Top-k sparsification [13]–[15] (extension baseline): keep the k
+//! largest-magnitude coordinates; each travels as (index, 8-bit uniform
+//! value); k is set to exactly fill the bit budget.
+
+use super::{CodecContext, Encoded, UpdateCodec};
+use crate::entropy::{BitReader, BitWriter};
+
+#[derive(Debug, Clone, Copy)]
+pub struct TopK {
+    pub value_bits: u32,
+}
+
+impl Default for TopK {
+    fn default() -> Self {
+        Self { value_bits: 8 }
+    }
+}
+
+fn index_bits(m: usize) -> u32 {
+    (usize::BITS - (m.max(2) - 1).leading_zeros()).max(1)
+}
+
+impl UpdateCodec for TopK {
+    fn name(&self) -> String {
+        "topk".into()
+    }
+
+    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+        let m = h.len();
+        let budget = ctx.budget_bits(m);
+        let ib = index_bits(m);
+        let per = (ib + self.value_bits) as usize;
+        let header = 64 + 32;
+        let k = if budget > header { ((budget - header) / per).min(m) } else { 0 };
+
+        let mut w = BitWriter::with_capacity(budget / 8 + 16);
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| h[b].abs().partial_cmp(&h[a].abs()).unwrap());
+        let kept = &order[..k];
+        let lo = kept.iter().map(|&i| h[i] as f64).fold(f64::INFINITY, f64::min);
+        let hi = kept.iter().map(|&i| h[i] as f64).fold(f64::NEG_INFINITY, f64::max);
+        w.push_f32(if k > 0 { lo as f32 } else { 0.0 });
+        w.push_f32(if k > 0 { hi as f32 } else { 0.0 });
+        w.push_u32(k as u32);
+        let levels = (1u64 << self.value_bits) - 1;
+        let span = (hi - lo).max(1e-30);
+        for &i in kept {
+            w.push_bits(i as u64, ib);
+            let q = (((h[i] as f64 - lo) / span) * levels as f64).round() as u64;
+            w.push_bits(q.min(levels), self.value_bits);
+        }
+        let bits = w.bit_len();
+        debug_assert!(bits <= budget || k == 0);
+        Encoded { bytes: w.into_bytes(), bits }
+    }
+
+    fn decode(&self, msg: &Encoded, m: usize, _ctx: &CodecContext) -> Vec<f32> {
+        let ib = index_bits(m);
+        let mut r = BitReader::new(&msg.bytes);
+        let lo = r.read_f32() as f64;
+        let hi = r.read_f32() as f64;
+        let k = r.read_u32() as usize;
+        let mut out = vec![0.0f32; m];
+        let levels = (1u64 << self.value_bits) - 1;
+        let span = (hi - lo).max(1e-30);
+        for _ in 0..k {
+            let i = r.read_bits(ib) as usize;
+            let q = r.read_bits(self.value_bits);
+            if i < m {
+                out[i] = (lo + q as f64 / levels as f64 * span) as f32;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Normal, Rng, Xoshiro256pp};
+    use crate::quantizer::measure_distortion;
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        Normal::new(0.0, 1.0).vec_f32(&mut rng, n)
+    }
+
+    #[test]
+    fn keeps_largest_entries() {
+        let mut h = vec![0.01f32; 256];
+        h[7] = 5.0;
+        h[100] = -4.0;
+        let ctx = CodecContext::new(0, 0, 1, 1.0);
+        let enc = TopK::default().encode(&h, &ctx);
+        let dec = TopK::default().decode(&enc, h.len(), &ctx);
+        assert!(dec[7] > 4.0, "{}", dec[7]);
+        assert!(dec[100] < -3.0, "{}", dec[100]);
+    }
+
+    #[test]
+    fn within_budget() {
+        let h = gaussian(4096, 121);
+        for rate in [1.0, 2.0, 4.0] {
+            let rep = measure_distortion(&TopK::default(), &h, rate, 3, 0);
+            assert!(rep.bits_per_entry <= rate + 1e-9);
+        }
+    }
+
+    #[test]
+    fn recovers_sparse_support_exactly() {
+        // On a truly sparse signal, top-k must recover the full support
+        // and capture (almost) all the signal energy at R = 1.
+        let mut rng = Xoshiro256pp::seed_from_u64(122);
+        let h: Vec<f32> = (0..4096)
+            .map(|i| if i % 512 == 0 { 10.0 + rng.normal_f32() } else { 0.0 })
+            .collect();
+        let ctx = CodecContext::new(0, 0, 3, 1.0);
+        let enc = TopK::default().encode(&h, &ctx);
+        let dec = TopK::default().decode(&enc, h.len(), &ctx);
+        for (i, (&a, &b)) in h.iter().zip(&dec).enumerate() {
+            if a != 0.0 {
+                assert!((a - b).abs() < 0.1, "support entry {i}: {a} vs {b}");
+            }
+        }
+        let mse = crate::util::stats::mse(&h, &dec);
+        let power: f64 =
+            h.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / h.len() as f64;
+        assert!(mse < power * 1e-3, "mse {mse} vs power {power}");
+    }
+}

@@ -1,0 +1,88 @@
+//! Thin typed wrapper over the `xla` crate's PJRT CPU client.
+
+use anyhow::{Context, Result};
+
+/// A PJRT client plus compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu: {e:?}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO **text** artifact and compile it.
+    pub fn load_hlo_text(&self, path: &std::path::Path) -> Result<Graph> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe =
+            self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(Graph { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled executable with convenience I/O.
+pub struct Graph {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Graph {
+    /// Execute with literal inputs; returns the flattened tuple outputs.
+    /// (aot.py lowers everything with `return_tuple=True`.)
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut outs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+        let first = outs
+            .pop()
+            .and_then(|mut replicas| if replicas.is_empty() { None } else { Some(replicas.remove(0)) })
+            .ok_or_else(|| anyhow::anyhow!("no output buffers from {}", self.name))?;
+        let mut lit = first
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal {}: {e:?}", self.name))?;
+        let parts = lit
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose {}: {e:?}", self.name))?;
+        if parts.is_empty() {
+            Ok(vec![lit])
+        } else {
+            Ok(parts)
+        }
+    }
+}
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(numel as usize == data.len(), "shape/data mismatch");
+    let lit = xla::Literal::vec1(data);
+    lit.reshape(dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Extract an f32 vector from a literal.
+pub fn f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+}
+
+// The xla wrapper types hold raw pointers and are !Send/!Sync by default.
+// The PJRT CPU client is internally synchronized for compilation and
+// execution; we still serialize all calls through `HloTrainer`'s Mutex and
+// cap `Trainer::max_workers` at 1, so cross-thread access never actually
+// races. The impls below only allow moving the engine into the coordinator
+// worker structure.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+unsafe impl Send for Graph {}
+unsafe impl Sync for Graph {}

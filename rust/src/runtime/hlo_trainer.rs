@@ -1,0 +1,206 @@
+//! `Trainer` implementation backed by the AOT-compiled JAX graphs — the
+//! production L2/L1 path.
+//!
+//! Two graphs per model (see `python/compile/aot.py`):
+//! * `kind=step`  — `(params[m], x[B,d], y_onehot[B,c], lr) → params'[m]`
+//!   (one SGD step; τ local steps = τ calls);
+//! * `kind=eval`  — `(params[m], x[B,d]) → logits[B,c]`.
+//!
+//! Batch shapes are baked in at AOT time (one executable per variant); the
+//! trainer samples mini-batches of exactly the compiled size. All PJRT
+//! calls serialize through a mutex (see `engine.rs` safety note) and
+//! `max_workers() == 1` keeps the coordinator from fanning out.
+
+use super::engine::{f32_vec, literal_f32, Engine, Graph};
+use super::manifest::Manifest;
+use crate::data::Dataset;
+use crate::fl::Trainer;
+use crate::models::EvalReport;
+use crate::prng::{Rng, SplitMix64, Xoshiro256pp};
+use anyhow::{Context, Result};
+use std::sync::Mutex;
+
+pub struct HloTrainer {
+    engine: Engine,
+    step: Mutex<Graph>,
+    eval: Mutex<Graph>,
+    pub model: String,
+    pub params: usize,
+    pub features: usize,
+    pub classes: usize,
+    /// Per-sample input dims (excluding batch), e.g. `[784]` or
+    /// `[3, 32, 32]` — from the manifest `xdims` field.
+    pub xdims: Vec<i64>,
+    /// Batch size compiled into the step graph.
+    pub step_batch: usize,
+    /// Batch size compiled into the eval graph.
+    pub eval_batch: usize,
+    /// Initial parameters exported by aot.py (`<model>_init.f32` raw
+    /// little-endian), so rust and python agree bit-exactly on w₀.
+    init: Vec<f32>,
+}
+
+impl HloTrainer {
+    /// Load a trainer for `model` with a `batch`-sized step graph from the
+    /// artifacts directory.
+    pub fn load(model: &str, batch: usize) -> Result<Self> {
+        let dir = super::artifacts_dir();
+        let manifest = Manifest::load(&dir)?;
+        let step_e = manifest
+            .find_step(model, batch)
+            .with_context(|| format!("no step artifact for {model} batch={batch}"))?;
+        let eval_e =
+            manifest.find_eval(model).with_context(|| format!("no eval artifact for {model}"))?;
+        let engine = Engine::cpu()?;
+        let step = engine.load_hlo_text(&dir.join(step_e.file()?))?;
+        let eval = engine.load_hlo_text(&dir.join(eval_e.file()?))?;
+        let params = step_e.usize_field("params")?;
+        let features = step_e.usize_field("features")?;
+        let classes = step_e.usize_field("classes")?;
+        let eval_batch = eval_e.usize_field("batch")?;
+        let xdims: Vec<i64> = match step_e.get("xdims") {
+            Some(s) => s
+                .split(',')
+                .map(|p| p.parse::<i64>().context("bad xdims"))
+                .collect::<Result<_>>()?,
+            None => vec![features as i64],
+        };
+        anyhow::ensure!(
+            xdims.iter().product::<i64>() as usize == features,
+            "xdims/features mismatch"
+        );
+        // init params blob
+        let init_file = dir.join(format!("{model}_init.f32"));
+        let raw = std::fs::read(&init_file)
+            .with_context(|| format!("missing init blob {init_file:?}"))?;
+        anyhow::ensure!(raw.len() == params * 4, "init blob size mismatch");
+        let init: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(Self {
+            engine,
+            step: Mutex::new(step),
+            eval: Mutex::new(eval),
+            model: model.to_string(),
+            params,
+            features,
+            classes,
+            xdims,
+            step_batch: batch,
+            eval_batch,
+            init,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.engine.platform()
+    }
+
+    fn batch_literals(
+        &self,
+        ds: &Dataset,
+        idx: &[usize],
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let b = idx.len();
+        let mut x = Vec::with_capacity(b * self.features);
+        let mut y = vec![0.0f32; b * self.classes];
+        for (r, &i) in idx.iter().enumerate() {
+            let (xi, yi) = ds.sample(i);
+            x.extend_from_slice(xi);
+            y[r * self.classes + yi as usize] = 1.0;
+        }
+        let mut dims = vec![b as i64];
+        dims.extend_from_slice(&self.xdims);
+        Ok((
+            literal_f32(&x, &dims)?,
+            literal_f32(&y, &[b as i64, self.classes as i64])?,
+        ))
+    }
+}
+
+impl Trainer for HloTrainer {
+    fn num_params(&self) -> usize {
+        self.params
+    }
+
+    fn init_params(&self, _seed: u64) -> Vec<f32> {
+        // The artifact's init blob is authoritative — the HLO graph and the
+        // blob were produced by the same python invocation.
+        self.init.clone()
+    }
+
+    fn local_update(
+        &self,
+        w0: &[f32],
+        shard: &Dataset,
+        tau: usize,
+        lr: f32,
+        batch_size: usize,
+        seed: u64,
+    ) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(SplitMix64::new(seed).next());
+        let mut w = w0.to_vec();
+        let b = self.step_batch;
+        let _ = batch_size; // the compiled batch size governs
+        for _ in 0..tau {
+            let idx: Vec<usize> = if shard.len() == b {
+                (0..b).collect()
+            } else {
+                (0..b).map(|_| rng.gen_index(shard.len())).collect()
+            };
+            let (x, y) = self.batch_literals(shard, &idx).expect("literal build");
+            let wlit = literal_f32(&w, &[self.params as i64]).expect("params literal");
+            let lr_lit = xla::Literal::scalar(lr);
+            let outs = self
+                .step
+                .lock()
+                .unwrap()
+                .run(&[wlit, x, y, lr_lit])
+                .expect("step graph execution");
+            w = f32_vec(&outs[0]).expect("params output");
+        }
+        w
+    }
+
+    fn evaluate(&self, w: &[f32], ds: &Dataset) -> EvalReport {
+        let b = self.eval_batch;
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        let n = ds.len();
+        let mut i0 = 0;
+        while i0 < n {
+            let valid = (n - i0).min(b);
+            // pad by repeating the first sample; padded rows are ignored.
+            let idx: Vec<usize> =
+                (0..b).map(|r| if r < valid { i0 + r } else { i0 }).collect();
+            let (x, _) = self.batch_literals(ds, &idx).expect("literal build");
+            let wlit = literal_f32(w, &[self.params as i64]).expect("params literal");
+            let outs = self.eval.lock().unwrap().run(&[wlit, x]).expect("eval graph");
+            let logits = f32_vec(&outs[0]).expect("logits output");
+            for r in 0..valid {
+                let row = &logits[r * self.classes..(r + 1) * self.classes];
+                let yi = ds.y[i0 + r] as usize;
+                let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let lse: f32 =
+                    row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+                loss += (lse - row[yi]) as f64;
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred == yi {
+                    correct += 1;
+                }
+            }
+            i0 += valid;
+        }
+        EvalReport { loss: loss / n as f64, accuracy: correct as f64 / n as f64 }
+    }
+
+    fn max_workers(&self) -> usize {
+        1
+    }
+}

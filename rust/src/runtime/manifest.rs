@@ -1,0 +1,125 @@
+//! Artifact manifest: `artifacts/manifest.txt`, one line per compiled
+//! graph, written by `python/compile/aot.py`:
+//!
+//! ```text
+//! mnist_step_b500 kind=step model=mnist batch=500 features=784 classes=10 params=39760 file=mnist_step_b500.hlo.txt
+//! ```
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub fields: BTreeMap<String, String>,
+}
+
+impl ManifestEntry {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.fields.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize_field(&self, key: &str) -> Result<usize> {
+        self.get(key)
+            .with_context(|| format!("manifest entry {} missing field {key}", self.name))?
+            .parse()
+            .with_context(|| format!("manifest {}: field {key} not an integer", self.name))
+    }
+
+    pub fn file(&self) -> Result<&str> {
+        self.get("file").with_context(|| format!("manifest entry {} missing file", self.name))
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Manifest {
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let name = match parts.next() {
+                Some(n) => n.to_string(),
+                None => continue,
+            };
+            let mut fields = BTreeMap::new();
+            for p in parts {
+                if let Some((k, v)) = p.split_once('=') {
+                    fields.insert(k.to_string(), v.to_string());
+                }
+            }
+            entries.push(ManifestEntry { name, fields });
+        }
+        Manifest { entries }
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+        Ok(Self::parse(&text))
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Find a step graph for (model, batch).
+    pub fn find_step(&self, model: &str, batch: usize) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| {
+            e.get("kind") == Some("step")
+                && e.get("model") == Some(model)
+                && e.get("batch").and_then(|b| b.parse::<usize>().ok()) == Some(batch)
+        })
+    }
+
+    pub fn find_eval(&self, model: &str) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.get("kind") == Some("eval") && e.get("model") == Some(model))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# artifacts
+mnist_step_b500 kind=step model=mnist batch=500 features=784 classes=10 params=39760 file=mnist_step_b500.hlo.txt
+mnist_eval kind=eval model=mnist batch=256 features=784 classes=10 params=39760 file=mnist_eval.hlo.txt
+quantize_hex kind=kernel model=quantize file=quantize_hex.hlo.txt
+";
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE);
+        assert_eq!(m.entries.len(), 3);
+        let e = m.find("mnist_step_b500").unwrap();
+        assert_eq!(e.usize_field("batch").unwrap(), 500);
+        assert_eq!(e.file().unwrap(), "mnist_step_b500.hlo.txt");
+    }
+
+    #[test]
+    fn lookup_by_kind() {
+        let m = Manifest::parse(SAMPLE);
+        assert!(m.find_step("mnist", 500).is_some());
+        assert!(m.find_step("mnist", 123).is_none());
+        assert!(m.find_eval("mnist").is_some());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let m = Manifest::parse("x file=y.hlo.txt");
+        let e = m.find("x").unwrap();
+        assert!(e.usize_field("batch").is_err());
+    }
+}

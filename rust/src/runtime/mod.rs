@@ -1,0 +1,57 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas graphs from
+//! `artifacts/*.hlo.txt` and executes them on the L3 hot path.
+//!
+//! Interchange is **HLO text** (not serialized `HloModuleProto`): jax ≥0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids and round-trips cleanly (see
+//! DESIGN.md and /opt/xla-example/README.md).
+//!
+//! Python runs only at `make artifacts` time; after that the Rust binary
+//! is self-contained.
+
+pub mod engine;
+mod hlo_trainer;
+mod manifest;
+
+pub use engine::{Engine, Graph};
+pub use hlo_trainer::HloTrainer;
+pub use manifest::{Manifest, ManifestEntry};
+
+use std::path::{Path, PathBuf};
+
+/// Default artifacts directory (override with `UVEQFED_ARTIFACTS`).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("UVEQFED_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// True when the AOT artifacts have been built (`make artifacts`).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.txt").exists()
+}
+
+/// Resolve an artifact path by file name.
+pub fn artifact_path(file: &str) -> PathBuf {
+    artifacts_dir().join(file)
+}
+
+/// Helper used by tests/examples to skip gracefully when artifacts are
+/// missing (e.g. `cargo test` before `make artifacts`).
+pub fn require_artifacts(what: &str) -> Option<PathBuf> {
+    let dir = artifacts_dir();
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "[skip] {what}: artifacts not built (run `make artifacts`); looked in {:?}",
+            dir
+        );
+        None
+    }
+}
+
+/// Quick existence check for a specific artifact file.
+pub fn artifact_exists(file: &str) -> bool {
+    Path::new(&artifact_path(file)).exists()
+}

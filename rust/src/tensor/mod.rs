@@ -1,0 +1,34 @@
+//! Minimal dense-tensor substrate for the *native* model implementations
+//! (the L3-side oracles and the strongly-convex theory experiments).
+//!
+//! The production training path runs through the AOT-compiled JAX graphs
+//! (`runtime::` + `artifacts/*.hlo.txt`); this module exists so that
+//! (i) convergence-theory experiments (logistic regression, Thm 3) can run
+//! without the artifact toolchain, (ii) tests have an independent oracle
+//! for the HLO path, and (iii) the benches can isolate coordinator cost
+//! from XLA cost.
+//!
+//! Deliberately small: f32, row-major, 2-D matrices + vectors, with the
+//! handful of ops the models need. The matmul microkernel is the one hot
+//! loop and is written cache-friendly (i-k-j with row reuse).
+
+mod matrix;
+mod ops;
+
+pub use matrix::Matrix;
+pub use ops::{conv2d_valid, max_pool2x2, relu, relu_grad, sigmoid, sigmoid_grad, softmax_rows};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_surface_smoke() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.rows(), 2);
+        assert_eq!(c.cols(), 2);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+}

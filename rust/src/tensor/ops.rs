@@ -1,0 +1,138 @@
+//! Activation functions and the small conv/pool kernels used by the native
+//! CIFAR oracle.
+
+use super::Matrix;
+
+/// Elementwise sigmoid.
+pub fn sigmoid(m: &Matrix) -> Matrix {
+    m.map(|x| 1.0 / (1.0 + (-x).exp()))
+}
+
+/// Sigmoid derivative given the *activation* `a = σ(x)`.
+pub fn sigmoid_grad(a: &Matrix) -> Matrix {
+    a.map(|v| v * (1.0 - v))
+}
+
+pub fn relu(m: &Matrix) -> Matrix {
+    m.map(|x| x.max(0.0))
+}
+
+/// ReLU derivative given the pre-activation (or activation — same mask).
+pub fn relu_grad(a: &Matrix) -> Matrix {
+    a.map(|x| if x > 0.0 { 1.0 } else { 0.0 })
+}
+
+/// Row-wise softmax (numerically stabilized).
+pub fn softmax_rows(m: &Matrix) -> Matrix {
+    let mut out = m.clone();
+    let cols = m.cols();
+    for r in 0..m.rows() {
+        let row = &mut out.data_mut()[r * cols..(r + 1) * cols];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+/// Valid 2-D convolution of a single-channel image with a single kernel.
+/// `img` is HxW, `ker` is KhxKw; output (H−Kh+1)x(W−Kw+1).
+pub fn conv2d_valid(img: &Matrix, ker: &Matrix) -> Matrix {
+    let (h, w) = (img.rows(), img.cols());
+    let (kh, kw) = (ker.rows(), ker.cols());
+    assert!(h >= kh && w >= kw);
+    let (oh, ow) = (h - kh + 1, w - kw + 1);
+    let mut out = Matrix::zeros(oh, ow);
+    for i in 0..oh {
+        for j in 0..ow {
+            let mut s = 0.0f32;
+            for a in 0..kh {
+                let irow = img.row(i + a);
+                let krow = ker.row(a);
+                for b in 0..kw {
+                    s += irow[j + b] * krow[b];
+                }
+            }
+            out.set(i, j, s);
+        }
+    }
+    out
+}
+
+/// 2×2 max pooling with stride 2 (truncating odd edges).
+pub fn max_pool2x2(img: &Matrix) -> Matrix {
+    let (h, w) = (img.rows() / 2, img.cols() / 2);
+    let mut out = Matrix::zeros(h, w);
+    for i in 0..h {
+        for j in 0..w {
+            let v = img
+                .get(2 * i, 2 * j)
+                .max(img.get(2 * i, 2 * j + 1))
+                .max(img.get(2 * i + 1, 2 * j))
+                .max(img.get(2 * i + 1, 2 * j + 1));
+            out.set(i, j, v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_range_and_symmetry() {
+        let m = Matrix::from_vec(1, 3, vec![-100.0, 0.0, 100.0]);
+        let s = sigmoid(&m);
+        assert!(s.data()[0] < 1e-6);
+        assert!((s.data()[1] - 0.5).abs() < 1e-7);
+        assert!(s.data()[2] > 1.0 - 1e-6);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., -1., 0., 1.]);
+        let s = softmax_rows(&m);
+        for r in 0..2 {
+            let sum: f32 = s.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_stable_for_large_inputs() {
+        let m = Matrix::from_vec(1, 2, vec![1000.0, 1001.0]);
+        let s = softmax_rows(&m);
+        assert!(s.data().iter().all(|v| v.is_finite()));
+        assert!((s.data().iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn conv_known_values() {
+        // 3x3 image, 2x2 kernel of ones → sliding window sums.
+        let img = Matrix::from_vec(3, 3, vec![1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        let ker = Matrix::from_vec(2, 2, vec![1., 1., 1., 1.]);
+        let out = conv2d_valid(&img, &ker);
+        assert_eq!(out.data(), &[12., 16., 24., 28.]);
+    }
+
+    #[test]
+    fn pool_known_values() {
+        let img = Matrix::from_vec(4, 4, (1..=16).map(|v| v as f32).collect());
+        let out = max_pool2x2(&img);
+        assert_eq!(out.data(), &[6., 8., 14., 16.]);
+    }
+
+    #[test]
+    fn relu_masks_negative() {
+        let m = Matrix::from_vec(1, 4, vec![-1.0, 0.0, 2.0, -3.0]);
+        assert_eq!(relu(&m).data(), &[0.0, 0.0, 2.0, 0.0]);
+        assert_eq!(relu_grad(&m).data(), &[0.0, 0.0, 1.0, 0.0]);
+    }
+}

@@ -1,0 +1,134 @@
+//! Evaluators for the paper's theoretical bounds (Theorems 1–3), used by
+//! `examples/theory_validation` to print measured-vs-predicted tables.
+
+use crate::lattice::Lattice;
+
+/// Theorem 1 (eq. 10): conditional quantization-error energy
+/// `E{‖ε‖² | h} = ζ²‖h‖²·M·σ̄²_Λ`.
+///
+/// `sigma2` must be the second moment of the *scaled* lattice actually
+/// used for encoding (`s²·σ̄²` when the rate controller picked scale `s`).
+pub fn thm1_error_energy(zeta: f64, h_norm: f64, m_subvectors: usize, sigma2: f64) -> f64 {
+    zeta * zeta * h_norm * h_norm * m_subvectors as f64 * sigma2
+}
+
+/// Theorem 2 (eq. 11): bound on `E‖w_{t+τ} − w^des‖²`.
+///
+/// * `eta_sq_sum` — `Σ_{t'=t}^{t+τ-1} η_{t'}²`
+/// * `alpha_sq_xi_sq` — `Σ_k α_k²·ξ_k²`
+pub fn thm2_aggregate_bound(
+    m_subvectors: usize,
+    zeta: f64,
+    sigma2: f64,
+    tau: usize,
+    eta_sq_sum: f64,
+    alpha_sq_xi_sq: f64,
+) -> f64 {
+    m_subvectors as f64 * zeta * zeta * sigma2 * tau as f64 * eta_sq_sum * alpha_sq_xi_sq
+}
+
+/// Inputs for the Theorem 3 convergence envelope.
+#[derive(Debug, Clone)]
+pub struct Thm3Params {
+    pub rho_s: f64,
+    pub rho_c: f64,
+    pub tau: usize,
+    /// `Σ_k α_k²·ξ_k²`.
+    pub alpha_sq_xi_sq: f64,
+    /// `Σ_k α_k·ξ_k²`.
+    pub alpha_xi_sq: f64,
+    /// Heterogeneity gap ψ (eq. 12).
+    pub psi: f64,
+    /// `M·ζ²·σ̄²_Λ` for the deployed quantizer (0 ⇒ unquantized FedAvg).
+    pub m_zeta_sq_sigma2: f64,
+    /// `‖w₀ − w°‖²`.
+    pub init_dist_sq: f64,
+}
+
+impl Thm3Params {
+    /// The constant `b` of Theorem 3.
+    pub fn b(&self) -> f64 {
+        let tau = self.tau as f64;
+        (1.0 + 4.0 * self.m_zeta_sq_sigma2 * tau * tau) * self.alpha_sq_xi_sq
+            + 6.0 * self.rho_s * self.psi
+            + 8.0 * (tau - 1.0) * (tau - 1.0) * self.alpha_xi_sq
+    }
+
+    /// `γ = τ·max(1, 4ρ_s/ρ_c)`.
+    pub fn gamma(&self) -> f64 {
+        self.tau as f64 * (4.0 * self.rho_s / self.rho_c).max(1.0)
+    }
+
+    /// The step size schedule of Theorem 3: `η_t = τ/(ρ_c(t+γ))`.
+    pub fn eta(&self, t: usize) -> f64 {
+        self.tau as f64 / (self.rho_c * (t as f64 + self.gamma()))
+    }
+
+    /// The bound (13) on `E{F(w_t)} − F(w°)`.
+    pub fn bound(&self, t: usize) -> f64 {
+        let gamma = self.gamma();
+        let tau = self.tau as f64;
+        let nu = ((self.rho_c * self.rho_c + tau * tau * self.b()) / (tau * self.rho_c))
+            .max(gamma * self.init_dist_sq);
+        self.rho_s / (2.0 * (t as f64 + gamma)) * nu
+    }
+}
+
+/// Convenience: σ̄² of a lattice scaled by `s`.
+pub fn scaled_sigma2(lat: &dyn Lattice, s: f64) -> f64 {
+    lat.second_moment() * s * s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> Thm3Params {
+        Thm3Params {
+            rho_s: 4.0,
+            rho_c: 0.1,
+            tau: 2,
+            alpha_sq_xi_sq: 0.5,
+            alpha_xi_sq: 1.0,
+            psi: 0.05,
+            m_zeta_sq_sigma2: 0.01,
+            init_dist_sq: 1.0,
+        }
+    }
+
+    #[test]
+    fn bound_decays_like_one_over_t() {
+        let p = params();
+        let b1 = p.bound(10);
+        let b2 = p.bound(1000);
+        // ratio ≈ (1000+γ)/(10+γ)
+        let g = p.gamma();
+        let expect = (1000.0 + g) / (10.0 + g);
+        assert!((b1 / b2 - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn quantization_inflates_b() {
+        let mut p = params();
+        let b_q = p.b();
+        p.m_zeta_sq_sigma2 = 0.0;
+        let b_unq = p.b();
+        assert!(b_q > b_unq);
+    }
+
+    #[test]
+    fn eta_matches_schedule() {
+        let p = params();
+        let g = p.gamma();
+        assert!((p.eta(0) - 2.0 / (0.1 * g)).abs() < 1e-12);
+        assert!(p.eta(10) < p.eta(0));
+    }
+
+    #[test]
+    fn thm1_linear_in_everything() {
+        let base = thm1_error_energy(0.1, 2.0, 100, 0.05);
+        assert!((thm1_error_energy(0.2, 2.0, 100, 0.05) / base - 4.0).abs() < 1e-12);
+        assert!((thm1_error_energy(0.1, 4.0, 100, 0.05) / base - 4.0).abs() < 1e-12);
+        assert!((thm1_error_energy(0.1, 2.0, 200, 0.05) / base - 2.0).abs() < 1e-12);
+    }
+}

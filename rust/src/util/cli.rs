@@ -1,0 +1,206 @@
+//! Tiny declarative CLI argument parser (clap is not vendorable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands, with typed getters and automatic `--help` text.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Cli {
+    pub program: String,
+    pub about: &'static str,
+    specs: Vec<ArgSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &'static str) -> Self {
+        Self { program: program.to_string(), about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: Some(default.to_string()), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let kind = if spec.is_flag { "" } else { " <value>" };
+            let def = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_else(|| if spec.is_flag { String::new() } else { " (required)".into() });
+            s.push_str(&format!("  --{}{kind}\t{}{def}\n", spec.name, spec.help));
+        }
+        s
+    }
+
+    /// Parse a raw argv (without the program name). Returns Err(usage) on
+    /// `--help` or malformed/missing args.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut values = HashMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    flags.push(key);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option --{key} needs a value"))?
+                        }
+                    };
+                    values.insert(key, v);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // fill defaults / check required
+        for spec in &self.specs {
+            if spec.is_flag {
+                continue;
+            }
+            if !values.contains_key(spec.name) {
+                match &spec.default {
+                    Some(d) => {
+                        values.insert(spec.name.to_string(), d.clone());
+                    }
+                    None => return Err(format!("missing required --{}\n\n{}", spec.name, self.usage())),
+                }
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+
+    /// Parse `std::env::args()`, exiting with usage on error.
+    pub fn parse_env(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or_else(|| panic!("no option {name}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("test", "test program")
+            .opt("rate", "4", "bits per entry")
+            .req("dataset", "dataset name")
+            .flag("verbose", "chatty output")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = cli().parse(&argv(&["--dataset", "mnist", "--rate=2", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.get("dataset"), "mnist");
+        assert_eq!(a.get_usize("rate"), 2);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = cli().parse(&argv(&["--dataset", "cifar"])).unwrap();
+        assert_eq!(a.get_usize("rate"), 4);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse(&argv(&["--rate", "2"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(&argv(&["--dataset", "x", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = cli().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("bits per entry"));
+    }
+}

@@ -1,0 +1,277 @@
+//! Minimal TOML-subset config parser for the experiment configs in
+//! `configs/*.toml`.
+//!
+//! Supported: `[section]` / `[section.sub]` headers, `key = value` with
+//! string / integer / float / bool / homogeneous array values, `#`
+//! comments. That covers every config this framework ships; anything
+//! outside the subset is a hard parse error (config typos should never be
+//! silently ignored in an experiment framework).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Parsed config: keys are `section.key` (dotted paths).
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn parse_scalar(tok: &str, line: usize) -> Result<Value, ParseError> {
+    let t = tok.trim();
+    if t.starts_with('"') && t.ends_with('"') && t.len() >= 2 {
+        return Ok(Value::Str(t[1..t.len() - 1].to_string()));
+    }
+    if t == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if t == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Ok(v) = t.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = t.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(ParseError { line, msg: format!("cannot parse value '{t}'") })
+}
+
+/// Split a top-level array body on commas (no nested arrays needed).
+fn parse_array(body: &str, line: usize) -> Result<Value, ParseError> {
+    let inner = body.trim();
+    if inner.is_empty() {
+        return Ok(Value::Array(Vec::new()));
+    }
+    let mut items = Vec::new();
+    for part in inner.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        items.push(parse_scalar(p, line)?);
+    }
+    Ok(Value::Array(items))
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            // strip comments (naive: '#' outside quotes)
+            let mut in_str = false;
+            let mut cut = raw.len();
+            for (pos, ch) in raw.char_indices() {
+                match ch {
+                    '"' => in_str = !in_str,
+                    '#' if !in_str => {
+                        cut = pos;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            let line = raw[..cut].trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(ParseError { line: line_no, msg: "unterminated section header".into() });
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(ParseError { line: line_no, msg: "empty section name".into() });
+                }
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| ParseError { line: line_no, msg: "expected key = value".into() })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ParseError { line: line_no, msg: "empty key".into() });
+            }
+            let val = val.trim();
+            let value = if val.starts_with('[') {
+                if !val.ends_with(']') {
+                    return Err(ParseError { line: line_no, msg: "unterminated array".into() });
+                }
+                parse_array(&val[1..val.len() - 1], line_no)?
+            } else {
+                parse_scalar(val, line_no)?
+            };
+            let full_key =
+                if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            entries.insert(full_key, value);
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("reading {:?}: {e}", path.as_ref()))?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.i64_or(key, default as i64) as usize
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig6"
+
+[fl]
+users = 100          # K
+local_steps = 1
+step_size = 1e-2
+heterogeneous = false
+
+[quantizer]
+kind = "uveqfed"
+rate = 2
+lattice = "hex"
+zeta_schedule = [2.4, 2.8, 3.2]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("name", ""), "fig6");
+        assert_eq!(c.usize_or("fl.users", 0), 100);
+        assert_eq!(c.f64_or("fl.step_size", 0.0), 1e-2);
+        assert!(!c.bool_or("fl.heterogeneous", true));
+        assert_eq!(c.str_or("quantizer.kind", ""), "uveqfed");
+        let arr = c.get("quantizer.zeta_schedule").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[1].as_f64(), Some(2.8));
+    }
+
+    #[test]
+    fn comments_in_strings_preserved() {
+        let c = Config::parse("k = \"a # b\"").unwrap();
+        assert_eq!(c.str_or("k", ""), "a # b");
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(Config::parse("this is not toml").is_err());
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("k = [1, 2").is_err());
+        assert!(Config::parse("k = zzz").is_err());
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("nope", 7), 7);
+        assert_eq!(c.str_or("nope", "d"), "d");
+    }
+}

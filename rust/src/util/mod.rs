@@ -1,0 +1,10 @@
+//! Framework utilities built from scratch (the offline image vendors only
+//! the `xla` crate closure, so CLI parsing, config files, JSON output,
+//! thread pools and property testing are all implemented here).
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod prop;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,194 @@
+//! Property-testing mini-framework (proptest is not vendorable offline).
+//!
+//! A `Gen` produces random cases from a seeded RNG; `check` runs N cases
+//! and on failure *shrinks* scalar inputs toward zero / smaller structures
+//! before reporting, printing the seed so failures replay exactly.
+
+use crate::prng::{Rng, Xoshiro256pp};
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0x5EED_CAFE, max_shrink_iters: 400 }
+    }
+}
+
+/// A generator of test cases with a shrinking strategy.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Xoshiro256pp) -> Self::Value;
+    /// Candidate smaller versions of a failing value (simplest first).
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Run a property; panics with a minimal counterexample on failure.
+pub fn check<G: Gen>(name: &str, gen: &G, cfg: PropConfig, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    for case in 0..cfg.cases {
+        let value = gen.generate(&mut rng);
+        if prop(&value) {
+            continue;
+        }
+        // shrink
+        let mut minimal = value.clone();
+        let mut iters = 0;
+        'outer: loop {
+            if iters >= cfg.max_shrink_iters {
+                break;
+            }
+            for cand in gen.shrink(&minimal) {
+                iters += 1;
+                if !prop(&cand) {
+                    minimal = cand;
+                    continue 'outer;
+                }
+                if iters >= cfg.max_shrink_iters {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{name}' failed at case {case} (seed {:#x}).\n  minimal counterexample: {minimal:?}",
+            cfg.seed
+        );
+    }
+}
+
+/// Generator: f32 vectors with length in `[min_len, max_len]`, entries
+/// N(0, scale).
+pub struct VecF32Gen {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub scale: f64,
+}
+
+impl Gen for VecF32Gen {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Xoshiro256pp) -> Vec<f32> {
+        let n = self.min_len + rng.gen_index(self.max_len - self.min_len + 1);
+        (0..n).map(|_| (rng.normal() * self.scale) as f32).collect()
+    }
+
+    fn shrink(&self, value: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        // halve the vector
+        if value.len() > self.min_len {
+            let half = value.len().max(2) / 2;
+            if half >= self.min_len {
+                out.push(value[..half].to_vec());
+            }
+            let mut drop_last = value.clone();
+            drop_last.pop();
+            if drop_last.len() >= self.min_len {
+                out.push(drop_last);
+            }
+        }
+        // zero-out entries
+        if value.iter().any(|&v| v != 0.0) {
+            out.push(value.iter().map(|_| 0.0).collect());
+            out.push(value.iter().map(|&v| v / 2.0).collect());
+        }
+        out
+    }
+}
+
+/// Generator: i64 vectors (lattice-index-like streams).
+pub struct VecI64Gen {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub magnitude: i64,
+}
+
+impl Gen for VecI64Gen {
+    type Value = Vec<i64>;
+
+    fn generate(&self, rng: &mut Xoshiro256pp) -> Vec<i64> {
+        let n = self.min_len + rng.gen_index(self.max_len - self.min_len + 1);
+        (0..n)
+            .map(|_| {
+                let m = (2 * self.magnitude + 1) as usize;
+                rng.gen_index(m) as i64 - self.magnitude
+            })
+            .collect()
+    }
+
+    fn shrink(&self, value: &Vec<i64>) -> Vec<Vec<i64>> {
+        let mut out = Vec::new();
+        if value.len() > self.min_len {
+            out.push(value[..value.len() / 2].to_vec());
+        }
+        if value.iter().any(|&v| v != 0) {
+            out.push(value.iter().map(|&v| v / 2).collect());
+            out.push(vec![0; value.len()]);
+        }
+        out
+    }
+}
+
+/// Generator: pair of (seed, scale) for parameterized properties.
+pub struct SeedScaleGen {
+    pub max_scale: f64,
+}
+
+impl Gen for SeedScaleGen {
+    type Value = (u64, f64);
+
+    fn generate(&self, rng: &mut Xoshiro256pp) -> (u64, f64) {
+        (rng.next_u64(), rng.uniform() * self.max_scale + 1e-3)
+    }
+
+    fn shrink(&self, &(seed, scale): &(u64, f64)) -> Vec<(u64, f64)> {
+        let mut out = Vec::new();
+        if scale > 1e-3 {
+            out.push((seed, scale / 2.0));
+        }
+        if seed != 0 {
+            out.push((0, scale));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_quietly() {
+        let g = VecF32Gen { min_len: 0, max_len: 32, scale: 1.0 };
+        check("len-bounded", &g, PropConfig::default(), |v| v.len() <= 32);
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let g = VecI64Gen { min_len: 0, max_len: 64, magnitude: 100 };
+        let result = std::panic::catch_unwind(|| {
+            check("always-small", &g, PropConfig { cases: 64, ..Default::default() }, |v| {
+                v.iter().all(|&x| x.abs() < 5)
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("minimal counterexample"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = VecF32Gen { min_len: 1, max_len: 8, scale: 2.0 };
+        let mut r1 = Xoshiro256pp::seed_from_u64(5);
+        let mut r2 = Xoshiro256pp::seed_from_u64(5);
+        assert_eq!(g.generate(&mut r1), g.generate(&mut r2));
+    }
+}

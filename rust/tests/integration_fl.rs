@@ -1,0 +1,151 @@
+//! End-to-end federated runs (small workloads): the §V-B qualitative
+//! claims on convergence, heterogeneity, and codec choice.
+
+use uveqfed::data::{partition, PartitionScheme, SynthMnist};
+use uveqfed::fl::{run_federated, FlConfig, LrSchedule, NativeTrainer};
+use uveqfed::models::{LogReg, MlpMnist, Model};
+use uveqfed::quantizer;
+
+fn cfg(users: usize, rounds: usize, rate: f64, seed: u64) -> FlConfig {
+    FlConfig {
+        users,
+        rounds,
+        local_steps: 1,
+        batch_size: 0,
+        lr: LrSchedule::Const(0.5),
+        rate,
+        seed,
+        workers: 4,
+        eval_every: 5,
+        verbose: false,
+    }
+}
+
+#[test]
+fn mlp_federated_run_learns_under_uveqfed_r2() {
+    let gen = SynthMnist::new(51);
+    let ds = gen.dataset(600);
+    let test = gen.test_dataset(200);
+    let shards = partition(&ds, 6, 100, PartitionScheme::Iid, 3);
+    let trainer = NativeTrainer::new(MlpMnist::new(20));
+    let codec = quantizer::by_name("uveqfed-l2");
+    let mut c = cfg(6, 40, 2.0, 7);
+    c.lr = LrSchedule::Const(1.0);
+    let hist = run_federated(&c, &trainer, &shards, &test, codec.as_ref());
+    assert!(
+        hist.best_accuracy() > 0.55,
+        "MLP under UVeQFed R=2 failed to learn: {}",
+        hist.best_accuracy()
+    );
+}
+
+#[test]
+fn uveqfed_beats_subsample_at_low_rate() {
+    // Fig. 6 ordering at R=2 on a reduced workload: UVeQFed converges to a
+    // better model than the subsampling baseline.
+    let gen = SynthMnist::new(52);
+    let ds = gen.dataset(500);
+    let test = gen.test_dataset(200);
+    let shards = partition(&ds, 5, 100, PartitionScheme::Iid, 3);
+    let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
+    let c = cfg(5, 30, 2.0, 7);
+    let run = |name: &str| {
+        let codec = quantizer::by_name(name);
+        run_federated(&c, &trainer, &shards, &test, codec.as_ref()).best_accuracy()
+    };
+    let uv = run("uveqfed-l2");
+    let sub = run("subsample");
+    assert!(uv > sub - 0.02, "uveqfed {uv} should beat subsample {sub}");
+}
+
+#[test]
+fn heterogeneous_split_degrades_accuracy() {
+    // §V-B: "the heterogeneous division of the data degrades the accuracy
+    // of all considered schemes compared to the i.i.d division".
+    let gen = SynthMnist::new(53);
+    let ds = gen.dataset(600);
+    let test = gen.test_dataset(200);
+    let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
+    let c = cfg(6, 25, 2.0, 7);
+    let codec = quantizer::by_name("uveqfed-l2");
+    let run = |scheme| {
+        let shards = partition(&ds, 6, 100, scheme, 3);
+        run_federated(&c, &trainer, &shards, &test, codec.as_ref()).best_accuracy()
+    };
+    let iid = run(PartitionScheme::Iid);
+    let het = run(PartitionScheme::Sequential);
+    assert!(
+        het <= iid + 0.02,
+        "heterogeneous ({het}) should not beat iid ({iid})"
+    );
+}
+
+#[test]
+fn rate4_closes_gap_to_unquantized() {
+    // Fig. 7: at R=4, UVeQFed L=2 sits within a minor gap of unquantized
+    // federated averaging.
+    let gen = SynthMnist::new(54);
+    let ds = gen.dataset(500);
+    let test = gen.test_dataset(200);
+    let shards = partition(&ds, 5, 100, PartitionScheme::Iid, 3);
+    let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
+    let run = |name: &str, rate: f64| {
+        let codec = quantizer::by_name(name);
+        run_federated(&cfg(5, 30, rate, 7), &trainer, &shards, &test, codec.as_ref())
+            .best_accuracy()
+    };
+    let unq = run("identity", 4.0);
+    let uv4 = run("uveqfed-l2", 4.0);
+    assert!(
+        uv4 > unq - 0.05,
+        "R=4 UVeQFed ({uv4}) should be within 5pts of unquantized ({unq})"
+    );
+}
+
+#[test]
+fn more_users_reduce_aggregate_distortion() {
+    // Theorem 2: with α_k = 1/K the aggregate quantization error decays
+    // like 1/K. Compare measured per-round distortion at K=2 vs K=8.
+    let gen = SynthMnist::new(55);
+    let ds = gen.dataset(800);
+    let test = gen.test_dataset(100);
+    let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
+    let codec = quantizer::by_name("uveqfed-l2");
+    let dist = |k: usize| {
+        let shards = partition(&ds, k, 800 / k, PartitionScheme::Iid, 3);
+        let mut c = cfg(k, 3, 2.0, 7);
+        c.eval_every = 1;
+        let hist = run_federated(&c, &trainer, &shards, &test, codec.as_ref());
+        hist.rows.iter().map(|r| r.aggregate_distortion).sum::<f64>()
+            / hist.rows.len() as f64
+    };
+    let d2 = dist(2);
+    let d8 = dist(8);
+    // 1/K scaling predicts 4×; allow generous slack for the differing
+    // update norms (each user sees different data volume).
+    assert!(d8 < d2, "distortion did not shrink with K: K=2 {d2} vs K=8 {d8}");
+}
+
+#[test]
+fn uplink_accounting_scales_with_rate_and_users() {
+    let gen = SynthMnist::new(56);
+    let ds = gen.dataset(400);
+    let test = gen.test_dataset(100);
+    let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
+    let codec = quantizer::by_name("uveqfed-l2");
+    let bits = |rate: f64| {
+        let shards = partition(&ds, 4, 100, PartitionScheme::Iid, 3);
+        let mut c = cfg(4, 4, rate, 7);
+        c.eval_every = 1;
+        run_federated(&c, &trainer, &shards, &test, codec.as_ref())
+            .rows
+            .last()
+            .unwrap()
+            .uplink_bits
+    };
+    let b2 = bits(2.0);
+    let b4 = bits(4.0);
+    assert!(b4 > b2, "R=4 should use more uplink bits than R=2");
+    let m = trainer.model().num_params() as f64;
+    assert!(b2 <= 4.0 * 4.0 * 2.0 * m + 1.0, "R=2 bits {b2} exceed budget");
+}

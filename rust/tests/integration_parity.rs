@@ -1,0 +1,78 @@
+//! L1 ↔ L3 parity: the Pallas lattice-quantize kernel (via its AOT
+//! artifact) must agree with the Rust coordinator's native lattice
+//! quantizer on identical inputs — the proof that the two implementations
+//! of the paper's E2–E3 math are interchangeable.
+
+use uveqfed::lattice::{self, Lattice};
+use uveqfed::prng::{Rng, Xoshiro256pp};
+use uveqfed::runtime::{self, engine, Engine, Manifest};
+
+#[test]
+fn pallas_kernel_matches_rust_lattice_quantizer() {
+    if runtime::require_artifacts("pallas_kernel_matches_rust_lattice_quantizer").is_none() {
+        return;
+    }
+    let dir = runtime::artifacts_dir();
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let entry = manifest.find("quantize_hex").expect("quantize_hex artifact");
+    let m = entry.usize_field("subvecs").expect("subvecs");
+    let eng = Engine::cpu().expect("engine");
+    let graph = eng
+        .load_hlo_text(&dir.join(entry.file().unwrap()))
+        .expect("load quantize_hex");
+
+    // Random inputs.
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let hbar: Vec<f32> = (0..m * 2).map(|_| rng.normal_f32()).collect();
+    let dither: Vec<f32> = (0..m * 2).map(|_| (rng.uniform_f32() - 0.5) * 0.4).collect();
+    let s = 0.37f32;
+
+    // Pallas path.
+    let h_lit = engine::literal_f32(&hbar, &[m as i64, 2]).unwrap();
+    let d_lit = engine::literal_f32(&dither, &[m as i64, 2]).unwrap();
+    let s_lit = engine::literal_f32(&[s], &[1]).unwrap();
+    let outs = graph.run(&[h_lit, d_lit, s_lit]).expect("run kernel");
+    let pallas_out = engine::f32_vec(&outs[0]).expect("output");
+    assert_eq!(pallas_out.len(), m * 2);
+
+    // Rust native path: (Q_Λ(h̄/s + z) − z)·s with the base hex lattice.
+    let lat = lattice::paper_hexagonal();
+    let mut mismatches = 0usize;
+    for i in 0..m {
+        let y = [
+            hbar[2 * i] as f64 / s as f64 + dither[2 * i] as f64,
+            hbar[2 * i + 1] as f64 / s as f64 + dither[2 * i + 1] as f64,
+        ];
+        let q = lat.quantize(&y);
+        let expect = [
+            ((q[0] - dither[2 * i] as f64) * s as f64) as f32,
+            ((q[1] - dither[2 * i + 1] as f64) * s as f64) as f32,
+        ];
+        let diff = (pallas_out[2 * i] - expect[0])
+            .abs()
+            .max((pallas_out[2 * i + 1] - expect[1]).abs());
+        if diff > 1e-4 {
+            mismatches += 1;
+        }
+    }
+    // f32 (kernel) vs f64 (rust) Voronoi-boundary flips are the only
+    // admissible disagreements; on random data they are vanishingly rare.
+    assert!(
+        mismatches * 1000 < m,
+        "pallas/rust parity broken: {mismatches}/{m} sub-vectors disagree"
+    );
+}
+
+#[test]
+fn quantize_artifact_is_mosaic_free() {
+    if runtime::require_artifacts("quantize_artifact_is_mosaic_free").is_none() {
+        return;
+    }
+    let dir = runtime::artifacts_dir();
+    let text = std::fs::read_to_string(dir.join("quantize_hex.hlo.txt")).expect("read");
+    assert!(
+        !text.to_lowercase().contains("mosaic"),
+        "interpret=True lowering must not contain Mosaic custom-calls"
+    );
+    assert!(text.contains("HloModule"));
+}

@@ -1,0 +1,169 @@
+//! Cross-codec integration: budget compliance, roundtrip sanity, and the
+//! distortion *orderings* the paper's Figs. 4–5 report.
+
+use uveqfed::data::{correlated_matrix, exp_decay_sigma, gaussian_matrix};
+use uveqfed::quantizer::{self, measure_distortion, CodecContext};
+
+const RATE_CODECS: &[&str] = &[
+    "uveqfed-l1",
+    "uveqfed-l2",
+    "uveqfed-l4",
+    "uveqfed-l8",
+    "qsgd",
+    "rotation",
+    "subsample",
+    "topk",
+];
+
+#[test]
+fn all_codecs_respect_budget_across_rates() {
+    let h = gaussian_matrix(64, 5); // 4096 entries
+    for name in RATE_CODECS {
+        let codec = quantizer::by_name(name);
+        for rate in [1.0, 2.0, 4.0, 6.0] {
+            let ctx = CodecContext::new(1, 2, 3, rate);
+            let enc = codec.encode(&h, &ctx);
+            assert!(
+                enc.bits <= ctx.budget_bits(h.len()),
+                "{name} rate {rate}: {} > {}",
+                enc.bits,
+                ctx.budget_bits(h.len())
+            );
+            let dec = codec.decode(&enc, h.len(), &ctx);
+            assert_eq!(dec.len(), h.len());
+            assert!(dec.iter().all(|v| v.is_finite()), "{name}: non-finite decode");
+        }
+    }
+}
+
+#[test]
+fn fig4_ordering_iid_data() {
+    // Fig. 4's qualitative result at R=3, i.i.d. Gaussian data:
+    //   UVeQFed {L=2 ≈ L=1} < QSGD < {rotation, subsample}.
+    // (Under entropy-coded dithered quantization the iid L=2-vs-L=1 gain
+    // is the 3.7% G-ratio — parity within noise at moderate rates, and at
+    // R=2 the adaptive coder's per-symbol floor lets L=1 edge ahead by a
+    // few percent; the decisive vector gain appears on correlated data,
+    // asserted in fig5 below and in EXPERIMENTS.md.)
+    let trials = 6;
+    let mse = |name: &str| -> f64 {
+        let codec = quantizer::by_name(name);
+        (0..trials)
+            .map(|t| {
+                let h = gaussian_matrix(64, 100 + t as u64);
+                measure_distortion(codec.as_ref(), &h, 3.0, t as u64, 0).mse
+            })
+            .sum::<f64>()
+            / trials as f64
+    };
+    let l2 = mse("uveqfed-l2");
+    let l1 = mse("uveqfed-l1");
+    let qsgd = mse("qsgd");
+    let rot = mse("rotation");
+    let sub = mse("subsample");
+    assert!(l2 < l1 * 1.10, "hex {l2} !<~ scalar {l1}");
+    assert!(l1 < qsgd, "uveqfed-l1 {l1} !< qsgd {qsgd}");
+    assert!(l2 < qsgd, "uveqfed-l2 {l2} !< qsgd {qsgd}");
+    assert!(l2 < rot, "uveqfed-l2 {l2} !< rotation {rot}");
+    // UVeQFed must dominate every baseline by a wide margin (the paper's
+    // headline). qsgd-vs-subsample is NOT asserted: our subsampling
+    // baseline rides the shared seed (mask costs no uplink bits), making
+    // it stronger than the paper's — see EXPERIMENTS.md.
+    assert!(l2 * 3.0 < qsgd.min(sub).min(rot), "UVeQFed margin too small: {l2} vs {qsgd}/{sub}/{rot}");
+}
+
+#[test]
+fn fig5_vector_gain_grows_with_correlation() {
+    // Fig. 5: the L=2 vs L=1 gain must be at least as large on correlated
+    // data as on i.i.d. data (vector quantizers exploit correlation).
+    let trials = 6;
+    let gain = |correlated: bool| -> f64 {
+        let l1 = quantizer::by_name("uveqfed-l1");
+        let l2 = quantizer::by_name("uveqfed-l2");
+        let (mut d1, mut d2) = (0.0, 0.0);
+        for t in 0..trials {
+            let mut h = gaussian_matrix(64, 200 + t as u64);
+            if correlated {
+                let sigma = exp_decay_sigma(64, 0.2);
+                h = correlated_matrix(&h, &sigma, 64);
+            }
+            d1 += measure_distortion(l1.as_ref(), &h, 2.0, t as u64, 0).mse;
+            d2 += measure_distortion(l2.as_ref(), &h, 2.0, t as u64, 0).mse;
+        }
+        d1 / d2
+    };
+    let g_iid = gain(false);
+    let g_corr = gain(true);
+    assert!(
+        g_corr > g_iid,
+        "vector gain should grow with correlation: iid {g_iid} vs corr {g_corr}"
+    );
+    assert!(g_corr > 1.0, "no vector gain on correlated data: {g_corr}");
+}
+
+#[test]
+fn higher_lattice_dim_pays_on_correlated_data() {
+    // Ablation beyond the paper: on correlated inputs, higher-dimensional
+    // lattices (joint encoding of more samples) must win decisively —
+    // L=4 over L=1 by a wide margin at moderate rate.
+    let trials = 6;
+    let sigma = exp_decay_sigma(64, 0.2);
+    let mse = |name: &str| -> f64 {
+        let codec = quantizer::by_name(name);
+        (0..trials)
+            .map(|t| {
+                let h0 = gaussian_matrix(64, 300 + t as u64);
+                let h = correlated_matrix(&h0, &sigma, 64);
+                measure_distortion(codec.as_ref(), &h, 3.0, t as u64, 0).mse
+            })
+            .sum::<f64>()
+            / trials as f64
+    };
+    let d1 = mse("uveqfed-l1");
+    let d2 = mse("uveqfed-l2");
+    let d4 = mse("uveqfed-l4");
+    assert!(d2 < d1, "L2 {d2} !< L1 {d1} (correlated)");
+    assert!(d4 < d2, "L4 {d4} !< L2 {d2} (correlated)");
+    assert!(d4 < d1 * 0.7, "L4 {d4} should be ≥30% below L1 {d1}");
+}
+
+#[test]
+fn distortion_decreases_with_rate_for_every_codec() {
+    let h = gaussian_matrix(64, 9);
+    for name in RATE_CODECS {
+        let codec = quantizer::by_name(name);
+        let lo = measure_distortion(codec.as_ref(), &h, 1.0, 3, 0).mse;
+        let hi = measure_distortion(codec.as_ref(), &h, 5.0, 3, 0).mse;
+        assert!(
+            hi < lo,
+            "{name}: distortion not decreasing in rate ({lo} → {hi})"
+        );
+    }
+}
+
+#[test]
+fn decode_is_deterministic() {
+    let h = gaussian_matrix(32, 11);
+    for name in RATE_CODECS {
+        let codec = quantizer::by_name(name);
+        let ctx = CodecContext::new(4, 9, 17, 2.0);
+        let enc = codec.encode(&h, &ctx);
+        let d1 = codec.decode(&enc, h.len(), &ctx);
+        let d2 = codec.decode(&enc, h.len(), &ctx);
+        assert_eq!(d1, d2, "{name}: nondeterministic decode");
+    }
+}
+
+#[test]
+fn tiny_and_empty_inputs() {
+    for name in RATE_CODECS {
+        let codec = quantizer::by_name(name);
+        let ctx = CodecContext::new(0, 0, 1, 2.0);
+        for n in [1usize, 2, 3, 7] {
+            let h: Vec<f32> = (0..n).map(|i| i as f32 - 1.5).collect();
+            let enc = codec.encode(&h, &ctx);
+            let dec = codec.decode(&enc, n, &ctx);
+            assert_eq!(dec.len(), n, "{name} len {n}");
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Integration: PJRT runtime ↔ AOT artifacts ↔ native oracle.
+//!
+//! These tests require `make artifacts`; they skip (with a note) when the
+//! artifacts are absent so `cargo test` stays green pre-build.
+
+use uveqfed::data::SynthMnist;
+use uveqfed::fl::{NativeTrainer, Trainer};
+use uveqfed::models::MlpMnist;
+use uveqfed::runtime::{self, HloTrainer};
+
+#[test]
+fn hlo_step_matches_native_oracle() {
+    if runtime::require_artifacts("hlo_step_matches_native_oracle").is_none() {
+        return;
+    }
+    let hlo = HloTrainer::load("mnist", 500).expect("load mnist step graph");
+    assert_eq!(hlo.num_params(), 39_760);
+
+    let gen = SynthMnist::new(42);
+    let shard = gen.dataset(500);
+    let native = NativeTrainer::new(MlpMnist::new(50));
+
+    // Same starting weights for both paths (the artifact blob).
+    let w0 = hlo.init_params(0);
+    let lr = 0.05f32;
+    let w_hlo = hlo.local_update(&w0, &shard, 1, lr, 0, 1);
+    let w_nat = native.local_update(&w0, &shard, 1, lr, 0, 1);
+
+    assert_eq!(w_hlo.len(), w_nat.len());
+    let mut max_diff = 0f32;
+    for (a, b) in w_hlo.iter().zip(&w_nat) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    // One full-batch GD step; fp32 accumulation-order differences only.
+    assert!(max_diff < 2e-4, "HLO vs native step diverged: {max_diff}");
+}
+
+#[test]
+fn hlo_eval_matches_native_eval() {
+    if runtime::require_artifacts("hlo_eval_matches_native_eval").is_none() {
+        return;
+    }
+    let hlo = HloTrainer::load("mnist", 500).expect("load");
+    let gen = SynthMnist::new(43);
+    let test = gen.test_dataset(700); // not a multiple of eval batch: tests padding
+    let w = hlo.init_params(0);
+    let native = NativeTrainer::new(MlpMnist::new(50));
+    let a = hlo.evaluate(&w, &test);
+    let b = native.evaluate(&w, &test);
+    assert!((a.loss - b.loss).abs() < 1e-3, "loss {} vs {}", a.loss, b.loss);
+    assert!(
+        (a.accuracy - b.accuracy).abs() < 1e-6,
+        "acc {} vs {}",
+        a.accuracy,
+        b.accuracy
+    );
+}
+
+#[test]
+fn hlo_training_actually_learns() {
+    if runtime::require_artifacts("hlo_training_actually_learns").is_none() {
+        return;
+    }
+    let hlo = HloTrainer::load("mnist", 500).expect("load");
+    let gen = SynthMnist::new(44);
+    let shard = gen.dataset(500);
+    let mut w = hlo.init_params(0);
+    let l0 = hlo.evaluate(&w, &shard).loss;
+    for _ in 0..15 {
+        w = hlo.local_update(&w, &shard, 1, 0.5, 0, 1);
+    }
+    let l1 = hlo.evaluate(&w, &shard).loss;
+    assert!(l1 < l0 * 0.9, "HLO training did not descend: {l0} → {l1}");
+}
+
+#[test]
+fn cifar_graphs_load_and_run() {
+    if runtime::require_artifacts("cifar_graphs_load_and_run").is_none() {
+        return;
+    }
+    let hlo = HloTrainer::load("cifar", 60).expect("load cifar");
+    let gen = uveqfed::data::SynthCifar::new(45);
+    let shard = gen.dataset(120);
+    let w0 = hlo.init_params(0);
+    let w1 = hlo.local_update(&w0, &shard, 2, 5e-3, 60, 1);
+    assert_eq!(w1.len(), hlo.num_params());
+    assert_ne!(w0, w1);
+    let rep = hlo.evaluate(&w1, &shard);
+    assert!(rep.loss.is_finite());
+}
+
+#[test]
+fn init_blob_is_deterministic_across_loads() {
+    if runtime::require_artifacts("init_blob_is_deterministic_across_loads").is_none() {
+        return;
+    }
+    let a = HloTrainer::load("mnist", 500).expect("load");
+    let b = HloTrainer::load("mnist", 500).expect("load");
+    assert_eq!(a.init_params(0), b.init_params(1)); // seed ignored: blob authoritative
+}

@@ -1,0 +1,176 @@
+//! Property-based tests (via the in-tree `util::prop` mini-framework):
+//! invariants that must hold for *arbitrary* inputs, with shrinking.
+
+use uveqfed::entropy::elias::{EliasDelta, EliasGamma, EliasOmega};
+use uveqfed::entropy::huffman::HuffmanCoder;
+use uveqfed::entropy::range::AdaptiveRangeCoder;
+use uveqfed::entropy::{BitReader, BitWriter, IntCoder};
+use uveqfed::lattice::{self, Lattice};
+use uveqfed::prng::{Rng, Xoshiro256pp};
+use uveqfed::quantizer::{self, CodecContext};
+use uveqfed::util::prop::{check, Gen, PropConfig, SeedScaleGen, VecF32Gen, VecI64Gen};
+
+fn cfgn(cases: usize) -> PropConfig {
+    PropConfig { cases, ..Default::default() }
+}
+
+#[test]
+fn prop_int_coders_roundtrip() {
+    let gen = VecI64Gen { min_len: 0, max_len: 512, magnitude: 1 << 20 };
+    for coder in [
+        &EliasGamma as &dyn IntCoder,
+        &EliasDelta,
+        &EliasOmega,
+        &AdaptiveRangeCoder::default(),
+        &HuffmanCoder,
+    ] {
+        check(&format!("roundtrip-{}", coder.name()), &gen, cfgn(96), |xs| {
+            if xs.is_empty() && coder.name() != "huffman" {
+                return true; // nothing to code
+            }
+            if xs.is_empty() {
+                return true;
+            }
+            let mut w = BitWriter::new();
+            coder.encode(xs, &mut w);
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            coder.decode(xs.len(), &mut r) == *xs
+        });
+    }
+}
+
+#[test]
+fn prop_bitio_random_streams() {
+    struct BitsGen;
+    impl Gen for BitsGen {
+        type Value = Vec<(u64, u32)>;
+        fn generate(&self, rng: &mut Xoshiro256pp) -> Self::Value {
+            let n = rng.gen_index(64);
+            (0..n)
+                .map(|_| {
+                    let width = 1 + rng.gen_index(64) as u32;
+                    let v = rng.next_u64() & (u64::MAX >> (64 - width));
+                    (v, width)
+                })
+                .collect()
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            if v.is_empty() {
+                vec![]
+            } else {
+                vec![v[..v.len() / 2].to_vec(), v[1..].to_vec()]
+            }
+        }
+    }
+    check("bitio-roundtrip", &BitsGen, cfgn(128), |pairs| {
+        let mut w = BitWriter::new();
+        for &(v, n) in pairs {
+            w.push_bits(v, n);
+        }
+        let total: usize = pairs.iter().map(|&(_, n)| n as usize).sum();
+        if w.bit_len() != total {
+            return false;
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        pairs.iter().all(|&(v, n)| r.read_bits(n) == v)
+    });
+}
+
+#[test]
+fn prop_lattice_quantize_idempotent() {
+    // Q(Q(x)) == Q(x) for every lattice and any scale.
+    let gen = SeedScaleGen { max_scale: 3.0 };
+    for name in ["scalar", "hex", "d4", "e8"] {
+        let base = lattice::by_name(name);
+        check(&format!("idempotent-{name}"), &gen, cfgn(64), |&(seed, scale)| {
+            let lat = base.boxed_scaled(scale);
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let x: Vec<f64> = (0..lat.dim()).map(|_| rng.normal() * 4.0).collect();
+            let q1 = lat.quantize(&x);
+            let q2 = lat.quantize(&q1);
+            q1.iter().zip(&q2).all(|(a, b)| (a - b).abs() < 1e-9)
+        });
+    }
+}
+
+#[test]
+fn prop_lattice_error_within_covering_radius() {
+    // ‖x − Q(x)‖ is bounded by the cell diameter (loose but universal).
+    let gen = SeedScaleGen { max_scale: 2.0 };
+    for name in ["scalar", "hex", "d4", "e8"] {
+        let base = lattice::by_name(name);
+        check(&format!("bounded-error-{name}"), &gen, cfgn(64), |&(seed, scale)| {
+            let lat = base.boxed_scaled(scale);
+            let g = lat.generator_row_major();
+            let l = lat.dim();
+            // bound: sum of column norms (very loose cell diameter bound)
+            let mut bound = 0.0;
+            for j in 0..l {
+                let col: f64 = (0..l).map(|i| g[i * l + j] * g[i * l + j]).sum();
+                bound += col.sqrt();
+            }
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let x: Vec<f64> = (0..l).map(|_| rng.normal() * 6.0).collect();
+            let q = lat.quantize(&x);
+            let err: f64 =
+                x.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+            err <= bound + 1e-9
+        });
+    }
+}
+
+#[test]
+fn prop_uveqfed_roundtrip_any_input() {
+    // For arbitrary inputs (including zeros, tiny and huge magnitudes),
+    // encode respects the budget and decode returns finite values of the
+    // right length.
+    use quantizer::UpdateCodec;
+    let gen = VecF32Gen { min_len: 1, max_len: 700, scale: 10.0 };
+    let codec = quantizer::UVeQFed::hexagonal();
+    check("uveqfed-any-input", &gen, cfgn(64), |h| {
+        let ctx = CodecContext::new(1, 2, 3, 2.0);
+        let enc = codec.encode(h, &ctx);
+        if enc.bits > ctx.budget_bits(h.len()).max(64) {
+            return false;
+        }
+        let dec = codec.decode(&enc, h.len(), &ctx);
+        dec.len() == h.len() && dec.iter().all(|v| v.is_finite())
+    });
+}
+
+#[test]
+fn prop_qsgd_never_amplifies_magnitude() {
+    // |decoded_i| ≤ ‖h‖ by construction for QSGD.
+    let gen = VecF32Gen { min_len: 4, max_len: 512, scale: 5.0 };
+    let codec = quantizer::Qsgd::default();
+    check("qsgd-magnitude", &gen, cfgn(64), |h| {
+        let ctx = CodecContext::new(0, 0, 9, 4.0);
+        let enc = quantizer::UpdateCodec::encode(&codec, h, &ctx);
+        let dec = quantizer::UpdateCodec::decode(&codec, &enc, h.len(), &ctx);
+        let norm = h.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+        dec.iter().all(|&v| (v as f64).abs() <= norm + 1e-5)
+    });
+}
+
+#[test]
+fn prop_dither_stays_in_voronoi_cell() {
+    let gen = SeedScaleGen { max_scale: 4.0 };
+    for name in ["scalar", "hex", "d4"] {
+        let base = lattice::by_name(name);
+        check(&format!("dither-cell-{name}"), &gen, cfgn(48), |&(seed, scale)| {
+            let lat = base.boxed_scaled(scale);
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let z = lattice::dither::sample_dither(lat.as_ref(), &mut rng);
+            // z must quantize to 0 (it lies in the basic cell)
+            let q = lat.quantize(&z);
+            q.iter().all(|&v| v.abs() < 1e-9) || {
+                // boundary tie: distance to 0 equals distance to q
+                let dz: f64 = z.iter().map(|v| v * v).sum();
+                let dq: f64 = z.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum();
+                (dz - dq).abs() < 1e-9
+            }
+        });
+    }
+}
