@@ -67,6 +67,7 @@ fn main() {
         workers: 8,
         eval_every: 2,
         verbose: true,
+        fleet: uveqfed::fleet::Scenario::full(),
     };
     let hist = run_federated(&cfg, trainer.as_ref(), &shards, &test, codec.as_ref());
     let last = hist.rows.last().unwrap();

@@ -184,6 +184,7 @@ fn fig67(rate: f64) {
         workers: 8,
         eval_every: (rounds / 25).max(1),
         verbose: false,
+        fleet: uveqfed::fleet::Scenario::full(),
     };
     let mut histories = Vec::new();
     for run in CONVERGENCE_RUNS {
@@ -220,6 +221,7 @@ fn fig89(rate: f64) {
             workers: 8,
             eval_every: (rounds / 25).max(1),
             verbose: false,
+            fleet: uveqfed::fleet::Scenario::full(),
         };
         let mut histories = Vec::new();
         for run in CONVERGENCE_RUNS.iter().filter(|r| {
@@ -276,6 +278,7 @@ fn fig1011(rate: f64) {
             workers: 8,
             eval_every: (rounds / 12).max(1),
             verbose: false,
+            fleet: uveqfed::fleet::Scenario::full(),
         };
         let mut histories = Vec::new();
         for run in CONVERGENCE_RUNS.iter().filter(|r| {

@@ -1,0 +1,122 @@
+//! Fleet-scale simulation walkthrough: a 50 000-client population served
+//! by per-round cohorts of 128, with heavy-tailed stragglers, dropouts, a
+//! round deadline, and the framed uplink — contrasted against the same
+//! model trained with the paper's full-participation setup.
+//!
+//! Run: `cargo run --release --example fleet_scale`
+
+use uveqfed::data::{partition, PartitionScheme, SynthMnist};
+use uveqfed::fl::{NativeTrainer, Trainer};
+use uveqfed::fleet::{FleetDriver, RoundRobinPool, Scenario, VirtualClock};
+use uveqfed::models::LogReg;
+use uveqfed::quantizer;
+
+fn main() {
+    let seed = 7u64;
+    let population = 50_000usize;
+    let cohort = 128usize;
+    let rounds = 30usize;
+
+    // 1. Population: 50k simulated clients backed by 32 template shards
+    //    (round-robin), weights drawn per client — no per-client dataset
+    //    materialization.
+    let n_templates = 32;
+    let per = 120;
+    let gen = SynthMnist::new(seed);
+    let ds = gen.dataset(n_templates * per);
+    let test = gen.test_dataset(500);
+    let templates = partition(&ds, n_templates, per, PartitionScheme::Iid, seed);
+    let pool = RoundRobinPool::synthetic(population, templates, seed);
+    let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
+
+    // 2. Scenario: log-normal stragglers, 2% dropout, 3 s (virtual)
+    //    deadline, 25% over-selection so the quota still fills.
+    let scenario = Scenario::stragglers(cohort, 3.0);
+    let codec = quantizer::by_name("uveqfed-l2");
+    let driver = FleetDriver::new(seed, 2.0, 8, scenario);
+    let mut clock = VirtualClock::new();
+    let mut w = trainer.init_params(seed);
+
+    println!("fleet_scale — population {population}, cohort {cohort}, UVeQFed L=2 @ R=2\n");
+    println!(
+        "{:>5} {:>9} {:>6} {:>6} {:>6} {:>8} {:>8} {:>9} {:>9}",
+        "round", "selected", "done", "drop", "late", "compl", "αmass", "p95(s)", "wireKB"
+    );
+    let mut wire_total = 0usize;
+    for round in 0..rounds {
+        let rep = driver.run_round(
+            round as u64,
+            &mut w,
+            &pool,
+            &trainer,
+            codec.as_ref(),
+            1,
+            0.5,
+            0,
+            &mut clock,
+        );
+        wire_total += rep.wire_bytes;
+        if round % 5 == 0 || round + 1 == rounds {
+            println!(
+                "{:>5} {:>9} {:>6} {:>6} {:>6} {:>8.3} {:>8.3} {:>9.3} {:>9.1}",
+                round,
+                rep.selected,
+                rep.aggregated,
+                rep.dropped,
+                rep.late,
+                rep.completion_rate,
+                rep.alpha_mass,
+                rep.timing.p95_latency,
+                rep.wire_bytes as f64 / 1e3,
+            );
+        }
+    }
+    let fleet_eval = trainer.evaluate(&w, &test);
+    let fleet_time = clock.now();
+
+    // 3. Reference: the same number of rounds with the degenerate
+    //    full-participation preset over 128 real shards (the seed setup).
+    let ref_shards = partition(
+        &gen.dataset(cohort * 60),
+        cohort,
+        60,
+        PartitionScheme::Iid,
+        seed,
+    );
+    let ref_pool = uveqfed::fleet::ShardPool::new(&ref_shards);
+    let ref_driver = FleetDriver::new(seed, 2.0, 8, Scenario::full());
+    let mut ref_clock = VirtualClock::new();
+    let mut wr = trainer.init_params(seed);
+    for round in 0..rounds {
+        ref_driver.run_round(
+            round as u64,
+            &mut wr,
+            &ref_pool,
+            &trainer,
+            codec.as_ref(),
+            1,
+            0.5,
+            0,
+            &mut ref_clock,
+        );
+    }
+    let ref_eval = trainer.evaluate(&wr, &test);
+
+    println!("\n─ summary ─────────────────────────────────────────────");
+    println!(
+        "fleet (cohort {cohort}/{population}, stragglers): acc {:.4}, {:.2} virtual s, {:.2} MB wire",
+        fleet_eval.accuracy,
+        fleet_time,
+        wire_total as f64 / 1e6
+    );
+    println!(
+        "full participation (K={cohort}):                 acc {:.4}",
+        ref_eval.accuracy
+    );
+    println!(
+        "\nCohort sampling touches {:.2}% of the population per round yet\n\
+         tracks the full-participation reference — the Theorem-2 distortion\n\
+         decay survives partial participation with re-normalized α's.",
+        100.0 * cohort as f64 / population as f64
+    );
+}

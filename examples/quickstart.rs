@@ -38,6 +38,7 @@ fn main() {
         workers: 8,
         eval_every: 10,
         verbose: true,
+        fleet: uveqfed::fleet::Scenario::full(),
     };
     let hist = run_federated(&cfg, &trainer, &shards, &test, codec.as_ref());
 

@@ -89,6 +89,7 @@ fn thm2() {
             workers: 8,
             eval_every: 1,
             verbose: false,
+            fleet: uveqfed::fleet::Scenario::full(),
         };
         cfg.eval_every = 1;
         let hist = run_federated(&cfg, &trainer, &shards, &test, codec.as_ref());
@@ -125,6 +126,7 @@ fn thm3() {
         workers: 8,
         eval_every: 20,
         verbose: false,
+        fleet: uveqfed::fleet::Scenario::full(),
     };
     // Evaluate on the training union: the recorded loss is then exactly
     // the global objective F(w_t) of eq. (1).

@@ -1,19 +1,21 @@
 //! Systems layer of the federated runtime: client fan-out, the metered
 //! rate-constrained uplink, and aggregation — the Fig. 1 pipeline.
 //!
-//! Separated from `fl::` so the benches can exercise the coordinator with
-//! mock trainers (isolating codec + aggregation cost from model compute),
-//! and so the uplink budget enforcement lives in exactly one place.
+//! Since the fleet refactor, `RoundDriver` is a thin preset over
+//! [`crate::fleet::FleetDriver`]: full participation, no faults, every
+//! update framed through the wire format and stream-folded into the O(m)
+//! fixed-point aggregate as it arrives (the old driver buffered all K
+//! decoded updates — O(K·m) — before aggregating). The uplink budget
+//! enforcement still lives in exactly one place: [`UplinkChannel`].
 
 mod uplink;
 
-pub use uplink::{UplinkChannel, UplinkStats};
+pub use uplink::{UplinkChannel, UplinkError, UplinkStats};
 
 use crate::data::Dataset;
 use crate::fl::Trainer;
-use crate::prng::SplitMix64;
-use crate::quantizer::{CodecContext, UpdateCodec};
-use crate::util::threadpool::parallel_map;
+use crate::fleet::{FleetDriver, Scenario, ShardPool, VirtualClock};
+use crate::quantizer::UpdateCodec;
 
 /// Per-round statistics surfaced into `fl::HistoryRow`.
 #[derive(Debug, Clone, Copy, Default)]
@@ -26,17 +28,16 @@ pub struct RoundStats {
     pub client_secs: f64,
 }
 
-/// Drives one federated round: fan out local training, collect encoded
-/// updates through the uplink, decode, aggregate, apply.
+/// Drives one federated round with every user participating: fan out
+/// local training, stream encoded updates through the framed uplink,
+/// decode, fold, apply.
 pub struct RoundDriver {
-    seed: u64,
-    rate: f64,
-    workers: usize,
+    driver: FleetDriver,
 }
 
 impl RoundDriver {
     pub fn new(seed: u64, rate: f64, workers: usize) -> Self {
-        Self { seed, rate, workers: workers.max(1) }
+        Self { driver: FleetDriver::new(seed, rate, workers, Scenario::full()) }
     }
 
     /// Execute round `round`, updating `w` in place. Returns stats.
@@ -53,59 +54,23 @@ impl RoundDriver {
         lr: f32,
         batch_size: usize,
     ) -> RoundStats {
-        let m = w.len();
-        let k = shards.len();
-        let uplink = UplinkChannel::new(self.rate, codec.rate_constrained());
-        let w_snapshot: &[f32] = w;
-
-        // Fan out: each client trains locally and uploads an encoded
-        // update. The closure returns (encoded, true update) — the latter
-        // only for distortion metering (a real deployment obviously cannot
-        // observe it; it never influences the aggregate).
-        let results = parallel_map(k, self.workers, |u| {
-            let t = crate::metrics::Timer::start();
-            // derive per-(user, round) batch-sampling seed
-            let local_seed =
-                SplitMix64::new(self.seed ^ (u as u64) << 32 ^ round.wrapping_mul(0x9E37)).next();
-            let w_new =
-                trainer.local_update(w_snapshot, &shards[u], tau, lr, batch_size, local_seed);
-            let mut h = w_new;
-            for (hv, &wv) in h.iter_mut().zip(w_snapshot.iter()) {
-                *hv -= wv;
-            }
-            let ctx = CodecContext::new(u as u64, round, self.seed, self.rate);
-            let enc = codec.encode(&h, &ctx);
-            (enc, h, t.elapsed_secs())
-        });
-
-        // Uplink + decode + aggregate.
-        let mut agg = vec![0.0f64; m];
-        let mut desired = vec![0.0f64; m];
-        let mut client_secs = 0.0;
-        for (u, (enc, h, secs)) in results.into_iter().enumerate() {
-            client_secs += secs;
-            uplink.transmit(u as u64, &enc, m);
-            let ctx = CodecContext::new(u as u64, round, self.seed, self.rate);
-            let dec = codec.decode(&enc, m, &ctx);
-            let a = alphas[u];
-            for i in 0..m {
-                agg[i] += a * dec[i] as f64;
-                desired[i] += a * h[i] as f64;
-            }
-        }
-
-        // Apply the aggregated update: w ← w + Σ α_k ĥ_k (eq. 8).
-        let mut dist = 0.0f64;
-        for i in 0..m {
-            let d = agg[i] - desired[i];
-            dist += d * d;
-            w[i] += agg[i] as f32;
-        }
-
+        let pool = ShardPool::with_weights(shards, alphas);
+        let mut clock = VirtualClock::new();
+        let report = self.driver.run_round(
+            round, w, &pool, trainer, codec, tau, lr, batch_size, &mut clock,
+        );
+        // The paper experiments' honesty depends on every update landing
+        // and none cheating the rate budget (the seed panicked here too).
+        assert_eq!(
+            report.budget_violations, 0,
+            "round {round}: {} uplink budget violation(s) — codec bug",
+            report.budget_violations
+        );
+        assert_eq!(report.aggregated, shards.len(), "full participation");
         RoundStats {
-            uplink_bits: uplink.stats().total_bits,
-            aggregate_distortion: dist / m as f64,
-            client_secs,
+            uplink_bits: report.uplink_bits,
+            aggregate_distortion: report.aggregate_distortion,
+            client_secs: report.client_secs,
         }
     }
 }

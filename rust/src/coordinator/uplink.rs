@@ -3,6 +3,7 @@
 //! tallies exact usage for the experiment reports.
 
 use crate::quantizer::Encoded;
+use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 #[derive(Debug, Default, Clone, Copy)]
@@ -11,6 +12,36 @@ pub struct UplinkStats {
     pub total_bits: usize,
     pub max_message_bits: usize,
 }
+
+/// Why a message was refused by [`UplinkChannel::try_transmit`]. Rejected
+/// messages are not metered — they never entered the channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UplinkError {
+    /// A rate-constrained codec exceeded its `R·m` budget — a codec bug;
+    /// the experiments' honesty depends on catching it.
+    OverBudget { user: u64, bits: usize, budget: usize },
+    /// Claimed bit count exceeds the physical payload (corrupt
+    /// accounting).
+    PhantomBits { user: u64, bits: usize, capacity: usize },
+}
+
+impl fmt::Display for UplinkError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            UplinkError::OverBudget { user, bits, budget } => {
+                write!(f, "user {user}: uplink over budget ({bits} > {budget} bits)")
+            }
+            UplinkError::PhantomBits { user, bits, capacity } => {
+                write!(
+                    f,
+                    "user {user}: bit accounting exceeds physical payload ({bits} > {capacity} bits)"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for UplinkError {}
 
 /// Thread-safe uplink meter (clients transmit concurrently).
 #[derive(Debug)]
@@ -33,25 +64,32 @@ impl UplinkChannel {
         }
     }
 
-    /// Account one uplink message of an `m`-parameter update. Panics if a
-    /// rate-constrained codec exceeded its budget — that is a codec bug,
-    /// and the experiments' honesty depends on catching it.
-    pub fn transmit(&self, user: u64, enc: &Encoded, m: usize) {
+    /// Account one uplink message of an `m`-parameter update, refusing it
+    /// with a typed error when the budget or physical-payload invariants
+    /// are violated — so fleet fault-injection can observe and count
+    /// violations instead of aborting the whole simulation.
+    pub fn try_transmit(&self, user: u64, enc: &Encoded, m: usize) -> Result<(), UplinkError> {
         let budget = (self.rate * m as f64).floor() as usize;
-        if self.enforce {
-            assert!(
-                enc.bits <= budget,
-                "user {user}: uplink over budget ({} > {budget} bits)",
-                enc.bits
-            );
+        if self.enforce && enc.bits > budget {
+            return Err(UplinkError::OverBudget { user, bits: enc.bits, budget });
         }
-        assert!(
-            enc.bits <= enc.bytes.len() * 8,
-            "bit accounting exceeds physical payload"
-        );
+        let capacity = enc.bytes.len() * 8;
+        if enc.bits > capacity {
+            return Err(UplinkError::PhantomBits { user, bits: enc.bits, capacity });
+        }
         self.messages.fetch_add(1, Ordering::Relaxed);
         self.total_bits.fetch_add(enc.bits, Ordering::Relaxed);
         self.max_bits.fetch_max(enc.bits, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Panicking wrapper over [`Self::try_transmit`] for callers that
+    /// treat any violation as a hard bug (the paper-experiment paths
+    /// assert the same invariant on the round report).
+    pub fn transmit(&self, user: u64, enc: &Encoded, m: usize) {
+        if let Err(e) = self.try_transmit(user, enc, m) {
+            panic!("{e}");
+        }
     }
 
     pub fn stats(&self) -> UplinkStats {
@@ -80,6 +118,23 @@ mod tests {
         assert_eq!(s.messages, 2);
         assert_eq!(s.total_bits, 250);
         assert_eq!(s.max_message_bits, 150);
+    }
+
+    #[test]
+    fn over_budget_is_a_typed_error_and_not_metered() {
+        let ch = UplinkChannel::new(1.0, true);
+        let err = ch.try_transmit(3, &enc(101), 100).unwrap_err();
+        assert_eq!(err, UplinkError::OverBudget { user: 3, bits: 101, budget: 100 });
+        assert_eq!(ch.stats().messages, 0, "rejected messages must not be metered");
+        assert_eq!(ch.stats().total_bits, 0);
+    }
+
+    #[test]
+    fn phantom_bits_is_a_typed_error() {
+        let ch = UplinkChannel::new(8.0, true);
+        let bad = Encoded { bytes: vec![0; 1], bits: 100 };
+        let err = ch.try_transmit(7, &bad, 100).unwrap_err();
+        assert_eq!(err, UplinkError::PhantomBits { user: 7, bits: 100, capacity: 8 });
     }
 
     #[test]

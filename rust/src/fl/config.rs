@@ -1,6 +1,7 @@
 //! Federated run configuration + learning-rate schedules.
 
 use crate::data::Dataset;
+use crate::fleet::{FaultPlan, LatencyModel, SamplerKind, Scenario};
 use crate::util::config::Config;
 
 /// Learning-rate schedule.
@@ -43,6 +44,9 @@ pub struct FlConfig {
     /// Evaluate every this many rounds.
     pub eval_every: usize,
     pub verbose: bool,
+    /// Participation + fault scenario (`Scenario::full()` reproduces the
+    /// seed's every-user-every-round behavior).
+    pub fleet: Scenario,
 }
 
 impl FlConfig {
@@ -65,6 +69,41 @@ impl FlConfig {
             workers: c.usize_or("fl.workers", crate::util::threadpool::default_workers()),
             eval_every: c.usize_or("fl.eval_every", 5),
             verbose: c.bool_or("fl.verbose", false),
+            fleet: Self::fleet_from_config(c),
+        }
+    }
+
+    /// Parse the optional `[fleet]` section. Absent section = full
+    /// participation (the paper configs keep working unchanged).
+    fn fleet_from_config(c: &Config) -> Scenario {
+        let cohort = c.usize_or("fleet.cohort", 0);
+        let sampler_name =
+            c.str_or("fleet.sampler", if cohort == 0 { "full" } else { "uniform" });
+        let sampler = match sampler_name.as_str() {
+            "full" => SamplerKind::Full,
+            "uniform" => SamplerKind::Uniform { cohort },
+            "weighted" => SamplerKind::Weighted { cohort },
+            other => panic!("unknown fleet.sampler '{other}' (full|uniform|weighted)"),
+        };
+        assert!(
+            matches!(sampler, SamplerKind::Full) || cohort > 0,
+            "fleet.sampler = \"{sampler_name}\" requires fleet.cohort > 0"
+        );
+        let median = c.f64_or("fleet.latency_median", 0.0);
+        let latency = if median > 0.0 {
+            LatencyModel::LogNormal { median, sigma: c.f64_or("fleet.latency_sigma", 0.8) }
+        } else {
+            LatencyModel::Fixed(0.0)
+        };
+        let deadline = c.f64_or("fleet.deadline", 0.0);
+        Scenario {
+            sampler,
+            over_select: c.f64_or("fleet.over_select", 0.0),
+            faults: FaultPlan {
+                latency,
+                dropout: c.f64_or("fleet.dropout", 0.0),
+                deadline: (deadline > 0.0).then_some(deadline),
+            },
         }
     }
 }
@@ -102,6 +141,7 @@ mod tests {
             workers: 1,
             eval_every: 1,
             verbose: false,
+            fleet: Scenario::full(),
         };
         let a = cfg.alphas(&[mk(30), mk(10)]);
         assert!((a[0] - 0.75).abs() < 1e-12);
@@ -116,5 +156,31 @@ mod tests {
         assert_eq!(f.users, 3);
         assert_eq!(f.rounds, 7);
         assert_eq!(f.local_steps, 1);
+        assert_eq!(f.fleet, Scenario::full(), "absent [fleet] = full participation");
+    }
+
+    #[test]
+    fn fleet_section_parses() {
+        let c = Config::parse(
+            "[fleet]\ncohort = 64\nsampler = \"weighted\"\nover_select = 0.25\n\
+             dropout = 0.05\ndeadline = 3.0\nlatency_median = 1.0\nlatency_sigma = 0.5",
+        )
+        .unwrap();
+        let f = FlConfig::from_config(&c);
+        assert_eq!(f.fleet.sampler, SamplerKind::Weighted { cohort: 64 });
+        assert_eq!(f.fleet.over_select, 0.25);
+        assert_eq!(f.fleet.faults.dropout, 0.05);
+        assert_eq!(f.fleet.faults.deadline, Some(3.0));
+        assert_eq!(
+            f.fleet.faults.latency,
+            LatencyModel::LogNormal { median: 1.0, sigma: 0.5 }
+        );
+    }
+
+    #[test]
+    fn cohort_without_sampler_defaults_to_uniform() {
+        let c = Config::parse("[fleet]\ncohort = 8").unwrap();
+        let f = FlConfig::from_config(&c);
+        assert_eq!(f.fleet.sampler, SamplerKind::Uniform { cohort: 8 });
     }
 }

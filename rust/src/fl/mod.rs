@@ -13,8 +13,8 @@ mod trainer;
 pub use config::{FlConfig, LrSchedule};
 pub use trainer::{NativeTrainer, Trainer};
 
-use crate::coordinator::{RoundDriver, RoundStats};
 use crate::data::Dataset;
+use crate::fleet::{FleetDriver, FleetRoundReport, ShardPool, VirtualClock};
 use crate::metrics::{CsvTable, Timer};
 use crate::quantizer::UpdateCodec;
 
@@ -31,6 +31,16 @@ pub struct HistoryRow {
     /// Per-round aggregate distortion ‖ĥ − Σα_k h_k‖² / m.
     pub aggregate_distortion: f64,
     pub wall_secs: f64,
+    /// Clients selected this round (cohort + over-selection).
+    pub selected: usize,
+    /// Updates aggregated this round (arrivals within deadline/quota).
+    pub completed: usize,
+    /// Fraction of the selected cohort's α weight that aggregated.
+    pub alpha_mass: f64,
+    /// Modeled (virtual) duration of this round, seconds.
+    pub round_latency: f64,
+    /// Cumulative serialized uplink bytes (frame headers included).
+    pub wire_bytes: f64,
 }
 
 /// Full run record; converts to CSV for the figure harnesses.
@@ -50,6 +60,11 @@ impl FlHistory {
             "uplink_bits",
             "aggregate_distortion",
             "wall_secs",
+            "selected",
+            "completed",
+            "alpha_mass",
+            "round_latency",
+            "wire_bytes",
         ]);
         for r in &self.rows {
             t.push(vec![
@@ -60,6 +75,11 @@ impl FlHistory {
                 r.uplink_bits,
                 r.aggregate_distortion,
                 r.wall_secs,
+                r.selected as f64,
+                r.completed as f64,
+                r.alpha_mass,
+                r.round_latency,
+                r.wire_bytes,
             ]);
         }
         t
@@ -84,43 +104,73 @@ pub fn run_federated(
 ) -> FlHistory {
     assert_eq!(shards.len(), cfg.users, "shard count != users");
     let alphas = cfg.alphas(shards);
+    let pool = ShardPool::with_weights(shards, &alphas);
     let mut w = trainer.init_params(cfg.seed);
-    let driver = RoundDriver::new(cfg.seed, cfg.rate, cfg.workers.min(trainer.max_workers()));
+    let driver = FleetDriver::new(
+        cfg.seed,
+        cfg.rate,
+        cfg.workers.min(trainer.max_workers()),
+        cfg.fleet.clone(),
+    );
+    let mut clock = VirtualClock::new();
     let mut history = FlHistory::default();
     let wall = Timer::start();
     let mut uplink_total = 0.0f64;
+    let mut wire_total = 0.0f64;
 
     for round in 0..cfg.rounds {
         let t = round * cfg.local_steps;
         let lr = cfg.lr.at(t);
-        let stats: RoundStats = driver.run_round(
+        let rep: FleetRoundReport = driver.run_round(
             round as u64,
             &mut w,
-            shards,
+            &pool,
             trainer,
             codec,
-            &alphas,
             cfg.local_steps,
             lr,
             cfg.batch_size,
+            &mut clock,
         );
-        uplink_total += stats.uplink_bits as f64;
+        // Budget violations are codec bugs, never injected faults (faults
+        // model latency/dropout, not bit inflation) — abort loudly rather
+        // than silently training on a shrunken cohort. Callers that want
+        // to observe violations drive `FleetDriver` directly.
+        assert_eq!(
+            rep.budget_violations, 0,
+            "round {round}: {} uplink budget violation(s) — codec bug",
+            rep.budget_violations
+        );
+        uplink_total += rep.uplink_bits as f64;
+        wire_total += rep.wire_bytes as f64;
 
         if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
-            let rep = trainer.evaluate(&w, test);
+            let eval = trainer.evaluate(&w, test);
             history.rows.push(HistoryRow {
                 round,
                 t: t + cfg.local_steps,
-                test_loss: rep.loss,
-                test_accuracy: rep.accuracy,
+                test_loss: eval.loss,
+                test_accuracy: eval.accuracy,
                 uplink_bits: uplink_total,
-                aggregate_distortion: stats.aggregate_distortion,
+                aggregate_distortion: rep.aggregate_distortion,
                 wall_secs: wall.elapsed_secs(),
+                selected: rep.selected,
+                completed: rep.aggregated,
+                alpha_mass: rep.alpha_mass,
+                round_latency: rep.timing.duration,
+                wire_bytes: wire_total,
             });
             if cfg.verbose {
                 println!(
-                    "round {round:>4}  loss {:.4}  acc {:.4}  bits {:.3e}  dist {:.3e}",
-                    rep.loss, rep.accuracy, uplink_total, stats.aggregate_distortion
+                    "round {round:>4}  loss {:.4}  acc {:.4}  bits {:.3e}  dist {:.3e}  \
+                     cohort {}/{}  αmass {:.3}",
+                    eval.loss,
+                    eval.accuracy,
+                    uplink_total,
+                    rep.aggregate_distortion,
+                    rep.aggregated,
+                    rep.selected,
+                    rep.alpha_mass
                 );
             }
         }
@@ -148,6 +198,7 @@ mod tests {
             workers: 4,
             eval_every: rounds.max(1),
             verbose: false,
+            fleet: crate::fleet::Scenario::full(),
         }
     }
 
@@ -202,11 +253,37 @@ mod tests {
         cfg.eval_every = 2;
         let hist = run_federated(&cfg, &trainer, &shards, &test, codec.as_ref());
         let table = hist.to_table();
-        assert_eq!(table.header.len(), 7);
+        assert_eq!(table.header.len(), 12);
         assert!(table.rows.len() >= 3);
         // uplink bits monotone
         for w in table.rows.windows(2) {
             assert!(w[1][4] >= w[0][4]);
         }
+    }
+
+    #[test]
+    fn partial_participation_reports_cohort_and_still_learns() {
+        let gen = SynthMnist::new(14);
+        let ds = gen.dataset(400);
+        let test = gen.test_dataset(100);
+        let shards = partition(&ds, 8, 50, PartitionScheme::Iid, 3);
+        let model = LogReg::new(ds.features, ds.classes, 1e-3);
+        let trainer = NativeTrainer::new(model);
+        let codec = quantizer::by_name("uveqfed-l2");
+        let mut cfg = quick_cfg(8, 30, 4.0);
+        cfg.fleet = crate::fleet::Scenario::sampled(3);
+        cfg.eval_every = 5;
+        let hist = run_federated(&cfg, &trainer, &shards, &test, codec.as_ref());
+        for r in &hist.rows {
+            assert_eq!(r.selected, 3);
+            assert_eq!(r.completed, 3);
+            assert!((r.alpha_mass - 1.0).abs() < 1e-12);
+            assert!(r.wire_bytes > 0.0);
+        }
+        assert!(
+            hist.final_accuracy() > 0.4,
+            "cohort-sampled run failed to learn: {}",
+            hist.final_accuracy()
+        );
     }
 }

@@ -1,0 +1,115 @@
+//! Virtual time: per-round wall/latency statistics without sleeping.
+//!
+//! The fleet simulates latency, so a 10k-client round with a 30 s deadline
+//! completes in milliseconds of real time while still reporting when the
+//! round *would* have closed. The clock advances by the modeled round
+//! duration: the arrival time of the last aggregated update, or the full
+//! deadline when the server waited it out short of its target.
+
+use crate::util::stats::percentile;
+
+/// Monotone virtual clock for a federated run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+/// Latency statistics for one closed round (virtual seconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundTiming {
+    /// Virtual time at round start.
+    pub start: f64,
+    /// Modeled duration until the server closed the round.
+    pub duration: f64,
+    /// Median arrival latency over aggregated updates.
+    pub p50_latency: f64,
+    /// 95th-percentile arrival latency over aggregated updates.
+    pub p95_latency: f64,
+    /// Slowest aggregated arrival.
+    pub max_latency: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Close a round given the latencies of the updates that were
+    /// aggregated; `waited_deadline` is `Some(d)` when the server held the
+    /// round open until the deadline (it fell short of its target count).
+    pub fn close_round(
+        &mut self,
+        arrival_latencies: &[f64],
+        waited_deadline: Option<f64>,
+    ) -> RoundTiming {
+        let start = self.now;
+        let max_latency =
+            arrival_latencies.iter().copied().fold(0.0f64, f64::max);
+        let duration = waited_deadline.unwrap_or(max_latency).max(max_latency);
+        let (p50, p95) = if arrival_latencies.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (percentile(arrival_latencies, 50.0), percentile(arrival_latencies, 95.0))
+        };
+        self.now += duration;
+        RoundTiming {
+            start,
+            duration,
+            p50_latency: p50,
+            p95_latency: p95,
+            max_latency,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_by_slowest_aggregated_arrival() {
+        let mut clock = VirtualClock::new();
+        let t = clock.close_round(&[0.5, 2.0, 1.0], None);
+        assert_eq!(t.start, 0.0);
+        assert_eq!(t.duration, 2.0);
+        assert_eq!(t.max_latency, 2.0);
+        assert_eq!(clock.now(), 2.0);
+        let t2 = clock.close_round(&[1.0], None);
+        assert_eq!(t2.start, 2.0);
+        assert_eq!(clock.now(), 3.0);
+    }
+
+    #[test]
+    fn waiting_out_a_deadline_costs_the_full_deadline() {
+        let mut clock = VirtualClock::new();
+        let t = clock.close_round(&[0.1, 0.2], Some(30.0));
+        assert_eq!(t.duration, 30.0);
+        assert_eq!(t.max_latency, 0.2);
+        assert_eq!(clock.now(), 30.0);
+    }
+
+    #[test]
+    fn empty_round_with_deadline_still_advances() {
+        let mut clock = VirtualClock::new();
+        let t = clock.close_round(&[], Some(5.0));
+        assert_eq!(t.duration, 5.0);
+        assert_eq!(t.p50_latency, 0.0);
+        let t2 = clock.close_round(&[], None);
+        assert_eq!(t2.duration, 0.0);
+    }
+
+    #[test]
+    fn percentiles_are_ordered() {
+        let mut clock = VirtualClock::new();
+        let lats: Vec<f64> = (1..=100).map(|i| i as f64 / 100.0).collect();
+        let t = clock.close_round(&lats, None);
+        assert!(t.p50_latency <= t.p95_latency);
+        assert!(t.p95_latency <= t.max_latency);
+        assert!((t.p50_latency - 0.505).abs() < 0.02);
+    }
+}

@@ -1,0 +1,168 @@
+//! Straggler and dropout model.
+//!
+//! Every selected client gets a simulated uplink latency and a dropout
+//! draw, both pure functions of `(root seed, client, round)` through the
+//! shared randomness streams — fault injection is bit-reproducible and
+//! independent of execution order. The server imposes a round deadline:
+//! with over-selection it aggregates the first `target` arrivals and cuts
+//! the rest, which is the K_a-active-devices-per-round regime the
+//! partial-participation literature evaluates.
+
+use crate::prng::{CommonRandomness, Rng, StreamKind};
+
+/// Per-client latency distribution (virtual seconds — nothing sleeps).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LatencyModel {
+    /// Every client at the same latency (0 = the seed's instant uplink).
+    Fixed(f64),
+    /// Uniform in `[lo, hi)`.
+    Uniform { lo: f64, hi: f64 },
+    /// `median · exp(σ·Z)` — the classic heavy-upper-tail straggler shape.
+    LogNormal { median: f64, sigma: f64 },
+    /// Exponential with the given mean.
+    Exponential { mean: f64 },
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        LatencyModel::Fixed(0.0)
+    }
+}
+
+impl LatencyModel {
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> f64 {
+        match *self {
+            LatencyModel::Fixed(v) => v,
+            LatencyModel::Uniform { lo, hi } => rng.uniform_range(lo, hi),
+            LatencyModel::LogNormal { median, sigma } => median * (sigma * rng.normal()).exp(),
+            LatencyModel::Exponential { mean } => {
+                -mean * (1.0 - rng.uniform()).ln()
+            }
+        }
+    }
+}
+
+/// What a selected client does this round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ClientFate {
+    /// Update lands at `latency` virtual seconds after broadcast.
+    Arrives { latency: f64 },
+    /// Would have landed after the deadline — the server never sees it.
+    Late { latency: f64 },
+    /// Crashed / lost connectivity; nothing is sent.
+    Dropped,
+}
+
+/// Fault-injection plan for a scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultPlan {
+    pub latency: LatencyModel,
+    /// Per-client per-round dropout probability in `[0, 1]`.
+    pub dropout: f64,
+    /// Round deadline in virtual seconds (`None` = wait for everyone).
+    pub deadline: Option<f64>,
+}
+
+impl FaultPlan {
+    /// No faults: everyone arrives instantly (the seed semantics).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Fate of `(user, round)` — deterministic given the shared seed.
+    pub fn fate(&self, crand: &CommonRandomness, user: u64, round: u64) -> ClientFate {
+        if self.dropout > 0.0 {
+            let mut drng = crand.stream(user, round, StreamKind::Dropout);
+            if drng.uniform() < self.dropout {
+                return ClientFate::Dropped;
+            }
+        }
+        let latency = match self.latency {
+            LatencyModel::Fixed(v) => v,
+            model => {
+                let mut lrng = crand.stream(user, round, StreamKind::Latency);
+                model.sample(&mut lrng)
+            }
+        };
+        match self.deadline {
+            Some(d) if latency > d => ClientFate::Late { latency },
+            _ => ClientFate::Arrives { latency },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xoshiro256pp;
+
+    #[test]
+    fn fate_is_deterministic_and_varies_by_client_and_round() {
+        let cr = CommonRandomness::new(42);
+        let plan = FaultPlan {
+            latency: LatencyModel::LogNormal { median: 1.0, sigma: 0.8 },
+            dropout: 0.3,
+            deadline: Some(2.0),
+        };
+        let a = plan.fate(&cr, 5, 9);
+        assert_eq!(a, plan.fate(&cr, 5, 9), "fate must be reproducible");
+        let distinct = (0..200)
+            .map(|u| plan.fate(&cr, u, 0))
+            .collect::<Vec<_>>();
+        let arrived = distinct.iter().filter(|f| matches!(f, ClientFate::Arrives { .. })).count();
+        let dropped = distinct.iter().filter(|f| matches!(f, ClientFate::Dropped)).count();
+        let late = distinct.iter().filter(|f| matches!(f, ClientFate::Late { .. })).count();
+        assert!(arrived > 0 && dropped > 0 && late > 0, "{arrived}/{dropped}/{late}");
+        assert_eq!(arrived + dropped + late, 200);
+    }
+
+    #[test]
+    fn no_faults_means_everyone_arrives_instantly() {
+        let cr = CommonRandomness::new(1);
+        for u in 0..50 {
+            assert_eq!(
+                FaultPlan::none().fate(&cr, u, 3),
+                ClientFate::Arrives { latency: 0.0 }
+            );
+        }
+    }
+
+    #[test]
+    fn latency_models_are_positive_and_shaped() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let n = 20_000;
+        let exp = LatencyModel::Exponential { mean: 2.0 };
+        let mean: f64 = (0..n).map(|_| exp.sample(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.1, "exponential mean {mean}");
+
+        let lognormal = LatencyModel::LogNormal { median: 1.0, sigma: 0.5 };
+        let mut med: Vec<f64> = (0..n).map(|_| lognormal.sample(&mut rng)).collect();
+        med.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = med[n / 2];
+        assert!((median - 1.0).abs() < 0.05, "lognormal median {median}");
+        assert!(med.iter().all(|&v| v > 0.0));
+
+        let uni = LatencyModel::Uniform { lo: 1.0, hi: 3.0 };
+        for _ in 0..1000 {
+            let v = uni.sample(&mut rng);
+            assert!((1.0..3.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn deadline_partitions_arrivals() {
+        let cr = CommonRandomness::new(9);
+        let plan = FaultPlan {
+            latency: LatencyModel::Uniform { lo: 0.0, hi: 10.0 },
+            dropout: 0.0,
+            deadline: Some(5.0),
+        };
+        for u in 0..500 {
+            match plan.fate(&cr, u, 0) {
+                ClientFate::Arrives { latency } => assert!(latency <= 5.0),
+                ClientFate::Late { latency } => assert!(latency > 5.0),
+                ClientFate::Dropped => panic!("dropout disabled"),
+            }
+        }
+    }
+}

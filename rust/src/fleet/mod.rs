@@ -1,0 +1,533 @@
+//! Fleet-scale federated simulation: partial participation, stragglers,
+//! wire-framed uplink, and streaming O(m) aggregation.
+//!
+//! The paper's experiments (and the seed `coordinator::RoundDriver`)
+//! assume all K users participate in every round and the server buffers
+//! every decoded update — fine for K ≤ 100, fatal for populations in the
+//! millions. This subsystem simulates rounds over an arbitrarily large
+//! client population:
+//!
+//! * [`sampler`] — per-round cohort selection (uniform without
+//!   replacement, shard-size-weighted, fixed roster, or full
+//!   participation), deterministic from `(seed, round)`;
+//! * [`faults`] — per-client latency + dropout with a round deadline and
+//!   over-selection: the server aggregates the first `target` arrivals
+//!   and reports completion rate and effective α mass;
+//! * [`wire`] — framed binary uplink messages (header, exact bit count,
+//!   CRC), so the channel meters real serialized bytes;
+//! * [`aggregate`] — order-independent fixed-point streaming fold of
+//!   `Σ α_k ĥ_k`, O(m) server memory regardless of cohort size;
+//! * [`clock`] — virtual time: latency statistics without sleeping.
+//!
+//! `coordinator::RoundDriver` now runs on top of this layer with
+//! [`Scenario::full`] (full participation is the degenerate preset), so
+//! the paper experiments and the fleet simulations share one code path.
+//!
+//! Aggregation weights: per round, the α of the clients whose updates are
+//! actually folded are re-normalized to sum to exactly one (FedAvg over
+//! the participating set); `alpha_mass` reports how much of the selected
+//! cohort's weight made it before the deadline.
+
+pub mod aggregate;
+pub mod clock;
+pub mod faults;
+pub mod sampler;
+pub mod wire;
+
+pub use aggregate::StreamingAggregator;
+pub use clock::{RoundTiming, VirtualClock};
+pub use faults::{ClientFate, FaultPlan, LatencyModel};
+pub use sampler::{CohortSampler, SamplerKind};
+pub use wire::{decode_frame, encode_frame, Frame, WireError};
+
+use crate::coordinator::UplinkChannel;
+use crate::data::Dataset;
+use crate::fl::Trainer;
+use crate::metrics::Timer;
+use crate::prng::{CommonRandomness, SplitMix64};
+use crate::quantizer::{self, CodecContext, UpdateCodec};
+use crate::util::threadpool::parallel_map_fold;
+
+/// A (possibly enormous) client population the fleet can draw from.
+///
+/// `shard` may alias (many simulated clients sharing template data);
+/// `weight` is the unnormalized aggregation weight (e.g. local sample
+/// count n_k).
+pub trait ClientPool: Sync {
+    fn population(&self) -> usize;
+
+    fn weight(&self, user: usize) -> f64;
+
+    fn shard(&self, user: usize) -> &Dataset;
+}
+
+/// One real dataset shard per client — the paper-scale pool backing
+/// `RoundDriver` and `fl::run_federated`.
+pub struct ShardPool<'a> {
+    shards: &'a [Dataset],
+    weights: Vec<f64>,
+}
+
+impl<'a> ShardPool<'a> {
+    /// Weights proportional to shard sizes (the FedAvg default).
+    pub fn new(shards: &'a [Dataset]) -> Self {
+        let weights = shards.iter().map(|s| s.len() as f64).collect();
+        Self { shards, weights }
+    }
+
+    /// Explicit weights (e.g. pre-computed α's from `FlConfig::alphas`).
+    pub fn with_weights(shards: &'a [Dataset], weights: &[f64]) -> Self {
+        assert_eq!(shards.len(), weights.len(), "weights/shards mismatch");
+        Self { shards, weights: weights.to_vec() }
+    }
+}
+
+impl ClientPool for ShardPool<'_> {
+    fn population(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn weight(&self, user: usize) -> f64 {
+        self.weights[user]
+    }
+
+    fn shard(&self, user: usize) -> &Dataset {
+        &self.shards[user]
+    }
+}
+
+/// Simulates a population far larger than the number of distinct datasets
+/// by mapping client `u` onto `templates[u % templates.len()]`, with
+/// deterministic per-client integer weights in `[lo, hi]`. This is how the
+/// ≥10k-client benches and examples model "millions of users" without
+/// materializing millions of shards.
+pub struct RoundRobinPool {
+    templates: Vec<Dataset>,
+    weights: Vec<f64>,
+}
+
+impl RoundRobinPool {
+    pub fn synthetic(population: usize, templates: Vec<Dataset>, seed: u64) -> Self {
+        assert!(!templates.is_empty(), "need at least one template shard");
+        assert!(population > 0, "empty population");
+        let span = 101u64; // weights in [50, 150]
+        let weights = (0..population)
+            .map(|u| {
+                let x = SplitMix64::new(seed ^ 0xF1EE7 ^ (u as u64).wrapping_mul(0x9E3779B97F4A7C15))
+                    .next();
+                (50 + (x % span)) as f64
+            })
+            .collect();
+        Self { templates, weights }
+    }
+}
+
+impl ClientPool for RoundRobinPool {
+    fn population(&self) -> usize {
+        self.weights.len()
+    }
+
+    fn weight(&self, user: usize) -> f64 {
+        self.weights[user]
+    }
+
+    fn shard(&self, user: usize) -> &Dataset {
+        &self.templates[user % self.templates.len()]
+    }
+}
+
+/// A participation + fault scenario: who is selected and what goes wrong.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub sampler: SamplerKind,
+    /// Extra selection headroom: the server selects
+    /// `ceil(target·(1+over_select))` clients and aggregates the first
+    /// `target` arrivals (ignored by `Full`/`Fixed` samplers).
+    pub over_select: f64,
+    pub faults: FaultPlan,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario::full()
+    }
+}
+
+impl Scenario {
+    /// Full participation, no faults — reproduces the seed `RoundDriver`.
+    pub fn full() -> Self {
+        Self { sampler: SamplerKind::Full, over_select: 0.0, faults: FaultPlan::none() }
+    }
+
+    /// Uniform cohort of `cohort` clients per round, no faults.
+    pub fn sampled(cohort: usize) -> Self {
+        Self {
+            sampler: SamplerKind::Uniform { cohort },
+            over_select: 0.0,
+            faults: FaultPlan::none(),
+        }
+    }
+
+    /// Shard-size-weighted cohort, no faults.
+    pub fn weighted(cohort: usize) -> Self {
+        Self {
+            sampler: SamplerKind::Weighted { cohort },
+            over_select: 0.0,
+            faults: FaultPlan::none(),
+        }
+    }
+
+    /// Heavy-tailed client latency with a round deadline and 25%
+    /// over-selection — the production straggler regime.
+    pub fn stragglers(cohort: usize, deadline: f64) -> Self {
+        Self {
+            sampler: SamplerKind::Uniform { cohort },
+            over_select: 0.25,
+            faults: FaultPlan {
+                latency: LatencyModel::LogNormal { median: 1.0, sigma: 0.8 },
+                dropout: 0.02,
+                deadline: Some(deadline),
+            },
+        }
+    }
+
+    /// Unreliable fleet: high dropout, exponential latency, 50%
+    /// over-selection.
+    pub fn flaky(cohort: usize, deadline: f64) -> Self {
+        Self {
+            sampler: SamplerKind::Uniform { cohort },
+            over_select: 0.5,
+            faults: FaultPlan {
+                latency: LatencyModel::Exponential { mean: 1.0 },
+                dropout: 0.2,
+                deadline: Some(deadline),
+            },
+        }
+    }
+
+    /// Scenario preset by CLI/config name.
+    pub fn by_name(name: &str, cohort: usize) -> crate::Result<Self> {
+        Ok(match name {
+            "full" => Self::full(),
+            "sampled" | "uniform" => Self::sampled(cohort),
+            "weighted" => Self::weighted(cohort),
+            "stragglers" => Self::stragglers(cohort, 3.0),
+            "flaky" => Self::flaky(cohort, 4.0),
+            other => crate::bail!(
+                "unknown fleet scenario '{other}' (full|sampled|weighted|stragglers|flaky)"
+            ),
+        })
+    }
+}
+
+/// Everything the server learns from one fleet round.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FleetRoundReport {
+    pub round: u64,
+    /// Clients selected (target + over-selection headroom).
+    pub selected: usize,
+    /// Updates actually folded into the aggregate.
+    pub aggregated: usize,
+    /// Selected clients that dropped out (sent nothing).
+    pub dropped: usize,
+    /// Selected clients whose update missed the deadline.
+    pub late: usize,
+    /// Arrivals beyond the target count, cut by over-selection.
+    pub surplus: usize,
+    /// `aggregated / target` — 1.0 when the round filled its quota.
+    pub completion_rate: f64,
+    /// Σ of the re-normalized α's folded (≈1 by construction).
+    pub alpha_sum: f64,
+    /// Aggregated weight / selected weight — how much of the intended
+    /// cohort's mass made it into the round.
+    pub alpha_mass: f64,
+    /// Exact entropy-coded payload bits (what the budget constrains).
+    pub uplink_bits: usize,
+    /// Serialized bytes on the wire, frame headers + CRC included.
+    pub wire_bytes: usize,
+    /// Rate-budget violations observed (messages rejected, not folded).
+    pub budget_violations: usize,
+    /// ‖Σα(ĥ−h)‖²/m — the measured Theorem-2 quantity.
+    pub aggregate_distortion: f64,
+    /// Real compute seconds spent inside client jobs (sum over clients).
+    pub client_secs: f64,
+    pub timing: RoundTiming,
+}
+
+/// Drives fleet rounds: sample cohort → fault fates → fan out local
+/// training over the arrivals → frame/unframe each update through the
+/// metered uplink → stream-fold into the O(m) aggregate → apply.
+pub struct FleetDriver {
+    seed: u64,
+    rate: f64,
+    workers: usize,
+    scenario: Scenario,
+    sampler: CohortSampler,
+}
+
+impl FleetDriver {
+    pub fn new(seed: u64, rate: f64, workers: usize, scenario: Scenario) -> Self {
+        Self { seed, rate, workers: workers.max(1), scenario, sampler: CohortSampler::new(seed) }
+    }
+
+    pub fn scenario(&self) -> &Scenario {
+        &self.scenario
+    }
+
+    /// Execute round `round`, updating `w` in place.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_round(
+        &self,
+        round: u64,
+        w: &mut [f32],
+        pool: &dyn ClientPool,
+        trainer: &dyn Trainer,
+        codec: &dyn UpdateCodec,
+        tau: usize,
+        lr: f32,
+        batch_size: usize,
+        clock: &mut VirtualClock,
+    ) -> FleetRoundReport {
+        let m = w.len();
+        let population = pool.population();
+        let target = self.scenario.sampler.target(population);
+        let n_select = match self.scenario.sampler {
+            SamplerKind::Full | SamplerKind::Fixed { .. } => target,
+            _ => (((target as f64) * (1.0 + self.scenario.over_select)).ceil() as usize)
+                .min(population),
+        };
+        let weight_of = |u: usize| pool.weight(u);
+        let selected =
+            self.sampler.select(&self.scenario.sampler, population, n_select, &weight_of, round);
+
+        // Fault fates — pure functions of (seed, user, round).
+        let crand = CommonRandomness::new(self.seed);
+        let mut arrivals: Vec<(f64, usize)> = Vec::with_capacity(selected.len());
+        let mut dropped = 0usize;
+        let mut late = 0usize;
+        for &u in &selected {
+            match self.scenario.faults.fate(&crand, u as u64, round) {
+                ClientFate::Arrives { latency } => arrivals.push((latency, u)),
+                ClientFate::Late { .. } => late += 1,
+                ClientFate::Dropped => dropped += 1,
+            }
+        }
+        arrivals.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+        });
+        let surplus = arrivals.len().saturating_sub(target);
+        arrivals.truncate(target);
+
+        // α re-normalization over the set that actually aggregates.
+        let arrived_weight: f64 = arrivals.iter().map(|&(_, u)| pool.weight(u)).sum();
+        let selected_weight: f64 = selected.iter().map(|&u| pool.weight(u)).sum();
+        assert!(
+            arrivals.is_empty() || arrived_weight > 0.0,
+            "aggregating cohort has zero total weight"
+        );
+
+        // Fan out local training over arrivals; stream-fold as frames land.
+        let uplink = UplinkChannel::new(self.rate, codec.rate_constrained());
+        let wire_codec_id =
+            quantizer::codec_id(&codec.name()).unwrap_or(quantizer::CODEC_ID_UNREGISTERED);
+        let mut agg = StreamingAggregator::new(m);
+        let mut desired = StreamingAggregator::new(m);
+        let mut client_secs = 0.0f64;
+        let mut wire_bytes = 0usize;
+        let mut budget_violations = 0usize;
+        {
+            let w_snapshot: &[f32] = w;
+            let arrivals_ref: &[(f64, usize)] = &arrivals;
+            parallel_map_fold(
+                arrivals_ref.len(),
+                self.workers,
+                |i| {
+                    let u = arrivals_ref[i].1;
+                    let t = Timer::start();
+                    // Same per-(user, round) derivation as the seed driver,
+                    // so full participation reproduces it bit-for-bit.
+                    let local_seed = SplitMix64::new(
+                        self.seed ^ (u as u64) << 32 ^ round.wrapping_mul(0x9E37),
+                    )
+                    .next();
+                    let w_new = trainer.local_update(
+                        w_snapshot,
+                        pool.shard(u),
+                        tau,
+                        lr,
+                        batch_size,
+                        local_seed,
+                    );
+                    let mut h = w_new;
+                    for (hv, &wv) in h.iter_mut().zip(w_snapshot.iter()) {
+                        *hv -= wv;
+                    }
+                    let ctx = CodecContext::new(u as u64, round, self.seed, self.rate);
+                    let enc = codec.encode(&h, &ctx);
+                    let frame = wire::encode_frame(u as u64, round, wire_codec_id, &enc);
+                    (frame, h, t.elapsed_secs())
+                },
+                |i, (frame, h, secs)| {
+                    client_secs += secs;
+                    wire_bytes += frame.len();
+                    let f = wire::decode_frame(&frame)
+                        .expect("in-memory frame failed integrity check");
+                    debug_assert_eq!(f.user, arrivals_ref[i].1 as u64);
+                    match uplink.try_transmit(f.user, &f.payload, m) {
+                        Ok(()) => {
+                            let alpha = pool.weight(arrivals_ref[i].1) / arrived_weight;
+                            let ctx =
+                                CodecContext::new(f.user, f.round, self.seed, self.rate);
+                            let dec = codec.decode(&f.payload, m, &ctx);
+                            agg.fold(alpha, &dec);
+                            desired.fold(alpha, &h);
+                        }
+                        Err(_) => budget_violations += 1,
+                    }
+                },
+            );
+        }
+
+        // Apply w ← w + Σ α_k ĥ_k and measure the Theorem-2 distortion.
+        let aggregate_distortion = StreamingAggregator::mean_sq_diff(&agg, &desired);
+        agg.apply_to(w);
+
+        // Virtual time: the round closes at the slowest aggregated
+        // arrival, or at the deadline when the quota went unmet.
+        let latencies: Vec<f64> = arrivals.iter().map(|&(l, _)| l).collect();
+        let waited = if arrivals.len() < target { self.scenario.faults.deadline } else { None };
+        let timing = clock.close_round(&latencies, waited);
+
+        FleetRoundReport {
+            round,
+            selected: selected.len(),
+            aggregated: agg.folds(),
+            dropped,
+            late,
+            surplus,
+            completion_rate: agg.folds() as f64 / target.max(1) as f64,
+            alpha_sum: agg.alpha_sum(),
+            alpha_mass: if selected_weight > 0.0 { arrived_weight / selected_weight } else { 0.0 },
+            uplink_bits: uplink.stats().total_bits,
+            wire_bytes,
+            budget_violations,
+            aggregate_distortion,
+            client_secs,
+            timing,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthMnist;
+    use crate::fl::NativeTrainer;
+    use crate::models::LogReg;
+    use crate::quantizer;
+
+    fn setup(k: usize, per: usize) -> (Vec<Dataset>, NativeTrainer<LogReg>) {
+        let ds = SynthMnist::new(77).dataset(k * per);
+        let shards: Vec<Dataset> = (0..k)
+            .map(|u| ds.subset(&(u * per..(u + 1) * per).collect::<Vec<_>>()))
+            .collect();
+        let model = LogReg::new(ds.features, ds.classes, 1e-3);
+        (shards, NativeTrainer::new(model))
+    }
+
+    #[test]
+    fn sampled_round_aggregates_the_cohort_only() {
+        let (shards, trainer) = setup(8, 30);
+        let pool = ShardPool::new(&shards);
+        let codec = quantizer::by_name("qsgd");
+        let driver = FleetDriver::new(5, 2.0, 2, Scenario::sampled(3));
+        let mut clock = VirtualClock::new();
+        let mut w = trainer.init_params(3);
+        let rep = driver.run_round(
+            0,
+            &mut w,
+            &pool,
+            &trainer,
+            codec.as_ref(),
+            1,
+            0.5,
+            0,
+            &mut clock,
+        );
+        assert_eq!(rep.selected, 3);
+        assert_eq!(rep.aggregated, 3);
+        assert_eq!(rep.completion_rate, 1.0);
+        assert!((rep.alpha_sum - 1.0).abs() < 1e-9, "alpha_sum {}", rep.alpha_sum);
+        assert!((rep.alpha_mass - 1.0).abs() < 1e-12);
+        assert!(rep.uplink_bits > 0);
+        assert!(rep.wire_bytes > rep.uplink_bits / 8, "frames must cost more than payloads");
+    }
+
+    #[test]
+    fn worker_count_does_not_change_the_model() {
+        let (shards, trainer) = setup(6, 25);
+        let pool = ShardPool::new(&shards);
+        let codec = quantizer::by_name("uveqfed-l2");
+        let scenario = Scenario::stragglers(4, 5.0);
+        let run = |workers: usize| {
+            let driver = FleetDriver::new(9, 2.0, workers, scenario.clone());
+            let mut clock = VirtualClock::new();
+            let mut w = trainer.init_params(1);
+            for round in 0..3 {
+                driver.run_round(
+                    round,
+                    &mut w,
+                    &pool,
+                    &trainer,
+                    codec.as_ref(),
+                    1,
+                    0.5,
+                    0,
+                    &mut clock,
+                );
+            }
+            w
+        };
+        assert_eq!(run(1), run(4), "aggregation must be arrival-order independent");
+    }
+
+    #[test]
+    fn dropout_one_freezes_the_model() {
+        let (shards, trainer) = setup(4, 20);
+        let pool = ShardPool::new(&shards);
+        let codec = quantizer::by_name("qsgd");
+        let mut scenario = Scenario::sampled(4);
+        scenario.faults.dropout = 1.0;
+        let driver = FleetDriver::new(2, 2.0, 2, scenario);
+        let mut clock = VirtualClock::new();
+        let mut w = trainer.init_params(1);
+        let w0 = w.clone();
+        let rep = driver.run_round(
+            0,
+            &mut w,
+            &pool,
+            &trainer,
+            codec.as_ref(),
+            1,
+            0.5,
+            0,
+            &mut clock,
+        );
+        assert_eq!(rep.aggregated, 0);
+        assert_eq!(rep.dropped, rep.selected);
+        assert_eq!(rep.completion_rate, 0.0);
+        assert_eq!(w, w0, "no arrivals must leave the model untouched");
+    }
+
+    #[test]
+    fn round_robin_pool_is_deterministic_and_weighted() {
+        let ds = SynthMnist::new(3).dataset(40);
+        let a = RoundRobinPool::synthetic(1000, vec![ds.clone()], 5);
+        let b = RoundRobinPool::synthetic(1000, vec![ds], 5);
+        assert_eq!(a.population(), 1000);
+        for u in (0..1000).step_by(97) {
+            assert_eq!(a.weight(u), b.weight(u));
+            assert!((50.0..=150.0).contains(&a.weight(u)));
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! Per-round cohort selection over an arbitrarily large client population.
+//!
+//! Selection is a pure function of `(root seed, round)` through the same
+//! splittable streams as every other source of randomness (assumption A3
+//! plumbing): re-running a round, or running rounds out of order, always
+//! selects the same cohort. Selected ids are returned in ascending order —
+//! a canonical order that downstream fan-out relies on for reproducibility.
+
+use crate::prng::{CommonRandomness, Rng, StreamKind, Xoshiro256pp};
+use std::collections::HashSet;
+
+/// Cohort selection policy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// Every client, every round — the paper's (and the seed
+    /// `RoundDriver`'s) degenerate preset.
+    Full,
+    /// `cohort` clients uniformly without replacement (Floyd's algorithm,
+    /// O(cohort) time and memory — never O(population)).
+    Uniform { cohort: usize },
+    /// `cohort` clients without replacement, inclusion probability tilted
+    /// by client weight (shard size): Efraimidis–Spirakis exponential
+    /// keys, O(population log population) per round.
+    Weighted { cohort: usize },
+    /// A pinned roster (ablations / reproducing a specific trace).
+    Fixed { members: Vec<usize> },
+}
+
+impl SamplerKind {
+    /// Number of updates the server wants to aggregate per round.
+    pub fn target(&self, population: usize) -> usize {
+        match self {
+            SamplerKind::Full => population,
+            SamplerKind::Uniform { cohort } | SamplerKind::Weighted { cohort } => {
+                (*cohort).min(population).max(1)
+            }
+            // Count distinct members — `select` dedups, and a quota above
+            // the distinct roster size could never be met.
+            SamplerKind::Fixed { members } => {
+                let mut v = members.clone();
+                v.sort_unstable();
+                v.dedup();
+                v.len()
+            }
+        }
+    }
+}
+
+/// Deterministic cohort sampler: one selection stream per round, derived
+/// from the shared root seed.
+#[derive(Debug, Clone, Copy)]
+pub struct CohortSampler {
+    crand: CommonRandomness,
+}
+
+/// Sentinel "user" coordinate for the per-round selection stream (the
+/// cohort is a server-side draw, not a per-client one).
+const COHORT_STREAM_USER: u64 = u64::MAX;
+
+impl CohortSampler {
+    pub fn new(seed: u64) -> Self {
+        Self { crand: CommonRandomness::new(seed) }
+    }
+
+    fn rng(&self, round: u64) -> Xoshiro256pp {
+        self.crand.stream(COHORT_STREAM_USER, round, StreamKind::Cohort)
+    }
+
+    /// Select `count` distinct clients from `0..population` for `round`.
+    /// `weight(u)` is consulted only by [`SamplerKind::Weighted`]. Ids are
+    /// ascending; `count` is clamped to the population.
+    pub fn select(
+        &self,
+        kind: &SamplerKind,
+        population: usize,
+        count: usize,
+        weight: &dyn Fn(usize) -> f64,
+        round: u64,
+    ) -> Vec<usize> {
+        assert!(population > 0, "empty client population");
+        let count = count.min(population);
+        match kind {
+            SamplerKind::Full => (0..population).collect(),
+            SamplerKind::Fixed { members } => {
+                let mut v: Vec<usize> = members.clone();
+                v.sort_unstable();
+                v.dedup();
+                assert!(
+                    v.iter().all(|&u| u < population),
+                    "fixed cohort member out of range"
+                );
+                v
+            }
+            SamplerKind::Uniform { .. } => {
+                let mut rng = self.rng(round);
+                floyd_sample(&mut rng, population, count)
+            }
+            SamplerKind::Weighted { .. } => {
+                let mut rng = self.rng(round);
+                weighted_sample(&mut rng, population, count, weight)
+            }
+        }
+    }
+}
+
+/// Floyd's algorithm: `k` distinct uniform draws from `0..n` in O(k).
+fn floyd_sample(rng: &mut impl Rng, n: usize, k: usize) -> Vec<usize> {
+    debug_assert!(k <= n);
+    let mut chosen: HashSet<usize> = HashSet::with_capacity(k);
+    for j in (n - k)..n {
+        let t = rng.gen_index(j + 1);
+        if !chosen.insert(t) {
+            chosen.insert(j);
+        }
+    }
+    let mut v: Vec<usize> = chosen.into_iter().collect();
+    v.sort_unstable();
+    v
+}
+
+/// Efraimidis–Spirakis weighted sampling without replacement: draw
+/// `u_i ~ U(0,1)` per client, keep the `k` largest keys `u_i^{1/w_i}`.
+/// Ties (and zero weights) break on the client id, so the draw is fully
+/// deterministic. O(n) per round via partition-select — no full sort of
+/// the population.
+fn weighted_sample(
+    rng: &mut impl Rng,
+    n: usize,
+    k: usize,
+    weight: &dyn Fn(usize) -> f64,
+) -> Vec<usize> {
+    debug_assert!(k <= n);
+    if k == 0 {
+        return Vec::new();
+    }
+    if k >= n {
+        return (0..n).collect();
+    }
+    let mut keys: Vec<(f64, usize)> = (0..n)
+        .map(|u| {
+            let w = weight(u);
+            let draw = rng.uniform();
+            // ln(u)/w is a monotone transform of u^(1/w); avoids pow.
+            let key = if w > 0.0 { draw.max(1e-300).ln() / w } else { f64::NEG_INFINITY };
+            (key, u)
+        })
+        .collect();
+    // Largest keys first; the id tie-break makes the order total, so the
+    // top-k set is unique and the partition is deterministic.
+    let desc = |a: &(f64, usize), b: &(f64, usize)| {
+        b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+    };
+    keys.select_nth_unstable_by(k - 1, desc);
+    let mut v: Vec<usize> = keys[..k].iter().map(|&(_, u)| u).collect();
+    v.sort_unstable();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit_weight(_: usize) -> f64 {
+        1.0
+    }
+
+    #[test]
+    fn full_and_fixed() {
+        let s = CohortSampler::new(1);
+        assert_eq!(s.select(&SamplerKind::Full, 5, 5, &unit_weight, 0), vec![0, 1, 2, 3, 4]);
+        let fixed = SamplerKind::Fixed { members: vec![4, 2, 2, 0] };
+        assert_eq!(s.select(&fixed, 5, 3, &unit_weight, 9), vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn fixed_target_counts_distinct_members() {
+        let kind = SamplerKind::Fixed { members: vec![2, 2, 3] };
+        assert_eq!(kind.target(10), 2, "duplicate roster entries must not inflate the quota");
+    }
+
+    #[test]
+    fn uniform_is_deterministic_per_round_and_distinct() {
+        let s = CohortSampler::new(7);
+        let kind = SamplerKind::Uniform { cohort: 50 };
+        let a = s.select(&kind, 10_000, 50, &unit_weight, 3);
+        let b = s.select(&kind, 10_000, 50, &unit_weight, 3);
+        assert_eq!(a, b, "same (seed, round) must select the same cohort");
+        assert_eq!(a.len(), 50);
+        let mut d = a.clone();
+        d.dedup();
+        assert_eq!(d.len(), 50, "duplicate client selected");
+        assert!(a.iter().all(|&u| u < 10_000));
+
+        let c = s.select(&kind, 10_000, 50, &unit_weight, 4);
+        assert_ne!(a, c, "different rounds should differ");
+        let other = CohortSampler::new(8).select(&kind, 10_000, 50, &unit_weight, 3);
+        assert_ne!(a, other, "different seeds should differ");
+    }
+
+    #[test]
+    fn uniform_covers_population_over_rounds() {
+        let s = CohortSampler::new(11);
+        let kind = SamplerKind::Uniform { cohort: 8 };
+        let mut seen = vec![false; 40];
+        for round in 0..200 {
+            for u in s.select(&kind, 40, 8, &unit_weight, round) {
+                seen[u] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "some client was never sampled in 200 rounds");
+    }
+
+    #[test]
+    fn weighted_prefers_heavy_clients() {
+        let s = CohortSampler::new(13);
+        let kind = SamplerKind::Weighted { cohort: 10 };
+        // Client 0..10 carry 10× the weight of the rest.
+        let w = |u: usize| if u < 10 { 10.0 } else { 1.0 };
+        let mut heavy_hits = 0usize;
+        let rounds = 300;
+        for round in 0..rounds {
+            heavy_hits +=
+                s.select(&kind, 100, 10, &w, round).iter().filter(|&&u| u < 10).count();
+        }
+        // Heavy clients are 10% of the population with ~53% of the mass;
+        // uniform sampling would hit them ~1/round.
+        let per_round = heavy_hits as f64 / rounds as f64;
+        assert!(per_round > 3.0, "weighted sampling ignored weights: {per_round}/round");
+    }
+
+    #[test]
+    fn clamps_count_to_population() {
+        let s = CohortSampler::new(3);
+        let got = s.select(&SamplerKind::Uniform { cohort: 10 }, 4, 10, &unit_weight, 0);
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+}

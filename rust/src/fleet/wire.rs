@@ -1,0 +1,264 @@
+//! Framed binary uplink messages.
+//!
+//! The seed runtime handed `quantizer::Encoded` structs to the server
+//! in-memory, so the uplink metered an abstraction instead of bytes. The
+//! fleet layer serializes every update into a self-describing frame and
+//! meters the real serialized size; decode verifies integrity before any
+//! payload bit reaches the aggregator.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! | offset | size | field |
+//! |--------|------|-------|
+//! | 0      | 4    | magic `0x4651_5655` (`"UVQF"`) |
+//! | 4      | 1    | version (1) |
+//! | 5      | 1    | codec id (`quantizer::codec_id`) |
+//! | 6      | 2    | reserved (0) |
+//! | 8      | 8    | user id |
+//! | 16     | 8    | round |
+//! | 24     | 8    | exact payload bits |
+//! | 32     | 4    | payload length in bytes |
+//! | 36     | n    | payload (entropy-coded update) |
+//! | 36+n   | 4    | CRC-32 (IEEE) over bytes `[0, 36+n)` |
+//!
+//! The exact bit count rides in the header so the uplink budget check
+//! (`R·m` bits, headers included by the caller that meters `frame.len()`)
+//! survives serialization: `bits ≤ 8·payload_len` is enforced on decode,
+//! exactly like `UplinkChannel`'s phantom-bits check.
+
+use crate::quantizer::Encoded;
+use std::fmt;
+
+pub const MAGIC: u32 = 0x4651_5655; // "UVQF" as LE bytes
+pub const VERSION: u8 = 1;
+pub const HEADER_BYTES: usize = 36;
+pub const TRAILER_BYTES: usize = 4;
+
+/// A decoded uplink frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub user: u64,
+    pub round: u64,
+    pub codec: u8,
+    pub payload: Encoded,
+}
+
+/// Frame decode failures — every variant is observable fault-injection
+/// surface for the fleet simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    /// Buffer shorter than a minimal frame, or shorter than its own
+    /// declared payload length.
+    Truncated { have: usize, need: usize },
+    BadMagic(u32),
+    BadVersion(u8),
+    /// Buffer longer than header + payload + trailer.
+    TrailingGarbage { extra: usize },
+    /// Claimed exact bit count exceeds the physical payload.
+    PhantomBits { bits: u64, capacity_bits: u64 },
+    /// Checksum mismatch (corrupted in flight).
+    Crc { expected: u32, actual: u32 },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            WireError::Truncated { have, need } => {
+                write!(f, "truncated frame: have {have} bytes, need {need}")
+            }
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:#010x}"),
+            WireError::BadVersion(v) => write!(f, "unsupported frame version {v}"),
+            WireError::TrailingGarbage { extra } => {
+                write!(f, "{extra} trailing bytes after frame")
+            }
+            WireError::PhantomBits { bits, capacity_bits } => {
+                write!(f, "claimed {bits} bits exceeds physical payload of {capacity_bits} bits")
+            }
+            WireError::Crc { expected, actual } => {
+                write!(f, "CRC mismatch: header says {expected:#010x}, payload hashes to {actual:#010x}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE 802.3 polynomial, reflected).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Total frame size for a payload of `payload_bytes`.
+pub fn frame_len(payload_bytes: usize) -> usize {
+    HEADER_BYTES + payload_bytes + TRAILER_BYTES
+}
+
+/// Serialize one encoded update into a framed message.
+pub fn encode_frame(user: u64, round: u64, codec: u8, enc: &Encoded) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(frame_len(enc.bytes.len()));
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.push(VERSION);
+    buf.push(codec);
+    buf.extend_from_slice(&0u16.to_le_bytes());
+    buf.extend_from_slice(&user.to_le_bytes());
+    buf.extend_from_slice(&round.to_le_bytes());
+    buf.extend_from_slice(&(enc.bits as u64).to_le_bytes());
+    buf.extend_from_slice(&(enc.bytes.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&enc.bytes);
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    buf
+}
+
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Parse and verify one frame. The returned payload carries the exact bit
+/// count, so `Encoded` round-trips losslessly through the wire.
+pub fn decode_frame(buf: &[u8]) -> Result<Frame, WireError> {
+    let min = HEADER_BYTES + TRAILER_BYTES;
+    if buf.len() < min {
+        return Err(WireError::Truncated { have: buf.len(), need: min });
+    }
+    let magic = le_u32(&buf[0..4]);
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    if buf[4] != VERSION {
+        return Err(WireError::BadVersion(buf[4]));
+    }
+    let codec = buf[5];
+    let user = le_u64(&buf[8..16]);
+    let round = le_u64(&buf[16..24]);
+    let bits = le_u64(&buf[24..32]);
+    let len = le_u32(&buf[32..36]) as usize;
+    let need = frame_len(len);
+    if buf.len() < need {
+        return Err(WireError::Truncated { have: buf.len(), need });
+    }
+    if buf.len() > need {
+        return Err(WireError::TrailingGarbage { extra: buf.len() - need });
+    }
+    if bits > 8 * len as u64 {
+        return Err(WireError::PhantomBits { bits, capacity_bits: 8 * len as u64 });
+    }
+    let body = HEADER_BYTES + len;
+    let expected = le_u32(&buf[body..body + 4]);
+    let actual = crc32(&buf[..body]);
+    if expected != actual {
+        return Err(WireError::Crc { expected, actual });
+    }
+    Ok(Frame {
+        user,
+        round,
+        codec,
+        payload: Encoded { bytes: buf[HEADER_BYTES..body].to_vec(), bits: bits as usize },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enc(bytes: Vec<u8>, bits: usize) -> Encoded {
+        Encoded { bytes, bits }
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // Standard check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_preserves_payload_and_exact_bits() {
+        let e = enc(vec![0xAB, 0xCD, 0x0F], 21);
+        let buf = encode_frame(42, 7, 3, &e);
+        assert_eq!(buf.len(), frame_len(3));
+        let f = decode_frame(&buf).unwrap();
+        assert_eq!(f.user, 42);
+        assert_eq!(f.round, 7);
+        assert_eq!(f.codec, 3);
+        assert_eq!(f.payload.bytes, e.bytes);
+        assert_eq!(f.payload.bits, 21);
+    }
+
+    #[test]
+    fn empty_payload_frames() {
+        let e = enc(vec![], 0);
+        let f = decode_frame(&encode_frame(0, 0, 0, &e)).unwrap();
+        assert!(f.payload.bytes.is_empty());
+        assert_eq!(f.payload.bits, 0);
+    }
+
+    #[test]
+    fn corruption_anywhere_is_detected() {
+        let e = enc((0..32).collect(), 32 * 8);
+        let buf = encode_frame(9, 1, 5, &e);
+        // Flip one bit in every byte position; every mutation must fail
+        // decode (header fields fail structurally, payload fails CRC).
+        for pos in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[pos] ^= 0x10;
+            assert!(decode_frame(&bad).is_err(), "undetected corruption at byte {pos}");
+        }
+    }
+
+    #[test]
+    fn truncation_and_garbage_rejected() {
+        let buf = encode_frame(1, 2, 3, &enc(vec![1, 2, 3, 4], 30));
+        assert!(matches!(
+            decode_frame(&buf[..buf.len() - 1]),
+            Err(WireError::Truncated { .. })
+        ));
+        assert!(matches!(decode_frame(&buf[..10]), Err(WireError::Truncated { .. })));
+        let mut long = buf.clone();
+        long.push(0);
+        assert!(matches!(
+            decode_frame(&long),
+            Err(WireError::TrailingGarbage { extra: 1 })
+        ));
+    }
+
+    #[test]
+    fn phantom_bits_rejected() {
+        // Hand-build a frame whose bit count exceeds its payload.
+        let mut buf = encode_frame(1, 2, 3, &enc(vec![0xFF], 8));
+        buf[24..32].copy_from_slice(&9u64.to_le_bytes());
+        let body = HEADER_BYTES + 1;
+        let crc = crc32(&buf[..body]);
+        buf[body..body + 4].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            decode_frame(&buf),
+            Err(WireError::PhantomBits { bits: 9, capacity_bits: 8 })
+        ));
+    }
+}

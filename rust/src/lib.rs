@@ -6,7 +6,9 @@
 //!
 //! * **L3 (this crate)** — the federated coordinator: round scheduling,
 //!   client fan-out, the UVeQFed codec and every baseline, the
-//!   rate-constrained uplink, aggregation, metrics;
+//!   rate-constrained uplink, aggregation, metrics, and the `fleet::`
+//!   simulator (cohort sampling, stragglers, wire framing, streaming
+//!   O(m) aggregation) for populations far beyond the paper's K ≤ 100;
 //! * **L2 (python/compile/model.py)** — JAX forward/backward graphs for the
 //!   paper's models, AOT-lowered to HLO text in `artifacts/`;
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (dithered lattice
@@ -22,6 +24,7 @@ pub mod coordinator;
 pub mod data;
 pub mod entropy;
 pub mod fl;
+pub mod fleet;
 pub mod lattice;
 pub mod metrics;
 pub mod models;
@@ -34,5 +37,6 @@ pub mod util;
 
 pub mod bench;
 
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result alias (see `util::error`; anyhow is not vendorable
+/// in the offline image).
+pub type Result<T> = util::error::Result<T>;

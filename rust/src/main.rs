@@ -2,16 +2,21 @@
 //!
 //! Subcommands:
 //! * `train`    — run a federated experiment from a TOML config
+//! * `fleet`    — fleet-scale simulation: cohort sampling, stragglers,
+//!   dropouts, framed uplink, streaming aggregation
 //! * `distort`  — one-off codec distortion measurement
 //! * `info`     — print lattice/codec/runtime diagnostics
 //!
 //! Examples: `uveqfed train --config configs/fig6_mnist_k100_r2.toml`,
+//! `uveqfed fleet --population 100000 --cohort 256 --scenario stragglers`,
 //! `uveqfed distort --codec uveqfed-l2 --rate 2`.
 
 use uveqfed::data::{partition, PartitionScheme, SynthCifar, SynthMnist};
 use uveqfed::fl::{run_federated, FlConfig, NativeTrainer, Trainer};
+use uveqfed::fleet::{FleetDriver, RoundRobinPool, Scenario, VirtualClock};
 use uveqfed::lattice;
-use uveqfed::models::{CnnLite, LogReg, MlpMnist};
+use uveqfed::models::LogReg;
+use uveqfed::models::{CnnLite, MlpMnist};
 use uveqfed::quantizer;
 use uveqfed::runtime;
 use uveqfed::util::cli::Cli;
@@ -23,12 +28,14 @@ fn main() {
     let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
     match sub {
         "train" => cmd_train(rest),
+        "fleet" => cmd_fleet(rest),
         "distort" => cmd_distort(rest),
         "info" => cmd_info(),
         _ => {
             println!(
                 "uveqfed — Universal Vector Quantization for Federated Learning\n\n\
                  subcommands:\n  train   --config <file> [--codec NAME] [--rate R] [--rounds N]\n  \
+                 fleet   --population N --cohort K --scenario NAME [--rounds N] [--codec NAME]\n  \
                  distort --codec NAME --rate R [--size N]\n  info\n\n\
                  See configs/*.toml for the paper's experiment setups."
             );
@@ -150,6 +157,111 @@ fn cmd_train(argv: &[String]) {
         hist.to_table().write_file(out).expect("write history");
         println!("history → {out}");
     }
+}
+
+fn cmd_fleet(argv: &[String]) {
+    let cli = Cli::new("uveqfed fleet", "fleet-scale federated simulation")
+        .opt("population", "10000", "total client population")
+        .opt("cohort", "64", "aggregation target per round")
+        .opt("scenario", "stragglers", "full|sampled|weighted|stragglers|flaky")
+        .opt("rounds", "10", "rounds to simulate")
+        .opt("codec", "uveqfed-l2", "update codec")
+        .opt("rate", "2", "bits per model parameter")
+        .opt("seed", "1", "root seed")
+        .opt("workers", "0", "fan-out threads (0 = auto)")
+        .opt("deadline", "", "override round deadline (virtual seconds)")
+        .opt("dropout", "", "override per-client dropout probability")
+        .opt("templates", "16", "distinct template shards backing the population")
+        .opt("samples", "120", "samples per template shard");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let population = args.get_usize("population");
+    let cohort = args.get_usize("cohort");
+    let rounds = args.get_usize("rounds");
+    let seed = args.get_usize("seed") as u64;
+    let mut workers = args.get_usize("workers");
+    if workers == 0 {
+        workers = uveqfed::util::threadpool::default_workers();
+    }
+    let mut scenario = Scenario::by_name(args.get("scenario"), cohort).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    if !args.get("deadline").is_empty() {
+        scenario.faults.deadline = Some(args.get_f64("deadline"));
+    }
+    if !args.get("dropout").is_empty() {
+        scenario.faults.dropout = args.get_f64("dropout");
+    }
+
+    // Population backed by round-robin template shards: millions of
+    // simulated clients without millions of datasets.
+    let n_templates = args.get_usize("templates").max(1);
+    let per = args.get_usize("samples").max(10);
+    let gen = SynthMnist::new(seed);
+    let ds = gen.dataset(n_templates * per);
+    let test = gen.test_dataset(500);
+    let templates = partition(&ds, n_templates, per, PartitionScheme::Iid, seed);
+    let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
+    let pool = RoundRobinPool::synthetic(population, templates, seed);
+
+    let codec = quantizer::by_name(args.get("codec"));
+    let rate = args.get_f64("rate");
+    let driver = FleetDriver::new(seed, rate, workers, scenario.clone());
+    let mut clock = VirtualClock::new();
+    let mut w = trainer.init_params(seed);
+
+    println!(
+        "fleet: population={population} cohort={cohort} scenario={} codec={} rate={rate} rounds={rounds}",
+        args.get("scenario"),
+        codec.name(),
+    );
+    println!(
+        "{:>5} {:>9} {:>9} {:>7} {:>6} {:>8} {:>9} {:>10} {:>9}",
+        "round", "selected", "done", "drop", "late", "compl", "αmass", "wireKB", "p95lat"
+    );
+    let mut wire_total = 0usize;
+    let mut violations = 0usize;
+    for round in 0..rounds {
+        let rep = driver.run_round(
+            round as u64,
+            &mut w,
+            &pool,
+            &trainer,
+            codec.as_ref(),
+            1,
+            0.5,
+            0,
+            &mut clock,
+        );
+        wire_total += rep.wire_bytes;
+        violations += rep.budget_violations;
+        println!(
+            "{:>5} {:>9} {:>9} {:>7} {:>6} {:>8.3} {:>9.3} {:>10.1} {:>9.3}",
+            round,
+            rep.selected,
+            rep.aggregated,
+            rep.dropped,
+            rep.late,
+            rep.completion_rate,
+            rep.alpha_mass,
+            rep.wire_bytes as f64 / 1e3,
+            rep.timing.p95_latency,
+        );
+    }
+    let eval = trainer.evaluate(&w, &test);
+    println!(
+        "\nfinal: acc {:.4}  loss {:.4}  virtual time {:.2}s  wire {:.2} MB  budget violations {violations}",
+        eval.accuracy,
+        eval.loss,
+        clock.now(),
+        wire_total as f64 / 1e6,
+    );
 }
 
 fn cmd_distort(argv: &[String]) {

@@ -26,6 +26,13 @@ pub enum StreamKind {
     Rotation = 3,
     /// Subsampling mask selection.
     Mask = 4,
+    /// Per-round cohort selection (`fleet::sampler`; user coordinate is a
+    /// sentinel — one stream per round, shared by the whole population).
+    Cohort = 5,
+    /// Per-(client, round) simulated uplink latency (`fleet::faults`).
+    Latency = 6,
+    /// Per-(client, round) dropout draw (`fleet::faults`).
+    Dropout = 7,
 }
 
 impl CommonRandomness {

@@ -64,7 +64,7 @@ impl CodecContext {
 }
 
 /// An encoded model update plus exact accounting.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Encoded {
     pub bytes: Vec<u8>,
     /// Exact bits used (≤ bytes.len()*8; the tail byte may be padding).
@@ -112,6 +112,49 @@ pub fn by_name(name: &str) -> Box<dyn UpdateCodec> {
         "identity" | "none" => Box::new(IdentityCodec),
         other => panic!("unknown codec '{other}'"),
     }
+}
+
+/// Stable codec ids for the fleet wire format (`fleet::wire`).
+///
+/// Each row is `(id, canonical config name, display-name aliases)`. The
+/// table is **append-only**: ids are baked into serialized frames, so
+/// reordering or deleting rows breaks decode of recorded traffic.
+const WIRE_CODECS: &[(u8, &str, &[&str])] = &[
+    (0, "identity", &["none"]),
+    (1, "uveqfed-l1", &["uveqfed-scalar"]),
+    (2, "uveqfed-l2", &["uveqfed", "uveqfed-hex-paper"]),
+    (3, "uveqfed-l4", &["uveqfed-d4"]),
+    (4, "uveqfed-l8", &["uveqfed-e8"]),
+    (5, "qsgd", &[]),
+    (6, "rotation", &[]),
+    (7, "subsample", &[]),
+    (8, "terngrad", &[]),
+    (9, "signsgd", &[]),
+    (10, "topk", &[]),
+];
+
+/// Wire id for a codec name — accepts both the `by_name` config keys and
+/// the `UpdateCodec::name()` display names. `None` for unregistered
+/// variants (e.g. ablation-only `-nosub` codecs), which frames carry as
+/// [`CODEC_ID_UNREGISTERED`].
+pub fn codec_id(name: &str) -> Option<u8> {
+    WIRE_CODECS
+        .iter()
+        .find(|(_, canon, aliases)| *canon == name || aliases.contains(&name))
+        .map(|&(id, _, _)| id)
+}
+
+/// Canonical config name for a wire id.
+pub fn codec_name(id: u8) -> Option<&'static str> {
+    WIRE_CODECS.iter().find(|&&(i, _, _)| i == id).map(|&(_, canon, _)| canon)
+}
+
+/// Frame codec id for payloads whose codec is not in the registry.
+pub const CODEC_ID_UNREGISTERED: u8 = u8::MAX;
+
+/// All canonical registry names (the round-trip test surface).
+pub fn registered_codec_names() -> impl Iterator<Item = &'static str> {
+    WIRE_CODECS.iter().map(|&(_, canon, _)| canon)
 }
 
 /// Measure per-entry quantization MSE of `codec` on `data` at `rate` —
@@ -169,6 +212,19 @@ mod tests {
     #[should_panic]
     fn unknown_codec_panics() {
         let _ = by_name("nope");
+    }
+
+    #[test]
+    fn wire_ids_cover_registry_and_display_names() {
+        for name in registered_codec_names() {
+            let id = codec_id(name).expect(name);
+            assert_eq!(codec_name(id), Some(name));
+            // Display names of constructed codecs resolve to the same id.
+            let codec = by_name(name);
+            assert_eq!(codec_id(&codec.name()), Some(id), "display name {}", codec.name());
+        }
+        assert_eq!(codec_id("uveqfed"), codec_id("uveqfed-l2"));
+        assert_eq!(codec_id("nope-codec"), None);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Thin typed wrapper over the `xla` crate's PJRT CPU client.
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 /// A PJRT client plus compile cache.
 pub struct Engine {
@@ -10,7 +10,7 @@ pub struct Engine {
 impl Engine {
     /// Create a CPU PJRT engine.
     pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu: {e:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| crate::format_err!("PJRT cpu: {e:?}"))?;
         Ok(Self { client })
     }
 
@@ -23,10 +23,10 @@ impl Engine {
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 artifact path")?,
         )
-        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        .map_err(|e| crate::format_err!("parse {path:?}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe =
-            self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
+            self.client.compile(&comp).map_err(|e| crate::format_err!("compile {path:?}: {e:?}"))?;
         Ok(Graph { exe, name: path.display().to_string() })
     }
 }
@@ -44,17 +44,17 @@ impl Graph {
         let mut outs = self
             .exe
             .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+            .map_err(|e| crate::format_err!("execute {}: {e:?}", self.name))?;
         let first = outs
             .pop()
             .and_then(|mut replicas| if replicas.is_empty() { None } else { Some(replicas.remove(0)) })
-            .ok_or_else(|| anyhow::anyhow!("no output buffers from {}", self.name))?;
+            .ok_or_else(|| crate::format_err!("no output buffers from {}", self.name))?;
         let mut lit = first
             .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal {}: {e:?}", self.name))?;
+            .map_err(|e| crate::format_err!("to_literal {}: {e:?}", self.name))?;
         let parts = lit
             .decompose_tuple()
-            .map_err(|e| anyhow::anyhow!("decompose {}: {e:?}", self.name))?;
+            .map_err(|e| crate::format_err!("decompose {}: {e:?}", self.name))?;
         if parts.is_empty() {
             Ok(vec![lit])
         } else {
@@ -66,14 +66,14 @@ impl Graph {
 /// Build an f32 literal of the given shape from a slice.
 pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     let numel: i64 = dims.iter().product();
-    anyhow::ensure!(numel as usize == data.len(), "shape/data mismatch");
+    crate::ensure!(numel as usize == data.len(), "shape/data mismatch");
     let lit = xla::Literal::vec1(data);
-    lit.reshape(dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    lit.reshape(dims).map_err(|e| crate::format_err!("reshape: {e:?}"))
 }
 
 /// Extract an f32 vector from a literal.
 pub fn f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    lit.to_vec::<f32>().map_err(|e| crate::format_err!("to_vec: {e:?}"))
 }
 
 // The xla wrapper types hold raw pointers and are !Send/!Sync by default.

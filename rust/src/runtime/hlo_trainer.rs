@@ -17,7 +17,7 @@ use crate::data::Dataset;
 use crate::fl::Trainer;
 use crate::models::EvalReport;
 use crate::prng::{Rng, SplitMix64, Xoshiro256pp};
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::sync::Mutex;
 
 pub struct HloTrainer {
@@ -65,7 +65,7 @@ impl HloTrainer {
                 .collect::<Result<_>>()?,
             None => vec![features as i64],
         };
-        anyhow::ensure!(
+        crate::ensure!(
             xdims.iter().product::<i64>() as usize == features,
             "xdims/features mismatch"
         );
@@ -73,7 +73,7 @@ impl HloTrainer {
         let init_file = dir.join(format!("{model}_init.f32"));
         let raw = std::fs::read(&init_file)
             .with_context(|| format!("missing init blob {init_file:?}"))?;
-        anyhow::ensure!(raw.len() == params * 4, "init blob size mismatch");
+        crate::ensure!(raw.len() == params * 4, "init blob size mismatch");
         let init: Vec<f32> = raw
             .chunks_exact(4)
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))

@@ -5,7 +5,7 @@
 //! mnist_step_b500 kind=step model=mnist batch=500 features=784 classes=10 params=39760 file=mnist_step_b500.hlo.txt
 //! ```
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 

@@ -9,12 +9,25 @@
 //! Python runs only at `make artifacts` time; after that the Rust binary
 //! is self-contained.
 
+// The PJRT path needs the vendored `xla` crate, which only exists in the
+// full offline image. Build with `RUSTFLAGS='--cfg uveqfed_xla'` (and the
+// `xla` dependency added to Cargo.toml) to enable it; otherwise
+// `HloTrainer` is a stub whose `load` returns a descriptive error, and the
+// `model.backend = "hlo"` config path fails fast at startup.
+#[cfg(uveqfed_xla)]
 pub mod engine;
+#[cfg(uveqfed_xla)]
 mod hlo_trainer;
 mod manifest;
+#[cfg(not(uveqfed_xla))]
+mod stub;
 
+#[cfg(uveqfed_xla)]
 pub use engine::{Engine, Graph};
+#[cfg(uveqfed_xla)]
 pub use hlo_trainer::HloTrainer;
+#[cfg(not(uveqfed_xla))]
+pub use stub::HloTrainer;
 pub use manifest::{Manifest, ManifestEntry};
 
 use std::path::{Path, PathBuf};

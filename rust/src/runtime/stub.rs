@@ -1,0 +1,76 @@
+//! Stand-in `HloTrainer` for builds without the PJRT runtime.
+//!
+//! The vendored `xla` crate exists only in the full offline image; the
+//! default build carries zero external dependencies. This stub keeps the
+//! `runtime::HloTrainer` API (and everything that links against it)
+//! compiling, while `load` fails with an actionable message instead of a
+//! missing-symbol error at link time.
+
+use crate::data::Dataset;
+use crate::fl::Trainer;
+use crate::models::EvalReport;
+use crate::Result;
+
+/// Unconstructible stand-in: `load` always errors, so no instance of this
+/// type ever exists and the `Trainer` methods are unreachable.
+#[derive(Debug)]
+pub struct HloTrainer {
+    _unconstructible: std::convert::Infallible,
+}
+
+impl HloTrainer {
+    /// Always fails: the PJRT runtime is not compiled into this binary.
+    pub fn load(model: &str, batch: usize) -> Result<Self> {
+        Err(crate::format_err!(
+            "HloTrainer::load({model:?}, batch={batch}): this binary was built without the \
+             PJRT runtime. Rebuild with RUSTFLAGS='--cfg uveqfed_xla' and the vendored `xla` \
+             crate (see DESIGN.md), or use model.backend = \"native\"."
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        match self._unconstructible {}
+    }
+}
+
+impl Trainer for HloTrainer {
+    fn num_params(&self) -> usize {
+        match self._unconstructible {}
+    }
+
+    fn init_params(&self, _seed: u64) -> Vec<f32> {
+        match self._unconstructible {}
+    }
+
+    fn local_update(
+        &self,
+        _w0: &[f32],
+        _shard: &Dataset,
+        _tau: usize,
+        _lr: f32,
+        _batch_size: usize,
+        _seed: u64,
+    ) -> Vec<f32> {
+        match self._unconstructible {}
+    }
+
+    fn evaluate(&self, _w: &[f32], _ds: &Dataset) -> EvalReport {
+        match self._unconstructible {}
+    }
+
+    fn max_workers(&self) -> usize {
+        match self._unconstructible {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_runtime() {
+        let e = HloTrainer::load("mnist", 500).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("uveqfed_xla"), "unhelpful stub error: {msg}");
+    }
+}

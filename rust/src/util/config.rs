@@ -85,12 +85,19 @@ pub struct Config {
     entries: BTreeMap<String, Value>,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("config parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 fn parse_scalar(tok: &str, line: usize) -> Result<Value, ParseError> {
     let t = tok.trim();
@@ -185,9 +192,9 @@ impl Config {
         Ok(Self { entries })
     }
 
-    pub fn from_file(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+    pub fn from_file(path: impl AsRef<Path>) -> crate::Result<Self> {
         let text = std::fs::read_to_string(path.as_ref())
-            .map_err(|e| anyhow::anyhow!("reading {:?}: {e}", path.as_ref()))?;
+            .map_err(|e| crate::format_err!("reading {:?}: {e}", path.as_ref()))?;
         Ok(Self::parse(&text)?)
     }
 

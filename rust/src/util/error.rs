@@ -1,0 +1,155 @@
+//! Minimal dynamic error type (anyhow is not vendorable offline).
+//!
+//! Mirrors the slice of `anyhow` this codebase actually uses: a cheap
+//! string-y error that any `std::error::Error` converts into via `?`, a
+//! [`Context`] extension trait for `Result`/`Option`, and the
+//! `format_err!` / `bail!` / `ensure!` macros. The crate-wide alias
+//! `crate::Result<T>` resolves here.
+
+use std::fmt;
+
+/// Boxed error message with an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+/// Crate-local result alias (re-exported as `crate::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer message (the `context` chain).
+    pub fn wrap(self, outer: impl fmt::Display) -> Self {
+        Self { msg: format!("{outer}: {}", self.msg), source: self.source }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src = self.source.as_deref().map(|s| s as &dyn std::error::Error);
+        while let Some(s) = src {
+            write!(f, "\n  caused by: {s}")?;
+            src = s.source();
+        }
+        Ok(())
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`, so the
+// blanket conversion below cannot collide with `impl From<T> for T` (the
+// same trick anyhow uses).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `anyhow::Context`-style extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err(format_err!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::format_err!($($arg)*).into())
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+        // Debug output includes the io::Error source.
+        assert!(format!("{e:?}").contains("caused by"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("outer").unwrap_err();
+        assert!(e.to_string().starts_with("outer: "));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                crate::bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(3).unwrap_err().to_string().contains("three"));
+        assert!(f(11).unwrap_err().to_string().contains("too big"));
+        let e = crate::format_err!("code {}", 42).wrap("outer");
+        assert_eq!(e.to_string(), "outer: code 42");
+    }
+}

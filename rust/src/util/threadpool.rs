@@ -43,6 +43,58 @@ where
         .collect()
 }
 
+/// Run `f(i)` for `i in 0..n` on up to `workers` threads, folding each
+/// result into `fold` on the caller's thread **in completion order** (not
+/// index order). The channel is bounded at `2·workers`, so at most a
+/// handful of results are ever in flight — the caller never buffers all
+/// `n` outputs. This is the streaming fan-in under `fleet::`'s O(m)
+/// aggregation: combined with an order-independent fold (fixed-point
+/// accumulation) it is deterministic for any worker count.
+pub fn parallel_map_fold<T, F, G>(n: usize, workers: usize, f: F, mut fold: G)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+    G: FnMut(usize, T),
+{
+    assert!(workers >= 1);
+    if n == 0 {
+        return;
+    }
+    let workers = workers.min(n);
+    if workers == 1 {
+        for i in 0..n {
+            let v = f(i);
+            fold(i, v);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = std::sync::mpsc::sync_channel::<(usize, T)>(workers * 2);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // The receiver only disappears on a fold panic; stop
+                // quietly and let scope exit propagate that panic.
+                if tx.send((i, v)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (i, v) in rx {
+            fold(i, v);
+        }
+    });
+}
+
 /// Default worker count: physical-ish parallelism, capped.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
@@ -74,6 +126,45 @@ mod tests {
     fn more_workers_than_jobs() {
         let out = parallel_map(3, 16, |i| i);
         assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn map_fold_sees_every_result_exactly_once() {
+        for workers in [1, 2, 8] {
+            let mut seen = vec![0u32; 100];
+            let mut sum = 0usize;
+            parallel_map_fold(100, workers, |i| i * 3, |i, v| {
+                seen[i] += 1;
+                sum += v;
+            });
+            assert!(seen.iter().all(|&c| c == 1), "workers={workers}");
+            assert_eq!(sum, (0..100).map(|i| i * 3).sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn map_fold_empty_and_oversubscribed() {
+        let mut calls = 0;
+        parallel_map_fold(0, 4, |i| i, |_, _| calls += 1);
+        assert_eq!(calls, 0);
+        parallel_map_fold(3, 64, |i| i, |_, _| calls += 1);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn map_fold_worker_panic_propagates() {
+        parallel_map_fold(
+            8,
+            2,
+            |i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+                i
+            },
+            |_, _| {},
+        );
     }
 
     #[test]

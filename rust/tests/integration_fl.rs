@@ -18,6 +18,7 @@ fn cfg(users: usize, rounds: usize, rate: f64, seed: u64) -> FlConfig {
         workers: 4,
         eval_every: 5,
         verbose: false,
+        fleet: uveqfed::fleet::Scenario::full(),
     }
 }
 

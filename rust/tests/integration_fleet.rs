@@ -1,0 +1,246 @@
+//! Integration: the fleet simulator against the paper-scale coordinator.
+//!
+//! Covers the acceptance surface of the fleet subsystem: the
+//! full-participation preset reproduces `RoundDriver` bit-for-bit, wire
+//! frames round-trip every registered codec with exact bit accounting,
+//! cohort α's re-normalize to one, aggregation is arrival-order and
+//! worker-count independent, and deadlines/dropout behave.
+
+use uveqfed::coordinator::RoundDriver;
+use uveqfed::data::{partition, Dataset, PartitionScheme, SynthMnist};
+use uveqfed::fl::{NativeTrainer, Trainer};
+use uveqfed::fleet::{
+    decode_frame, encode_frame, FleetDriver, SamplerKind, Scenario, ShardPool, VirtualClock,
+};
+use uveqfed::models::LogReg;
+use uveqfed::prng::{Rng, Xoshiro256pp};
+use uveqfed::quantizer::{self, CodecContext};
+
+fn setup(k: usize, per: usize, seed: u64) -> (Vec<Dataset>, NativeTrainer<LogReg>) {
+    let gen = SynthMnist::new(seed);
+    let ds = gen.dataset(k * per);
+    let shards = partition(&ds, k, per, PartitionScheme::Iid, seed);
+    let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
+    (shards, trainer)
+}
+
+#[test]
+fn full_participation_preset_reproduces_round_driver_bitwise() {
+    let (shards, trainer) = setup(4, 40, 61);
+    let alphas = [0.25f64; 4];
+    let codec = quantizer::by_name("uveqfed-l2");
+
+    // Path 1: the seed-era public API.
+    let mut w_driver = trainer.init_params(3);
+    let driver = RoundDriver::new(5, 2.0, 3);
+    for round in 0..3 {
+        driver.run_round(
+            round,
+            &mut w_driver,
+            &shards,
+            &trainer,
+            codec.as_ref(),
+            &alphas,
+            1,
+            0.5,
+            0,
+        );
+    }
+
+    // Path 2: an explicitly-configured fleet with the degenerate preset.
+    let scenario = Scenario {
+        sampler: SamplerKind::Full,
+        over_select: 0.9, // must be ignored by Full
+        faults: Default::default(),
+    };
+    let fleet = FleetDriver::new(5, 2.0, 2, scenario);
+    let pool = ShardPool::with_weights(&shards, &alphas);
+    let mut clock = VirtualClock::new();
+    let mut w_fleet = trainer.init_params(3);
+    for round in 0..3 {
+        let rep = fleet.run_round(
+            round,
+            &mut w_fleet,
+            &pool,
+            &trainer,
+            codec.as_ref(),
+            1,
+            0.5,
+            0,
+            &mut clock,
+        );
+        assert_eq!(rep.aggregated, 4);
+        assert_eq!(rep.completion_rate, 1.0);
+    }
+
+    assert_eq!(w_driver, w_fleet, "full-participation fleet must equal RoundDriver bit-for-bit");
+}
+
+#[test]
+fn wire_frames_roundtrip_every_registered_codec_with_exact_bits() {
+    let m = 96usize;
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    let h: Vec<f32> = (0..m).map(|_| rng.normal_f32() * 0.05).collect();
+    for name in quantizer::registered_codec_names() {
+        let codec = quantizer::by_name(name);
+        let ctx = CodecContext::new(9, 4, 11, 4.0);
+        let enc = codec.encode(&h, &ctx);
+        let id = quantizer::codec_id(name).unwrap();
+        let buf = encode_frame(9, 4, id, &enc);
+        let frame = decode_frame(&buf).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(frame.user, 9, "{name}");
+        assert_eq!(frame.round, 4, "{name}");
+        assert_eq!(frame.codec, id, "{name}");
+        assert_eq!(frame.payload.bits, enc.bits, "{name}: exact bit accounting lost");
+        assert_eq!(frame.payload.bytes, enc.bytes, "{name}: payload bytes changed");
+        // The decoded update must be identical whether it came from the
+        // in-memory struct or off the wire.
+        let direct = codec.decode(&enc, m, &ctx);
+        let framed = codec.decode(&frame.payload, m, &ctx);
+        assert_eq!(direct, framed, "{name}: wire round-trip changed the decode");
+    }
+}
+
+#[test]
+fn cohort_alphas_renormalize_to_one_under_sampling() {
+    let (shards, trainer) = setup(10, 25, 62);
+    // Unequal weights: shard sizes are equal here, so impose explicit
+    // unequal α's to make re-normalization observable.
+    let weights: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+    let pool = ShardPool::with_weights(&shards, &weights);
+    let codec = quantizer::by_name("qsgd");
+    for kind in [
+        SamplerKind::Uniform { cohort: 4 },
+        SamplerKind::Weighted { cohort: 4 },
+        SamplerKind::Fixed { members: vec![1, 5, 8] },
+    ] {
+        let scenario = Scenario { sampler: kind.clone(), over_select: 0.0, faults: Default::default() };
+        let fleet = FleetDriver::new(7, 2.0, 2, scenario);
+        let mut clock = VirtualClock::new();
+        let mut w = trainer.init_params(1);
+        for round in 0..4 {
+            let rep = fleet.run_round(
+                round,
+                &mut w,
+                &pool,
+                &trainer,
+                codec.as_ref(),
+                1,
+                0.5,
+                0,
+                &mut clock,
+            );
+            assert!(
+                (rep.alpha_sum - 1.0).abs() < 1e-9,
+                "{kind:?} round {round}: selected α's sum to {}, not 1",
+                rep.alpha_sum
+            );
+            assert!((rep.alpha_mass - 1.0).abs() < 1e-12, "no faults: all selected mass arrives");
+        }
+    }
+}
+
+#[test]
+fn straggler_deadline_with_over_selection_fills_quota_or_reports_shortfall() {
+    let (shards, trainer) = setup(20, 20, 63);
+    let pool = ShardPool::new(&shards);
+    let codec = quantizer::by_name("qsgd");
+    let scenario = Scenario::stragglers(8, 1.0); // tight 1 s deadline
+    let fleet = FleetDriver::new(11, 2.0, 4, scenario);
+    let mut clock = VirtualClock::new();
+    let mut w = trainer.init_params(1);
+    let mut saw_shortfall = false;
+    for round in 0..8 {
+        let rep = fleet.run_round(
+            round,
+            &mut w,
+            &pool,
+            &trainer,
+            codec.as_ref(),
+            1,
+            0.5,
+            0,
+            &mut clock,
+        );
+        assert!(rep.selected >= 8, "over-selection should select ≥ target");
+        assert!(rep.aggregated <= 8, "never aggregate more than the target");
+        assert!(rep.completion_rate <= 1.0);
+        assert!(rep.alpha_mass <= 1.0 + 1e-12);
+        if rep.aggregated < 8 {
+            saw_shortfall = true;
+            assert!(rep.dropped + rep.late > 0, "shortfall must be explained by faults");
+            // The server waited out the full deadline.
+            assert!((rep.timing.duration - 1.0).abs() < 1e-9);
+        }
+        assert!(rep.timing.p95_latency <= 1.0 + 1e-9, "aggregated arrivals respect the deadline");
+    }
+    // With median-1s latency and a 1s deadline, ~half the cohort is late:
+    // eight rounds virtually always contain a shortfall.
+    assert!(saw_shortfall, "expected at least one round below quota");
+    assert!(clock.now() > 0.0);
+}
+
+#[test]
+fn worker_count_and_arrival_order_do_not_change_training() {
+    let (shards, trainer) = setup(12, 20, 64);
+    let pool = ShardPool::new(&shards);
+    let codec = quantizer::by_name("uveqfed-l2");
+    let scenario = Scenario::flaky(6, 4.0);
+    let run = |workers: usize| {
+        let fleet = FleetDriver::new(21, 2.0, workers, scenario.clone());
+        let mut clock = VirtualClock::new();
+        let mut w = trainer.init_params(9);
+        for round in 0..4 {
+            fleet.run_round(
+                round,
+                &mut w,
+                &pool,
+                &trainer,
+                codec.as_ref(),
+                1,
+                0.5,
+                0,
+                &mut clock,
+            );
+        }
+        w
+    };
+    let serial = run(1);
+    assert_eq!(serial, run(3));
+    assert_eq!(serial, run(8));
+}
+
+#[test]
+fn cohort_selection_is_reproducible_across_drivers() {
+    let (shards, trainer) = setup(16, 15, 65);
+    let pool = ShardPool::new(&shards);
+    let codec = quantizer::by_name("signsgd");
+    let mk = || FleetDriver::new(33, 2.0, 2, Scenario::sampled(5));
+    let run = |fleet: FleetDriver| {
+        let mut clock = VirtualClock::new();
+        let mut w = trainer.init_params(2);
+        let reps: Vec<usize> = (0..5)
+            .map(|round| {
+                fleet
+                    .run_round(
+                        round,
+                        &mut w,
+                        &pool,
+                        &trainer,
+                        codec.as_ref(),
+                        1,
+                        0.5,
+                        0,
+                        &mut clock,
+                    )
+                    .aggregated
+            })
+            .collect();
+        (w, reps)
+    };
+    let (w1, r1) = run(mk());
+    let (w2, r2) = run(mk());
+    assert_eq!(w1, w2, "re-running the same config must reproduce the model");
+    assert_eq!(r1, r2);
+    assert!(r1.iter().all(|&a| a == 5));
+}

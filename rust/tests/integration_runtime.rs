@@ -1,7 +1,11 @@
 //! Integration: PJRT runtime ↔ AOT artifacts ↔ native oracle.
 //!
-//! These tests require `make artifacts`; they skip (with a note) when the
-//! artifacts are absent so `cargo test` stays green pre-build.
+//! These tests require `make artifacts` AND a `--cfg uveqfed_xla` build
+//! (the default build stubs out the PJRT runtime — see DESIGN.md §7).
+//! They are `#[ignore]`d so tier-1 `cargo test` stays green; run them
+//! with `cargo test -- --ignored` in the full image. The
+//! `require_artifacts` guard additionally skips when the artifacts are
+//! absent.
 
 use uveqfed::data::SynthMnist;
 use uveqfed::fl::{NativeTrainer, Trainer};
@@ -9,6 +13,7 @@ use uveqfed::models::MlpMnist;
 use uveqfed::runtime::{self, HloTrainer};
 
 #[test]
+#[ignore = "requires AOT HLO artifacts (make artifacts) and a --cfg uveqfed_xla build with the vendored xla crate"]
 fn hlo_step_matches_native_oracle() {
     if runtime::require_artifacts("hlo_step_matches_native_oracle").is_none() {
         return;
@@ -36,6 +41,7 @@ fn hlo_step_matches_native_oracle() {
 }
 
 #[test]
+#[ignore = "requires AOT HLO artifacts (make artifacts) and a --cfg uveqfed_xla build with the vendored xla crate"]
 fn hlo_eval_matches_native_eval() {
     if runtime::require_artifacts("hlo_eval_matches_native_eval").is_none() {
         return;
@@ -57,6 +63,7 @@ fn hlo_eval_matches_native_eval() {
 }
 
 #[test]
+#[ignore = "requires AOT HLO artifacts (make artifacts) and a --cfg uveqfed_xla build with the vendored xla crate"]
 fn hlo_training_actually_learns() {
     if runtime::require_artifacts("hlo_training_actually_learns").is_none() {
         return;
@@ -74,6 +81,7 @@ fn hlo_training_actually_learns() {
 }
 
 #[test]
+#[ignore = "requires AOT HLO artifacts (make artifacts) and a --cfg uveqfed_xla build with the vendored xla crate"]
 fn cifar_graphs_load_and_run() {
     if runtime::require_artifacts("cifar_graphs_load_and_run").is_none() {
         return;
@@ -90,6 +98,7 @@ fn cifar_graphs_load_and_run() {
 }
 
 #[test]
+#[ignore = "requires AOT HLO artifacts (make artifacts) and a --cfg uveqfed_xla build with the vendored xla crate"]
 fn init_blob_is_deterministic_across_loads() {
     if runtime::require_artifacts("init_blob_is_deterministic_across_loads").is_none() {
         return;
