@@ -55,7 +55,10 @@ fn main() {
         }
     };
 
-    let codec = quantizer::by_name(args.get("codec"));
+    let codec = quantizer::make(args.get("codec")).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
     let cfg = FlConfig {
         users,
         rounds: args.get_usize("rounds"),

@@ -86,7 +86,7 @@ fn fig45(correlated: bool) {
     for rate in 1..=6 {
         let mut row = vec![rate as f64];
         for cname in &codecs {
-            let codec = quantizer::by_name(cname);
+            let codec = quantizer::make(cname).expect("codec spec");
             let mut mse = 0.0;
             for t in 0..trials {
                 let mut h = gaussian_matrix(128, 7000 + t as u64);
@@ -188,7 +188,7 @@ fn fig67(rate: f64) {
     };
     let mut histories = Vec::new();
     for run in CONVERGENCE_RUNS {
-        let codec = quantizer::by_name(run.codec);
+        let codec = quantizer::make(run.codec).expect("codec spec");
         let h = run_federated(&cfg, trainer.as_ref(), &shards, &test, codec.as_ref());
         println!("  {:<12} best acc {:.4}", run.label, h.best_accuracy());
         histories.push((run.label, h));
@@ -227,7 +227,7 @@ fn fig89(rate: f64) {
         for run in CONVERGENCE_RUNS.iter().filter(|r| {
             ["uveqfed_l2", "uveqfed_l1", "qsgd", "unquantized"].contains(&r.label)
         }) {
-            let codec = quantizer::by_name(run.codec);
+            let codec = quantizer::make(run.codec).expect("codec spec");
             let h = run_federated(&cfg, trainer.as_ref(), &shards, &test, codec.as_ref());
             println!("  {:<12} best acc {:.4}", run.label, h.best_accuracy());
             histories.push((run.label, h));
@@ -284,7 +284,7 @@ fn fig1011(rate: f64) {
         for run in CONVERGENCE_RUNS.iter().filter(|r| {
             ["uveqfed_l2", "uveqfed_l1", "qsgd", "unquantized"].contains(&r.label)
         }) {
-            let codec = quantizer::by_name(run.codec);
+            let codec = quantizer::make(run.codec).expect("codec spec");
             let h = run_federated(&cfg, trainer.as_ref(), &shards, &test, codec.as_ref());
             println!("  {:<12} best acc {:.4}", run.label, h.best_accuracy());
             histories.push((run.label, h));

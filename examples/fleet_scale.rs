@@ -7,7 +7,7 @@
 
 use uveqfed::data::{partition, PartitionScheme, SynthMnist};
 use uveqfed::fl::{NativeTrainer, Trainer};
-use uveqfed::fleet::{FleetDriver, RoundRobinPool, Scenario, VirtualClock};
+use uveqfed::fleet::{FleetDriver, RoundRobinPool, RoundSpec, Scenario, VirtualClock};
 use uveqfed::models::LogReg;
 use uveqfed::quantizer;
 
@@ -32,7 +32,7 @@ fn main() {
     // 2. Scenario: log-normal stragglers, 2% dropout, 3 s (virtual)
     //    deadline, 25% over-selection so the quota still fills.
     let scenario = Scenario::stragglers(cohort, 3.0);
-    let codec = quantizer::by_name("uveqfed-l2");
+    let codec = quantizer::make("uveqfed-l2").expect("codec spec");
     let driver = FleetDriver::new(seed, 2.0, 8, scenario);
     let mut clock = VirtualClock::new();
     let mut w = trainer.init_params(seed);
@@ -44,17 +44,15 @@ fn main() {
     );
     let mut wire_total = 0usize;
     for round in 0..rounds {
-        let rep = driver.run_round(
-            round as u64,
-            &mut w,
-            &pool,
-            &trainer,
-            codec.as_ref(),
-            1,
-            0.5,
-            0,
-            &mut clock,
-        );
+        let spec = RoundSpec {
+            round: round as u64,
+            local_steps: 1,
+            lr: 0.5,
+            batch_size: 0,
+            trainer: &trainer,
+            codec: codec.as_ref(),
+        };
+        let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
         wire_total += rep.wire_bytes;
         if round % 5 == 0 || round + 1 == rounds {
             println!(
@@ -88,17 +86,15 @@ fn main() {
     let mut ref_clock = VirtualClock::new();
     let mut wr = trainer.init_params(seed);
     for round in 0..rounds {
-        ref_driver.run_round(
-            round as u64,
-            &mut wr,
-            &ref_pool,
-            &trainer,
-            codec.as_ref(),
-            1,
-            0.5,
-            0,
-            &mut ref_clock,
-        );
+        let spec = RoundSpec {
+            round: round as u64,
+            local_steps: 1,
+            lr: 0.5,
+            batch_size: 0,
+            trainer: &trainer,
+            codec: codec.as_ref(),
+        };
+        ref_driver.run_round(&spec, &mut wr, &ref_pool, &mut ref_clock);
     }
     let ref_eval = trainer.evaluate(&wr, &test);
 

@@ -24,7 +24,7 @@ fn main() {
     // 2. Model + codec: the paper's MLP, UVeQFed with the hexagonal
     //    lattice (L = 2) at R = 2 bits per parameter.
     let trainer = NativeTrainer::new(MlpMnist::new(50));
-    let codec = quantizer::by_name("uveqfed-l2");
+    let codec = quantizer::make("uveqfed-l2").expect("codec spec");
 
     // 3. Federated averaging, 60 rounds of full-batch local GD.
     let cfg = FlConfig {

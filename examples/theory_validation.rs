@@ -74,7 +74,7 @@ fn thm2() {
     let ds = gen.dataset(1600);
     let test = gen.test_dataset(100);
     let model = LogReg::new(ds.features, ds.classes, 1e-3);
-    let codec = uveqfed::quantizer::by_name("uveqfed-l2");
+    let codec = uveqfed::quantizer::make("uveqfed-l2").expect("codec spec");
     for k in [2usize, 4, 8, 16] {
         let trainer = NativeTrainer::new(model.clone());
         let shards = partition(&ds, k, 1600 / k, PartitionScheme::Iid, 5);
@@ -114,7 +114,7 @@ fn thm3() {
     let k = 4usize;
     let shards = partition(&ds, k, 100, PartitionScheme::Iid, 5);
     let trainer = NativeTrainer::new(model.clone());
-    let codec = uveqfed::quantizer::by_name("uveqfed-l2");
+    let codec = uveqfed::quantizer::make("uveqfed-l2").expect("codec spec");
     let cfg = FlConfig {
         users: k,
         rounds: 200,

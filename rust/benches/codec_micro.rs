@@ -27,7 +27,7 @@ fn main() {
         "topk",
     ] {
         for rate in [2.0, 4.0] {
-            let codec = quantizer::by_name(name);
+            let codec = quantizer::make(name).expect("codec spec");
             let ctx = CodecContext::new(0, 0, 5, rate);
             // warm the rate-controller hint before timing
             let enc0 = codec.encode(&h, &ctx);

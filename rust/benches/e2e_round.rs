@@ -4,7 +4,7 @@
 //! ("the coordinator must never dominate a round").
 
 use uveqfed::bench::{run, BenchConfig};
-use uveqfed::coordinator::RoundDriver;
+use uveqfed::coordinator::{RoundDriver, RoundSpec};
 use uveqfed::data::{partition, Dataset, PartitionScheme, SynthMnist};
 use uveqfed::fl::{NativeTrainer, Trainer};
 use uveqfed::models::{EvalReport, MlpMnist};
@@ -55,14 +55,22 @@ fn main() {
 
     println!("# e2e_round — K={k}, m={m}");
     for name in ["uveqfed-l2", "qsgd", "identity"] {
-        let codec = quantizer::by_name(name);
+        let codec = quantizer::make(name).expect("codec spec");
         // Coordinator-only (noop trainer).
         let noop = NoopTrainer { m };
         let mut w = noop.init_params(1);
         let driver = RoundDriver::new(1, 2.0, 8);
         let mut round = 0u64;
         let r = run(&format!("round-coordinator-only/{name}"), cfg, || {
-            driver.run_round(round, &mut w, &shards, &noop, codec.as_ref(), &alphas, 1, 0.1, 0);
+            let spec = RoundSpec {
+                round,
+                local_steps: 1,
+                lr: 0.1,
+                batch_size: 0,
+                trainer: &noop,
+                codec: codec.as_ref(),
+            };
+            driver.run_round(&spec, &mut w, &shards, &alphas);
             round += 1;
         });
         println!(
@@ -73,12 +81,20 @@ fn main() {
     }
     // Full round with real model compute.
     let trainer = NativeTrainer::new(MlpMnist::new(50));
-    let codec = quantizer::by_name("uveqfed-l2");
+    let codec = quantizer::make("uveqfed-l2").expect("codec spec");
     let mut w = trainer.init_params(1);
     let driver = RoundDriver::new(1, 2.0, 8);
     let mut round = 0u64;
     let r = run("round-full-mlp/uveqfed-l2", cfg, || {
-        driver.run_round(round, &mut w, &shards, &trainer, codec.as_ref(), &alphas, 1, 0.1, 0);
+        let spec = RoundSpec {
+            round,
+            local_steps: 1,
+            lr: 0.1,
+            batch_size: 0,
+            trainer: &trainer,
+            codec: codec.as_ref(),
+        };
+        driver.run_round(&spec, &mut w, &shards, &alphas);
         round += 1;
     });
     println!("    ↳ {:.2} ms/round with MLP local training", r.median_secs * 1e3);

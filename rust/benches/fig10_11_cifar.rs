@@ -49,7 +49,7 @@ fn main() {
             let mut curves: Vec<Vec<f64>> = Vec::new();
             let mut bests = Vec::new();
             for name in ["uveqfed-l2", "qsgd", "identity"] {
-                let codec = quantizer::by_name(name);
+                let codec = quantizer::make(name).expect("codec spec");
                 let cfg = FlConfig {
                     users: k,
                     rounds,

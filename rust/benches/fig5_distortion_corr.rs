@@ -25,7 +25,7 @@ fn main() {
         for rate in 1..=6 {
             let mut row = vec![rate as f64];
             for name in &codecs {
-                let codec = quantizer::by_name(name);
+                let codec = quantizer::make(name).expect("codec spec");
                 let mut mse = 0.0;
                 for t in 0..trials {
                     let h0 = gaussian_matrix(128, 5000 + t as u64);

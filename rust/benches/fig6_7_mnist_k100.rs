@@ -32,7 +32,7 @@ fn main() {
         let fig = if rate == 2.0 { 6 } else { 7 };
         let mut results: Vec<(&str, f64, Vec<f64>)> = Vec::new();
         for name in ["uveqfed-l2", "uveqfed-l1", "qsgd", "subsample", "identity"] {
-            let codec = quantizer::by_name(name);
+            let codec = quantizer::make(name).expect("codec spec");
             let cfg = FlConfig {
                 users: k,
                 rounds,

@@ -31,7 +31,7 @@ fn main() {
             let mut header = vec!["eval_idx".to_string()];
             let mut curves: Vec<Vec<f64>> = Vec::new();
             for name in ["uveqfed-l2", "uveqfed-l1", "qsgd", "identity"] {
-                let codec = quantizer::by_name(name);
+                let codec = quantizer::make(name).expect("codec spec");
                 let cfg = FlConfig {
                     users: k,
                     rounds,

@@ -4,17 +4,23 @@
 //! demonstrating the O(m) server-side accumulator memory (the seed
 //! buffered all K decoded updates: O(K·m)).
 //!
+//! Section C meters the **encode sessions** (Codec API v2): for a large
+//! update pushed through `UpdateCodec::encoder` in varying chunk sizes,
+//! it records per-round encode throughput and the peak client-side sink
+//! state (`EncodeSink::state_bytes`) — so each codec's memory profile
+//! (streaming vs two-pass buffered) is measured, not asserted.
+//!
 //! Run: `cargo bench --bench fleet_scale` (BENCH_QUICK=1 for a smoke run).
 
 use uveqfed::bench::{run, BenchConfig};
 use uveqfed::data::Dataset;
 use uveqfed::fl::Trainer;
 use uveqfed::fleet::{
-    FleetDriver, RoundRobinPool, Scenario, StreamingAggregator, VirtualClock,
+    FleetDriver, RoundRobinPool, RoundSpec, Scenario, StreamingAggregator, VirtualClock,
 };
 use uveqfed::models::EvalReport;
 use uveqfed::prng::{Normal, Xoshiro256pp};
-use uveqfed::quantizer;
+use uveqfed::quantizer::{self, CodecContext};
 
 /// Trainer that fabricates a deterministic pseudo-update without touching
 /// data: the round cost is purely coordinator + codec + aggregation.
@@ -74,24 +80,22 @@ fn main() {
         population * m * 4 / 1_000_000
     );
     for name in ["uveqfed-l2", "qsgd", "identity"] {
-        let codec = quantizer::by_name(name);
+        let codec = quantizer::make(name).expect("codec spec");
         let driver = FleetDriver::new(1, 2.0, workers, Scenario::full());
         let mut clock = VirtualClock::new();
         let mut w = trainer.init_params(1);
         let mut round = 0u64;
         let mut aggregated = 0usize;
         let r = run(&format!("full-10k-round/{name}"), cfg, || {
-            let rep = driver.run_round(
+            let spec = RoundSpec {
                 round,
-                &mut w,
-                &pool,
-                &trainer,
-                codec.as_ref(),
-                1,
-                0.1,
-                0,
-                &mut clock,
-            );
+                local_steps: 1,
+                lr: 0.1,
+                batch_size: 0,
+                trainer: &trainer,
+                codec: codec.as_ref(),
+            };
+            let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
             aggregated = rep.aggregated;
             round += 1;
         });
@@ -108,29 +112,66 @@ fn main() {
     //      selection cost must stay O(cohort), not O(population).
     let big = 1_000_000usize;
     let big_pool = RoundRobinPool::synthetic(big, vec![tiny_template()], 2);
-    let codec = quantizer::by_name("uveqfed-l2");
+    let codec = quantizer::make("uveqfed-l2").expect("codec spec");
     for cohort in [256usize, 4096] {
         let driver = FleetDriver::new(3, 2.0, workers, Scenario::stragglers(cohort, 3.0));
         let mut clock = VirtualClock::new();
         let mut w = trainer.init_params(1);
         let mut round = 0u64;
         let r = run(&format!("sampled-1M/cohort-{cohort}"), cfg, || {
-            driver.run_round(
+            let spec = RoundSpec {
                 round,
-                &mut w,
-                &big_pool,
-                &trainer,
-                codec.as_ref(),
-                1,
-                0.1,
-                0,
-                &mut clock,
-            );
+                local_steps: 1,
+                lr: 0.1,
+                batch_size: 0,
+                trainer: &trainer,
+                codec: codec.as_ref(),
+            };
+            driver.run_round(&spec, &mut w, &big_pool, &mut clock);
             round += 1;
         });
         println!(
             "    ↳ {:.2} ms/round at cohort {cohort} from 1M clients",
             r.median_secs * 1e3
         );
+    }
+
+    // ── C: streaming encode sessions — per-codec encode throughput and
+    //      peak client-side sink state across chunk sizes. A streaming
+    //      codec (identity, signsgd) holds far less than the 4·m bytes a
+    //      two-pass codec must buffer; the numbers below measure that.
+    let m_big = 1usize << 20; // 1M parameters
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let h_big = Normal::new(0.0, 0.02).vec_f32(&mut rng, m_big);
+    println!(
+        "# stream-encode — m={m_big} ({} MB update); legacy whole-buffer input = {} KB",
+        m_big * 4 / 1_000_000,
+        m_big * 4 / 1024
+    );
+    for name in ["uveqfed-l2", "qsgd", "signsgd", "identity"] {
+        let codec = quantizer::make(name).expect("codec spec");
+        let ctx = CodecContext::new(1, 1, 7, 2.0);
+        for chunk in [4_096usize, 65_536, m_big] {
+            let mut peak_state = 0usize;
+            let mut out_bits = 0usize;
+            let r = run(&format!("stream-encode/{name}/chunk-{chunk}"), cfg, || {
+                let mut sink = codec.encoder(&ctx, m_big);
+                let mut peak = 0usize;
+                for c in h_big.chunks(chunk) {
+                    sink.push(c);
+                    peak = peak.max(sink.state_bytes());
+                }
+                let enc = sink.finish();
+                out_bits = enc.bits;
+                peak_state = peak;
+            });
+            println!(
+                "    ↳ chunk {:>8}: {:>7.1} MB/s encode, peak sink state {:>6} KB, output {:>8.0} KB",
+                chunk,
+                m_big as f64 * 4.0 / 1e6 / r.median_secs,
+                peak_state / 1024,
+                out_bits as f64 / 8.0 / 1024.0
+            );
+        }
     }
 }

@@ -10,7 +10,7 @@ fn main() {
     let n_points = 100_000usize;
 
     for name in ["scalar", "hex", "hex-a2", "cubic4", "d4", "e8"] {
-        let lat = lattice::by_name(name);
+        let lat = lattice::by_name(name).expect("lattice");
         let l = lat.dim();
         let mut rng = Xoshiro256pp::seed_from_u64(2);
         let pts: Vec<f64> = (0..n_points * l).map(|_| rng.normal() * 3.0).collect();

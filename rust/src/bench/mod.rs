@@ -1,6 +1,6 @@
 //! Benchmark harness (criterion is not vendorable offline).
 //!
-//! `cargo bench` targets use [`Bench`] for timing micro/meso benchmarks
+//! `cargo bench` targets use [`run`] + [`BenchConfig`] for timing micro/meso benchmarks
 //! with warmup, repetition, and robust statistics, and write figure data
 //! through `metrics::CsvTable`. Output format is one line per benchmark:
 //! `name  median  mean ± sem  (n iters)`.

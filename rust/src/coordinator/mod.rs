@@ -12,10 +12,10 @@ mod uplink;
 
 pub use uplink::{UplinkChannel, UplinkError, UplinkStats};
 
+pub use crate::fleet::RoundSpec;
+
 use crate::data::Dataset;
-use crate::fl::Trainer;
 use crate::fleet::{FleetDriver, Scenario, ShardPool, VirtualClock};
-use crate::quantizer::UpdateCodec;
 
 /// Per-round statistics surfaced into `fl::HistoryRow`.
 #[derive(Debug, Clone, Copy, Default)]
@@ -40,31 +40,24 @@ impl RoundDriver {
         Self { driver: FleetDriver::new(seed, rate, workers, Scenario::full()) }
     }
 
-    /// Execute round `round`, updating `w` in place. Returns stats.
-    #[allow(clippy::too_many_arguments)]
+    /// Execute the round described by `spec` over `shards` with
+    /// per-client weights `alphas`, updating `w` in place. Returns stats.
     pub fn run_round(
         &self,
-        round: u64,
+        spec: &RoundSpec<'_>,
         w: &mut [f32],
         shards: &[Dataset],
-        trainer: &dyn Trainer,
-        codec: &dyn UpdateCodec,
         alphas: &[f64],
-        tau: usize,
-        lr: f32,
-        batch_size: usize,
     ) -> RoundStats {
         let pool = ShardPool::with_weights(shards, alphas);
         let mut clock = VirtualClock::new();
-        let report = self.driver.run_round(
-            round, w, &pool, trainer, codec, tau, lr, batch_size, &mut clock,
-        );
+        let report = self.driver.run_round(spec, w, &pool, &mut clock);
         // The paper experiments' honesty depends on every update landing
         // and none cheating the rate budget (the seed panicked here too).
         assert_eq!(
             report.budget_violations, 0,
-            "round {round}: {} uplink budget violation(s) — codec bug",
-            report.budget_violations
+            "round {}: {} uplink budget violation(s) — codec bug",
+            spec.round, report.budget_violations
         );
         assert_eq!(report.aggregated, shards.len(), "full participation");
         RoundStats {
@@ -83,27 +76,25 @@ mod tests {
     use crate::models::LogReg;
     use crate::quantizer;
 
+    fn spec<'a>(
+        trainer: &'a dyn crate::fl::Trainer,
+        codec: &'a dyn crate::quantizer::UpdateCodec,
+    ) -> RoundSpec<'a> {
+        RoundSpec { round: 0, local_steps: 1, lr: 0.5, batch_size: 0, trainer, codec }
+    }
+
     #[test]
     fn round_applies_aggregate_and_meters_bits() {
         let ds = SynthMnist::new(31).dataset(100);
         let shards = vec![ds.subset(&(0..50).collect::<Vec<_>>()), ds.subset(&(50..100).collect::<Vec<_>>())];
         let model = LogReg::new(ds.features, ds.classes, 1e-3);
         let trainer = NativeTrainer::new(model);
-        let codec = quantizer::by_name("uveqfed-l2");
+        let codec = quantizer::make("uveqfed-l2").unwrap();
         let mut w = trainer.init_params(3);
         let w0 = w.clone();
         let driver = RoundDriver::new(5, 4.0, 2);
-        let stats = driver.run_round(
-            0,
-            &mut w,
-            &shards,
-            &trainer,
-            codec.as_ref(),
-            &[0.5, 0.5],
-            1,
-            0.5,
-            0,
-        );
+        let stats =
+            driver.run_round(&spec(&trainer, codec.as_ref()), &mut w, &shards, &[0.5, 0.5]);
         assert_ne!(w, w0, "weights unchanged");
         assert!(stats.uplink_bits > 0);
         assert!(stats.uplink_bits <= 2 * (4.0 * w.len() as f64) as usize);
@@ -116,20 +107,11 @@ mod tests {
         let shards = vec![ds.subset(&(0..30).collect::<Vec<_>>()), ds.subset(&(30..60).collect::<Vec<_>>())];
         let model = LogReg::new(ds.features, ds.classes, 1e-3);
         let trainer = NativeTrainer::new(model);
-        let codec = quantizer::by_name("identity");
+        let codec = quantizer::make("identity").unwrap();
         let mut w = trainer.init_params(3);
         let driver = RoundDriver::new(5, 2.0, 2);
-        let stats = driver.run_round(
-            0,
-            &mut w,
-            &shards,
-            &trainer,
-            codec.as_ref(),
-            &[0.5, 0.5],
-            1,
-            0.5,
-            0,
-        );
+        let stats =
+            driver.run_round(&spec(&trainer, codec.as_ref()), &mut w, &shards, &[0.5, 0.5]);
         assert!(stats.aggregate_distortion < 1e-12);
     }
 
@@ -141,12 +123,12 @@ mod tests {
             (0..4).map(|u| ds.subset(&(u * 30..(u + 1) * 30).collect::<Vec<_>>())).collect();
         let model = LogReg::new(ds.features, ds.classes, 1e-3);
         let trainer = NativeTrainer::new(model);
-        let codec = quantizer::by_name("qsgd");
+        let codec = quantizer::make("qsgd").unwrap();
         let alphas = [0.25; 4];
         let run = |workers: usize| {
             let mut w = trainer.init_params(3);
             let driver = RoundDriver::new(5, 2.0, workers);
-            driver.run_round(0, &mut w, &shards, &trainer, codec.as_ref(), &alphas, 1, 0.5, 0);
+            driver.run_round(&spec(&trainer, codec.as_ref()), &mut w, &shards, &alphas);
             w
         };
         assert_eq!(run(1), run(4));

@@ -80,6 +80,21 @@ impl BitWriter {
         self.push_u32(v.to_bits());
     }
 
+    /// Append every bit of `other` (its exact `bit_len`, not its padded
+    /// byte count) — used by streaming encode sinks that accumulate a
+    /// side-buffer (e.g. sign bits) before the header is known.
+    pub fn append(&mut self, other: &BitWriter) {
+        let bits = other.bit_len();
+        let full = bits / 8;
+        for &b in &other.buf[..full] {
+            self.push_byte(b);
+        }
+        let rem = (bits % 8) as u32;
+        if rem > 0 {
+            self.push_bits((other.buf[full] >> (8 - rem)) as u64, rem);
+        }
+    }
+
     /// Zero-pad to a byte boundary and return the buffer.
     pub fn into_bytes(self) -> Vec<u8> {
         self.buf
@@ -218,6 +233,48 @@ mod tests {
         for _ in 0..16 {
             assert!(!r.read_bit());
         }
+    }
+
+    #[test]
+    fn append_copies_exact_bits() {
+        // Misaligned destination, misaligned source: every bit must land.
+        let mut side = BitWriter::new();
+        let pattern = [true, true, false, true, false, false, true, false, true, true, false];
+        for &b in &pattern {
+            side.push_bit(b);
+        }
+        let mut w = BitWriter::new();
+        w.push_f32(1.5);
+        w.append(&side);
+        assert_eq!(w.bit_len(), 32 + pattern.len());
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_f32(), 1.5);
+        for &b in &pattern {
+            assert_eq!(r.read_bit(), b);
+        }
+
+        // Aligned source (multiple of 8 bits) takes the byte fast path.
+        let mut side8 = BitWriter::new();
+        side8.push_byte(0xA5);
+        side8.push_byte(0x3C);
+        let mut w2 = BitWriter::new();
+        w2.push_bit(true);
+        w2.append(&side8);
+        assert_eq!(w2.bit_len(), 17);
+        let bytes = w2.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_bit());
+        assert_eq!(r.read_bits(8), 0xA5);
+        assert_eq!(r.read_bits(8), 0x3C);
+    }
+
+    #[test]
+    fn append_empty_is_noop() {
+        let mut w = BitWriter::new();
+        w.push_bit(true);
+        w.append(&BitWriter::new());
+        assert_eq!(w.bit_len(), 1);
     }
 
     #[test]

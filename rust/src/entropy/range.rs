@@ -213,6 +213,52 @@ impl IntModel {
     }
 }
 
+/// Incremental, symbol-at-a-time counterpart of [`AdaptiveRangeCoder`]'s
+/// batch [`IntCoder::decode`], over a *borrowed* range-coded payload (the
+/// bytes after the u32 length prefix that the batch encoder emits).
+///
+/// This is what lets codec decode sessions run in O(chunk) memory: the
+/// UVeQFed / QSGD / TernGrad streams hold one `SymbolDecoder` and pull
+/// symbols per chunk instead of materializing all `m` integers. Symbol
+/// `i` uses model `i % dims`, exactly like the batch decoder, so the two
+/// paths are bit-identical.
+pub struct SymbolDecoder<'a> {
+    dec: RangeDecoder<'a>,
+    models: Vec<IntModel>,
+    i: usize,
+}
+
+impl<'a> SymbolDecoder<'a> {
+    pub fn new(payload: &'a [u8], dims: usize) -> Self {
+        Self {
+            dec: RangeDecoder::new(payload),
+            models: (0..dims.max(1)).map(|_| IntModel::default()).collect(),
+            i: 0,
+        }
+    }
+
+    /// Decoder for a range payload embedded in `bytes` at the position of
+    /// `r`, which must sit (byte-aligned) on the u32 length prefix the
+    /// batch encoder emits. Owns the embedded-payload framing in one
+    /// place so the streaming codec decoders cannot drift from the batch
+    /// path. Out-of-range lengths are clamped — the range decoder
+    /// zero-fills past the end, matching the batch path's padded reads.
+    pub fn from_embedded(bytes: &'a [u8], r: &mut BitReader, dims: usize) -> Self {
+        let len = r.read_u32() as usize;
+        debug_assert_eq!(r.bit_pos() % 8, 0, "range payload must start byte-aligned");
+        let start = (r.bit_pos() / 8).min(bytes.len());
+        let end = (start + len).min(bytes.len());
+        Self::new(&bytes[start..end], dims)
+    }
+
+    /// Decode the next signed symbol.
+    pub fn next_symbol(&mut self) -> i64 {
+        let d = self.i % self.models.len();
+        self.i += 1;
+        unzigzag(self.models[d].decode(&mut self.dec))
+    }
+}
+
 /// Adaptive range coder exposed through the common [`IntCoder`] interface.
 /// The byte payload is length-prefixed inside the bit stream so it can be
 /// embedded in a larger message.
@@ -255,12 +301,8 @@ impl IntCoder for AdaptiveRangeCoder {
     fn decode(&self, n: usize, r: &mut BitReader) -> Vec<i64> {
         let len = r.read_u32() as usize;
         let bytes: Vec<u8> = (0..len).map(|_| r.read_byte()).collect();
-        let mut dec = RangeDecoder::new(&bytes);
-        let mut models: Vec<IntModel> =
-            (0..self.dims).map(|_| IntModel::default()).collect();
-        (0..n)
-            .map(|i| unzigzag(models[i % self.dims].decode(&mut dec)))
-            .collect()
+        let mut sd = SymbolDecoder::new(&bytes, self.dims);
+        (0..n).map(|_| sd.next_symbol()).collect()
     }
 
     fn name(&self) -> &'static str {
@@ -322,6 +364,30 @@ mod tests {
         let bytes = w.into_bytes();
         let mut r = BitReader::new(&bytes);
         assert_eq!(coder.decode(xs.len(), &mut r), xs);
+    }
+
+    #[test]
+    fn symbol_decoder_matches_batch_decode() {
+        // The streaming codec decoders slice the payload directly out of
+        // the message (skipping the u32 length prefix) — verify that
+        // contract for dims 1 and 2.
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let xs: Vec<i64> = (0..5000).map(|_| (rng.normal() * 4.0).round() as i64).collect();
+        for dims in [1usize, 2] {
+            let coder = AdaptiveRangeCoder::with_dims(dims);
+            let mut w = BitWriter::new();
+            coder.encode(&xs, &mut w);
+            let bytes = w.into_bytes();
+            // batch path
+            let mut r = BitReader::new(&bytes);
+            let batch = coder.decode(xs.len(), &mut r);
+            assert_eq!(batch, xs);
+            // streaming path over the raw payload slice (after u32 len)
+            let len = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
+            let mut sd = SymbolDecoder::new(&bytes[4..4 + len], dims);
+            let streamed: Vec<i64> = (0..xs.len()).map(|_| sd.next_symbol()).collect();
+            assert_eq!(streamed, xs);
+        }
     }
 
     #[test]

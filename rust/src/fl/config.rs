@@ -56,9 +56,11 @@ impl FlConfig {
         shards.iter().map(|s| s.len() as f64 / total as f64).collect()
     }
 
-    /// Load from a `[fl]` section of a TOML config.
-    pub fn from_config(c: &Config) -> Self {
-        Self {
+    /// Load from a `[fl]` section of a TOML config. Config mistakes (bad
+    /// sampler name, missing cohort) are errors, not panics — the CLI
+    /// surfaces them with the valid alternatives.
+    pub fn from_config(c: &Config) -> crate::Result<Self> {
+        Ok(Self {
             users: c.usize_or("fl.users", 10),
             rounds: c.usize_or("fl.rounds", 100),
             local_steps: c.usize_or("fl.local_steps", 1),
@@ -69,13 +71,13 @@ impl FlConfig {
             workers: c.usize_or("fl.workers", crate::util::threadpool::default_workers()),
             eval_every: c.usize_or("fl.eval_every", 5),
             verbose: c.bool_or("fl.verbose", false),
-            fleet: Self::fleet_from_config(c),
-        }
+            fleet: Self::fleet_from_config(c)?,
+        })
     }
 
     /// Parse the optional `[fleet]` section. Absent section = full
     /// participation (the paper configs keep working unchanged).
-    fn fleet_from_config(c: &Config) -> Scenario {
+    fn fleet_from_config(c: &Config) -> crate::Result<Scenario> {
         let cohort = c.usize_or("fleet.cohort", 0);
         let sampler_name =
             c.str_or("fleet.sampler", if cohort == 0 { "full" } else { "uniform" });
@@ -83,9 +85,11 @@ impl FlConfig {
             "full" => SamplerKind::Full,
             "uniform" => SamplerKind::Uniform { cohort },
             "weighted" => SamplerKind::Weighted { cohort },
-            other => panic!("unknown fleet.sampler '{other}' (full|uniform|weighted)"),
+            other => crate::bail!(
+                "unknown fleet.sampler '{other}' (valid: full, uniform, weighted)"
+            ),
         };
-        assert!(
+        crate::ensure!(
             matches!(sampler, SamplerKind::Full) || cohort > 0,
             "fleet.sampler = \"{sampler_name}\" requires fleet.cohort > 0"
         );
@@ -96,7 +100,7 @@ impl FlConfig {
             LatencyModel::Fixed(0.0)
         };
         let deadline = c.f64_or("fleet.deadline", 0.0);
-        Scenario {
+        Ok(Scenario {
             sampler,
             over_select: c.f64_or("fleet.over_select", 0.0),
             faults: FaultPlan {
@@ -104,7 +108,7 @@ impl FlConfig {
                 dropout: c.f64_or("fleet.dropout", 0.0),
                 deadline: (deadline > 0.0).then_some(deadline),
             },
-        }
+        })
     }
 }
 
@@ -152,7 +156,7 @@ mod tests {
     #[test]
     fn from_config_defaults() {
         let c = Config::parse("[fl]\nusers = 3\nrounds = 7").unwrap();
-        let f = FlConfig::from_config(&c);
+        let f = FlConfig::from_config(&c).unwrap();
         assert_eq!(f.users, 3);
         assert_eq!(f.rounds, 7);
         assert_eq!(f.local_steps, 1);
@@ -166,7 +170,7 @@ mod tests {
              dropout = 0.05\ndeadline = 3.0\nlatency_median = 1.0\nlatency_sigma = 0.5",
         )
         .unwrap();
-        let f = FlConfig::from_config(&c);
+        let f = FlConfig::from_config(&c).unwrap();
         assert_eq!(f.fleet.sampler, SamplerKind::Weighted { cohort: 64 });
         assert_eq!(f.fleet.over_select, 0.25);
         assert_eq!(f.fleet.faults.dropout, 0.05);
@@ -180,7 +184,7 @@ mod tests {
     #[test]
     fn cohort_without_sampler_defaults_to_uniform() {
         let c = Config::parse("[fleet]\ncohort = 8").unwrap();
-        let f = FlConfig::from_config(&c);
+        let f = FlConfig::from_config(&c).unwrap();
         assert_eq!(f.fleet.sampler, SamplerKind::Uniform { cohort: 8 });
     }
 }

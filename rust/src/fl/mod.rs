@@ -14,7 +14,7 @@ pub use config::{FlConfig, LrSchedule};
 pub use trainer::{NativeTrainer, Trainer};
 
 use crate::data::Dataset;
-use crate::fleet::{FleetDriver, FleetRoundReport, ShardPool, VirtualClock};
+use crate::fleet::{FleetDriver, FleetRoundReport, RoundSpec, ShardPool, VirtualClock};
 use crate::metrics::{CsvTable, Timer};
 use crate::quantizer::UpdateCodec;
 
@@ -43,6 +43,28 @@ pub struct HistoryRow {
     pub wire_bytes: f64,
 }
 
+/// One column of the run history: CSV header name + value extractor.
+pub type HistoryColumn = (&'static str, fn(&HistoryRow) -> f64);
+
+/// Single source of truth for the history schema. [`FlHistory::to_table`]
+/// derives both the CSV header and every row from this table, so adding
+/// a metric is one entry here plus one field on [`HistoryRow`] — the
+/// header, the push order and the column count can no longer drift apart.
+pub const HISTORY_COLUMNS: &[HistoryColumn] = &[
+    ("round", |r| r.round as f64),
+    ("t", |r| r.t as f64),
+    ("test_loss", |r| r.test_loss),
+    ("test_accuracy", |r| r.test_accuracy),
+    ("uplink_bits", |r| r.uplink_bits),
+    ("aggregate_distortion", |r| r.aggregate_distortion),
+    ("wall_secs", |r| r.wall_secs),
+    ("selected", |r| r.selected as f64),
+    ("completed", |r| r.completed as f64),
+    ("alpha_mass", |r| r.alpha_mass),
+    ("round_latency", |r| r.round_latency),
+    ("wire_bytes", |r| r.wire_bytes),
+];
+
 /// Full run record; converts to CSV for the figure harnesses.
 #[derive(Debug, Clone, Default)]
 pub struct FlHistory {
@@ -52,35 +74,10 @@ pub struct FlHistory {
 
 impl FlHistory {
     pub fn to_table(&self) -> CsvTable {
-        let mut t = CsvTable::new(&[
-            "round",
-            "t",
-            "test_loss",
-            "test_accuracy",
-            "uplink_bits",
-            "aggregate_distortion",
-            "wall_secs",
-            "selected",
-            "completed",
-            "alpha_mass",
-            "round_latency",
-            "wire_bytes",
-        ]);
+        let names: Vec<&str> = HISTORY_COLUMNS.iter().map(|&(name, _)| name).collect();
+        let mut t = CsvTable::new(&names);
         for r in &self.rows {
-            t.push(vec![
-                r.round as f64,
-                r.t as f64,
-                r.test_loss,
-                r.test_accuracy,
-                r.uplink_bits,
-                r.aggregate_distortion,
-                r.wall_secs,
-                r.selected as f64,
-                r.completed as f64,
-                r.alpha_mass,
-                r.round_latency,
-                r.wire_bytes,
-            ]);
+            t.push(HISTORY_COLUMNS.iter().map(|&(_, extract)| extract(r)).collect());
         }
         t
     }
@@ -120,18 +117,15 @@ pub fn run_federated(
 
     for round in 0..cfg.rounds {
         let t = round * cfg.local_steps;
-        let lr = cfg.lr.at(t);
-        let rep: FleetRoundReport = driver.run_round(
-            round as u64,
-            &mut w,
-            &pool,
+        let spec = RoundSpec {
+            round: round as u64,
+            local_steps: cfg.local_steps,
+            lr: cfg.lr.at(t),
+            batch_size: cfg.batch_size,
             trainer,
             codec,
-            cfg.local_steps,
-            lr,
-            cfg.batch_size,
-            &mut clock,
-        );
+        };
+        let rep: FleetRoundReport = driver.run_round(&spec, &mut w, &pool, &mut clock);
         // Budget violations are codec bugs, never injected faults (faults
         // model latency/dropout, not bit inflation) — abort loudly rather
         // than silently training on a shrunken cohort. Callers that want
@@ -210,7 +204,7 @@ mod tests {
         let shards = partition(&ds, 5, 60, PartitionScheme::Iid, 3);
         let model = LogReg::new(ds.features, ds.classes, 1e-3);
         let trainer = NativeTrainer::new(model);
-        let codec = quantizer::by_name("uveqfed-l2");
+        let codec = quantizer::make("uveqfed-l2").unwrap();
         let hist = run_federated(&quick_cfg(5, 25, 4.0), &trainer, &shards, &test, codec.as_ref());
         assert!(hist.final_accuracy() > 0.5, "acc {}", hist.final_accuracy());
         let bits = hist.rows.last().unwrap().uplink_bits;
@@ -225,8 +219,8 @@ mod tests {
         let shards = partition(&ds, 5, 60, PartitionScheme::Iid, 3);
         let model = LogReg::new(ds.features, ds.classes, 1e-3);
         let trainer = NativeTrainer::new(model);
-        let idc = quantizer::by_name("identity");
-        let uvq = quantizer::by_name("uveqfed-l2");
+        let idc = quantizer::make("identity").unwrap();
+        let uvq = quantizer::make("uveqfed-l2").unwrap();
         let h_id =
             run_federated(&quick_cfg(5, 20, 4.0), &trainer, &shards, &test, idc.as_ref());
         let h_uv =
@@ -248,16 +242,22 @@ mod tests {
         let shards = partition(&ds, 2, 50, PartitionScheme::Iid, 3);
         let model = LogReg::new(ds.features, ds.classes, 1e-3);
         let trainer = NativeTrainer::new(model);
-        let codec = quantizer::by_name("qsgd");
+        let codec = quantizer::make("qsgd").unwrap();
         let mut cfg = quick_cfg(2, 6, 2.0);
         cfg.eval_every = 2;
         let hist = run_federated(&cfg, &trainer, &shards, &test, codec.as_ref());
         let table = hist.to_table();
-        assert_eq!(table.header.len(), 12);
+        // Header and rows both derive from HISTORY_COLUMNS — no hardcoded
+        // column count; verify the schema agrees with itself instead.
+        assert_eq!(table.header.len(), HISTORY_COLUMNS.len());
+        for (name, _) in HISTORY_COLUMNS {
+            assert!(table.header.iter().any(|h| h == name), "missing column {name}");
+        }
         assert!(table.rows.len() >= 3);
-        // uplink bits monotone
+        // uplink bits monotone (look the column up by name, not position)
+        let bits_col = table.header.iter().position(|h| h == "uplink_bits").unwrap();
         for w in table.rows.windows(2) {
-            assert!(w[1][4] >= w[0][4]);
+            assert!(w[1][bits_col] >= w[0][bits_col]);
         }
     }
 
@@ -269,7 +269,7 @@ mod tests {
         let shards = partition(&ds, 8, 50, PartitionScheme::Iid, 3);
         let model = LogReg::new(ds.features, ds.classes, 1e-3);
         let trainer = NativeTrainer::new(model);
-        let codec = quantizer::by_name("uveqfed-l2");
+        let codec = quantizer::make("uveqfed-l2").unwrap();
         let mut cfg = quick_cfg(8, 30, 4.0);
         cfg.fleet = crate::fleet::Scenario::sampled(3);
         cfg.eval_every = 5;

@@ -16,6 +16,8 @@
 //! update), which leaves ≥ 2⁶⁴ folds of headroom before an `i128` could
 //! overflow.
 
+use crate::quantizer::DecodeStream;
+
 /// Fractional bits of the accumulation grid.
 pub const SCALE_BITS: u32 = 40;
 const SCALE: f64 = (1u64 << SCALE_BITS) as f64;
@@ -63,13 +65,52 @@ impl StreamingAggregator {
             update.len(),
             self.acc.len()
         );
-        for (a, &v) in self.acc.iter_mut().zip(update) {
+        self.fold_chunk(0, alpha, update);
+        self.commit(alpha);
+    }
+
+    /// Fold one chunk of a weighted update at `offset` — the streaming
+    /// server path: decode-stream chunks land here directly, so the
+    /// server never materializes a per-user vector. Per-entry arithmetic
+    /// is identical to [`Self::fold`]; call [`Self::commit`] exactly once
+    /// per update after its last chunk.
+    pub fn fold_chunk(&mut self, offset: usize, alpha: f64, chunk: &[f32]) {
+        let end = offset + chunk.len();
+        assert!(
+            end <= self.acc.len(),
+            "chunk [{offset}, {end}) out of bounds for aggregator m {}",
+            self.acc.len()
+        );
+        for (a, &v) in self.acc[offset..end].iter_mut().zip(chunk) {
             // f64→i64 casts saturate, bounding every contribution to i64
             // range; widening to i128 then leaves overflow unreachable.
             *a += (alpha * v as f64 * SCALE).round() as i64 as i128;
         }
+    }
+
+    /// Record one completed update (after its chunks were folded via
+    /// [`Self::fold_chunk`]).
+    pub fn commit(&mut self, alpha: f64) {
         self.folds += 1;
         self.alpha_sum += alpha;
+    }
+
+    /// Drain a codec [`DecodeStream`] straight into the accumulator —
+    /// chunks fold as they are decoded, O(chunk) transient memory. The
+    /// stream must yield exactly `m` entries.
+    pub fn fold_stream(&mut self, alpha: f64, stream: &mut dyn DecodeStream) {
+        let mut offset = 0;
+        while let Some(chunk) = stream.next_chunk() {
+            self.fold_chunk(offset, alpha, chunk);
+            offset += chunk.len();
+        }
+        assert_eq!(
+            offset,
+            self.acc.len(),
+            "decode stream yielded {offset} of {} entries",
+            self.acc.len()
+        );
+        self.commit(alpha);
     }
 
     /// Merge another accumulator (sharded-server reduction). Exact: the
@@ -167,6 +208,50 @@ mod tests {
         left.merge(&right);
         assert_eq!(left.acc, whole.acc);
         assert_eq!(left.folds(), whole.folds());
+    }
+
+    #[test]
+    fn chunked_fold_is_bit_identical_to_whole_fold() {
+        let m = 777;
+        let updates: Vec<Vec<f32>> = (0..5).map(|u| random_update(20 + u, m)).collect();
+        let mut whole = StreamingAggregator::new(m);
+        let mut chunked = StreamingAggregator::new(m);
+        for (u, up) in updates.iter().enumerate() {
+            let alpha = 0.2 + u as f64 * 0.01;
+            whole.fold(alpha, up);
+            for (c, chunk) in up.chunks(53).enumerate() {
+                chunked.fold_chunk(c * 53, alpha, chunk);
+            }
+            chunked.commit(alpha);
+        }
+        assert_eq!(whole.acc, chunked.acc);
+        assert_eq!(whole.folds(), chunked.folds());
+        assert_eq!(whole.alpha_sum(), chunked.alpha_sum());
+    }
+
+    #[test]
+    fn fold_stream_matches_fold_of_materialized_decode() {
+        use crate::quantizer::{self, CodecContext};
+        let m = 1500;
+        let up = random_update(9, m);
+        let codec = quantizer::make("uveqfed-l2").unwrap();
+        let ctx = CodecContext::new(3, 4, 11, 4.0);
+        let enc = codec.encode(&up, &ctx);
+        let mut via_stream = StreamingAggregator::new(m);
+        let mut stream = codec.decoder(&enc, m, &ctx);
+        via_stream.fold_stream(0.7, stream.as_mut());
+        let mut via_vec = StreamingAggregator::new(m);
+        via_vec.fold(0.7, &codec.decode(&enc, m, &ctx));
+        assert_eq!(via_stream.acc, via_vec.acc);
+        assert_eq!(via_stream.folds(), 1);
+        assert!((via_stream.alpha_sum() - 0.7).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn fold_chunk_rejects_overflow_past_m() {
+        let mut agg = StreamingAggregator::new(4);
+        agg.fold_chunk(2, 1.0, &[1.0, 2.0, 3.0]);
     }
 
     #[test]

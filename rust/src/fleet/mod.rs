@@ -22,6 +22,11 @@
 //! `coordinator::RoundDriver` now runs on top of this layer with
 //! [`Scenario::full`] (full participation is the degenerate preset), so
 //! the paper experiments and the fleet simulations share one code path.
+//! Rounds are described by a [`RoundSpec`] (schedule position + trainer +
+//! codec + local-SGD hyperparameters); on the uplink the driver speaks
+//! the codec **session** API — clients push tensor chunks through an
+//! `EncodeSink`, and the server folds `DecodeStream` chunks straight into
+//! the fixed-point aggregator without materializing per-user vectors.
 //!
 //! Aggregation weights: per round, the α of the clients whose updates are
 //! actually folded are re-normalized to sum to exactly one (FedAvg over
@@ -45,8 +50,28 @@ use crate::data::Dataset;
 use crate::fl::Trainer;
 use crate::metrics::Timer;
 use crate::prng::{CommonRandomness, SplitMix64};
-use crate::quantizer::{self, CodecContext, UpdateCodec};
+use crate::quantizer::{self, CodecContext, UpdateCodec, DEFAULT_CHUNK};
 use crate::util::threadpool::parallel_map_fold;
+
+/// Everything one round needs beyond the mutable state (`w`, the pool and
+/// the clock): the schedule position plus the client-side algorithm —
+/// trainer, codec, and the local-SGD hyperparameters. Collapses the old
+/// nine-positional-argument `run_round` plumbing shared by
+/// `coordinator::RoundDriver`, [`FleetDriver`] and `fl::run_federated`.
+#[derive(Clone, Copy)]
+pub struct RoundSpec<'a> {
+    /// Round index `t/τ` — drives cohort selection, dither and fault
+    /// streams.
+    pub round: u64,
+    /// τ — local SGD steps per selected client.
+    pub local_steps: usize,
+    /// Learning rate applied during this round's local steps.
+    pub lr: f32,
+    /// Mini-batch size per local step (0 = full-batch GD).
+    pub batch_size: usize,
+    pub trainer: &'a dyn Trainer,
+    pub codec: &'a dyn UpdateCodec,
+}
 
 /// A (possibly enormous) client population the fleet can draw from.
 ///
@@ -274,21 +299,16 @@ impl FleetDriver {
         &self.scenario
     }
 
-    /// Execute round `round`, updating `w` in place.
-    #[allow(clippy::too_many_arguments)]
+    /// Execute the round described by `spec`, updating `w` in place.
     pub fn run_round(
         &self,
-        round: u64,
+        spec: &RoundSpec<'_>,
         w: &mut [f32],
         pool: &dyn ClientPool,
-        trainer: &dyn Trainer,
-        codec: &dyn UpdateCodec,
-        tau: usize,
-        lr: f32,
-        batch_size: usize,
         clock: &mut VirtualClock,
     ) -> FleetRoundReport {
         let m = w.len();
+        let round = spec.round;
         let population = pool.population();
         let target = self.scenario.sampler.target(population);
         let n_select = match self.scenario.sampler {
@@ -327,9 +347,9 @@ impl FleetDriver {
         );
 
         // Fan out local training over arrivals; stream-fold as frames land.
-        let uplink = UplinkChannel::new(self.rate, codec.rate_constrained());
+        let uplink = UplinkChannel::new(self.rate, spec.codec.rate_constrained());
         let wire_codec_id =
-            quantizer::codec_id(&codec.name()).unwrap_or(quantizer::CODEC_ID_UNREGISTERED);
+            quantizer::codec_id(&spec.codec.name()).unwrap_or(quantizer::CODEC_ID_UNREGISTERED);
         let mut agg = StreamingAggregator::new(m);
         let mut desired = StreamingAggregator::new(m);
         let mut client_secs = 0.0f64;
@@ -350,20 +370,27 @@ impl FleetDriver {
                         self.seed ^ (u as u64) << 32 ^ round.wrapping_mul(0x9E37),
                     )
                     .next();
-                    let w_new = trainer.local_update(
+                    let w_new = spec.trainer.local_update(
                         w_snapshot,
                         pool.shard(u),
-                        tau,
-                        lr,
-                        batch_size,
+                        spec.local_steps,
+                        spec.lr,
+                        spec.batch_size,
                         local_seed,
                     );
                     let mut h = w_new;
                     for (hv, &wv) in h.iter_mut().zip(w_snapshot.iter()) {
                         *hv -= wv;
                     }
+                    // Client side of the session API: the update streams
+                    // through the encode sink in tensor chunks (layer-style
+                    // granularity), not as one monolithic buffer.
                     let ctx = CodecContext::new(u as u64, round, self.seed, self.rate);
-                    let enc = codec.encode(&h, &ctx);
+                    let mut sink = spec.codec.encoder(&ctx, m);
+                    for chunk in h.chunks(DEFAULT_CHUNK) {
+                        sink.push(chunk);
+                    }
+                    let enc = sink.finish();
                     let frame = wire::encode_frame(u as u64, round, wire_codec_id, &enc);
                     (frame, h, t.elapsed_secs())
                 },
@@ -378,8 +405,12 @@ impl FleetDriver {
                             let alpha = pool.weight(arrivals_ref[i].1) / arrived_weight;
                             let ctx =
                                 CodecContext::new(f.user, f.round, self.seed, self.rate);
-                            let dec = codec.decode(&f.payload, m, &ctx);
-                            agg.fold(alpha, &dec);
+                            // Server side of the session API: decode-stream
+                            // chunks fold straight into the fixed-point
+                            // accumulator — no per-user Vec<f32> is ever
+                            // materialized here.
+                            let mut stream = spec.codec.decoder(&f.payload, m, &ctx);
+                            agg.fold_stream(alpha, stream.as_mut());
                             desired.fold(alpha, &h);
                         }
                         Err(_) => budget_violations += 1,
@@ -435,25 +466,23 @@ mod tests {
         (shards, NativeTrainer::new(model))
     }
 
+    fn spec<'a>(
+        round: u64,
+        trainer: &'a dyn Trainer,
+        codec: &'a dyn UpdateCodec,
+    ) -> RoundSpec<'a> {
+        RoundSpec { round, local_steps: 1, lr: 0.5, batch_size: 0, trainer, codec }
+    }
+
     #[test]
     fn sampled_round_aggregates_the_cohort_only() {
         let (shards, trainer) = setup(8, 30);
         let pool = ShardPool::new(&shards);
-        let codec = quantizer::by_name("qsgd");
+        let codec = quantizer::make("qsgd").unwrap();
         let driver = FleetDriver::new(5, 2.0, 2, Scenario::sampled(3));
         let mut clock = VirtualClock::new();
         let mut w = trainer.init_params(3);
-        let rep = driver.run_round(
-            0,
-            &mut w,
-            &pool,
-            &trainer,
-            codec.as_ref(),
-            1,
-            0.5,
-            0,
-            &mut clock,
-        );
+        let rep = driver.run_round(&spec(0, &trainer, codec.as_ref()), &mut w, &pool, &mut clock);
         assert_eq!(rep.selected, 3);
         assert_eq!(rep.aggregated, 3);
         assert_eq!(rep.completion_rate, 1.0);
@@ -467,24 +496,14 @@ mod tests {
     fn worker_count_does_not_change_the_model() {
         let (shards, trainer) = setup(6, 25);
         let pool = ShardPool::new(&shards);
-        let codec = quantizer::by_name("uveqfed-l2");
+        let codec = quantizer::make("uveqfed-l2").unwrap();
         let scenario = Scenario::stragglers(4, 5.0);
         let run = |workers: usize| {
             let driver = FleetDriver::new(9, 2.0, workers, scenario.clone());
             let mut clock = VirtualClock::new();
             let mut w = trainer.init_params(1);
             for round in 0..3 {
-                driver.run_round(
-                    round,
-                    &mut w,
-                    &pool,
-                    &trainer,
-                    codec.as_ref(),
-                    1,
-                    0.5,
-                    0,
-                    &mut clock,
-                );
+                driver.run_round(&spec(round, &trainer, codec.as_ref()), &mut w, &pool, &mut clock);
             }
             w
         };
@@ -495,24 +514,14 @@ mod tests {
     fn dropout_one_freezes_the_model() {
         let (shards, trainer) = setup(4, 20);
         let pool = ShardPool::new(&shards);
-        let codec = quantizer::by_name("qsgd");
+        let codec = quantizer::make("qsgd").unwrap();
         let mut scenario = Scenario::sampled(4);
         scenario.faults.dropout = 1.0;
         let driver = FleetDriver::new(2, 2.0, 2, scenario);
         let mut clock = VirtualClock::new();
         let mut w = trainer.init_params(1);
         let w0 = w.clone();
-        let rep = driver.run_round(
-            0,
-            &mut w,
-            &pool,
-            &trainer,
-            codec.as_ref(),
-            1,
-            0.5,
-            0,
-            &mut clock,
-        );
+        let rep = driver.run_round(&spec(0, &trainer, codec.as_ref()), &mut w, &pool, &mut clock);
         assert_eq!(rep.aggregated, 0);
         assert_eq!(rep.dropped, rep.selected);
         assert_eq!(rep.completion_rate, 0.0);

@@ -64,7 +64,7 @@ mod tests {
     fn dither_in_cell_all_lattices() {
         let mut rng = Xoshiro256pp::seed_from_u64(51);
         for name in ["scalar", "hex", "d4", "e8"] {
-            let lat = lattice::by_name(name);
+            let lat = lattice::by_name(name).unwrap();
             for _ in 0..300 {
                 let z = sample_dither(lat.as_ref(), &mut rng);
                 assert_in_voronoi(lat.as_ref(), &z);

@@ -127,9 +127,10 @@ pub fn cubic(dim: usize, delta: f64) -> GenericLattice {
 }
 
 /// Construct a lattice by config name. Scale 1.0; callers apply
-/// `GenericLattice::scaled` / codec-level scaling afterwards.
-pub fn by_name(name: &str) -> Box<dyn Lattice> {
-    match name {
+/// `GenericLattice::scaled` / codec-level scaling afterwards. Unknown
+/// names are an error listing the valid lattices, not a panic.
+pub fn by_name(name: &str) -> crate::Result<Box<dyn Lattice>> {
+    Ok(match name {
         "scalar" => Box::new(scalar(1.0)),
         "hex" | "hex-paper" => Box::new(paper_hexagonal()),
         "hex-a2" => Box::new(a2_hexagonal()),
@@ -137,8 +138,10 @@ pub fn by_name(name: &str) -> Box<dyn Lattice> {
         "cubic4" => Box::new(cubic(4, 1.0)),
         "d4" => Box::new(DnLattice::new(4, 1.0)),
         "e8" => Box::new(E8Lattice::new(1.0)),
-        other => panic!("unknown lattice '{other}'"),
-    }
+        other => crate::bail!(
+            "unknown lattice '{other}' (valid: scalar, hex, hex-a2, cubic2, cubic4, d4, e8)"
+        ),
+    })
 }
 
 #[cfg(test)]
@@ -174,10 +177,17 @@ mod tests {
     #[test]
     fn by_name_constructs_all() {
         for n in ["scalar", "hex", "hex-a2", "cubic2", "cubic4", "d4", "e8"] {
-            let lat = by_name(n);
+            let lat = by_name(n).unwrap();
             let z = vec![0.3; lat.dim()];
             let q = lat.quantize(&z);
             assert_eq!(q.len(), lat.dim());
         }
+    }
+
+    #[test]
+    fn by_name_unknown_is_an_error() {
+        let err = by_name("nope").unwrap_err().to_string();
+        assert!(err.contains("unknown lattice 'nope'"), "{err}");
+        assert!(err.contains("e8"), "{err}");
     }
 }

@@ -5,10 +5,14 @@
 //! TSP 2020) as a three-layer Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the federated coordinator: round scheduling,
-//!   client fan-out, the UVeQFed codec and every baseline, the
-//!   rate-constrained uplink, aggregation, metrics, and the `fleet::`
-//!   simulator (cohort sampling, stragglers, wire framing, streaming
-//!   O(m) aggregation) for populations far beyond the paper's K ≤ 100;
+//!   client fan-out, the UVeQFed codec and every baseline behind the
+//!   streaming session API (`quantizer::UpdateCodec::encoder` /
+//!   `::decoder` — chunked encode sinks and decode streams that fold
+//!   straight into the aggregator, with a fallible parameterized
+//!   `CodecSpec` registry), the rate-constrained uplink, aggregation,
+//!   metrics, and the `fleet::` simulator (cohort sampling, stragglers,
+//!   wire framing, streaming O(m) aggregation, `RoundSpec`-driven
+//!   rounds) for populations far beyond the paper's K ≤ 100;
 //! * **L2 (python/compile/model.py)** — JAX forward/backward graphs for the
 //!   paper's models, AOT-lowered to HLO text in `artifacts/`;
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (dithered lattice

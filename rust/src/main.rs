@@ -9,24 +9,29 @@
 //!
 //! Examples: `uveqfed train --config configs/fig6_mnist_k100_r2.toml`,
 //! `uveqfed fleet --population 100000 --cohort 256 --scenario stragglers`,
-//! `uveqfed distort --codec uveqfed-l2 --rate 2`.
+//! `uveqfed distort --codec uveqfed-l2:zeta=3.0 --rate 2`.
+//!
+//! Codec strings go through the fallible `quantizer::make` registry:
+//! typos and bad parameters surface as errors listing the valid codecs,
+//! never as panics.
 
 use uveqfed::data::{partition, PartitionScheme, SynthCifar, SynthMnist};
 use uveqfed::fl::{run_federated, FlConfig, NativeTrainer, Trainer};
-use uveqfed::fleet::{FleetDriver, RoundRobinPool, Scenario, VirtualClock};
+use uveqfed::fleet::{FleetDriver, RoundRobinPool, RoundSpec, Scenario, VirtualClock};
 use uveqfed::lattice;
 use uveqfed::models::LogReg;
 use uveqfed::models::{CnnLite, MlpMnist};
 use uveqfed::quantizer;
 use uveqfed::runtime;
-use uveqfed::util::cli::Cli;
+use uveqfed::util::cli::{Args, Cli};
 use uveqfed::util::config::Config;
+use uveqfed::util::error::{Context, Error};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let sub = argv.first().map(|s| s.as_str()).unwrap_or("help");
     let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
-    match sub {
+    let result = match sub {
         "train" => cmd_train(rest),
         "fleet" => cmd_fleet(rest),
         "distort" => cmd_distort(rest),
@@ -34,32 +39,36 @@ fn main() {
         _ => {
             println!(
                 "uveqfed — Universal Vector Quantization for Federated Learning\n\n\
-                 subcommands:\n  train   --config <file> [--codec NAME] [--rate R] [--rounds N]\n  \
-                 fleet   --population N --cohort K --scenario NAME [--rounds N] [--codec NAME]\n  \
-                 distort --codec NAME --rate R [--size N]\n  info\n\n\
+                 subcommands:\n  train   --config <file> [--codec SPEC] [--rate R] [--rounds N]\n  \
+                 fleet   --population N --cohort K --scenario NAME [--rounds N] [--codec SPEC]\n  \
+                 distort --codec SPEC --rate R [--size N]\n  info\n\n\
+                 Codec SPEC grammar: name[:key=value,...] — e.g. uveqfed-l2, qsgd:max_levels=4096.\n\
                  See configs/*.toml for the paper's experiment setups."
             );
+            Ok(())
         }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(2);
     }
 }
 
-fn cmd_train(argv: &[String]) {
+fn parse_args(cli: &Cli, argv: &[String]) -> uveqfed::Result<Args> {
+    cli.parse(argv).map_err(Error::msg)
+}
+
+fn cmd_train(argv: &[String]) -> uveqfed::Result<()> {
     let cli = Cli::new("uveqfed train", "run a federated experiment")
         .req("config", "TOML config file (see configs/)")
-        .opt("codec", "", "override quantizer.kind")
+        .opt("codec", "", "override quantizer.kind (spec: name[:key=value,...])")
         .opt("rate", "", "override quantizer.rate")
         .opt("rounds", "", "override fl.rounds")
         .opt("out", "", "write history CSV here")
         .flag("verbose", "per-eval logging");
-    let args = match cli.parse(argv) {
-        Ok(a) => a,
-        Err(e) => {
-            eprintln!("{e}");
-            std::process::exit(2);
-        }
-    };
-    let conf = Config::from_file(args.get("config")).expect("config load");
-    let mut flc = FlConfig::from_config(&conf);
+    let args = parse_args(&cli, argv)?;
+    let conf = Config::from_file(args.get("config")).context("config load")?;
+    let mut flc = FlConfig::from_config(&conf)?;
     flc.verbose = flc.verbose || args.has_flag("verbose");
     if !args.get("rate").is_empty() {
         flc.rate = args.get_f64("rate");
@@ -72,7 +81,7 @@ fn cmd_train(argv: &[String]) {
     } else {
         args.get("codec").to_string()
     };
-    let codec = quantizer::by_name(&codec_name);
+    let codec = quantizer::make(&codec_name)?;
 
     let dataset = conf.str_or("data.dataset", "mnist");
     let n_per_user = conf.usize_or("data.samples_per_user", 500);
@@ -85,7 +94,9 @@ fn cmd_train(argv: &[String]) {
         "dirichlet" => PartitionScheme::Dirichlet {
             alpha: conf.f64_or("data.dirichlet_alpha", 0.5),
         },
-        other => panic!("unknown partition '{other}'"),
+        other => uveqfed::bail!(
+            "unknown data.partition '{other}' (iid|sequential|dominant|dirichlet)"
+        ),
     };
     let seed = flc.seed;
     let test_n = conf.usize_or("data.test_samples", 1000);
@@ -100,7 +111,7 @@ fn cmd_train(argv: &[String]) {
             {
                 "hlo" => Box::new(
                     runtime::HloTrainer::load("mnist", conf.usize_or("model.step_batch", n_per_user))
-                        .expect("load HLO trainer (run `make artifacts`)"),
+                        .context("load HLO trainer (run `make artifacts`)")?,
                 ),
                 _ => Box::new(NativeTrainer::new(MlpMnist::new(
                     conf.usize_or("model.hidden", 50),
@@ -117,7 +128,7 @@ fn cmd_train(argv: &[String]) {
             {
                 "hlo" => Box::new(
                     runtime::HloTrainer::load("cifar", conf.usize_or("model.step_batch", 60))
-                        .expect("load HLO trainer (run `make artifacts`)"),
+                        .context("load HLO trainer (run `make artifacts`)")?,
                 ),
                 _ => Box::new(NativeTrainer::new(CnnLite::cifar())),
             };
@@ -135,7 +146,7 @@ fn cmd_train(argv: &[String]) {
             )));
             (shards, test, trainer)
         }
-        other => panic!("unknown dataset '{other}'"),
+        other => uveqfed::bail!("unknown data.dataset '{other}' (mnist|cifar|logreg-mnist)"),
     };
 
     println!(
@@ -154,18 +165,19 @@ fn cmd_train(argv: &[String]) {
     );
     let out = args.get("out");
     if !out.is_empty() {
-        hist.to_table().write_file(out).expect("write history");
+        hist.to_table().write_file(out).context("write history")?;
         println!("history → {out}");
     }
+    Ok(())
 }
 
-fn cmd_fleet(argv: &[String]) {
+fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
     let cli = Cli::new("uveqfed fleet", "fleet-scale federated simulation")
         .opt("population", "10000", "total client population")
         .opt("cohort", "64", "aggregation target per round")
         .opt("scenario", "stragglers", "full|sampled|weighted|stragglers|flaky")
         .opt("rounds", "10", "rounds to simulate")
-        .opt("codec", "uveqfed-l2", "update codec")
+        .opt("codec", "uveqfed-l2", "update codec (spec: name[:key=value,...])")
         .opt("rate", "2", "bits per model parameter")
         .opt("seed", "1", "root seed")
         .opt("workers", "0", "fan-out threads (0 = auto)")
@@ -173,13 +185,7 @@ fn cmd_fleet(argv: &[String]) {
         .opt("dropout", "", "override per-client dropout probability")
         .opt("templates", "16", "distinct template shards backing the population")
         .opt("samples", "120", "samples per template shard");
-    let args = match cli.parse(argv) {
-        Ok(a) => a,
-        Err(e) => {
-            eprintln!("{e}");
-            std::process::exit(2);
-        }
-    };
+    let args = parse_args(&cli, argv)?;
     let population = args.get_usize("population");
     let cohort = args.get_usize("cohort");
     let rounds = args.get_usize("rounds");
@@ -188,10 +194,7 @@ fn cmd_fleet(argv: &[String]) {
     if workers == 0 {
         workers = uveqfed::util::threadpool::default_workers();
     }
-    let mut scenario = Scenario::by_name(args.get("scenario"), cohort).unwrap_or_else(|e| {
-        eprintln!("{e}");
-        std::process::exit(2);
-    });
+    let mut scenario = Scenario::by_name(args.get("scenario"), cohort)?;
     if !args.get("deadline").is_empty() {
         scenario.faults.deadline = Some(args.get_f64("deadline"));
     }
@@ -210,7 +213,7 @@ fn cmd_fleet(argv: &[String]) {
     let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
     let pool = RoundRobinPool::synthetic(population, templates, seed);
 
-    let codec = quantizer::by_name(args.get("codec"));
+    let codec = quantizer::make(args.get("codec"))?;
     let rate = args.get_f64("rate");
     let driver = FleetDriver::new(seed, rate, workers, scenario.clone());
     let mut clock = VirtualClock::new();
@@ -228,17 +231,15 @@ fn cmd_fleet(argv: &[String]) {
     let mut wire_total = 0usize;
     let mut violations = 0usize;
     for round in 0..rounds {
-        let rep = driver.run_round(
-            round as u64,
-            &mut w,
-            &pool,
-            &trainer,
-            codec.as_ref(),
-            1,
-            0.5,
-            0,
-            &mut clock,
-        );
+        let spec = RoundSpec {
+            round: round as u64,
+            local_steps: 1,
+            lr: 0.5,
+            batch_size: 0,
+            trainer: &trainer,
+            codec: codec.as_ref(),
+        };
+        let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
         wire_total += rep.wire_bytes;
         violations += rep.budget_violations;
         println!(
@@ -262,23 +263,18 @@ fn cmd_fleet(argv: &[String]) {
         clock.now(),
         wire_total as f64 / 1e6,
     );
+    Ok(())
 }
 
-fn cmd_distort(argv: &[String]) {
+fn cmd_distort(argv: &[String]) -> uveqfed::Result<()> {
     let cli = Cli::new("uveqfed distort", "measure codec distortion on Gaussian data")
-        .opt("codec", "uveqfed-l2", "codec name")
+        .opt("codec", "uveqfed-l2", "codec spec (name[:key=value,...])")
         .opt("rate", "2", "bits per entry")
         .opt("size", "128", "matrix side (size×size entries)")
         .opt("trials", "10", "averaging trials")
         .flag("correlated", "use ΣHΣᵀ correlated data (Fig. 5)");
-    let args = match cli.parse(argv) {
-        Ok(a) => a,
-        Err(e) => {
-            eprintln!("{e}");
-            std::process::exit(2);
-        }
-    };
-    let codec = quantizer::by_name(args.get("codec"));
+    let args = parse_args(&cli, argv)?;
+    let codec = quantizer::make(args.get("codec"))?;
     let rate = args.get_f64("rate");
     let n = args.get_usize("size");
     let trials = args.get_usize("trials");
@@ -298,13 +294,14 @@ fn cmd_distort(argv: &[String]) {
         "codec={} rate={rate} size={n}x{n} trials={trials}\n  per-entry MSE {mse:.6e}\n  bits/entry  {bpe:.4}",
         codec.name()
     );
+    Ok(())
 }
 
-fn cmd_info() {
+fn cmd_info() -> uveqfed::Result<()> {
     println!("uveqfed info");
     println!("lattices:");
     for name in ["scalar", "hex", "hex-a2", "cubic2", "d4", "e8"] {
-        let lat = lattice::by_name(name);
+        let lat = lattice::by_name(name)?;
         println!(
             "  {name:<8} L={} det={:.4} σ̄²={:.6} G(Λ)={:.6}",
             lat.dim(),
@@ -316,10 +313,12 @@ fn cmd_info() {
     println!(
         "codecs: uveqfed-l1/-l2/-l4/-l8, qsgd, rotation, subsample, terngrad, signsgd, topk, identity"
     );
+    println!("codec spec grammar: name[:key=value,...] — see `quantizer::CodecSpec`");
     print!("artifacts: ");
     if runtime::artifacts_available() {
         println!("available at {:?}", runtime::artifacts_dir());
     } else {
         println!("NOT built (run `make artifacts`)");
     }
+    Ok(())
 }

@@ -1,26 +1,61 @@
 //! Unquantized passthrough — the "federated averaging without quantization
 //! constraints" reference curve in Figs. 6–11.
+//!
+//! Both sessions are genuinely single-pass: the encode sink serializes
+//! each pushed chunk straight into the output bit stream (no input
+//! buffering at all), and the decode stream reads f32s chunk by chunk.
 
-use super::{CodecContext, Encoded, UpdateCodec};
+use super::{CodecContext, DecodeStream, Encoded, EncodeSink, EntryStream, UpdateCodec};
 use crate::entropy::{BitReader, BitWriter};
 
 #[derive(Debug, Clone, Copy, Default)]
 pub struct IdentityCodec;
+
+struct IdentitySink {
+    w: BitWriter,
+    pushed: usize,
+    expected: usize,
+}
+
+impl EncodeSink for IdentitySink {
+    fn push(&mut self, chunk: &[f32]) {
+        for &v in chunk {
+            self.w.push_f32(v);
+        }
+        self.pushed += chunk.len();
+    }
+
+    fn finish(self: Box<Self>) -> Encoded {
+        assert_eq!(self.pushed, self.expected, "identity sink fed wrong length");
+        let bits = self.w.bit_len();
+        Encoded { bytes: self.w.into_bytes(), bits }
+    }
+}
 
 impl UpdateCodec for IdentityCodec {
     fn name(&self) -> String {
         "identity".into()
     }
 
-    fn encode(&self, h: &[f32], _ctx: &CodecContext) -> Encoded {
-        let mut w = BitWriter::with_capacity(h.len() * 4);
-        for &v in h {
-            w.push_f32(v);
-        }
-        let bits = w.bit_len();
-        Encoded { bytes: w.into_bytes(), bits }
+    fn encoder(&self, _ctx: &CodecContext, m: usize) -> Box<dyn EncodeSink + '_> {
+        Box::new(IdentitySink {
+            w: BitWriter::with_capacity(m * 4),
+            pushed: 0,
+            expected: m,
+        })
     }
 
+    fn decoder<'a>(
+        &'a self,
+        msg: &'a Encoded,
+        m: usize,
+        _ctx: &CodecContext,
+    ) -> Box<dyn DecodeStream + 'a> {
+        let mut r = BitReader::new(&msg.bytes);
+        Box::new(EntryStream::new(m, move || r.read_f32()))
+    }
+
+    /// Skip the session scratch buffer for the whole-buffer entry point.
     fn decode(&self, msg: &Encoded, m: usize, _ctx: &CodecContext) -> Vec<f32> {
         let mut r = BitReader::new(&msg.bytes);
         (0..m).map(|_| r.read_f32()).collect()
@@ -42,5 +77,25 @@ mod tests {
         let enc = IdentityCodec.encode(&h, &ctx);
         assert_eq!(enc.bits, h.len() * 32);
         assert_eq!(IdentityCodec.decode(&enc, h.len(), &ctx), h);
+    }
+
+    #[test]
+    fn chunked_push_is_bit_identical() {
+        let h: Vec<f32> = (0..37).map(|i| i as f32 * 0.5 - 9.0).collect();
+        let ctx = CodecContext::new(0, 0, 1, 2.0);
+        let whole = IdentityCodec.encode(&h, &ctx);
+        let mut sink = IdentityCodec.encoder(&ctx, h.len());
+        for c in h.chunks(5) {
+            sink.push(c);
+        }
+        assert_eq!(sink.finish(), whole);
+    }
+
+    #[test]
+    fn streaming_sink_holds_no_input_state() {
+        let ctx = CodecContext::new(0, 0, 1, 2.0);
+        let mut sink = IdentityCodec.encoder(&ctx, 8);
+        sink.push(&[1.0; 8]);
+        assert_eq!(sink.state_bytes(), 0, "identity buffers nothing beyond the output");
     }
 }

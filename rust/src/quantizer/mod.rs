@@ -5,16 +5,33 @@
 //! §V, behind one [`UpdateCodec`] interface so the federated runtime and
 //! the distortion benches can swap them freely:
 //!
-//! | codec | paper ref | module |
-//! |---|---|---|
-//! | UVeQFed (L = 1, 2, 4, 8) | §III | [`uveqfed`] |
-//! | QSGD | [17] | [`qsgd`] |
-//! | uniform + random rotation | [12] | [`rotation`] |
-//! | random subsampling + 3-bit uniform | [12] | [`subsample`] |
-//! | TernGrad-style ternary (extension) | [16] | [`terngrad`] |
-//! | sign-SGD with norm scaling (extension) | [21] | [`signsgd`] |
-//! | top-k sparsification (extension) | [13]–[15] | [`topk`] |
-//! | identity (unquantized FedAvg reference) | — | [`identity`] |
+//! | codec | paper ref | module | encode session | decode session |
+//! |---|---|---|---|---|
+//! | UVeQFed (L = 1, 2, 4, 8) | §III | [`uveqfed`] | buffered (needs ‖h‖) | streaming, lattice-block chunks |
+//! | QSGD | [17] | [`qsgd`] | buffered (level search) | streaming |
+//! | uniform + random rotation | [12] | [`rotation`] | buffered (full FWHT) | buffered |
+//! | random subsampling + 3-bit uniform | [12] | [`subsample`] | buffered (range scan) | buffered (scatter) |
+//! | TernGrad-style ternary (extension) | [16] | [`terngrad`] | buffered (max scan) | streaming |
+//! | sign-SGD with norm scaling (extension) | [21] | [`signsgd`] | streaming (ℓ1 + sign side-buffer) | streaming |
+//! | top-k sparsification (extension) | [13]–[15] | [`topk`] | buffered (global sort) | buffered (scatter) |
+//! | identity (unquantized FedAvg reference) | — | [`identity`] | streaming | streaming |
+//!
+//! ## Sessions
+//!
+//! Since the Codec API v2 redesign the primary interface is **stateful
+//! sessions**: [`UpdateCodec::encoder`] returns an [`EncodeSink`] that
+//! accepts tensor chunks (`push` … `finish`), and [`UpdateCodec::decoder`]
+//! returns a [`DecodeStream`] whose chunks fold straight into the fleet's
+//! fixed-point streaming aggregator — the server never materializes a
+//! per-user `Vec<f32>`. The whole-buffer [`UpdateCodec::encode`] /
+//! [`UpdateCodec::decode`] remain as default-method adapters over the
+//! sessions, so callers that hold complete updates keep working and are
+//! bit-identical to the chunked path by construction (property-tested in
+//! `tests/integration_sessions.rs`).
+//!
+//! Codec construction is **fallible and parameterized** via
+//! [`CodecSpec`] / [`make`]; the old panicking [`by_name`] survives only
+//! as a deprecated wrapper.
 //!
 //! Every encoder reports the **exact** number of bits it used; the uplink
 //! accounting in `fl::` and the distortion figures consume that number, so
@@ -24,7 +41,9 @@ pub mod identity;
 pub mod qsgd;
 pub mod rate;
 pub mod rotation;
+pub mod session;
 pub mod signsgd;
+pub mod spec;
 pub mod subsample;
 pub mod terngrad;
 pub mod topk;
@@ -33,7 +52,9 @@ pub mod uveqfed;
 pub use identity::IdentityCodec;
 pub use qsgd::Qsgd;
 pub use rotation::RotationUniform;
+pub use session::{BufferedSink, EntryStream, SliceStream, DEFAULT_CHUNK};
 pub use signsgd::SignSgd;
+pub use spec::{CodecSpec, LatticeDim};
 pub use subsample::SubsampleUniform;
 pub use terngrad::TernGrad;
 pub use topk::TopK;
@@ -77,16 +98,78 @@ impl Encoded {
     }
 }
 
+/// Client side of a codec session: accepts the update as tensor chunks
+/// and produces the coded message at the end.
+///
+/// Chunks may have any sizes (including empty); their concatenation must
+/// total exactly the `m` entries the session was opened for. The coded
+/// output is independent of the chunk partition — any partition is
+/// bit-identical to a single whole-buffer `push` (property-tested).
+pub trait EncodeSink {
+    /// Append the next chunk of the update.
+    fn push(&mut self, chunk: &[f32]);
+
+    /// Approximate bytes of encoder state currently held (input buffers,
+    /// partial side-buffers), **excluding** the final coded output. The
+    /// `fleet_scale` bench meters this to measure — not assert — each
+    /// codec's client-side memory profile.
+    fn state_bytes(&self) -> usize {
+        0
+    }
+
+    /// Seal the session and return the coded message with exact bit
+    /// accounting.
+    fn finish(self: Box<Self>) -> Encoded;
+}
+
+/// Server side of a codec session: yields the decoded update as chunks,
+/// in order. The concatenation of all chunks is exactly the `m`-entry
+/// decoded update (identical to [`UpdateCodec::decode`]).
+pub trait DecodeStream {
+    /// The next decoded chunk, or `None` once all `m` entries were
+    /// yielded. The returned slice is only valid until the next call.
+    fn next_chunk(&mut self) -> Option<&[f32]>;
+}
+
 /// A lossy model-update codec. Encoders MUST stay within
-/// `ctx.budget_bits(h.len())` unless the codec is explicitly exempt
-/// (identity) — the runtime asserts this on every uplink message.
+/// `ctx.budget_bits(m)` unless the codec is explicitly exempt (identity)
+/// — the runtime asserts this on every uplink message.
+///
+/// Implementors provide the session constructors ([`Self::encoder`] /
+/// [`Self::decoder`]); the whole-buffer [`Self::encode`] /
+/// [`Self::decode`] are default adapters over them.
 pub trait UpdateCodec: Send + Sync {
     fn name(&self) -> String;
 
-    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded;
+    /// Open an encode session for an `m`-entry update.
+    fn encoder(&self, ctx: &CodecContext, m: usize) -> Box<dyn EncodeSink + '_>;
 
-    /// Decode an update of known length `m` (the server knows the model).
-    fn decode(&self, msg: &Encoded, m: usize, ctx: &CodecContext) -> Vec<f32>;
+    /// Open a decode session over `msg` for an update of known length `m`
+    /// (the server knows the model).
+    fn decoder<'a>(
+        &'a self,
+        msg: &'a Encoded,
+        m: usize,
+        ctx: &CodecContext,
+    ) -> Box<dyn DecodeStream + 'a>;
+
+    /// Whole-buffer encode: a one-`push` session.
+    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+        let mut sink = self.encoder(ctx, h.len());
+        sink.push(h);
+        sink.finish()
+    }
+
+    /// Whole-buffer decode: drains the decode session into a vector.
+    fn decode(&self, msg: &Encoded, m: usize, ctx: &CodecContext) -> Vec<f32> {
+        let mut out = Vec::with_capacity(m);
+        let mut stream = self.decoder(msg, m, ctx);
+        while let Some(chunk) = stream.next_chunk() {
+            out.extend_from_slice(chunk);
+        }
+        debug_assert_eq!(out.len(), m, "decode stream length mismatch");
+        out
+    }
 
     /// Whether the codec respects the bit budget (identity does not).
     fn rate_constrained(&self) -> bool {
@@ -94,24 +177,21 @@ pub trait UpdateCodec: Send + Sync {
     }
 }
 
-/// Construct a codec from a config-style name. Lattice dims for UVeQFed
-/// are selected by suffix: `uveqfed-l1`, `uveqfed-l2` (hex), `uveqfed-l4`
-/// (D4), `uveqfed-l8` (E8).
+/// Construct a codec from a spec string — the fallible registry entry
+/// point. Accepts every canonical name and alias plus `key=value`
+/// parameters; see [`CodecSpec`] for the grammar. Errors name the valid
+/// codecs instead of panicking.
+pub fn make(spec: &str) -> crate::Result<Box<dyn UpdateCodec>> {
+    CodecSpec::parse(spec).map(|s| s.build())
+}
+
+/// Construct a codec from a config-style name.
+#[deprecated(
+    since = "0.2.0",
+    note = "panics on unknown names; use `quantizer::make` / `CodecSpec::parse`"
+)]
 pub fn by_name(name: &str) -> Box<dyn UpdateCodec> {
-    match name {
-        "uveqfed-l1" => Box::new(UVeQFed::scalar()),
-        "uveqfed" | "uveqfed-l2" => Box::new(UVeQFed::hexagonal()),
-        "uveqfed-l4" => Box::new(UVeQFed::d4()),
-        "uveqfed-l8" => Box::new(UVeQFed::e8()),
-        "qsgd" => Box::new(Qsgd::default()),
-        "rotation" => Box::new(RotationUniform::default()),
-        "subsample" => Box::new(SubsampleUniform::default()),
-        "terngrad" => Box::new(TernGrad::default()),
-        "signsgd" => Box::new(SignSgd::default()),
-        "topk" => Box::new(TopK::default()),
-        "identity" | "none" => Box::new(IdentityCodec),
-        other => panic!("unknown codec '{other}'"),
-    }
+    make(name).unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Stable codec ids for the fleet wire format (`fleet::wire`).
@@ -133,7 +213,7 @@ const WIRE_CODECS: &[(u8, &str, &[&str])] = &[
     (10, "topk", &[]),
 ];
 
-/// Wire id for a codec name — accepts both the `by_name` config keys and
+/// Wire id for a codec name — accepts both the registry config keys and
 /// the `UpdateCodec::name()` display names. `None` for unregistered
 /// variants (e.g. ablation-only `-nosub` codecs), which frames carry as
 /// [`CODEC_ID_UNREGISTERED`].
@@ -190,27 +270,31 @@ mod tests {
 
     #[test]
     fn registry_constructs_all() {
-        for n in [
-            "uveqfed-l1",
-            "uveqfed-l2",
-            "uveqfed-l4",
-            "uveqfed-l8",
-            "qsgd",
-            "rotation",
-            "subsample",
-            "terngrad",
-            "signsgd",
-            "topk",
-            "identity",
-        ] {
-            let c = by_name(n);
+        for n in registered_codec_names() {
+            let c = make(n).unwrap_or_else(|e| panic!("{n}: {e}"));
             assert!(!c.name().is_empty());
         }
     }
 
     #[test]
+    fn unknown_codec_is_an_error_listing_valid_names() {
+        let err = make("nope").unwrap_err().to_string();
+        assert!(err.contains("unknown codec 'nope'"), "{err}");
+        for n in registered_codec_names() {
+            assert!(err.contains(n), "error should list '{n}': {err}");
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_by_name_still_constructs() {
+        assert_eq!(by_name("uveqfed-l2").name(), "uveqfed-hex-paper");
+    }
+
+    #[test]
     #[should_panic]
-    fn unknown_codec_panics() {
+    #[allow(deprecated)]
+    fn deprecated_by_name_panics_on_unknown() {
         let _ = by_name("nope");
     }
 
@@ -220,7 +304,7 @@ mod tests {
             let id = codec_id(name).expect(name);
             assert_eq!(codec_name(id), Some(name));
             // Display names of constructed codecs resolve to the same id.
-            let codec = by_name(name);
+            let codec = make(name).unwrap();
             assert_eq!(codec_id(&codec.name()), Some(id), "display name {}", codec.name());
         }
         assert_eq!(codec_id("uveqfed"), codec_id("uveqfed-l2"));

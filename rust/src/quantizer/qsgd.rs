@@ -10,10 +10,17 @@
 //! subtraction** — the comparison the paper draws in §III-B. The level
 //! count is halved until the encoding fits the bit budget, mirroring how
 //! the paper operates QSGD "with the same overall number of bits".
+//!
+//! Sessions: the encode sink is buffered (the level-count bisection needs
+//! `‖h‖₂` and the whole coordinate stream); the decode stream is
+//! single-pass for both wire formats (Elias directly off the bit reader,
+//! range-coded via the incremental [`SymbolDecoder`]).
 
-use super::{CodecContext, Encoded, UpdateCodec};
+use super::{
+    BufferedSink, CodecContext, DecodeStream, Encoded, EncodeSink, EntryStream, UpdateCodec,
+};
 use crate::entropy::elias::EliasGamma;
-use crate::entropy::range::AdaptiveRangeCoder;
+use crate::entropy::range::{AdaptiveRangeCoder, SymbolDecoder};
 use crate::entropy::{BitReader, BitWriter, IntCoder};
 use crate::prng::{Rng, StreamKind};
 use crate::util::stats::l2_norm;
@@ -80,14 +87,10 @@ impl Qsgd {
         }
         w
     }
-}
 
-impl UpdateCodec for Qsgd {
-    fn name(&self) -> String {
-        "qsgd".into()
-    }
-
-    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+    /// Whole-buffer encoder (runs at `EncodeSink::finish`; the level
+    /// search is a global two-pass procedure).
+    fn encode_whole(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
         let budget = ctx.budget_bits(h.len());
         let norm = l2_norm(h);
         if norm == 0.0 || budget < 96 {
@@ -134,41 +137,67 @@ impl UpdateCodec for Qsgd {
         debug_assert!(bits <= budget);
         Encoded { bytes: w.into_bytes(), bits }
     }
+}
 
-    fn decode(&self, msg: &Encoded, m: usize, _ctx: &CodecContext) -> Vec<f32> {
+/// The two single-pass QSGD wire formats a decode session can be in.
+enum QsgdMode<'a> {
+    Elias(BitReader<'a>),
+    Range(SymbolDecoder<'a>),
+}
+
+impl UpdateCodec for Qsgd {
+    fn name(&self) -> String {
+        "qsgd".into()
+    }
+
+    fn encoder(&self, ctx: &CodecContext, m: usize) -> Box<dyn EncodeSink + '_> {
+        let ctx = *ctx;
+        Box::new(BufferedSink::new(m, move |h: &[f32]| self.encode_whole(h, &ctx)))
+    }
+
+    /// Skip the session input buffer for the whole-buffer entry point.
+    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+        self.encode_whole(h, ctx)
+    }
+
+    fn decoder<'a>(
+        &'a self,
+        msg: &'a Encoded,
+        m: usize,
+        _ctx: &CodecContext,
+    ) -> Box<dyn DecodeStream + 'a> {
         let mut r = BitReader::new(&msg.bytes);
         let norm = r.read_f32() as f64;
         let raw = r.read_u32();
         let range_coded = raw & RANGE_CODED_FLAG != 0;
         let levels = raw & !RANGE_CODED_FLAG;
         if norm == 0.0 || levels == 0 {
-            return vec![0.0; m];
+            return Box::new(EntryStream::new(m, || 0.0));
         }
         let s = levels as f64;
-        if range_coded {
-            return AdaptiveRangeCoder::default()
-                .decode(m, &mut r)
-                .into_iter()
-                .map(|x| (norm * x as f64 / s) as f32)
-                .collect();
-        }
-        let mut out = Vec::with_capacity(m);
-        for _ in 0..m {
-            let xi = EliasGamma::get(&mut r) - 1;
-            let mut v = norm * xi as f64 / s;
-            if xi > 0 && r.read_bit() {
-                v = -v;
+        let mut mode = if range_coded {
+            QsgdMode::Range(SymbolDecoder::from_embedded(&msg.bytes, &mut r, 1))
+        } else {
+            QsgdMode::Elias(r)
+        };
+        Box::new(EntryStream::new(m, move || match &mut mode {
+            QsgdMode::Elias(r) => {
+                let xi = EliasGamma::get(r) - 1;
+                let mut v = norm * xi as f64 / s;
+                if xi > 0 && r.read_bit() {
+                    v = -v;
+                }
+                v as f32
             }
-            out.push(v as f32);
-        }
-        out
+            QsgdMode::Range(sd) => (norm * sd.next_symbol() as f64 / s) as f32,
+        }))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::prng::{Normal, Xoshiro256pp};
+    use crate::prng::{Normal, Rng, Xoshiro256pp};
     use crate::quantizer::measure_distortion;
 
     fn gaussian(n: usize, seed: u64) -> Vec<f32> {
@@ -226,6 +255,25 @@ mod tests {
         let ctx = CodecContext::new(0, 0, 1, 2.0);
         let enc = codec.encode(&h, &ctx);
         assert_eq!(codec.decode(&enc, 64, &ctx), h);
+    }
+
+    #[test]
+    fn range_fallback_stream_decodes() {
+        // Sub-1-bit budget on a mostly-zero vector forces the range-coded
+        // wire format; the streaming decoder must read it.
+        let mut rng = Xoshiro256pp::seed_from_u64(84);
+        let h: Vec<f32> = (0..4096)
+            .map(|_| if rng.uniform() < 0.005 { rng.normal_f32() } else { 0.0 })
+            .collect();
+        let codec = Qsgd::default();
+        let ctx = CodecContext::new(0, 0, 7, 0.2);
+        let enc = codec.encode(&h, &ctx);
+        let mut r = BitReader::new(&enc.bytes);
+        let _norm = r.read_f32();
+        assert!(r.read_u32() & RANGE_CODED_FLAG != 0, "expected range fallback");
+        let dec = codec.decode(&enc, h.len(), &ctx);
+        assert_eq!(dec.len(), h.len());
+        assert!(dec.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -7,8 +7,13 @@
 //! flattens the coordinate distribution, shrinking the range a uniform
 //! quantizer must cover — this is the "random rotation" baseline of
 //! Konečný et al. the paper compares against in Figs. 4–7.
+//!
+//! Sessions are buffered on both sides: the FWHT is a global transform of
+//! the whole (power-of-two padded) vector, on encode and on decode.
 
-use super::{CodecContext, Encoded, UpdateCodec};
+use super::{
+    BufferedSink, CodecContext, DecodeStream, Encoded, EncodeSink, SliceStream, UpdateCodec,
+};
 use crate::entropy::{BitReader, BitWriter};
 use crate::prng::{Rng, StreamKind};
 
@@ -39,12 +44,9 @@ fn sign_diag(n: usize, ctx: &CodecContext) -> Vec<f64> {
     (0..n).map(|_| rng.sign() as f64).collect()
 }
 
-impl UpdateCodec for RotationUniform {
-    fn name(&self) -> String {
-        "rotation".into()
-    }
-
-    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+impl RotationUniform {
+    /// Whole-buffer encoder (runs at `EncodeSink::finish`).
+    fn encode_whole(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
         let m = h.len();
         let n2 = m.next_power_of_two();
         let budget = ctx.budget_bits(m);
@@ -95,7 +97,8 @@ impl UpdateCodec for RotationUniform {
         Encoded { bytes: w.into_bytes(), bits }
     }
 
-    fn decode(&self, msg: &Encoded, m: usize, ctx: &CodecContext) -> Vec<f32> {
+    /// Whole-buffer decoder (inverse FWHT over the full padded vector).
+    fn decode_whole(&self, msg: &Encoded, m: usize, ctx: &CodecContext) -> Vec<f32> {
         let n2 = m.next_power_of_two();
         let budget = ctx.budget_bits(m);
         let header = 64 + 8;
@@ -127,6 +130,35 @@ impl UpdateCodec for RotationUniform {
         let scale = 1.0 / (n2 as f64).sqrt();
         let d = sign_diag(n2, ctx);
         (0..m).map(|i| (y[i] * scale * d[i]) as f32).collect()
+    }
+}
+
+impl UpdateCodec for RotationUniform {
+    fn name(&self) -> String {
+        "rotation".into()
+    }
+
+    fn encoder(&self, ctx: &CodecContext, m: usize) -> Box<dyn EncodeSink + '_> {
+        let ctx = *ctx;
+        Box::new(BufferedSink::new(m, move |h: &[f32]| self.encode_whole(h, &ctx)))
+    }
+
+    fn decoder<'a>(
+        &'a self,
+        msg: &'a Encoded,
+        m: usize,
+        ctx: &CodecContext,
+    ) -> Box<dyn DecodeStream + 'a> {
+        Box::new(SliceStream::new(self.decode_whole(msg, m, ctx)))
+    }
+
+    /// Skip the session buffers for the whole-buffer entry points.
+    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+        self.encode_whole(h, ctx)
+    }
+
+    fn decode(&self, msg: &Encoded, m: usize, ctx: &CodecContext) -> Vec<f32> {
+        self.decode_whole(msg, m, ctx)
     }
 }
 

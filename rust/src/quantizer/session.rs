@@ -1,0 +1,199 @@
+//! Reusable building blocks for codec **sessions** (the streaming
+//! [`EncodeSink`] / [`DecodeStream`] API of [`UpdateCodec`](super::UpdateCodec)).
+//!
+//! Two session shapes cover every codec in the registry:
+//!
+//! * **single-pass** codecs (identity, sign-SGD, and every decoder that
+//!   reconstructs entries in order) keep O(chunk) state — their decoders
+//!   supply a per-entry closure to [`EntryStream`], which owns the shared
+//!   chunking skeleton;
+//! * **two-pass** codecs — those whose first coded bit depends on a
+//!   global statistic of the update (UVeQFed's ‖h‖, QSGD's level search,
+//!   top-k's global sort, the rotation's full-vector transform) — use
+//!   [`BufferedSink`], which accumulates pushed chunks and runs the
+//!   codec's whole-buffer encoder at [`EncodeSink::finish`], and
+//!   [`SliceStream`], which serves a fully-materialized decode in fixed
+//!   chunks.
+//!
+//! The buffered fallbacks keep the *API* uniform (callers always push
+//! chunks and drain streams) while being honest about memory:
+//! [`EncodeSink::state_bytes`] reports what the sink actually holds, and
+//! the `fleet_scale` bench meters it.
+
+use super::{DecodeStream, Encoded, EncodeSink};
+
+/// Entries per chunk yielded by buffered decode streams and used by the
+/// fleet driver when pushing client updates through an [`EncodeSink`].
+pub const DEFAULT_CHUNK: usize = 1024;
+
+/// [`EncodeSink`] for two-pass codecs: buffers every pushed chunk and
+/// invokes the codec's whole-buffer encoder once at `finish`.
+///
+/// Bit-exactness is inherited: any partition of the input produces the
+/// same buffered vector, hence the same encoding.
+pub struct BufferedSink<F> {
+    buf: Vec<f32>,
+    expected: usize,
+    encode: F,
+}
+
+impl<F: FnOnce(&[f32]) -> Encoded> BufferedSink<F> {
+    /// `expected` is the update length `m` the session was opened for;
+    /// `encode` is the codec's whole-buffer encoder.
+    pub fn new(expected: usize, encode: F) -> Self {
+        Self { buf: Vec::with_capacity(expected), expected, encode }
+    }
+}
+
+impl<F: FnOnce(&[f32]) -> Encoded> EncodeSink for BufferedSink<F> {
+    fn push(&mut self, chunk: &[f32]) {
+        self.buf.extend_from_slice(chunk);
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.buf.capacity() * std::mem::size_of::<f32>()
+    }
+
+    fn finish(self: Box<Self>) -> Encoded {
+        let BufferedSink { buf, expected, encode } = *self;
+        assert_eq!(
+            buf.len(),
+            expected,
+            "EncodeSink fed {} entries, session opened for {expected}",
+            buf.len()
+        );
+        encode(&buf)
+    }
+}
+
+/// [`DecodeStream`] over a fully-materialized update, served in
+/// [`DEFAULT_CHUNK`]-entry chunks — the fallback for scatter/transform
+/// decoders (top-k, subsampling, rotation) that cannot reconstruct
+/// entries in stream order.
+pub struct SliceStream {
+    buf: Vec<f32>,
+    pos: usize,
+}
+
+impl SliceStream {
+    pub fn new(buf: Vec<f32>) -> Self {
+        Self { buf, pos: 0 }
+    }
+}
+
+impl DecodeStream for SliceStream {
+    fn next_chunk(&mut self) -> Option<&[f32]> {
+        if self.pos >= self.buf.len() {
+            return None;
+        }
+        let end = (self.pos + DEFAULT_CHUNK).min(self.buf.len());
+        let chunk = &self.buf[self.pos..end];
+        self.pos = end;
+        Some(chunk)
+    }
+}
+
+/// [`DecodeStream`] adapter for per-entry decoders: pulls one entry at a
+/// time from `next_entry` and yields [`DEFAULT_CHUNK`]-sized chunks.
+///
+/// This is the shared chunking skeleton behind the single-pass streams
+/// (identity, sign-SGD, QSGD, TernGrad, and the degenerate all-zero
+/// message `EntryStream::new(m, || 0.0)`) — the per-codec decoders supply
+/// only the per-entry closure.
+pub struct EntryStream<F> {
+    remaining: usize,
+    scratch: Vec<f32>,
+    next_entry: F,
+}
+
+impl<F: FnMut() -> f32> EntryStream<F> {
+    /// Stream of exactly `m` entries drawn from `next_entry`.
+    pub fn new(m: usize, next_entry: F) -> Self {
+        Self { remaining: m, scratch: Vec::new(), next_entry }
+    }
+}
+
+impl<F: FnMut() -> f32> DecodeStream for EntryStream<F> {
+    fn next_chunk(&mut self) -> Option<&[f32]> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let n = self.remaining.min(DEFAULT_CHUNK);
+        self.scratch.clear();
+        for _ in 0..n {
+            let v = (self.next_entry)();
+            self.scratch.push(v);
+        }
+        self.remaining -= n;
+        Some(&self.scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffered_sink_runs_encoder_over_concatenation() {
+        let sink = BufferedSink::new(5, |h: &[f32]| Encoded {
+            bytes: h.iter().map(|&v| v as u8).collect(),
+            bits: h.len() * 8,
+        });
+        let mut sink: Box<dyn EncodeSink> = Box::new(sink);
+        sink.push(&[1.0, 2.0]);
+        sink.push(&[]);
+        sink.push(&[3.0, 4.0, 5.0]);
+        assert!(sink.state_bytes() >= 5 * 4);
+        let enc = sink.finish();
+        assert_eq!(enc.bytes, vec![1, 2, 3, 4, 5]);
+        assert_eq!(enc.bits, 40);
+    }
+
+    #[test]
+    #[should_panic(expected = "session opened for")]
+    fn buffered_sink_rejects_wrong_length() {
+        let sink = BufferedSink::new(3, |_: &[f32]| Encoded { bytes: vec![], bits: 0 });
+        let mut sink: Box<dyn EncodeSink> = Box::new(sink);
+        sink.push(&[1.0]);
+        let _ = sink.finish();
+    }
+
+    #[test]
+    fn slice_stream_chunks_concatenate_to_buffer() {
+        let data: Vec<f32> = (0..2500).map(|i| i as f32).collect();
+        let mut s = SliceStream::new(data.clone());
+        let mut out = Vec::new();
+        let mut chunks = 0;
+        while let Some(c) = s.next_chunk() {
+            assert!(c.len() <= DEFAULT_CHUNK);
+            out.extend_from_slice(c);
+            chunks += 1;
+        }
+        assert_eq!(out, data);
+        assert_eq!(chunks, 3);
+    }
+
+    #[test]
+    fn slice_stream_empty() {
+        let mut s = SliceStream::new(Vec::new());
+        assert!(s.next_chunk().is_none());
+    }
+
+    #[test]
+    fn entry_stream_yields_exactly_m_entries_in_order() {
+        for m in [0usize, 1, DEFAULT_CHUNK, DEFAULT_CHUNK + 7] {
+            let mut i = 0u32;
+            let mut s = EntryStream::new(m, move || {
+                i += 1;
+                i as f32
+            });
+            let mut drained = Vec::new();
+            while let Some(c) = s.next_chunk() {
+                assert!(c.len() <= DEFAULT_CHUNK && !c.is_empty());
+                drained.extend_from_slice(c);
+            }
+            let want: Vec<f32> = (1..=m as u32).map(|v| v as f32).collect();
+            assert_eq!(drained, want);
+        }
+    }
+}

@@ -1,33 +1,72 @@
 //! signSGD with norm scaling [21] (extension baseline): one sign bit per
 //! coordinate, reconstructed as `sign(h_i) · ‖h‖₁/m` (the ℓ1-scaled
 //! variant, which is the unbiased-magnitude flavor used in FL studies).
+//!
+//! The encode session is single-pass with O(m/8) state: each pushed chunk
+//! contributes to the running ℓ1 sum and appends sign bits to a
+//! side-buffer; `finish` stitches header + signs (the header value — the
+//! mean magnitude — is only known once the whole update has streamed
+//! past). The decode session is single-pass.
 
-use super::{CodecContext, Encoded, UpdateCodec};
+use super::{CodecContext, DecodeStream, Encoded, EncodeSink, EntryStream, UpdateCodec};
 use crate::entropy::{BitReader, BitWriter};
 
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SignSgd;
+
+struct SignSink {
+    l1: f64,
+    pushed: usize,
+    expected: usize,
+    signs: BitWriter,
+}
+
+impl EncodeSink for SignSink {
+    fn push(&mut self, chunk: &[f32]) {
+        for &v in chunk {
+            self.l1 += v.abs() as f64;
+            self.signs.push_bit(v < 0.0);
+        }
+        self.pushed += chunk.len();
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.signs.bytes().len()
+    }
+
+    fn finish(self: Box<Self>) -> Encoded {
+        assert_eq!(self.pushed, self.expected, "signsgd sink fed wrong length");
+        let mut w = BitWriter::with_capacity(self.expected / 8 + 8);
+        w.push_f32((self.l1 / self.expected.max(1) as f64) as f32);
+        w.append(&self.signs);
+        let bits = w.bit_len();
+        Encoded { bytes: w.into_bytes(), bits }
+    }
+}
 
 impl UpdateCodec for SignSgd {
     fn name(&self) -> String {
         "signsgd".into()
     }
 
-    fn encode(&self, h: &[f32], _ctx: &CodecContext) -> Encoded {
-        let l1: f64 = h.iter().map(|&v| v.abs() as f64).sum();
-        let mut w = BitWriter::with_capacity(h.len() / 8 + 8);
-        w.push_f32((l1 / h.len().max(1) as f64) as f32);
-        for &v in h {
-            w.push_bit(v < 0.0);
-        }
-        let bits = w.bit_len();
-        Encoded { bytes: w.into_bytes(), bits }
+    fn encoder(&self, _ctx: &CodecContext, m: usize) -> Box<dyn EncodeSink + '_> {
+        Box::new(SignSink {
+            l1: 0.0,
+            pushed: 0,
+            expected: m,
+            signs: BitWriter::with_capacity(m / 8 + 1),
+        })
     }
 
-    fn decode(&self, msg: &Encoded, m: usize, _ctx: &CodecContext) -> Vec<f32> {
+    fn decoder<'a>(
+        &'a self,
+        msg: &'a Encoded,
+        m: usize,
+        _ctx: &CodecContext,
+    ) -> Box<dyn DecodeStream + 'a> {
         let mut r = BitReader::new(&msg.bytes);
         let mag = r.read_f32();
-        (0..m).map(|_| if r.read_bit() { -mag } else { mag }).collect()
+        Box::new(EntryStream::new(m, move || if r.read_bit() { -mag } else { mag }))
     }
 }
 
@@ -61,5 +100,20 @@ mod tests {
         let dec = SignSgd.decode(&enc, h.len(), &ctx);
         let dot: f64 = h.iter().zip(&dec).map(|(&a, &b)| (a * b) as f64).sum();
         assert!(dot > 0.0);
+    }
+
+    #[test]
+    fn chunked_push_is_bit_identical_and_o_m_over_8() {
+        let mut rng = Xoshiro256pp::seed_from_u64(113);
+        let h = Normal::new(0.0, 1.0).vec_f32(&mut rng, 1000);
+        let ctx = CodecContext::new(0, 0, 1, 2.0);
+        let whole = SignSgd.encode(&h, &ctx);
+        let mut sink = SignSgd.encoder(&ctx, h.len());
+        for c in h.chunks(13) {
+            sink.push(c);
+        }
+        // Side-buffer state is bits, not samples: ~m/8 bytes.
+        assert!(sink.state_bytes() <= 1000 / 8 + 1, "state {}", sink.state_bytes());
+        assert_eq!(sink.finish(), whole);
     }
 }

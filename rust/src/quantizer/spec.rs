@@ -1,0 +1,306 @@
+//! Fallible, parameterized codec registry.
+//!
+//! [`CodecSpec`] is the parsed form of a config/CLI codec string. The
+//! grammar is
+//!
+//! ```text
+//! spec   := base [':' param (',' param)*]
+//! param  := key '=' value
+//! ```
+//!
+//! where `base` is any canonical registry name or alias (`uveqfed-l2`,
+//! `uveqfed`, `none`, …; see `quantizer::WIRE_CODECS`) and the accepted
+//! keys depend on the codec:
+//!
+//! | base | keys |
+//! |---|---|
+//! | `uveqfed-l{1,2,4,8}` | `zeta=<f64 > 0>` (fixed ζ·√M spread), `subtractive=<bool>` |
+//! | `qsgd` | `max_levels=<u32 ≥ 1>` |
+//! | `topk` | `value_bits=<1..=16>` |
+//! | `subsample` | `value_bits=<1..=16>` |
+//! | others | *(no parameters)* |
+//!
+//! Examples: `uveqfed-l4`, `uveqfed-l2:zeta=3.0,subtractive=false`,
+//! `qsgd:max_levels=4096`, `topk:value_bits=6`.
+//!
+//! Every failure — unknown base, malformed `key=value`, unknown key, bad
+//! value — is a [`crate::Result`] error naming the valid alternatives;
+//! nothing in this module panics.
+
+use super::uveqfed::ZetaMode;
+use super::{
+    codec_id, codec_name, registered_codec_names, IdentityCodec, Qsgd, RotationUniform,
+    SignSgd, SubsampleUniform, TernGrad, TopK, UVeQFed, UpdateCodec,
+};
+
+/// Lattice dimension of a UVeQFed configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LatticeDim {
+    /// L = 1 scalar lattice.
+    L1,
+    /// L = 2 hexagonal lattice (the paper's configuration).
+    L2,
+    /// L = 4 checkerboard lattice D4.
+    L4,
+    /// L = 8 Gosset lattice E8.
+    L8,
+}
+
+/// A parsed, validated codec configuration: the codec kind plus its
+/// parameters. Replaces the old panicking string-only `by_name` lookup.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CodecSpec {
+    /// The paper's subtractive dithered lattice quantizer.
+    UVeQFed {
+        dim: LatticeDim,
+        /// `false` degrades to the non-subtractive ablation variant.
+        subtractive: bool,
+        /// Fixed `ζ = c/√M` spread; `None` = the paper's rate-adaptive ζ.
+        zeta: Option<f64>,
+    },
+    /// QSGD probabilistic scalar quantization.
+    Qsgd { max_levels: u32 },
+    /// Uniform quantization under a random Hadamard rotation.
+    Rotation,
+    /// Random subsampling + uniform quantization.
+    Subsample { value_bits: u32 },
+    /// TernGrad-style ternary quantization.
+    TernGrad,
+    /// One sign bit per coordinate with ℓ1 magnitude.
+    SignSgd,
+    /// Top-k sparsification.
+    TopK { value_bits: u32 },
+    /// Unquantized passthrough.
+    Identity,
+}
+
+impl CodecSpec {
+    /// Parse a codec spec string. See the module docs for the grammar.
+    pub fn parse(spec: &str) -> crate::Result<Self> {
+        let (base, params) = match spec.split_once(':') {
+            Some((b, p)) => (b.trim(), Some(p)),
+            None => (spec.trim(), None),
+        };
+        let canonical = codec_id(base).and_then(codec_name).ok_or_else(|| {
+            let names: Vec<&str> = registered_codec_names().collect();
+            crate::format_err!("unknown codec '{base}' (valid: {})", names.join(", "))
+        })?;
+        let mut out = Self::default_for(canonical).ok_or_else(|| {
+            crate::format_err!("codec '{canonical}' has no spec mapping (registry bug)")
+        })?;
+        if let Some(params) = params {
+            for kv in params.split(',') {
+                let kv = kv.trim();
+                if kv.is_empty() {
+                    continue;
+                }
+                let (key, val) = kv.split_once('=').ok_or_else(|| {
+                    crate::format_err!("codec param '{kv}' is not key=value (in spec '{spec}')")
+                })?;
+                out.apply(key.trim(), val.trim())?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Default parameters for a canonical registry name.
+    fn default_for(canonical: &str) -> Option<Self> {
+        let uveq = |dim| CodecSpec::UVeQFed { dim, subtractive: true, zeta: None };
+        Some(match canonical {
+            "uveqfed-l1" => uveq(LatticeDim::L1),
+            "uveqfed-l2" => uveq(LatticeDim::L2),
+            "uveqfed-l4" => uveq(LatticeDim::L4),
+            "uveqfed-l8" => uveq(LatticeDim::L8),
+            "qsgd" => CodecSpec::Qsgd { max_levels: Qsgd::default().max_levels },
+            "rotation" => CodecSpec::Rotation,
+            "subsample" => {
+                CodecSpec::Subsample { value_bits: SubsampleUniform::default().value_bits }
+            }
+            "terngrad" => CodecSpec::TernGrad,
+            "signsgd" => CodecSpec::SignSgd,
+            "topk" => CodecSpec::TopK { value_bits: TopK::default().value_bits },
+            "identity" => CodecSpec::Identity,
+            _ => return None,
+        })
+    }
+
+    /// Apply one `key=value` parameter.
+    fn apply(&mut self, key: &str, val: &str) -> crate::Result<()> {
+        let cname = self.canonical_name();
+        fn bits(key: &str, val: &str) -> crate::Result<u32> {
+            let b: u32 = val
+                .parse()
+                .map_err(|e| crate::format_err!("codec param '{key}={val}': {e}"))?;
+            crate::ensure!((1..=16).contains(&b), "codec param '{key}' must be in 1..=16");
+            Ok(b)
+        }
+        match self {
+            CodecSpec::UVeQFed { subtractive, zeta, .. } => match key {
+                "zeta" => {
+                    let z: f64 = val
+                        .parse()
+                        .map_err(|e| crate::format_err!("codec param 'zeta={val}': {e}"))?;
+                    crate::ensure!(z.is_finite() && z > 0.0, "codec param 'zeta' must be > 0");
+                    *zeta = Some(z);
+                }
+                "subtractive" => {
+                    *subtractive = val.parse().map_err(|e| {
+                        crate::format_err!("codec param 'subtractive={val}': {e}")
+                    })?;
+                }
+                other => crate::bail!(
+                    "codec 'uveqfed' has no parameter '{other}' (valid: zeta, subtractive)"
+                ),
+            },
+            CodecSpec::Qsgd { max_levels } => match key {
+                "max_levels" => {
+                    let lv: u32 = val.parse().map_err(|e| {
+                        crate::format_err!("codec param 'max_levels={val}': {e}")
+                    })?;
+                    crate::ensure!(lv >= 1, "codec param 'max_levels' must be ≥ 1");
+                    *max_levels = lv;
+                }
+                other => {
+                    crate::bail!("codec 'qsgd' has no parameter '{other}' (valid: max_levels)")
+                }
+            },
+            CodecSpec::Subsample { value_bits } => match key {
+                "value_bits" => *value_bits = bits(key, val)?,
+                other => crate::bail!(
+                    "codec 'subsample' has no parameter '{other}' (valid: value_bits)"
+                ),
+            },
+            CodecSpec::TopK { value_bits } => match key {
+                "value_bits" => *value_bits = bits(key, val)?,
+                other => {
+                    crate::bail!("codec 'topk' has no parameter '{other}' (valid: value_bits)")
+                }
+            },
+            CodecSpec::Rotation
+            | CodecSpec::TernGrad
+            | CodecSpec::SignSgd
+            | CodecSpec::Identity => {
+                crate::bail!("codec '{cname}' takes no parameters")
+            }
+        }
+        Ok(())
+    }
+
+    /// The canonical registry name (wire-id key) of this spec.
+    pub fn canonical_name(&self) -> &'static str {
+        match *self {
+            CodecSpec::UVeQFed { dim, .. } => match dim {
+                LatticeDim::L1 => "uveqfed-l1",
+                LatticeDim::L2 => "uveqfed-l2",
+                LatticeDim::L4 => "uveqfed-l4",
+                LatticeDim::L8 => "uveqfed-l8",
+            },
+            CodecSpec::Qsgd { .. } => "qsgd",
+            CodecSpec::Rotation => "rotation",
+            CodecSpec::Subsample { .. } => "subsample",
+            CodecSpec::TernGrad => "terngrad",
+            CodecSpec::SignSgd => "signsgd",
+            CodecSpec::TopK { .. } => "topk",
+            CodecSpec::Identity => "identity",
+        }
+    }
+
+    /// Construct the codec. Infallible: every invariant was checked at
+    /// parse time (or by the typed constructor of the spec).
+    pub fn build(&self) -> Box<dyn UpdateCodec> {
+        match *self {
+            CodecSpec::UVeQFed { dim, subtractive, zeta } => {
+                let mut c = match dim {
+                    LatticeDim::L1 => UVeQFed::scalar(),
+                    LatticeDim::L2 => UVeQFed::hexagonal(),
+                    LatticeDim::L4 => UVeQFed::d4(),
+                    LatticeDim::L8 => UVeQFed::e8(),
+                };
+                if let Some(z) = zeta {
+                    c = c.with_zeta(ZetaMode::FixedOverSqrtM(z));
+                }
+                if !subtractive {
+                    c = c.non_subtractive();
+                }
+                Box::new(c)
+            }
+            CodecSpec::Qsgd { max_levels } => Box::new(Qsgd { max_levels }),
+            CodecSpec::Rotation => Box::new(RotationUniform),
+            CodecSpec::Subsample { value_bits } => Box::new(SubsampleUniform { value_bits }),
+            CodecSpec::TernGrad => Box::new(TernGrad),
+            CodecSpec::SignSgd => Box::new(SignSgd),
+            CodecSpec::TopK { value_bits } => Box::new(TopK { value_bits }),
+            CodecSpec::Identity => Box::new(IdentityCodec),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_registered_name() {
+        for name in registered_codec_names() {
+            let spec = CodecSpec::parse(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(spec.canonical_name(), name);
+            assert!(!spec.build().name().is_empty());
+        }
+    }
+
+    #[test]
+    fn aliases_resolve() {
+        assert_eq!(CodecSpec::parse("uveqfed").unwrap().canonical_name(), "uveqfed-l2");
+        assert_eq!(CodecSpec::parse("none").unwrap().canonical_name(), "identity");
+        assert_eq!(CodecSpec::parse("uveqfed-d4").unwrap().canonical_name(), "uveqfed-l4");
+    }
+
+    #[test]
+    fn unknown_base_lists_valid_names() {
+        let err = CodecSpec::parse("nope").unwrap_err().to_string();
+        assert!(err.contains("unknown codec 'nope'"), "{err}");
+        assert!(err.contains("uveqfed-l2"), "{err}");
+        assert!(err.contains("identity"), "{err}");
+    }
+
+    #[test]
+    fn params_parse_and_apply() {
+        assert_eq!(
+            CodecSpec::parse("qsgd:max_levels=64").unwrap(),
+            CodecSpec::Qsgd { max_levels: 64 }
+        );
+        assert_eq!(
+            CodecSpec::parse("topk:value_bits=6").unwrap(),
+            CodecSpec::TopK { value_bits: 6 }
+        );
+        assert_eq!(
+            CodecSpec::parse("uveqfed-l2:zeta=3.0,subtractive=false").unwrap(),
+            CodecSpec::UVeQFed {
+                dim: LatticeDim::L2,
+                subtractive: false,
+                zeta: Some(3.0)
+            }
+        );
+    }
+
+    #[test]
+    fn bad_params_are_errors_not_panics() {
+        for bad in [
+            "qsgd:levels=4",          // unknown key
+            "qsgd:max_levels=zero",   // bad value
+            "qsgd:max_levels",        // not key=value
+            "identity:x=1",           // parameterless codec
+            "topk:value_bits=0",      // out of range
+            "topk:value_bits=17",     // out of range
+            "uveqfed-l2:zeta=-1",     // non-positive
+        ] {
+            assert!(CodecSpec::parse(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn built_params_take_effect() {
+        let spec = CodecSpec::parse("uveqfed-l2:subtractive=false").unwrap();
+        assert_eq!(spec.build().name(), "uveqfed-hex-paper-nosub");
+    }
+}

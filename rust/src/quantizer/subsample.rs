@@ -5,8 +5,14 @@
 //! over its dynamic range, and scaled by `1/p` at the decoder for
 //! unbiasedness. The keep-fraction `p` is set so the message exactly fills
 //! the bit budget — the rate "determines the subsampling ratio" (§V-A).
+//!
+//! Sessions are buffered on both sides: the encoder quantizes over the
+//! kept subset's global dynamic range, and the decoder scatter-writes the
+//! kept coordinates into their (unsorted-in-stream-order) positions.
 
-use super::{CodecContext, Encoded, UpdateCodec};
+use super::{
+    BufferedSink, CodecContext, DecodeStream, Encoded, EncodeSink, SliceStream, UpdateCodec,
+};
 use crate::entropy::{BitReader, BitWriter};
 use crate::prng::{Rng, StreamKind};
 
@@ -29,14 +35,9 @@ impl SubsampleUniform {
         idx.sort_unstable();
         idx
     }
-}
 
-impl UpdateCodec for SubsampleUniform {
-    fn name(&self) -> String {
-        "subsample".into()
-    }
-
-    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+    /// Whole-buffer encoder (runs at `EncodeSink::finish`).
+    fn encode_whole(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
         let m = h.len();
         let budget = ctx.budget_bits(m);
         let header = 64;
@@ -69,7 +70,8 @@ impl UpdateCodec for SubsampleUniform {
         Encoded { bytes: w.into_bytes(), bits }
     }
 
-    fn decode(&self, msg: &Encoded, m: usize, ctx: &CodecContext) -> Vec<f32> {
+    /// Whole-buffer decoder (scatter reconstruction over the shared mask).
+    fn decode_whole(&self, msg: &Encoded, m: usize, ctx: &CodecContext) -> Vec<f32> {
         let budget = ctx.budget_bits(m);
         let header = 64;
         let k = if budget > header {
@@ -97,6 +99,35 @@ impl UpdateCodec for SubsampleUniform {
             out[i] = ((lo + q as f64 / levels as f64 * span) * inv_p) as f32;
         }
         out
+    }
+}
+
+impl UpdateCodec for SubsampleUniform {
+    fn name(&self) -> String {
+        "subsample".into()
+    }
+
+    fn encoder(&self, ctx: &CodecContext, m: usize) -> Box<dyn EncodeSink + '_> {
+        let ctx = *ctx;
+        Box::new(BufferedSink::new(m, move |h: &[f32]| self.encode_whole(h, &ctx)))
+    }
+
+    fn decoder<'a>(
+        &'a self,
+        msg: &'a Encoded,
+        m: usize,
+        ctx: &CodecContext,
+    ) -> Box<dyn DecodeStream + 'a> {
+        Box::new(SliceStream::new(self.decode_whole(msg, m, ctx)))
+    }
+
+    /// Skip the session buffers for the whole-buffer entry points.
+    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+        self.encode_whole(h, ctx)
+    }
+
+    fn decode(&self, msg: &Encoded, m: usize, ctx: &CodecContext) -> Vec<f32> {
+        self.decode_whole(msg, m, ctx)
     }
 }
 

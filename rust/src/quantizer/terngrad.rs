@@ -4,21 +4,24 @@
 //! rounding `P(±1) = |h_i|/max|h|` (unbiased). The ternary stream is
 //! entropy-coded with the adaptive range coder, so the realized rate is
 //! usually well below 2 bits/entry.
+//!
+//! Sessions: the encode sink is buffered (`max|h|` is a global statistic
+//! and must precede the coded stream); the decode stream is single-pass
+//! via the incremental [`SymbolDecoder`].
 
-use super::{CodecContext, Encoded, UpdateCodec};
-use crate::entropy::range::AdaptiveRangeCoder;
+use super::{
+    BufferedSink, CodecContext, DecodeStream, Encoded, EncodeSink, EntryStream, UpdateCodec,
+};
+use crate::entropy::range::{AdaptiveRangeCoder, SymbolDecoder};
 use crate::entropy::{BitReader, BitWriter, IntCoder};
 use crate::prng::{Rng, StreamKind};
 
 #[derive(Debug, Clone, Copy, Default)]
 pub struct TernGrad;
 
-impl UpdateCodec for TernGrad {
-    fn name(&self) -> String {
-        "terngrad".into()
-    }
-
-    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+impl TernGrad {
+    /// Whole-buffer encoder (runs at `EncodeSink::finish`).
+    fn encode_whole(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
         let max = h.iter().fold(0.0f32, |a, &b| a.max(b.abs())) as f64;
         let mut w = BitWriter::new();
         w.push_f32(max as f32);
@@ -46,18 +49,36 @@ impl UpdateCodec for TernGrad {
         let bits = w.bit_len();
         Encoded { bytes: w.into_bytes(), bits }
     }
+}
 
-    fn decode(&self, msg: &Encoded, m: usize, _ctx: &CodecContext) -> Vec<f32> {
+impl UpdateCodec for TernGrad {
+    fn name(&self) -> String {
+        "terngrad".into()
+    }
+
+    fn encoder(&self, ctx: &CodecContext, m: usize) -> Box<dyn EncodeSink + '_> {
+        let ctx = *ctx;
+        Box::new(BufferedSink::new(m, move |h: &[f32]| self.encode_whole(h, &ctx)))
+    }
+
+    /// Skip the session input buffer for the whole-buffer entry point.
+    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+        self.encode_whole(h, ctx)
+    }
+
+    fn decoder<'a>(
+        &'a self,
+        msg: &'a Encoded,
+        m: usize,
+        _ctx: &CodecContext,
+    ) -> Box<dyn DecodeStream + 'a> {
         let mut r = BitReader::new(&msg.bytes);
         let max = r.read_f32() as f64;
         if max == 0.0 {
-            return vec![0.0; m];
+            return Box::new(EntryStream::new(m, || 0.0));
         }
-        AdaptiveRangeCoder::default()
-            .decode(m, &mut r)
-            .into_iter()
-            .map(|s| (s as f64 * max) as f32)
-            .collect()
+        let mut sd = SymbolDecoder::from_embedded(&msg.bytes, &mut r, 1);
+        Box::new(EntryStream::new(m, move || (sd.next_symbol() as f64 * max) as f32))
     }
 }
 
@@ -115,5 +136,13 @@ mod tests {
         let ctx = CodecContext::new(0, 0, 5, 2.0);
         let enc = TernGrad.encode(&h, &ctx);
         assert!(enc.bits_per_entry(h.len()) <= 2.0, "{}", enc.bits_per_entry(h.len()));
+    }
+
+    #[test]
+    fn zero_update_streams_zeros() {
+        let h = vec![0.0f32; 300];
+        let ctx = CodecContext::new(0, 0, 5, 2.0);
+        let enc = TernGrad.encode(&h, &ctx);
+        assert_eq!(TernGrad.decode(&enc, 300, &ctx), h);
     }
 }

@@ -1,8 +1,14 @@
 //! Top-k sparsification [13]–[15] (extension baseline): keep the k
 //! largest-magnitude coordinates; each travels as (index, 8-bit uniform
 //! value); k is set to exactly fill the bit budget.
+//!
+//! Sessions are buffered on both sides: the encoder needs a global sort
+//! by magnitude, and the decoder scatter-writes into arbitrary positions,
+//! so neither can operate on an in-order chunk stream.
 
-use super::{CodecContext, Encoded, UpdateCodec};
+use super::{
+    BufferedSink, CodecContext, DecodeStream, Encoded, EncodeSink, SliceStream, UpdateCodec,
+};
 use crate::entropy::{BitReader, BitWriter};
 
 #[derive(Debug, Clone, Copy)]
@@ -20,12 +26,9 @@ fn index_bits(m: usize) -> u32 {
     (usize::BITS - (m.max(2) - 1).leading_zeros()).max(1)
 }
 
-impl UpdateCodec for TopK {
-    fn name(&self) -> String {
-        "topk".into()
-    }
-
-    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+impl TopK {
+    /// Whole-buffer encoder (runs at `EncodeSink::finish`).
+    fn encode_whole(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
         let m = h.len();
         let budget = ctx.budget_bits(m);
         let ib = index_bits(m);
@@ -54,7 +57,8 @@ impl UpdateCodec for TopK {
         Encoded { bytes: w.into_bytes(), bits }
     }
 
-    fn decode(&self, msg: &Encoded, m: usize, _ctx: &CodecContext) -> Vec<f32> {
+    /// Whole-buffer decoder (scatter reconstruction).
+    fn decode_whole(&self, msg: &Encoded, m: usize) -> Vec<f32> {
         let ib = index_bits(m);
         let mut r = BitReader::new(&msg.bytes);
         let lo = r.read_f32() as f64;
@@ -71,6 +75,35 @@ impl UpdateCodec for TopK {
             }
         }
         out
+    }
+}
+
+impl UpdateCodec for TopK {
+    fn name(&self) -> String {
+        "topk".into()
+    }
+
+    fn encoder(&self, ctx: &CodecContext, m: usize) -> Box<dyn EncodeSink + '_> {
+        let ctx = *ctx;
+        Box::new(BufferedSink::new(m, move |h: &[f32]| self.encode_whole(h, &ctx)))
+    }
+
+    fn decoder<'a>(
+        &'a self,
+        msg: &'a Encoded,
+        m: usize,
+        _ctx: &CodecContext,
+    ) -> Box<dyn DecodeStream + 'a> {
+        Box::new(SliceStream::new(self.decode_whole(msg, m)))
+    }
+
+    /// Skip the session buffers for the whole-buffer entry points.
+    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+        self.encode_whole(h, ctx)
+    }
+
+    fn decode(&self, msg: &Encoded, m: usize, _ctx: &CodecContext) -> Vec<f32> {
+        self.decode_whole(msg, m)
     }
 }
 

@@ -19,14 +19,26 @@
 //! `ε = Q(h̄+z) − z − h̄` uniform over `P₀` and independent of `h̄` (Thm 1)
 //! — and is the concrete difference from QSGD-style probabilistic
 //! quantizers.
+//!
+//! Sessions: the encode sink is buffered — E1's normalization needs `‖h‖`
+//! before the first sub-vector can be coded, and the rate controller's
+//! scale search re-reads every coordinate, so a one-pass encoder cannot
+//! be bit-identical. The **decode stream is genuinely single-pass**: it
+//! pulls lattice coordinates one sub-vector at a time from the
+//! incremental range decoder, regenerates the matching dither blocks on
+//! the fly, and yields chunks on lattice-block boundaries — O(chunk)
+//! server memory for the paper's codec.
 
 use super::rate::{search_scale, ScaleHint};
-use super::{CodecContext, Encoded, UpdateCodec};
-use crate::entropy::range::AdaptiveRangeCoder;
+use super::session::DEFAULT_CHUNK;
+use super::{
+    BufferedSink, CodecContext, DecodeStream, Encoded, EncodeSink, EntryStream, UpdateCodec,
+};
+use crate::entropy::range::{AdaptiveRangeCoder, SymbolDecoder};
 use crate::entropy::{BitReader, BitWriter, IntCoder};
-use crate::lattice::dither::sample_dither_block;
+use crate::lattice::dither::{sample_dither, sample_dither_block};
 use crate::lattice::{self, Lattice};
-use crate::prng::StreamKind;
+use crate::prng::{StreamKind, Xoshiro256pp};
 use crate::util::stats::l2_norm;
 use std::sync::Arc;
 
@@ -134,15 +146,10 @@ impl UVeQFed {
 
     /// Header bits: ζ‖h‖ (f32) + lattice scale (f32).
     const HEADER_BITS: usize = 64;
-}
 
-impl UpdateCodec for UVeQFed {
-    fn name(&self) -> String {
-        let sub = if self.subtractive { "" } else { "-nosub" };
-        format!("uveqfed-{}{sub}", self.base.name())
-    }
-
-    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+    /// Whole-buffer encoder — runs at `EncodeSink::finish` (E1 needs ‖h‖
+    /// and the rate search re-reads every coordinate; see module docs).
+    fn encode_whole(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
         let m = h.len();
         let l = self.base.dim();
         let n_sub = m.div_ceil(l);
@@ -248,46 +255,111 @@ impl UpdateCodec for UVeQFed {
         debug_assert!(bits <= budget, "UVeQFed exceeded budget: {bits} > {budget}");
         Encoded { bytes: w.into_bytes(), bits }
     }
+}
 
-    fn decode(&self, msg: &Encoded, m: usize, ctx: &CodecContext) -> Vec<f32> {
+/// Single-pass UVeQFed decode (D1–D3), one lattice block at a time:
+/// chunks are yielded on lattice-block boundaries, and the dither blocks
+/// are regenerated incrementally from the shared stream — the server
+/// holds O(chunk) state, never the m-entry update.
+struct UveqfedStream<'a> {
+    base: &'a dyn Lattice,
+    subtractive: bool,
+    sym: SymbolDecoder<'a>,
+    rng: Xoshiro256pp,
+    scale_factor: f64,
+    s: f64,
+    l: usize,
+    n_sub: usize,
+    next_block: usize,
+    m: usize,
+    blocks_per_chunk: usize,
+    coords: Vec<i64>,
+    scratch: Vec<f32>,
+}
+
+impl DecodeStream for UveqfedStream<'_> {
+    fn next_chunk(&mut self) -> Option<&[f32]> {
+        if self.next_block >= self.n_sub {
+            return None;
+        }
+        self.scratch.clear();
+        let blocks = (self.n_sub - self.next_block).min(self.blocks_per_chunk);
+        for _ in 0..blocks {
+            // D1: entropy-decode one sub-vector's coordinates.
+            for c in self.coords.iter_mut() {
+                *c = self.sym.next_symbol();
+            }
+            self.base.recorrelate(&mut self.coords);
+            let p = self.base.point(&self.coords); // lattice point at base scale
+            // D2: regenerate this block's dither and subtract;
+            // D3: rescale and reassemble.
+            let z = sample_dither(self.base, &mut self.rng);
+            for j in 0..self.l {
+                let idx = self.next_block * self.l + j;
+                if idx >= self.m {
+                    break;
+                }
+                // Q_{sΛ}(h̄+sz) = s·p; subtract dither s·z; rescale.
+                let v = if self.subtractive {
+                    self.s * (p[j] - z[j])
+                } else {
+                    self.s * p[j]
+                };
+                self.scratch.push((v * self.scale_factor) as f32);
+            }
+            self.next_block += 1;
+        }
+        Some(&self.scratch)
+    }
+}
+
+impl UpdateCodec for UVeQFed {
+    fn name(&self) -> String {
+        let sub = if self.subtractive { "" } else { "-nosub" };
+        format!("uveqfed-{}{sub}", self.base.name())
+    }
+
+    fn encoder(&self, ctx: &CodecContext, m: usize) -> Box<dyn EncodeSink + '_> {
+        let ctx = *ctx;
+        Box::new(BufferedSink::new(m, move |h: &[f32]| self.encode_whole(h, &ctx)))
+    }
+
+    /// Skip the session input buffer for the whole-buffer entry point.
+    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+        self.encode_whole(h, ctx)
+    }
+
+    fn decoder<'a>(
+        &'a self,
+        msg: &'a Encoded,
+        m: usize,
+        ctx: &CodecContext,
+    ) -> Box<dyn DecodeStream + 'a> {
         let l = self.base.dim();
         let n_sub = m.div_ceil(l);
         let mut r = BitReader::new(&msg.bytes);
         let scale_factor = r.read_f32() as f64;
         let s = r.read_f32() as f64;
         if scale_factor == 0.0 || s == 0.0 {
-            return vec![0.0; m];
+            return Box::new(EntryStream::new(m, || 0.0));
         }
-
-        // D1: entropy decode.
-        let coder = AdaptiveRangeCoder::with_dims(l);
-        let coords = coder.decode(n_sub * l, &mut r);
-
-        // D2: regenerate dither and subtract; D3: rescale and reassemble.
-        let mut rng = ctx.crand.stream(ctx.user, ctx.round, StreamKind::Dither);
-        let dither = sample_dither_block(self.base.as_ref(), &mut rng, n_sub);
-
-        let mut out = vec![0.0f32; m];
-        let mut c = vec![0i64; l];
-        for i in 0..n_sub {
-            c.copy_from_slice(&coords[i * l..(i + 1) * l]);
-            self.base.recorrelate(&mut c);
-            let p = self.base.point(&c); // lattice point at base scale
-            for j in 0..l {
-                let idx = i * l + j;
-                if idx >= m {
-                    break;
-                }
-                // Q_{sΛ}(h̄+sz) = s·p; subtract dither s·z; rescale.
-                let v = if self.subtractive {
-                    s * (p[j] - dither[idx])
-                } else {
-                    s * p[j]
-                };
-                out[idx] = (v * scale_factor) as f32;
-            }
-        }
-        out
+        let sym = SymbolDecoder::from_embedded(&msg.bytes, &mut r, l);
+        let rng = ctx.crand.stream(ctx.user, ctx.round, StreamKind::Dither);
+        Box::new(UveqfedStream {
+            base: self.base.as_ref(),
+            subtractive: self.subtractive,
+            sym,
+            rng,
+            scale_factor,
+            s,
+            l,
+            n_sub,
+            next_block: 0,
+            m,
+            blocks_per_chunk: (DEFAULT_CHUNK / l).max(1),
+            coords: vec![0i64; l],
+            scratch: Vec::new(),
+        })
     }
 }
 
@@ -325,6 +397,26 @@ mod tests {
             let dot: f64 = h.iter().zip(&dec).map(|(&a, &b)| (a as f64) * (b as f64)).sum();
             assert!(dot > 0.0, "{}: no correlation", codec.name());
         }
+    }
+
+    #[test]
+    fn stream_chunks_on_lattice_block_boundaries() {
+        let h = gaussian(2050, 70); // not a multiple of DEFAULT_CHUNK or L
+        let codec = UVeQFed::hexagonal();
+        let ctx = CodecContext::new(0, 0, 9, 4.0);
+        let enc = codec.encode(&h, &ctx);
+        let mut stream = codec.decoder(&enc, h.len(), &ctx);
+        let mut total = 0usize;
+        let mut chunks = 0usize;
+        while let Some(c) = stream.next_chunk() {
+            total += c.len();
+            chunks += 1;
+            if total < h.len() {
+                assert_eq!(c.len() % 2, 0, "chunk not on L=2 block boundary");
+            }
+        }
+        assert_eq!(total, h.len());
+        assert!(chunks > 1, "expected multiple chunks for m=2050");
     }
 
     #[test]

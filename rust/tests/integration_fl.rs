@@ -29,7 +29,7 @@ fn mlp_federated_run_learns_under_uveqfed_r2() {
     let test = gen.test_dataset(200);
     let shards = partition(&ds, 6, 100, PartitionScheme::Iid, 3);
     let trainer = NativeTrainer::new(MlpMnist::new(20));
-    let codec = quantizer::by_name("uveqfed-l2");
+    let codec = quantizer::make("uveqfed-l2").unwrap();
     let mut c = cfg(6, 40, 2.0, 7);
     c.lr = LrSchedule::Const(1.0);
     let hist = run_federated(&c, &trainer, &shards, &test, codec.as_ref());
@@ -51,7 +51,7 @@ fn uveqfed_beats_subsample_at_low_rate() {
     let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
     let c = cfg(5, 30, 2.0, 7);
     let run = |name: &str| {
-        let codec = quantizer::by_name(name);
+        let codec = quantizer::make(name).unwrap();
         run_federated(&c, &trainer, &shards, &test, codec.as_ref()).best_accuracy()
     };
     let uv = run("uveqfed-l2");
@@ -68,7 +68,7 @@ fn heterogeneous_split_degrades_accuracy() {
     let test = gen.test_dataset(200);
     let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
     let c = cfg(6, 25, 2.0, 7);
-    let codec = quantizer::by_name("uveqfed-l2");
+    let codec = quantizer::make("uveqfed-l2").unwrap();
     let run = |scheme| {
         let shards = partition(&ds, 6, 100, scheme, 3);
         run_federated(&c, &trainer, &shards, &test, codec.as_ref()).best_accuracy()
@@ -91,7 +91,7 @@ fn rate4_closes_gap_to_unquantized() {
     let shards = partition(&ds, 5, 100, PartitionScheme::Iid, 3);
     let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
     let run = |name: &str, rate: f64| {
-        let codec = quantizer::by_name(name);
+        let codec = quantizer::make(name).unwrap();
         run_federated(&cfg(5, 30, rate, 7), &trainer, &shards, &test, codec.as_ref())
             .best_accuracy()
     };
@@ -111,7 +111,7 @@ fn more_users_reduce_aggregate_distortion() {
     let ds = gen.dataset(800);
     let test = gen.test_dataset(100);
     let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
-    let codec = quantizer::by_name("uveqfed-l2");
+    let codec = quantizer::make("uveqfed-l2").unwrap();
     let dist = |k: usize| {
         let shards = partition(&ds, k, 800 / k, PartitionScheme::Iid, 3);
         let mut c = cfg(k, 3, 2.0, 7);
@@ -133,7 +133,7 @@ fn uplink_accounting_scales_with_rate_and_users() {
     let ds = gen.dataset(400);
     let test = gen.test_dataset(100);
     let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
-    let codec = quantizer::by_name("uveqfed-l2");
+    let codec = quantizer::make("uveqfed-l2").unwrap();
     let bits = |rate: f64| {
         let shards = partition(&ds, 4, 100, PartitionScheme::Iid, 3);
         let mut c = cfg(4, 4, rate, 7);

@@ -10,11 +10,12 @@ use uveqfed::coordinator::RoundDriver;
 use uveqfed::data::{partition, Dataset, PartitionScheme, SynthMnist};
 use uveqfed::fl::{NativeTrainer, Trainer};
 use uveqfed::fleet::{
-    decode_frame, encode_frame, FleetDriver, SamplerKind, Scenario, ShardPool, VirtualClock,
+    decode_frame, encode_frame, FleetDriver, RoundSpec, SamplerKind, Scenario, ShardPool,
+    VirtualClock,
 };
 use uveqfed::models::LogReg;
 use uveqfed::prng::{Rng, Xoshiro256pp};
-use uveqfed::quantizer::{self, CodecContext};
+use uveqfed::quantizer::{self, CodecContext, UpdateCodec};
 
 fn setup(k: usize, per: usize, seed: u64) -> (Vec<Dataset>, NativeTrainer<LogReg>) {
     let gen = SynthMnist::new(seed);
@@ -24,27 +25,25 @@ fn setup(k: usize, per: usize, seed: u64) -> (Vec<Dataset>, NativeTrainer<LogReg
     (shards, trainer)
 }
 
+fn spec<'a>(
+    round: u64,
+    trainer: &'a dyn Trainer,
+    codec: &'a dyn UpdateCodec,
+) -> RoundSpec<'a> {
+    RoundSpec { round, local_steps: 1, lr: 0.5, batch_size: 0, trainer, codec }
+}
+
 #[test]
 fn full_participation_preset_reproduces_round_driver_bitwise() {
     let (shards, trainer) = setup(4, 40, 61);
     let alphas = [0.25f64; 4];
-    let codec = quantizer::by_name("uveqfed-l2");
+    let codec = quantizer::make("uveqfed-l2").unwrap();
 
-    // Path 1: the seed-era public API.
+    // Path 1: the coordinator-level public API.
     let mut w_driver = trainer.init_params(3);
     let driver = RoundDriver::new(5, 2.0, 3);
     for round in 0..3 {
-        driver.run_round(
-            round,
-            &mut w_driver,
-            &shards,
-            &trainer,
-            codec.as_ref(),
-            &alphas,
-            1,
-            0.5,
-            0,
-        );
+        driver.run_round(&spec(round, &trainer, codec.as_ref()), &mut w_driver, &shards, &alphas);
     }
 
     // Path 2: an explicitly-configured fleet with the degenerate preset.
@@ -58,17 +57,8 @@ fn full_participation_preset_reproduces_round_driver_bitwise() {
     let mut clock = VirtualClock::new();
     let mut w_fleet = trainer.init_params(3);
     for round in 0..3 {
-        let rep = fleet.run_round(
-            round,
-            &mut w_fleet,
-            &pool,
-            &trainer,
-            codec.as_ref(),
-            1,
-            0.5,
-            0,
-            &mut clock,
-        );
+        let round_spec = spec(round, &trainer, codec.as_ref());
+        let rep = fleet.run_round(&round_spec, &mut w_fleet, &pool, &mut clock);
         assert_eq!(rep.aggregated, 4);
         assert_eq!(rep.completion_rate, 1.0);
     }
@@ -82,7 +72,7 @@ fn wire_frames_roundtrip_every_registered_codec_with_exact_bits() {
     let mut rng = Xoshiro256pp::seed_from_u64(42);
     let h: Vec<f32> = (0..m).map(|_| rng.normal_f32() * 0.05).collect();
     for name in quantizer::registered_codec_names() {
-        let codec = quantizer::by_name(name);
+        let codec = quantizer::make(name).unwrap();
         let ctx = CodecContext::new(9, 4, 11, 4.0);
         let enc = codec.encode(&h, &ctx);
         let id = quantizer::codec_id(name).unwrap();
@@ -108,28 +98,20 @@ fn cohort_alphas_renormalize_to_one_under_sampling() {
     // unequal α's to make re-normalization observable.
     let weights: Vec<f64> = (1..=10).map(|i| i as f64).collect();
     let pool = ShardPool::with_weights(&shards, &weights);
-    let codec = quantizer::by_name("qsgd");
+    let codec = quantizer::make("qsgd").unwrap();
     for kind in [
         SamplerKind::Uniform { cohort: 4 },
         SamplerKind::Weighted { cohort: 4 },
         SamplerKind::Fixed { members: vec![1, 5, 8] },
     ] {
-        let scenario = Scenario { sampler: kind.clone(), over_select: 0.0, faults: Default::default() };
+        let scenario =
+            Scenario { sampler: kind.clone(), over_select: 0.0, faults: Default::default() };
         let fleet = FleetDriver::new(7, 2.0, 2, scenario);
         let mut clock = VirtualClock::new();
         let mut w = trainer.init_params(1);
         for round in 0..4 {
-            let rep = fleet.run_round(
-                round,
-                &mut w,
-                &pool,
-                &trainer,
-                codec.as_ref(),
-                1,
-                0.5,
-                0,
-                &mut clock,
-            );
+            let rep =
+                fleet.run_round(&spec(round, &trainer, codec.as_ref()), &mut w, &pool, &mut clock);
             assert!(
                 (rep.alpha_sum - 1.0).abs() < 1e-9,
                 "{kind:?} round {round}: selected α's sum to {}, not 1",
@@ -144,24 +126,15 @@ fn cohort_alphas_renormalize_to_one_under_sampling() {
 fn straggler_deadline_with_over_selection_fills_quota_or_reports_shortfall() {
     let (shards, trainer) = setup(20, 20, 63);
     let pool = ShardPool::new(&shards);
-    let codec = quantizer::by_name("qsgd");
+    let codec = quantizer::make("qsgd").unwrap();
     let scenario = Scenario::stragglers(8, 1.0); // tight 1 s deadline
     let fleet = FleetDriver::new(11, 2.0, 4, scenario);
     let mut clock = VirtualClock::new();
     let mut w = trainer.init_params(1);
     let mut saw_shortfall = false;
     for round in 0..8 {
-        let rep = fleet.run_round(
-            round,
-            &mut w,
-            &pool,
-            &trainer,
-            codec.as_ref(),
-            1,
-            0.5,
-            0,
-            &mut clock,
-        );
+        let rep =
+            fleet.run_round(&spec(round, &trainer, codec.as_ref()), &mut w, &pool, &mut clock);
         assert!(rep.selected >= 8, "over-selection should select ≥ target");
         assert!(rep.aggregated <= 8, "never aggregate more than the target");
         assert!(rep.completion_rate <= 1.0);
@@ -184,24 +157,14 @@ fn straggler_deadline_with_over_selection_fills_quota_or_reports_shortfall() {
 fn worker_count_and_arrival_order_do_not_change_training() {
     let (shards, trainer) = setup(12, 20, 64);
     let pool = ShardPool::new(&shards);
-    let codec = quantizer::by_name("uveqfed-l2");
+    let codec = quantizer::make("uveqfed-l2").unwrap();
     let scenario = Scenario::flaky(6, 4.0);
     let run = |workers: usize| {
         let fleet = FleetDriver::new(21, 2.0, workers, scenario.clone());
         let mut clock = VirtualClock::new();
         let mut w = trainer.init_params(9);
         for round in 0..4 {
-            fleet.run_round(
-                round,
-                &mut w,
-                &pool,
-                &trainer,
-                codec.as_ref(),
-                1,
-                0.5,
-                0,
-                &mut clock,
-            );
+            fleet.run_round(&spec(round, &trainer, codec.as_ref()), &mut w, &pool, &mut clock);
         }
         w
     };
@@ -214,7 +177,7 @@ fn worker_count_and_arrival_order_do_not_change_training() {
 fn cohort_selection_is_reproducible_across_drivers() {
     let (shards, trainer) = setup(16, 15, 65);
     let pool = ShardPool::new(&shards);
-    let codec = quantizer::by_name("signsgd");
+    let codec = quantizer::make("signsgd").unwrap();
     let mk = || FleetDriver::new(33, 2.0, 2, Scenario::sampled(5));
     let run = |fleet: FleetDriver| {
         let mut clock = VirtualClock::new();
@@ -222,17 +185,7 @@ fn cohort_selection_is_reproducible_across_drivers() {
         let reps: Vec<usize> = (0..5)
             .map(|round| {
                 fleet
-                    .run_round(
-                        round,
-                        &mut w,
-                        &pool,
-                        &trainer,
-                        codec.as_ref(),
-                        1,
-                        0.5,
-                        0,
-                        &mut clock,
-                    )
+                    .run_round(&spec(round, &trainer, codec.as_ref()), &mut w, &pool, &mut clock)
                     .aggregated
             })
             .collect();

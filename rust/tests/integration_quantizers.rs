@@ -19,7 +19,7 @@ const RATE_CODECS: &[&str] = &[
 fn all_codecs_respect_budget_across_rates() {
     let h = gaussian_matrix(64, 5); // 4096 entries
     for name in RATE_CODECS {
-        let codec = quantizer::by_name(name);
+        let codec = quantizer::make(name).unwrap();
         for rate in [1.0, 2.0, 4.0, 6.0] {
             let ctx = CodecContext::new(1, 2, 3, rate);
             let enc = codec.encode(&h, &ctx);
@@ -47,7 +47,7 @@ fn fig4_ordering_iid_data() {
     // asserted in fig5 below and in EXPERIMENTS.md.)
     let trials = 6;
     let mse = |name: &str| -> f64 {
-        let codec = quantizer::by_name(name);
+        let codec = quantizer::make(name).unwrap();
         (0..trials)
             .map(|t| {
                 let h = gaussian_matrix(64, 100 + t as u64);
@@ -78,8 +78,8 @@ fn fig5_vector_gain_grows_with_correlation() {
     // data as on i.i.d. data (vector quantizers exploit correlation).
     let trials = 6;
     let gain = |correlated: bool| -> f64 {
-        let l1 = quantizer::by_name("uveqfed-l1");
-        let l2 = quantizer::by_name("uveqfed-l2");
+        let l1 = quantizer::make("uveqfed-l1").unwrap();
+        let l2 = quantizer::make("uveqfed-l2").unwrap();
         let (mut d1, mut d2) = (0.0, 0.0);
         for t in 0..trials {
             let mut h = gaussian_matrix(64, 200 + t as u64);
@@ -109,7 +109,7 @@ fn higher_lattice_dim_pays_on_correlated_data() {
     let trials = 6;
     let sigma = exp_decay_sigma(64, 0.2);
     let mse = |name: &str| -> f64 {
-        let codec = quantizer::by_name(name);
+        let codec = quantizer::make(name).unwrap();
         (0..trials)
             .map(|t| {
                 let h0 = gaussian_matrix(64, 300 + t as u64);
@@ -131,7 +131,7 @@ fn higher_lattice_dim_pays_on_correlated_data() {
 fn distortion_decreases_with_rate_for_every_codec() {
     let h = gaussian_matrix(64, 9);
     for name in RATE_CODECS {
-        let codec = quantizer::by_name(name);
+        let codec = quantizer::make(name).unwrap();
         let lo = measure_distortion(codec.as_ref(), &h, 1.0, 3, 0).mse;
         let hi = measure_distortion(codec.as_ref(), &h, 5.0, 3, 0).mse;
         assert!(
@@ -145,7 +145,7 @@ fn distortion_decreases_with_rate_for_every_codec() {
 fn decode_is_deterministic() {
     let h = gaussian_matrix(32, 11);
     for name in RATE_CODECS {
-        let codec = quantizer::by_name(name);
+        let codec = quantizer::make(name).unwrap();
         let ctx = CodecContext::new(4, 9, 17, 2.0);
         let enc = codec.encode(&h, &ctx);
         let d1 = codec.decode(&enc, h.len(), &ctx);
@@ -157,7 +157,7 @@ fn decode_is_deterministic() {
 #[test]
 fn tiny_and_empty_inputs() {
     for name in RATE_CODECS {
-        let codec = quantizer::by_name(name);
+        let codec = quantizer::make(name).unwrap();
         let ctx = CodecContext::new(0, 0, 1, 2.0);
         for n in [1usize, 2, 3, 7] {
             let h: Vec<f32> = (0..n).map(|i| i as f32 - 1.5).collect();

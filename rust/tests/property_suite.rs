@@ -83,7 +83,7 @@ fn prop_lattice_quantize_idempotent() {
     // Q(Q(x)) == Q(x) for every lattice and any scale.
     let gen = SeedScaleGen { max_scale: 3.0 };
     for name in ["scalar", "hex", "d4", "e8"] {
-        let base = lattice::by_name(name);
+        let base = lattice::by_name(name).unwrap();
         check(&format!("idempotent-{name}"), &gen, cfgn(64), |&(seed, scale)| {
             let lat = base.boxed_scaled(scale);
             let mut rng = Xoshiro256pp::seed_from_u64(seed);
@@ -100,7 +100,7 @@ fn prop_lattice_error_within_covering_radius() {
     // ‖x − Q(x)‖ is bounded by the cell diameter (loose but universal).
     let gen = SeedScaleGen { max_scale: 2.0 };
     for name in ["scalar", "hex", "d4", "e8"] {
-        let base = lattice::by_name(name);
+        let base = lattice::by_name(name).unwrap();
         check(&format!("bounded-error-{name}"), &gen, cfgn(64), |&(seed, scale)| {
             let lat = base.boxed_scaled(scale);
             let g = lat.generator_row_major();
@@ -158,7 +158,7 @@ fn prop_qsgd_never_amplifies_magnitude() {
 fn prop_dither_stays_in_voronoi_cell() {
     let gen = SeedScaleGen { max_scale: 4.0 };
     for name in ["scalar", "hex", "d4"] {
-        let base = lattice::by_name(name);
+        let base = lattice::by_name(name).unwrap();
         check(&format!("dither-cell-{name}"), &gen, cfgn(48), |&(seed, scale)| {
             let lat = base.boxed_scaled(scale);
             let mut rng = Xoshiro256pp::seed_from_u64(seed);
