@@ -1,17 +1,24 @@
 //! Codec micro-benchmarks: encode/decode throughput for every update
 //! codec at R ∈ {2, 4} on a 39,760-entry update (the MNIST MLP size).
-//! This is the §Perf L3 hot-path baseline.
+//! This is the §Perf L3 hot-path baseline; the UVeQFed encode rows are
+//! the acceptance gauge for the single-pass scale search + batched
+//! lattice kernels + table-driven range coder.
+//!
+//! Results merge into `BENCH_baseline.json` (label via
+//! `UVEQFED_BENCH_LABEL`, so a pre/post comparison is two runs of the two
+//! builds with different labels); `--smoke` shrinks the update for CI.
 
-use uveqfed::bench::{run, BenchConfig};
+use uveqfed::bench::{run, smoke_mode, BenchConfig, Recorder};
 use uveqfed::prng::{Normal, Xoshiro256pp};
 use uveqfed::quantizer::{self, CodecContext};
 
 fn main() {
     let cfg = BenchConfig::from_env();
-    let m = 39_760usize;
+    let m = if smoke_mode() { 4_096usize } else { 39_760 };
     let mut rng = Xoshiro256pp::seed_from_u64(1);
     let h = Normal::new(0.0, 0.02).vec_f32(&mut rng, m);
     let mb = m as f64 * 4.0 / 1e6;
+    let mut rec = Recorder::new("codec_micro");
 
     println!("# codec_micro — {m}-entry update ({mb:.2} MB f32)");
     for name in [
@@ -35,6 +42,7 @@ fn main() {
                 let ctx = CodecContext::new(0, 0, 5, rate);
                 std::hint::black_box(codec.encode(&h, &ctx));
             });
+            rec.add_with_items(&r, m as f64);
             println!(
                 "    ↳ {:.1} MB/s encode, {:.3} bits/entry realized",
                 mb / r.median_secs,
@@ -44,7 +52,9 @@ fn main() {
                 let ctx = CodecContext::new(0, 0, 5, rate);
                 std::hint::black_box(codec.decode(&enc0, m, &ctx));
             });
+            rec.add_with_items(&r, m as f64);
             println!("    ↳ {:.1} MB/s decode", mb / r.median_secs);
         }
     }
+    rec.save_or_warn();
 }

@@ -12,7 +12,7 @@
 //!
 //! Run: `cargo bench --bench fleet_scale` (BENCH_QUICK=1 for a smoke run).
 
-use uveqfed::bench::{run, BenchConfig};
+use uveqfed::bench::{run, smoke_mode, BenchConfig, Recorder};
 use uveqfed::data::Dataset;
 use uveqfed::fl::Trainer;
 use uveqfed::fleet::{
@@ -63,13 +63,15 @@ fn tiny_template() -> Dataset {
 
 fn main() {
     let cfg = BenchConfig::from_env();
-    let m = 2_048usize;
+    let smoke = smoke_mode();
+    let m = if smoke { 256usize } else { 2_048 };
     let workers = 8usize;
+    let mut rec = Recorder::new("fleet_scale");
 
     // ── A: one full round over a 10k-client population (everyone
     //      participates — 10 000 encoded, framed, unframed, decoded,
     //      folded updates per iteration).
-    let population = 10_000usize;
+    let population = if smoke { 400usize } else { 10_000 };
     let pool = RoundRobinPool::synthetic(population, vec![tiny_template()], 1);
     let trainer = MockTrainer { m };
     println!("# fleet_scale — population={population}, m={m}, workers={workers}");
@@ -99,6 +101,7 @@ fn main() {
             aggregated = rep.aggregated;
             round += 1;
         });
+        rec.add_with_items(&r, population as f64);
         assert_eq!(aggregated, population, "bench must aggregate the whole population");
         println!(
             "    ↳ {:.1} ms/round, {:.2}k client-updates/s, {:.1} MB/s through the codec",
@@ -110,10 +113,11 @@ fn main() {
 
     // ── B: sampled cohorts from a 1M-client population with stragglers —
     //      selection cost must stay O(cohort), not O(population).
-    let big = 1_000_000usize;
+    let big = if smoke { 20_000usize } else { 1_000_000 };
     let big_pool = RoundRobinPool::synthetic(big, vec![tiny_template()], 2);
     let codec = quantizer::make("uveqfed-l2").expect("codec spec");
-    for cohort in [256usize, 4096] {
+    let cohorts: &[usize] = if smoke { &[64] } else { &[256, 4096] };
+    for &cohort in cohorts {
         let driver = FleetDriver::new(3, 2.0, workers, Scenario::stragglers(cohort, 3.0));
         let mut clock = VirtualClock::new();
         let mut w = trainer.init_params(1);
@@ -130,8 +134,9 @@ fn main() {
             driver.run_round(&spec, &mut w, &big_pool, &mut clock);
             round += 1;
         });
+        rec.add_with_items(&r, cohort as f64);
         println!(
-            "    ↳ {:.2} ms/round at cohort {cohort} from 1M clients",
+            "    ↳ {:.2} ms/round at cohort {cohort} from {big} clients",
             r.median_secs * 1e3
         );
     }
@@ -140,7 +145,7 @@ fn main() {
     //      peak client-side sink state across chunk sizes. A streaming
     //      codec (identity, signsgd) holds far less than the 4·m bytes a
     //      two-pass codec must buffer; the numbers below measure that.
-    let m_big = 1usize << 20; // 1M parameters
+    let m_big = if smoke { 1usize << 14 } else { 1 << 20 }; // 1M parameters
     let mut rng = Xoshiro256pp::seed_from_u64(7);
     let h_big = Normal::new(0.0, 0.02).vec_f32(&mut rng, m_big);
     println!(
@@ -151,7 +156,9 @@ fn main() {
     for name in ["uveqfed-l2", "qsgd", "signsgd", "identity"] {
         let codec = quantizer::make(name).expect("codec spec");
         let ctx = CodecContext::new(1, 1, 7, 2.0);
-        for chunk in [4_096usize, 65_536, m_big] {
+        let chunk_sizes: &[usize] =
+            if smoke { &[4_096] } else { &[4_096, 65_536, 1 << 20] };
+        for &chunk in chunk_sizes {
             let mut peak_state = 0usize;
             let mut out_bits = 0usize;
             let r = run(&format!("stream-encode/{name}/chunk-{chunk}"), cfg, || {
@@ -165,6 +172,7 @@ fn main() {
                 out_bits = enc.bits;
                 peak_state = peak;
             });
+            rec.add_with_items(&r, m_big as f64);
             println!(
                 "    ↳ chunk {:>8}: {:>7.1} MB/s encode, peak sink state {:>6} KB, output {:>8.0} KB",
                 chunk,
@@ -174,4 +182,5 @@ fn main() {
             );
         }
     }
+    rec.save_or_warn();
 }

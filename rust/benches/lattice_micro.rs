@@ -1,20 +1,34 @@
 //! Lattice micro-benchmarks: nearest-point throughput and dither sampling
 //! for every lattice — the innermost loop of UVeQFed's encoder (§Perf L3).
+//!
+//! Measures BOTH paths per lattice so the batch-kernel speedup is recorded
+//! in one run:
+//! * `nearest-scalar/*` — the legacy per-block `Lattice::nearest` call
+//!   (allocating, per-call dispatch) — the pre-overhaul hot path;
+//! * `nearest-batch/*` — `Lattice::nearest_batch_into` over the same
+//!   points with caller-owned scratch (the current encoder hot path);
+//! * `dither-fill/*` — the reused-buffer per-round dither fill.
+//!
+//! Results merge into `BENCH_baseline.json` (label via
+//! `UVEQFED_BENCH_LABEL`); `--smoke` shrinks sizes for the CI smoke step.
 
-use uveqfed::bench::{run, BenchConfig};
-use uveqfed::lattice::{self, dither};
+use uveqfed::bench::{run, smoke_mode, BenchConfig, Recorder};
+use uveqfed::lattice::{self, dither, Scratch};
 use uveqfed::prng::{Rng, Xoshiro256pp};
 
 fn main() {
     let cfg = BenchConfig::from_env();
-    let n_points = 100_000usize;
+    let n_points = if smoke_mode() { 2_000usize } else { 100_000 };
+    let n_dither = if smoke_mode() { 1_000usize } else { 10_000 };
+    let mut rec = Recorder::new("lattice_micro");
 
     for name in ["scalar", "hex", "hex-a2", "cubic4", "d4", "e8"] {
         let lat = lattice::by_name(name).expect("lattice");
         let l = lat.dim();
         let mut rng = Xoshiro256pp::seed_from_u64(2);
         let pts: Vec<f64> = (0..n_points * l).map(|_| rng.normal() * 3.0).collect();
-        let r = run(&format!("nearest/{name}"), cfg, || {
+
+        let r_scalar = run(&format!("nearest-scalar/{name}"), cfg, || {
             let mut acc = 0i64;
             for i in 0..n_points {
                 let c = lat.nearest(&pts[i * l..(i + 1) * l]);
@@ -22,15 +36,37 @@ fn main() {
             }
             std::hint::black_box(acc);
         });
+        rec.add_with_items(&r_scalar, n_points as f64);
         println!(
-            "    ↳ {:.2} M nearest-point ops/s ({:.1} M scalars/s)",
-            n_points as f64 / r.median_secs / 1e6,
-            (n_points * l) as f64 / r.median_secs / 1e6
+            "    ↳ {:.2} M nearest-point ops/s ({:.1} M scalars/s) — legacy per-block path",
+            n_points as f64 / r_scalar.median_secs / 1e6,
+            (n_points * l) as f64 / r_scalar.median_secs / 1e6
         );
-        let r = run(&format!("dither/{name}"), cfg, || {
-            let mut rng = Xoshiro256pp::seed_from_u64(3);
-            std::hint::black_box(dither::sample_dither_block(lat.as_ref(), &mut rng, 10_000));
+
+        let mut out = vec![0i64; n_points * l];
+        let mut scratch = Scratch::new();
+        let r_batch = run(&format!("nearest-batch/{name}"), cfg, || {
+            lat.nearest_batch_into(&pts, &mut out, &mut scratch);
+            std::hint::black_box(out[0]);
         });
-        println!("    ↳ {:.2} M dither vectors/s", 10_000.0 / r.median_secs / 1e6);
+        rec.add_with_items(&r_batch, n_points as f64);
+        println!(
+            "    ↳ {:.2} M nearest-point ops/s (batched) — {:.2}x vs per-block path",
+            n_points as f64 / r_batch.median_secs / 1e6,
+            r_scalar.median_secs / r_batch.median_secs
+        );
+
+        let mut dbuf = vec![0.0f64; n_dither * l];
+        let r_dither = run(&format!("dither-fill/{name}"), cfg, || {
+            let mut drng = Xoshiro256pp::seed_from_u64(3);
+            dither::fill_dither(lat.as_ref(), &mut drng, &mut dbuf, &mut scratch);
+            std::hint::black_box(dbuf[0]);
+        });
+        rec.add_with_items(&r_dither, n_dither as f64);
+        println!(
+            "    ↳ {:.2} M dither vectors/s into a reused buffer",
+            n_dither as f64 / r_dither.median_secs / 1e6
+        );
     }
+    rec.save_or_warn();
 }

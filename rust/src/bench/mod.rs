@@ -4,8 +4,16 @@
 //! with warmup, repetition, and robust statistics, and write figure data
 //! through `metrics::CsvTable`. Output format is one line per benchmark:
 //! `name  median  mean ± sem  (n iters)`.
+//!
+//! Perf-trajectory recording: every perf-relevant bench target also feeds
+//! its results into a [`Recorder`], which merges a labelled snapshot into
+//! the machine-readable baseline file `BENCH_baseline.json` (schema in
+//! DESIGN.md §Performance). `--smoke` (or `BENCH_QUICK=1`) shrinks sizes
+//! and iteration counts so CI can *execute* the bench binaries and keep
+//! the JSON schema alive without paying full measurement cost.
 
 use crate::metrics::Timer;
+use crate::util::json::Json;
 use crate::util::stats::{percentile, Welford};
 
 #[derive(Debug, Clone, Copy)]
@@ -23,14 +31,28 @@ impl Default for BenchConfig {
 }
 
 impl BenchConfig {
-    /// Quick mode for CI-style smoke runs (env `BENCH_QUICK=1`).
+    /// Quick-run parameters for smoke mode.
+    pub fn smoke() -> Self {
+        Self { warmup_iters: 1, measure_iters: 3, max_secs: 5.0 }
+    }
+
+    /// Quick mode for CI-style smoke runs (`--smoke` argv flag or env
+    /// `BENCH_QUICK=1`).
     pub fn from_env() -> Self {
-        if std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
-            Self { warmup_iters: 1, measure_iters: 3, max_secs: 5.0 }
+        if smoke_mode() {
+            Self::smoke()
         } else {
             Self::default()
         }
     }
+}
+
+/// True when the bench binary was invoked with `--smoke` (the CI smoke
+/// step) or `BENCH_QUICK=1`: tiny sizes, few iterations — executes every
+/// code path and the JSON emission without full measurement cost.
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
 }
 
 /// Result of one benchmark.
@@ -93,6 +115,155 @@ pub fn results_dir() -> std::path::PathBuf {
         .unwrap_or_else(|_| std::path::PathBuf::from("results"))
 }
 
+/// The machine-readable perf-baseline file (override with
+/// `UVEQFED_BENCH_BASELINE`). Relative paths resolve against the bench
+/// binary's working directory — the workspace root under `cargo bench`.
+pub fn baseline_path() -> std::path::PathBuf {
+    std::env::var("UVEQFED_BENCH_BASELINE")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("BENCH_baseline.json"))
+}
+
+#[derive(Debug, Clone)]
+struct RecordEntry {
+    name: String,
+    median_secs: f64,
+    mean_secs: f64,
+    sem_secs: f64,
+    iters: usize,
+    items_per_sec: Option<f64>,
+}
+
+/// Collects [`BenchResult`]s and merges them into `BENCH_baseline.json`
+/// as one labelled snapshot per `(label, bench)` pair.
+///
+/// Schema (`"schema": 1`, documented in DESIGN.md §Performance): the file
+/// is `{"schema", "snapshots": [...]}`; each snapshot carries `label`
+/// (env `UVEQFED_BENCH_LABEL`, default `"current"`), `bench` (the bench
+/// target), `smoke`, `recorded_unix`, and `entries` — one object per
+/// benchmark with `name`, `median_secs`, `mean_secs`, `sem_secs`,
+/// `iters`, and optional `items_per_sec`. Re-running a bench under the
+/// same label replaces only that `(label, bench)` snapshot, so a `pre` /
+/// `post` perf comparison is two runs with different labels.
+pub struct Recorder {
+    bench: String,
+    label: String,
+    smoke: bool,
+    entries: Vec<RecordEntry>,
+}
+
+impl Recorder {
+    pub fn new(bench: &str) -> Self {
+        let label =
+            std::env::var("UVEQFED_BENCH_LABEL").unwrap_or_else(|_| "current".to_string());
+        Self { bench: bench.to_string(), label, smoke: smoke_mode(), entries: Vec::new() }
+    }
+
+    /// Record one result.
+    pub fn add(&mut self, r: &BenchResult) {
+        self.push_entry(r, None);
+    }
+
+    /// Record one result plus a throughput figure derived from
+    /// `items_per_iter` work items per timed iteration.
+    pub fn add_with_items(&mut self, r: &BenchResult, items_per_iter: f64) {
+        let t = r.throughput_per_sec(items_per_iter);
+        self.push_entry(r, Some(t));
+    }
+
+    fn push_entry(&mut self, r: &BenchResult, items_per_sec: Option<f64>) {
+        self.entries.push(RecordEntry {
+            name: r.name.clone(),
+            median_secs: r.median_secs,
+            mean_secs: r.mean_secs,
+            sem_secs: r.sem_secs,
+            iters: r.iters,
+            items_per_sec,
+        });
+    }
+
+    /// Merge this snapshot into the baseline file and return its path.
+    pub fn save(&self) -> crate::Result<std::path::PathBuf> {
+        self.save_to(baseline_path())
+    }
+
+    /// [`Self::save`] against an explicit path (tests use this to stay
+    /// hermetic — no process-global env mutation).
+    fn save_to(&self, path: std::path::PathBuf) -> crate::Result<std::path::PathBuf> {
+        let mut kept: Vec<Json> = Vec::new();
+        // Top-level fields other than schema/snapshots (e.g. a "note")
+        // are preserved verbatim across merges.
+        let mut extra: Vec<(String, Json)> = Vec::new();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            let doc = Json::parse(&text)
+                .map_err(|e| e.wrap(format!("corrupt {}", path.display())))?;
+            if let Json::Obj(fields) = &doc {
+                for (k, v) in fields {
+                    if k != "schema" && k != "snapshots" {
+                        extra.push((k.clone(), v.clone()));
+                    }
+                }
+            }
+            if let Some(snaps) = doc.get("snapshots").and_then(Json::as_arr) {
+                for s in snaps {
+                    let same = s.get("label").and_then(Json::as_str)
+                        == Some(self.label.as_str())
+                        && s.get("bench").and_then(Json::as_str) == Some(self.bench.as_str());
+                    if !same {
+                        kept.push(s.clone());
+                    }
+                }
+            }
+        }
+        let unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs() as f64)
+            .unwrap_or(0.0);
+        let mut snap = Json::obj();
+        snap.push("label", Json::str(self.label.as_str()));
+        snap.push("bench", Json::str(self.bench.as_str()));
+        snap.push("smoke", Json::Bool(self.smoke));
+        snap.push("recorded_unix", Json::num(unix));
+        let mut arr = Vec::with_capacity(self.entries.len());
+        for e in &self.entries {
+            let mut o = Json::obj();
+            o.push("name", Json::str(e.name.as_str()));
+            o.push("median_secs", Json::num(e.median_secs));
+            o.push("mean_secs", Json::num(e.mean_secs));
+            o.push("sem_secs", Json::num(e.sem_secs));
+            o.push("iters", Json::num(e.iters as f64));
+            if let Some(t) = e.items_per_sec {
+                o.push("items_per_sec", Json::num(t));
+            }
+            arr.push(o);
+        }
+        snap.push("entries", Json::Arr(arr));
+        kept.push(snap);
+        let mut doc = Json::obj();
+        doc.push("schema", Json::num(1.0));
+        for (k, v) in extra {
+            doc.push(&k, v);
+        }
+        doc.push("snapshots", Json::Arr(kept));
+        // Crash-safe merge: write a sibling temp file, then rename over the
+        // target — an interrupted bench run can't leave a truncated
+        // baseline that poisons every later save.
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, doc.to_string() + "\n")?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(path)
+    }
+
+    /// `save` + a one-line status print; failures warn instead of
+    /// aborting the bench.
+    pub fn save_or_warn(&self) {
+        match self.save() {
+            Ok(p) => println!("baseline snapshot '{}' -> {}", self.label, p.display()),
+            Err(e) => eprintln!("warning: could not write bench baseline: {e}"),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,6 +277,52 @@ mod tests {
         assert!(r.median_secs >= 0.001);
         assert!(r.iters >= 1);
         assert!(r.throughput_per_sec(100.0) > 0.0);
+    }
+
+    #[test]
+    fn recorder_merges_snapshots_by_label_and_bench() {
+        // Hermetic: saves through an explicit path — no env mutation (the
+        // test harness is multi-threaded and setenv races are UB).
+        let path = std::env::temp_dir()
+            .join(format!("uveqfed-baseline-test-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        // Pre-seed with an extra top-level field that merges must preserve.
+        std::fs::write(&path, "{\"schema\":1,\"note\":\"keep me\",\"snapshots\":[]}")
+            .unwrap();
+        let res = BenchResult {
+            name: "nearest/hex".into(),
+            median_secs: 0.5,
+            mean_secs: 0.5,
+            sem_secs: 0.01,
+            iters: 3,
+        };
+        let mut a = Recorder::new("lattice_micro");
+        a.label = "pre".into();
+        a.add_with_items(&res, 100.0);
+        a.save_to(path.clone()).unwrap();
+        let mut b = Recorder::new("lattice_micro");
+        b.label = "post".into();
+        b.add(&res);
+        b.save_to(path.clone()).unwrap();
+        // Re-saving an existing (label, bench) replaces, not duplicates.
+        let mut c = Recorder::new("lattice_micro");
+        c.label = "pre".into();
+        c.add(&res);
+        c.save_to(path.clone()).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("note").and_then(Json::as_str), Some("keep me"));
+        let snaps = doc.get("snapshots").and_then(Json::as_arr).unwrap();
+        assert_eq!(snaps.len(), 2, "one snapshot per (label, bench)");
+        let pre = snaps
+            .iter()
+            .find(|s| s.get("label").and_then(Json::as_str) == Some("pre"))
+            .unwrap();
+        let entries = pre.get("entries").and_then(Json::as_arr).unwrap();
+        assert_eq!(entries[0].get("name").and_then(Json::as_str), Some("nearest/hex"));
+        assert_eq!(entries[0].get("median_secs").and_then(Json::as_num), Some(0.5));
+        // The replacement dropped the throughput field of the first save.
+        assert!(entries[0].get("items_per_sec").is_none());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,15 +1,26 @@
-//! Adaptive binary range coder (carry-less, 32-bit).
+//! Adaptive range coder (carry-less, 32-bit) — table-driven symbol coding.
 //!
-//! The default entropy coder for UVeQFed lattice indices. Symbols are
-//! decomposed into bits (zig-zag magnitude + Elias-style binarization) and
-//! each bit is coded with an adaptive probability state — an order-0
-//! context per bit position. This tracks the empirical index distribution
-//! within ~1–3% of entropy without a two-pass codebook, which matters
-//! because model-update distributions drift over FL rounds.
+//! The default entropy coder for UVeQFed lattice indices. Since the hot-path
+//! overhaul the primary path codes **whole symbols against per-context
+//! frequency tables**: each context keeps adaptive counts for the 31 most
+//! frequent zig-zagged values plus an escape slot, so a typical lattice
+//! coordinate costs ONE range-coder narrowing instead of the 3–7 adaptive
+//! binary decisions of the original bit-by-bit coder. Escaped (rare, large)
+//! values fall back to the gamma-style adaptive bit models. This tracks the
+//! empirical index distribution within a few % of entropy without a
+//! two-pass codebook, which matters because model-update distributions
+//! drift over FL rounds.
 //!
-//! The coder is the classic Subbotin/LZMA-style binary range coder:
-//! 32-bit range, renormalizing a byte at a time; probabilities are 12-bit
-//! with adaptation shift 5.
+//! The core is the classic Subbotin/LZMA-style range coder: 32-bit range,
+//! renormalizing a byte at a time, with both binary (12-bit probability,
+//! adaptation shift 5) and cumulative-frequency narrowing sharing one
+//! low/range state so the escape path can interleave with table-coded
+//! symbols.
+//!
+//! The original bit-by-bit coder survives as [`BitwiseRangeCoder`] — the
+//! compatibility oracle the property suite fuzzes the table-driven path
+//! against. The two produce different byte streams (the fleet frame version
+//! was bumped accordingly) but must decode identical symbol sequences.
 
 use super::{unzigzag, zigzag, BitReader, BitWriter, IntCoder};
 
@@ -102,6 +113,22 @@ impl RangeEncoder {
         }
     }
 
+    /// Narrow to the sub-interval `[cum, cum+freq)` of a `total`-mass
+    /// cumulative frequency table — one multi-bit symbol per call (the
+    /// table-driven fast path). Requires `total ≤ 2^16` so the reduced
+    /// range stays positive.
+    #[inline]
+    fn encode_freq(&mut self, cum: u32, freq: u32, total: u32) {
+        debug_assert!(freq > 0 && cum + freq <= total);
+        let r = self.range / total;
+        self.low += (r as u64) * (cum as u64);
+        self.range = r * freq;
+        while self.range < TOP {
+            self.range <<= 8;
+            self.shift_low();
+        }
+    }
+
     pub fn finish(mut self) -> Vec<u8> {
         for _ in 0..5 {
             self.shift_low();
@@ -155,15 +182,39 @@ impl<'a> RangeDecoder<'a> {
         bit
     }
 
+    /// Cumulative-frequency target for the next symbol: the caller scans
+    /// its table for the slot `s` with `cum(s) ≤ target < cum(s)+freq(s)`
+    /// and then commits with [`Self::decode_update`]. Clamped so corrupt
+    /// or zero-padded streams yield in-range garbage instead of UB.
+    #[inline]
+    fn decode_target(&self, total: u32) -> u32 {
+        let r = self.range / total;
+        (self.code / r).min(total - 1)
+    }
+
+    /// Commit the symbol found from [`Self::decode_target`] — the decoder
+    /// mirror of [`RangeEncoder::encode_freq`].
+    #[inline]
+    fn decode_update(&mut self, cum: u32, freq: u32, total: u32) {
+        let r = self.range / total;
+        self.code -= r * cum;
+        self.range = r * freq;
+        while self.range < TOP {
+            self.range <<= 8;
+            self.code = (self.code << 8) | self.next_byte() as u32;
+        }
+    }
+
     /// Bytes consumed (for accounting).
     pub fn bytes_read(&self) -> usize {
         self.pos
     }
 }
 
-/// Context model for integers: a unary-ish binarization where bit position
-/// k has its own adaptive state, plus per-position states for sign-ish
-/// structure via zig-zag. MAX_CTX positions; beyond that, a shared state.
+/// Context model for integers coded bit-by-bit: a unary-ish binarization
+/// where bit position k has its own adaptive state. MAX_CTX positions;
+/// beyond that, a shared state. Used by the escape path of the table-driven
+/// coder and by [`BitwiseRangeCoder`].
 const MAX_CTX: usize = 48;
 
 #[derive(Debug, Clone)]
@@ -213,6 +264,89 @@ impl IntModel {
     }
 }
 
+/// Direct table slots: zig-zagged values `0..DIRECT_SYMS` (i.e. signed
+/// values in `[-15, 15]`) code in a single narrowing; everything larger
+/// escapes. Lattice coordinates at practical rates concentrate far inside
+/// this window.
+const DIRECT_SYMS: usize = 31;
+/// Escape slot index.
+const ESCAPE: usize = DIRECT_SYMS;
+/// Table width (direct slots + escape).
+const NSYM: usize = DIRECT_SYMS + 1;
+/// Count added to a slot on each observation.
+const FREQ_INC: u16 = 24;
+/// Rescale threshold: keeps totals ≤ 2^13 (cheap division, u16 counts).
+const FREQ_LIMIT: u32 = 1 << 13;
+
+/// Adaptive cumulative-frequency table for one context.
+#[derive(Debug, Clone)]
+struct SymContext {
+    freq: [u16; NSYM],
+    total: u32,
+}
+
+impl Default for SymContext {
+    fn default() -> Self {
+        Self { freq: [1; NSYM], total: NSYM as u32 }
+    }
+}
+
+impl SymContext {
+    #[inline]
+    fn cum(&self, s: usize) -> u32 {
+        self.freq[..s].iter().map(|&f| f as u32).sum()
+    }
+
+    #[inline]
+    fn update(&mut self, s: usize) {
+        self.freq[s] += FREQ_INC;
+        self.total += FREQ_INC as u32;
+        if self.total > FREQ_LIMIT {
+            let mut t = 0u32;
+            for f in self.freq.iter_mut() {
+                *f = (*f >> 1).max(1);
+                t += *f as u32;
+            }
+            self.total = t;
+        }
+    }
+}
+
+/// One per-dimension symbol model: frequency table + escape bit models.
+#[derive(Debug, Clone, Default)]
+struct SymbolModel {
+    ctx: SymContext,
+    esc: IntModel,
+}
+
+impl SymbolModel {
+    fn encode(&mut self, enc: &mut RangeEncoder, u: u64) {
+        let s = if u < DIRECT_SYMS as u64 { u as usize } else { ESCAPE };
+        enc.encode_freq(self.ctx.cum(s), self.ctx.freq[s] as u32, self.ctx.total);
+        self.ctx.update(s);
+        if s == ESCAPE {
+            self.esc.encode(enc, u - DIRECT_SYMS as u64);
+        }
+    }
+
+    fn decode(&mut self, dec: &mut RangeDecoder) -> u64 {
+        let t = dec.decode_target(self.ctx.total);
+        let mut cum = 0u32;
+        let mut s = 0usize;
+        while cum + self.ctx.freq[s] as u32 <= t {
+            cum += self.ctx.freq[s] as u32;
+            s += 1;
+        }
+        dec.decode_update(cum, self.ctx.freq[s] as u32, self.ctx.total);
+        self.ctx.update(s);
+        if s == ESCAPE {
+            DIRECT_SYMS as u64 + self.esc.decode(dec)
+        } else {
+            s as u64
+        }
+    }
+}
+
 /// Incremental, symbol-at-a-time counterpart of [`AdaptiveRangeCoder`]'s
 /// batch [`IntCoder::decode`], over a *borrowed* range-coded payload (the
 /// bytes after the u32 length prefix that the batch encoder emits).
@@ -221,10 +355,11 @@ impl IntModel {
 /// UVeQFed / QSGD / TernGrad streams hold one `SymbolDecoder` and pull
 /// symbols per chunk instead of materializing all `m` integers. Symbol
 /// `i` uses model `i % dims`, exactly like the batch decoder, so the two
-/// paths are bit-identical.
+/// paths are bit-identical. [`Self::decode_into`] is the batched pull the
+/// session hot paths use (one call per lattice block / decoded chunk).
 pub struct SymbolDecoder<'a> {
     dec: RangeDecoder<'a>,
-    models: Vec<IntModel>,
+    models: Vec<SymbolModel>,
     i: usize,
 }
 
@@ -232,7 +367,7 @@ impl<'a> SymbolDecoder<'a> {
     pub fn new(payload: &'a [u8], dims: usize) -> Self {
         Self {
             dec: RangeDecoder::new(payload),
-            models: (0..dims.max(1)).map(|_| IntModel::default()).collect(),
+            models: vec![SymbolModel::default(); dims.max(1)],
             i: 0,
         }
     }
@@ -256,6 +391,17 @@ impl<'a> SymbolDecoder<'a> {
         let d = self.i % self.models.len();
         self.i += 1;
         unzigzag(self.models[d].decode(&mut self.dec))
+    }
+
+    /// Batched decode: fill `out` with the next `out.len()` signed symbols
+    /// (allocation-free; the session hot paths call this once per chunk).
+    pub fn decode_into(&mut self, out: &mut [i64]) {
+        let dims = self.models.len();
+        for o in out.iter_mut() {
+            let d = self.i % dims;
+            self.i += 1;
+            *o = unzigzag(self.models[d].decode(&mut self.dec));
+        }
     }
 }
 
@@ -286,6 +432,56 @@ impl AdaptiveRangeCoder {
 impl IntCoder for AdaptiveRangeCoder {
     fn encode(&self, xs: &[i64], w: &mut BitWriter) {
         let mut enc = RangeEncoder::new();
+        let mut models: Vec<SymbolModel> = vec![SymbolModel::default(); self.dims];
+        for (i, &x) in xs.iter().enumerate() {
+            models[i % self.dims].encode(&mut enc, zigzag(x));
+        }
+        let payload = enc.finish();
+        w.push_u32(payload.len() as u32);
+        for b in payload {
+            w.push_byte(b);
+        }
+    }
+
+    fn decode(&self, n: usize, r: &mut BitReader) -> Vec<i64> {
+        let len = r.read_u32() as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| r.read_byte()).collect();
+        let mut sd = SymbolDecoder::new(&bytes, self.dims);
+        let mut out = vec![0i64; n];
+        sd.decode_into(&mut out);
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "adaptive-range"
+    }
+}
+
+/// The original bit-by-bit adaptive coder (gamma binarization, one binary
+/// range decision per bit). Kept as the compatibility oracle: the property
+/// suite fuzzes [`AdaptiveRangeCoder`] against it (both must round-trip the
+/// same symbol streams), and perf work can A/B the two paths. Wire format
+/// differs from the table-driven coder.
+#[derive(Debug, Clone, Copy)]
+pub struct BitwiseRangeCoder {
+    dims: usize,
+}
+
+impl Default for BitwiseRangeCoder {
+    fn default() -> Self {
+        Self { dims: 1 }
+    }
+}
+
+impl BitwiseRangeCoder {
+    pub fn with_dims(dims: usize) -> Self {
+        Self { dims: dims.max(1) }
+    }
+}
+
+impl IntCoder for BitwiseRangeCoder {
+    fn encode(&self, xs: &[i64], w: &mut BitWriter) {
+        let mut enc = RangeEncoder::new();
         let mut models: Vec<IntModel> =
             (0..self.dims).map(|_| IntModel::default()).collect();
         for (i, &x) in xs.iter().enumerate() {
@@ -301,12 +497,14 @@ impl IntCoder for AdaptiveRangeCoder {
     fn decode(&self, n: usize, r: &mut BitReader) -> Vec<i64> {
         let len = r.read_u32() as usize;
         let bytes: Vec<u8> = (0..len).map(|_| r.read_byte()).collect();
-        let mut sd = SymbolDecoder::new(&bytes, self.dims);
-        (0..n).map(|_| sd.next_symbol()).collect()
+        let mut dec = RangeDecoder::new(&bytes);
+        let mut models: Vec<IntModel> =
+            (0..self.dims).map(|_| IntModel::default()).collect();
+        (0..n).map(|i| unzigzag(models[i % self.dims].decode(&mut dec))).collect()
     }
 
     fn name(&self) -> &'static str {
-        "adaptive-range"
+        "adaptive-range-bitwise"
     }
 }
 
@@ -344,6 +542,31 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_escape_heavy_magnitudes() {
+        // Force the escape path hard: values far outside the direct table.
+        let mut rng = Xoshiro256pp::seed_from_u64(12);
+        let xs: Vec<i64> = (0..5000)
+            .map(|_| {
+                let m = 1i64 << rng.gen_index(40);
+                let v = rng.gen_index(m as usize + 1) as i64;
+                if rng.next_u64() & 1 == 0 {
+                    v
+                } else {
+                    -v
+                }
+            })
+            .collect();
+        for dims in [1usize, 2, 8] {
+            let coder = AdaptiveRangeCoder::with_dims(dims);
+            let mut w = BitWriter::new();
+            coder.encode(&xs, &mut w);
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            assert_eq!(coder.decode(xs.len(), &mut r), xs, "dims={dims}");
+        }
+    }
+
+    #[test]
     fn compresses_near_entropy_on_skewed_stream() {
         // Mostly zeros: entropy-ish coding should land well under 1 bit/sym.
         let mut rng = Xoshiro256pp::seed_from_u64(10);
@@ -370,7 +593,7 @@ mod tests {
     fn symbol_decoder_matches_batch_decode() {
         // The streaming codec decoders slice the payload directly out of
         // the message (skipping the u32 length prefix) — verify that
-        // contract for dims 1 and 2.
+        // contract for dims 1 and 2, per-symbol and batched pulls.
         let mut rng = Xoshiro256pp::seed_from_u64(11);
         let xs: Vec<i64> = (0..5000).map(|_| (rng.normal() * 4.0).round() as i64).collect();
         for dims in [1usize, 2] {
@@ -387,6 +610,19 @@ mod tests {
             let mut sd = SymbolDecoder::new(&bytes[4..4 + len], dims);
             let streamed: Vec<i64> = (0..xs.len()).map(|_| sd.next_symbol()).collect();
             assert_eq!(streamed, xs);
+            // batched pulls in uneven chunks
+            let mut sd = SymbolDecoder::new(&bytes[4..4 + len], dims);
+            let mut chunked = vec![0i64; xs.len()];
+            let mut pos = 0usize;
+            for step in [1usize, 7, 64, 1000].iter().cycle() {
+                if pos >= xs.len() {
+                    break;
+                }
+                let n = (*step).min(xs.len() - pos);
+                sd.decode_into(&mut chunked[pos..pos + n]);
+                pos += n;
+            }
+            assert_eq!(chunked, xs);
         }
     }
 
@@ -403,5 +639,21 @@ mod tests {
         let mut r = BitReader::new(&bytes);
         assert_eq!(coder.decode(a.len(), &mut r), a);
         assert_eq!(coder.decode(b.len(), &mut r), b);
+    }
+
+    #[test]
+    fn bitwise_oracle_roundtrips_same_streams() {
+        // The legacy coder must keep round-tripping; it is the oracle the
+        // property suite checks the table-driven coder against.
+        let mut rng = Xoshiro256pp::seed_from_u64(13);
+        let xs: Vec<i64> = (0..8000).map(|_| (rng.normal() * 40.0).round() as i64).collect();
+        for dims in [1usize, 2] {
+            let coder = BitwiseRangeCoder::with_dims(dims);
+            let mut w = BitWriter::new();
+            coder.encode(&xs, &mut w);
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            assert_eq!(coder.decode(xs.len(), &mut r), xs, "dims={dims}");
+        }
     }
 }

@@ -11,7 +11,7 @@
 //! | offset | size | field |
 //! |--------|------|-------|
 //! | 0      | 4    | magic `0x4651_5655` (`"UVQF"`) |
-//! | 4      | 1    | version (1) |
+//! | 4      | 1    | version (2) |
 //! | 5      | 1    | codec id (`quantizer::codec_id`) |
 //! | 6      | 2    | reserved (0) |
 //! | 8      | 8    | user id |
@@ -30,7 +30,14 @@ use crate::quantizer::Encoded;
 use std::fmt;
 
 pub const MAGIC: u32 = 0x4651_5655; // "UVQF" as LE bytes
-pub const VERSION: u8 = 1;
+/// Frame version history:
+/// * 1 — original framing; payloads entropy-coded with the bit-by-bit
+///   adaptive range coder.
+/// * 2 — identical frame layout, but range-coded payloads switched to the
+///   table-driven symbol coder (`entropy::range::AdaptiveRangeCoder` v2);
+///   version-1 payloads do not decode under v2 models, so decode rejects
+///   them instead of folding garbage into the aggregate.
+pub const VERSION: u8 = 2;
 pub const HEADER_BYTES: usize = 36;
 pub const TRAILER_BYTES: usize = 4;
 

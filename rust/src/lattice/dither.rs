@@ -8,39 +8,76 @@
 //! Voronoi region `P₀`. This is the standard construction behind dithered
 //! lattice codes (Zamir & Feder) and works for every lattice we implement.
 
-use super::Lattice;
+use super::{Lattice, Scratch};
 use crate::prng::Rng;
 
-/// Draw one dither vector `z ~ Unif(P₀)` for `lat`.
-pub fn sample_dither<R: Rng + ?Sized>(lat: &dyn Lattice, rng: &mut R) -> Vec<f64> {
+/// Fill `out` (row-major `[M, L]`, `out.len()` a multiple of `L`) with
+/// i.i.d. dither vectors `z ~ Unif(P₀)`, allocation-free given `scratch`.
+///
+/// This is the hot-path entry point: per-round dither for an entire update
+/// (encoder) or one block at a time (streaming decoder) lands in a reused
+/// caller-owned buffer. Draws exactly `L` uniforms per block in block
+/// order, so encoder and decoder consume the shared stream identically
+/// regardless of how many blocks they fill per call.
+pub fn fill_dither<R: Rng + ?Sized>(
+    lat: &dyn Lattice,
+    rng: &mut R,
+    out: &mut [f64],
+    scratch: &mut Scratch,
+) {
     let l = lat.dim();
-    // u = G · v with v ~ Unif[0,1)^L  (uniform over the fundamental
-    // parallelepiped).
-    let v: Vec<f64> = (0..l).map(|_| rng.uniform()).collect();
-    let g = lat.generator_row_major();
-    let mut u = vec![0.0; l];
-    for i in 0..l {
-        let mut s = 0.0;
-        for j in 0..l {
-            s += g[i * l + j] * v[j];
+    debug_assert_eq!(out.len() % l, 0, "dither buffer must hold whole blocks");
+    let m = out.len() / l;
+    let g = lat.generator();
+    // u = G · v with v ~ Unif[0,1)^L (uniform over the fundamental
+    // parallelepiped), written straight into `out`.
+    let mut v = std::mem::take(&mut scratch.f1);
+    v.clear();
+    v.resize(l, 0.0);
+    for b in 0..m {
+        for vj in v.iter_mut() {
+            *vj = rng.uniform();
         }
-        u[i] = s;
+        let ub = &mut out[b * l..(b + 1) * l];
+        for i in 0..l {
+            let mut s = 0.0;
+            for j in 0..l {
+                s += g[i * l + j] * v[j];
+            }
+            ub[i] = s;
+        }
     }
-    let q = lat.quantize(&u);
-    u.iter().zip(&q).map(|(a, b)| a - b).collect()
+    scratch.f1 = v;
+    // Mod-Λ fold: z = u − Q_Λ(u), batched.
+    let mut q = std::mem::take(&mut scratch.f2);
+    q.clear();
+    q.resize(out.len(), 0.0);
+    lat.quantize_batch_into(out, &mut q, scratch);
+    for (o, qi) in out.iter_mut().zip(q.iter()) {
+        *o -= qi;
+    }
+    scratch.f2 = q;
 }
 
-/// Fill a `[M, L]` row-major buffer with i.i.d. dither vectors.
+/// Draw one dither vector `z ~ Unif(P₀)` for `lat` (allocating adapter
+/// over [`fill_dither`]).
+pub fn sample_dither<R: Rng + ?Sized>(lat: &dyn Lattice, rng: &mut R) -> Vec<f64> {
+    let mut out = vec![0.0; lat.dim()];
+    let mut scratch = Scratch::new();
+    fill_dither(lat, rng, &mut out, &mut scratch);
+    out
+}
+
+/// Fill a `[M, L]` row-major buffer with i.i.d. dither vectors
+/// (allocating adapter over [`fill_dither`]).
 pub fn sample_dither_block<R: Rng + ?Sized>(
     lat: &dyn Lattice,
     rng: &mut R,
     m: usize,
 ) -> Vec<f64> {
-    let l = lat.dim();
-    let mut out = Vec::with_capacity(m * l);
-    for _ in 0..m {
-        out.extend(sample_dither(lat, rng));
-    }
+    let mut out = vec![0.0; m * lat.dim()];
+    let mut scratch = Scratch::new();
+    fill_dither(lat, rng, &mut out, &mut scratch);
     out
 }
 

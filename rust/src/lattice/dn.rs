@@ -7,7 +7,7 @@
 //! extension point beyond the paper's L ≤ 2 experiments (the ablation
 //! benches sweep L ∈ {1, 2, 4, 8}).
 
-use super::Lattice;
+use super::{Lattice, Scratch};
 use std::sync::OnceLock;
 
 #[derive(Debug, Clone)]
@@ -74,27 +74,50 @@ impl DnLattice {
         lat
     }
 
-    /// Decode to the nearest D_n point (in ambient coordinates).
-    fn decode_point(&self, x: &[f64]) -> Vec<f64> {
-        let s = self.scale;
-        let xs: Vec<f64> = x.iter().map(|v| v / s).collect();
-        let mut rounded: Vec<f64> = xs.iter().map(|v| v.round()).collect();
-        let sum: i64 = rounded.iter().map(|v| *v as i64).sum();
+    /// Decode to the nearest D_n point (ambient coordinates), written into
+    /// `out` with no heap allocation — the shared core behind the scalar
+    /// and batched paths (Conway & Sloane's O(n) rule: round everything;
+    /// on odd parity re-round the worst coordinate).
+    fn decode_point_into(&self, x: &[f64], out: &mut [f64]) {
+        let n = self.n;
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(out.len(), n);
+        let inv_s = 1.0 / self.scale;
+        let mut sum = 0i64;
+        let (mut worst, mut err) = (0usize, -1.0f64);
+        for i in 0..n {
+            let v = x[i] * inv_s;
+            let r = v.round();
+            sum += r as i64;
+            let e = (v - r).abs();
+            if e > err {
+                err = e;
+                worst = i;
+            }
+            out[i] = r;
+        }
         if sum.rem_euclid(2) != 0 {
             // flip the worst coordinate to its second-nearest integer
-            let (mut worst, mut err) = (0usize, -1.0f64);
-            for (i, (&v, &r)) in xs.iter().zip(rounded.iter()).enumerate() {
-                let e = (v - r).abs();
-                if e > err {
-                    err = e;
-                    worst = i;
-                }
-            }
-            let v = xs[worst];
-            let r = rounded[worst];
-            rounded[worst] = if v >= r { r + 1.0 } else { r - 1.0 };
+            let v = x[worst] * inv_s;
+            let r = out[worst];
+            out[worst] = if v >= r { r + 1.0 } else { r - 1.0 };
         }
-        rounded.into_iter().map(|v| v * s).collect()
+        for o in out.iter_mut() {
+            *o *= self.scale;
+        }
+    }
+
+    /// Integer coordinates `l = G⁻¹p` of an ambient lattice point.
+    #[inline]
+    fn coords_of_point(&self, p: &[f64], out: &mut [i64]) {
+        let n = self.n;
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += self.g_inv[i * n + j] * p[j];
+            }
+            out[i] = s.round() as i64;
+        }
     }
 }
 
@@ -149,33 +172,63 @@ impl Lattice for DnLattice {
     }
 
     fn nearest_into(&self, x: &[f64], out: &mut [i64]) {
-        let p = self.decode_point(x);
-        // l = G⁻¹ p, exact integers up to fp noise.
-        let n = self.n;
-        for i in 0..n {
-            let mut s = 0.0;
-            for j in 0..n {
-                s += self.g_inv[i * n + j] * p[j];
-            }
-            out[i] = s.round() as i64;
-        }
+        // Thin adapter over the batched kernel (single block).
+        let mut p = vec![0.0; self.n];
+        self.decode_point_into(x, &mut p);
+        self.coords_of_point(&p, out);
     }
 
-    fn point(&self, coords: &[i64]) -> Vec<f64> {
+    fn nearest_batch_into(&self, xs: &[f64], out: &mut [i64], scratch: &mut Scratch) {
+        let l = self.n;
+        debug_assert_eq!(xs.len() % l, 0);
+        debug_assert_eq!(xs.len(), out.len());
+        let mut p = std::mem::take(&mut scratch.f1);
+        p.clear();
+        p.resize(l, 0.0);
+        for (x, o) in xs.chunks_exact(l).zip(out.chunks_exact_mut(l)) {
+            self.decode_point_into(x, &mut p);
+            self.coords_of_point(&p, o);
+        }
+        scratch.f1 = p;
+    }
+
+    fn point_into(&self, coords: &[i64], out: &mut [f64]) {
         let n = self.n;
-        let mut p = vec![0.0; n];
+        debug_assert_eq!(coords.len(), n);
+        debug_assert_eq!(out.len(), n);
         for i in 0..n {
             let mut s = 0.0;
             for j in 0..n {
                 s += self.g[i * n + j] * coords[j] as f64;
             }
-            p[i] = s;
+            out[i] = s;
         }
-        p
     }
 
     fn quantize(&self, x: &[f64]) -> Vec<f64> {
-        self.decode_point(x)
+        let mut p = vec![0.0; self.n];
+        self.decode_point_into(x, &mut p);
+        p
+    }
+
+    fn quantize_batch_into(&self, xs: &[f64], out: &mut [f64], _scratch: &mut Scratch) {
+        let l = self.n;
+        debug_assert_eq!(xs.len() % l, 0);
+        debug_assert_eq!(xs.len(), out.len());
+        for (x, o) in xs.chunks_exact(l).zip(out.chunks_exact_mut(l)) {
+            self.decode_point_into(x, o);
+        }
+    }
+
+    fn coords_real_into(&self, x: &[f64], out: &mut [f64]) {
+        let n = self.n;
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += self.g_inv[i * n + j] * x[j];
+            }
+            out[i] = s;
+        }
     }
 
     fn cell_volume(&self) -> f64 {
@@ -187,8 +240,8 @@ impl Lattice for DnLattice {
         self.base_moment * self.scale * self.scale
     }
 
-    fn generator_row_major(&self) -> Vec<f64> {
-        self.g.clone()
+    fn generator(&self) -> &[f64] {
+        &self.g
     }
 
     fn name(&self) -> String {

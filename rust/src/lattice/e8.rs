@@ -5,7 +5,7 @@
 //! "higher-dimensional lattices quantize better" claim keeps paying beyond
 //! L = 2.
 
-use super::Lattice;
+use super::{Lattice, Scratch};
 use std::sync::OnceLock;
 
 #[derive(Debug, Clone)]
@@ -26,24 +26,24 @@ fn base_moment() -> f64 {
     })
 }
 
-/// Round all coordinates (f-procedure of C&S).
-fn round_all(x: &[f64]) -> Vec<f64> {
-    x.iter().map(|v| v.round()).collect()
-}
-
-/// Nearest D8 point to `x` (unit scale).
-fn decode_d8(x: &[f64]) -> Vec<f64> {
-    let mut r = round_all(x);
-    let sum: i64 = r.iter().map(|v| *v as i64).sum();
-    if sum.rem_euclid(2) != 0 {
-        let (mut worst, mut err) = (0usize, -1.0f64);
-        for (i, (&v, &ri)) in x.iter().zip(r.iter()).enumerate() {
-            let e = (v - ri).abs();
-            if e > err {
-                err = e;
-                worst = i;
-            }
+/// Nearest D8 point to `x` (unit scale), stack-only.
+#[inline]
+fn decode_d8(x: &[f64; 8]) -> [f64; 8] {
+    let mut r = [0.0f64; 8];
+    let mut sum = 0i64;
+    let (mut worst, mut err) = (0usize, -1.0f64);
+    for i in 0..8 {
+        let v = x[i];
+        let ri = v.round();
+        sum += ri as i64;
+        let e = (v - ri).abs();
+        if e > err {
+            err = e;
+            worst = i;
         }
+        r[i] = ri;
+    }
+    if sum.rem_euclid(2) != 0 {
         let v = x[worst];
         let ri = r[worst];
         r[worst] = if v >= ri { ri + 1.0 } else { ri - 1.0 };
@@ -89,21 +89,49 @@ impl E8Lattice {
         lat
     }
 
-    fn decode_point(&self, x: &[f64]) -> Vec<f64> {
-        let s = self.scale;
-        let xs: Vec<f64> = x.iter().map(|v| v / s).collect();
+    /// Exact two-coset decode written into `out` — stack-only shared core
+    /// behind the scalar and batched paths (bit-identical by construction).
+    fn decode_point_into(&self, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), 8);
+        debug_assert_eq!(out.len(), 8);
+        let inv_s = 1.0 / self.scale;
+        let mut xs = [0.0f64; 8];
+        for i in 0..8 {
+            xs[i] = x[i] * inv_s;
+        }
         // Coset 0: D8.
         let a = decode_d8(&xs);
         // Coset ½: decode (x − ½) in D8, add ½ back.
-        let shifted: Vec<f64> = xs.iter().map(|v| v - 0.5).collect();
+        let mut shifted = [0.0f64; 8];
+        for i in 0..8 {
+            shifted[i] = xs[i] - 0.5;
+        }
         let mut b = decode_d8(&shifted);
         for v in b.iter_mut() {
             *v += 0.5;
         }
-        let da: f64 = xs.iter().zip(&a).map(|(u, v)| (u - v) * (u - v)).sum();
-        let db: f64 = xs.iter().zip(&b).map(|(u, v)| (u - v) * (u - v)).sum();
-        let best = if da <= db { a } else { b };
-        best.into_iter().map(|v| v * s).collect()
+        let mut da = 0.0;
+        let mut db = 0.0;
+        for i in 0..8 {
+            da += (xs[i] - a[i]) * (xs[i] - a[i]);
+            db += (xs[i] - b[i]) * (xs[i] - b[i]);
+        }
+        let best = if da <= db { &a } else { &b };
+        for i in 0..8 {
+            out[i] = best[i] * self.scale;
+        }
+    }
+
+    /// Integer coordinates `l = G⁻¹p` of an ambient lattice point.
+    #[inline]
+    fn coords_of_point(&self, p: &[f64], out: &mut [i64]) {
+        for i in 0..8 {
+            let mut s = 0.0;
+            for j in 0..8 {
+                s += self.g_inv[i * 8 + j] * p[j];
+            }
+            out[i] = s.round() as i64;
+        }
     }
 }
 
@@ -156,30 +184,55 @@ impl Lattice for E8Lattice {
     }
 
     fn nearest_into(&self, x: &[f64], out: &mut [i64]) {
-        let p = self.decode_point(x);
-        for i in 0..8 {
-            let mut s = 0.0;
-            for j in 0..8 {
-                s += self.g_inv[i * 8 + j] * p[j];
-            }
-            out[i] = s.round() as i64;
+        let mut p = [0.0f64; 8];
+        self.decode_point_into(x, &mut p);
+        self.coords_of_point(&p, out);
+    }
+
+    fn nearest_batch_into(&self, xs: &[f64], out: &mut [i64], _scratch: &mut Scratch) {
+        debug_assert_eq!(xs.len() % 8, 0);
+        debug_assert_eq!(xs.len(), out.len());
+        let mut p = [0.0f64; 8];
+        for (x, o) in xs.chunks_exact(8).zip(out.chunks_exact_mut(8)) {
+            self.decode_point_into(x, &mut p);
+            self.coords_of_point(&p, o);
         }
     }
 
-    fn point(&self, coords: &[i64]) -> Vec<f64> {
-        let mut p = vec![0.0; 8];
+    fn point_into(&self, coords: &[i64], out: &mut [f64]) {
+        debug_assert_eq!(coords.len(), 8);
+        debug_assert_eq!(out.len(), 8);
         for i in 0..8 {
             let mut s = 0.0;
             for j in 0..8 {
                 s += self.g[i * 8 + j] * coords[j] as f64;
             }
-            p[i] = s;
+            out[i] = s;
         }
-        p
     }
 
     fn quantize(&self, x: &[f64]) -> Vec<f64> {
-        self.decode_point(x)
+        let mut p = vec![0.0; 8];
+        self.decode_point_into(x, &mut p);
+        p
+    }
+
+    fn quantize_batch_into(&self, xs: &[f64], out: &mut [f64], _scratch: &mut Scratch) {
+        debug_assert_eq!(xs.len() % 8, 0);
+        debug_assert_eq!(xs.len(), out.len());
+        for (x, o) in xs.chunks_exact(8).zip(out.chunks_exact_mut(8)) {
+            self.decode_point_into(x, o);
+        }
+    }
+
+    fn coords_real_into(&self, x: &[f64], out: &mut [f64]) {
+        for i in 0..8 {
+            let mut s = 0.0;
+            for j in 0..8 {
+                s += self.g_inv[i * 8 + j] * x[j];
+            }
+            out[i] = s;
+        }
     }
 
     fn cell_volume(&self) -> f64 {
@@ -191,8 +244,8 @@ impl Lattice for E8Lattice {
         self.base_moment * self.scale * self.scale
     }
 
-    fn generator_row_major(&self) -> Vec<f64> {
-        self.g.clone()
+    fn generator(&self) -> &[f64] {
+        &self.g
     }
 
     fn name(&self) -> String {

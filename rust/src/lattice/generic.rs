@@ -7,7 +7,7 @@
 //! conservative radius from `‖G‖·‖G⁻¹‖` at construction and verify
 //! exactness against brute force in the test suite.
 
-use super::Lattice;
+use super::{Lattice, Scratch};
 
 #[derive(Debug, Clone)]
 pub struct GenericLattice {
@@ -17,15 +17,21 @@ pub struct GenericLattice {
     g: Vec<f64>,
     /// Row-major inverse.
     g_inv: Vec<f64>,
+    /// Reciprocals of the generator diagonal (diagonal fast path turns the
+    /// per-coordinate division into a multiply).
+    inv_diag: Vec<f64>,
     det_abs: f64,
     /// Offset search radius for exact NN (0 for diagonal generators,
     /// which decode by per-coordinate rounding).
     radius: i64,
     /// Diagonal fast path: per-coordinate rounding is exact.
     diagonal: bool,
-    /// Precomputed offset displacement table: for each offset `o` in the
-    /// search cube, the vector `G·o` (len L each).
-    offsets: Vec<(Vec<i64>, Vec<f64>)>,
+    /// Flattened offset probe table, sorted by displacement norm: integer
+    /// offsets (`n_offsets × L`) and their displacements `G·o`
+    /// (`n_offsets × L`). Flat arrays keep the probe loop an indexed scan
+    /// over contiguous memory (§Perf: no per-offset Vec chasing).
+    offset_coords: Vec<i64>,
+    offset_disps: Vec<f64>,
     name: &'static str,
     /// Cached second moment (computed lazily at construction via MC for
     /// dims > 1 unless a closed form applies).
@@ -186,20 +192,27 @@ impl GenericLattice {
         };
         let predictor =
             if diagonal { Vec::new() } else { predictor_from_ginv(&g_inv, dim) };
+        let inv_diag = if diagonal {
+            (0..dim).map(|i| 1.0 / g_row_major[i * dim + i]).collect()
+        } else {
+            Vec::new()
+        };
         let mut lat = Self {
             dim,
             g: g_row_major.to_vec(),
             g_inv,
+            inv_diag,
             det_abs: det.abs(),
             radius,
             diagonal,
-            offsets: Vec::new(),
+            offset_coords: Vec::new(),
+            offset_disps: Vec::new(),
             name,
             second_moment: f64::NAN,
             predictor,
         };
         if !diagonal {
-            lat.offsets = lat.build_offsets();
+            lat.build_offsets();
         }
         lat.second_moment = if dim == 1 {
             // Δ·Z: cell is [−Δ/2, Δ/2), σ̄² = Δ²/12.
@@ -219,12 +232,12 @@ impl GenericLattice {
         (0..n).all(|i| (0..n).all(|j| i == j || self.g[i * n + j] == 0.0))
     }
 
-    fn build_offsets(&self) -> Vec<(Vec<i64>, Vec<f64>)> {
+    fn build_offsets(&mut self) {
         let n = self.dim;
         let r = self.radius;
-        let mut out = Vec::new();
         let width = (2 * r + 1) as usize;
         let total = width.pow(n as u32);
+        let mut table: Vec<(Vec<i64>, Vec<f64>)> = Vec::with_capacity(total);
         for idx in 0..total {
             let mut rem = idx;
             let mut o = vec![0i64; n];
@@ -236,16 +249,77 @@ impl GenericLattice {
                 let of: Vec<f64> = o.iter().map(|&v| v as f64).collect();
                 mat_vec(&self.g, &of, n)
             };
-            out.push((o, disp));
+            table.push((o, disp));
         }
         // Sort by displacement norm so the common case (offset 0) is tried
         // first and the scan can early-exit in the squared-distance compare.
-        out.sort_by(|a, b| {
+        table.sort_by(|a, b| {
             let na: f64 = a.1.iter().map(|x| x * x).sum();
             let nb: f64 = b.1.iter().map(|x| x * x).sum();
             na.partial_cmp(&nb).unwrap()
         });
-        out
+        self.offset_coords = Vec::with_capacity(total * n);
+        self.offset_disps = Vec::with_capacity(total * n);
+        for (o, disp) in table {
+            self.offset_coords.extend_from_slice(&o);
+            self.offset_disps.extend_from_slice(&disp);
+        }
+    }
+
+    /// Shared nearest-point core (scalar and batch paths both run exactly
+    /// this code, so they are bit-identical by construction).
+    #[inline]
+    fn nearest_core(&self, x: &[f64], out: &mut [i64]) {
+        let n = self.dim;
+        if self.diagonal {
+            // Per-coordinate rounding is exact for Δ·Z^L. Saturating cast
+            // guards non-finite / extreme inputs.
+            for i in 0..n {
+                let v = x[i] * self.inv_diag[i];
+                out[i] = if v.is_finite() { v.round() as i64 } else { 0 };
+            }
+            return;
+        }
+        // Babai rounding + residual, stack-allocated up to dim 4 (generic
+        // non-diagonal lattices are constructor-capped at dim ≤ 4).
+        let mut base = [0i64; 4];
+        let mut res = [0.0f64; 4];
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += self.g_inv[i * n + j] * x[j];
+            }
+            base[i] = if s.is_finite() { s.round() as i64 } else { 0 };
+        }
+        for i in 0..n {
+            let mut p = 0.0;
+            for j in 0..n {
+                p += self.g[i * n + j] * base[j] as f64;
+            }
+            res[i] = x[i] - p;
+        }
+        let n_off = self.offset_disps.len() / n;
+        let mut best_d = f64::INFINITY;
+        let mut best_idx = 0usize;
+        for k in 0..n_off {
+            let disp = &self.offset_disps[k * n..k * n + n];
+            let mut d = 0.0;
+            for i in 0..n {
+                let t = res[i] - disp[i];
+                d += t * t;
+                if d >= best_d {
+                    break;
+                }
+            }
+            if d < best_d {
+                best_d = d;
+                best_idx = k;
+            }
+        }
+        let o = &self.offset_coords[best_idx * n..best_idx * n + n];
+        for i in 0..n {
+            out[i] = base[i] + o[i];
+        }
     }
 
     /// Return the same lattice scaled by `s` (`s·Λ`).
@@ -276,60 +350,96 @@ impl Lattice for GenericLattice {
 
     fn nearest_into(&self, x: &[f64], out: &mut [i64]) {
         debug_assert_eq!(x.len(), self.dim);
-        let n = self.dim;
-        if self.diagonal {
-            // Per-coordinate rounding is exact for Δ·Z^L. Saturating cast
-            // guards non-finite / extreme inputs.
-            for i in 0..n {
-                let v = x[i] / self.g[i * n + i];
-                out[i] = if v.is_finite() { v.round() as i64 } else { 0 };
+        self.nearest_core(x, out);
+    }
+
+    fn nearest_batch_into(&self, xs: &[f64], out: &mut [i64], _scratch: &mut Scratch) {
+        let l = self.dim;
+        debug_assert_eq!(xs.len() % l, 0);
+        debug_assert_eq!(xs.len(), out.len());
+        if self.diagonal && l == 1 {
+            // Scalar lattice Δ·Z: a straight vectorizable loop.
+            let inv = self.inv_diag[0];
+            for (x, o) in xs.iter().zip(out.iter_mut()) {
+                let v = x * inv;
+                *o = if v.is_finite() { v.round() as i64 } else { 0 };
             }
             return;
         }
-        // Babai rounding + residual, stack-allocated up to dim 4 (generic
-        // non-diagonal lattices are constructor-capped at dim ≤ 4).
-        let mut base = [0i64; 4];
-        let mut res = [0.0f64; 4];
+        for (x, o) in xs.chunks_exact(l).zip(out.chunks_exact_mut(l)) {
+            self.nearest_core(x, o);
+        }
+    }
+
+    fn point_into(&self, coords: &[i64], out: &mut [f64]) {
+        let n = self.dim;
+        debug_assert_eq!(coords.len(), n);
+        debug_assert_eq!(out.len(), n);
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += self.g[i * n + j] * coords[j] as f64;
+            }
+            out[i] = s;
+        }
+    }
+
+    fn quantize_batch_into(&self, xs: &[f64], out: &mut [f64], _scratch: &mut Scratch) {
+        let l = self.dim;
+        debug_assert_eq!(xs.len() % l, 0);
+        debug_assert_eq!(xs.len(), out.len());
+        if self.diagonal {
+            // Q(x) = round(x/Δ)·Δ per coordinate, any dimension. Routed
+            // through the same i64 cast as `nearest_core` so extreme inputs
+            // saturate identically on both paths. l == 1 (the scalar
+            // lattice — every UVeQFed-L1 encode and dither fold) gets the
+            // straight-line vectorizable loop.
+            if l == 1 {
+                let inv = self.inv_diag[0];
+                let d = self.g[0];
+                for (x, o) in xs.iter().zip(out.iter_mut()) {
+                    let v = x * inv;
+                    let c = if v.is_finite() { v.round() as i64 } else { 0 };
+                    *o = c as f64 * d;
+                }
+            } else {
+                for (xb, ob) in xs.chunks_exact(l).zip(out.chunks_exact_mut(l)) {
+                    for j in 0..l {
+                        let v = xb[j] * self.inv_diag[j];
+                        let c = if v.is_finite() { v.round() as i64 } else { 0 };
+                        ob[j] = c as f64 * self.g[j * l + j];
+                    }
+                }
+            }
+            return;
+        }
+        // Non-diagonal generators are constructor-capped at dim ≤ 4, so the
+        // stack block below always fits (same invariant as `nearest_core`).
+        debug_assert!(l <= 4);
+        let mut c = [0i64; 4];
+        for (x, o) in xs.chunks_exact(l).zip(out.chunks_exact_mut(l)) {
+            self.nearest_core(x, &mut c[..l]);
+            self.point_into(&c[..l], o);
+        }
+    }
+
+    fn coords_real_into(&self, x: &[f64], out: &mut [f64]) {
+        let n = self.dim;
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(out.len(), n);
+        if self.diagonal {
+            for i in 0..n {
+                out[i] = x[i] * self.inv_diag[i];
+            }
+            return;
+        }
         for i in 0..n {
             let mut s = 0.0;
             for j in 0..n {
                 s += self.g_inv[i * n + j] * x[j];
             }
-            base[i] = if s.is_finite() { s.round() as i64 } else { 0 };
+            out[i] = s;
         }
-        for i in 0..n {
-            let mut p = 0.0;
-            for j in 0..n {
-                p += self.g[i * n + j] * base[j] as f64;
-            }
-            res[i] = x[i] - p;
-        }
-        let mut best_d = f64::INFINITY;
-        let mut best_idx = 0usize;
-        for (idx, (_, disp)) in self.offsets.iter().enumerate() {
-            let mut d = 0.0;
-            for i in 0..n {
-                let t = res[i] - disp[i];
-                d += t * t;
-                if d >= best_d {
-                    break;
-                }
-            }
-            if d < best_d {
-                best_d = d;
-                best_idx = idx;
-            }
-        }
-        let o = &self.offsets[best_idx].0;
-        for i in 0..n {
-            out[i] = base[i] + o[i];
-        }
-    }
-
-    fn point(&self, coords: &[i64]) -> Vec<f64> {
-        debug_assert_eq!(coords.len(), self.dim);
-        let cf: Vec<f64> = coords.iter().map(|&v| v as f64).collect();
-        mat_vec(&self.g, &cf, self.dim)
     }
 
     fn cell_volume(&self) -> f64 {
@@ -340,8 +450,8 @@ impl Lattice for GenericLattice {
         self.second_moment
     }
 
-    fn generator_row_major(&self) -> Vec<f64> {
-        self.g.clone()
+    fn generator(&self) -> &[f64] {
+        &self.g
     }
 
     fn name(&self) -> String {

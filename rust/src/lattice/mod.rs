@@ -30,6 +30,29 @@ pub use dn::DnLattice;
 pub use e8::E8Lattice;
 pub use generic::GenericLattice;
 
+/// Caller-owned scratch for the batched, allocation-free lattice kernels
+/// (`nearest_batch_into` / `quantize_batch_into` and the dither fill).
+///
+/// Buffers grow on first use and are reused afterwards; a `Scratch` may be
+/// shared across lattices and batch sizes. Sessions own one `Scratch` per
+/// encoder/decoder so steady-state hot-path calls perform zero heap
+/// allocation (see DESIGN.md §Performance).
+#[derive(Debug, Default, Clone)]
+pub struct Scratch {
+    /// f64 temp A (dither uniforms, per-block points).
+    pub(crate) f1: Vec<f64>,
+    /// f64 temp B (batch quantize output inside the dither fold).
+    pub(crate) f2: Vec<f64>,
+    /// i64 temp (batch coordinates inside default `quantize_batch_into`).
+    pub(crate) i1: Vec<i64>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// A (full-rank) lattice in `R^L` together with its nearest-point decoder.
 pub trait Lattice: Send + Sync {
     /// Lattice dimension `L`.
@@ -43,17 +66,62 @@ pub trait Lattice: Send + Sync {
         out
     }
 
-    /// Allocation-free nearest-point search (the encoder hot path calls
-    /// this once per sub-vector — §Perf L3).
+    /// Allocation-free nearest-point search for a single `L`-dim block.
+    /// The batched entry point [`Lattice::nearest_batch_into`] is the hot
+    /// path; this remains as the single-block adapter.
     fn nearest_into(&self, x: &[f64], out: &mut [i64]);
 
+    /// Batched nearest-point search over `xs.len()/L` contiguous blocks:
+    /// writes integer coordinates for block `i` into `out[i*L..(i+1)*L]`.
+    /// Must be bit-identical to per-block [`Lattice::nearest_into`]
+    /// (property-tested); implementations hoist per-call setup out of the
+    /// block loop and perform no heap allocation beyond `scratch` growth.
+    fn nearest_batch_into(&self, xs: &[f64], out: &mut [i64], scratch: &mut Scratch) {
+        let l = self.dim();
+        debug_assert_eq!(xs.len() % l, 0, "batch length must be a multiple of L");
+        debug_assert_eq!(xs.len(), out.len());
+        let _ = scratch;
+        for (x, o) in xs.chunks_exact(l).zip(out.chunks_exact_mut(l)) {
+            self.nearest_into(x, o);
+        }
+    }
+
     /// Map integer coordinates to the lattice point `G·l`.
-    fn point(&self, coords: &[i64]) -> Vec<f64>;
+    fn point(&self, coords: &[i64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.point_into(coords, &mut out);
+        out
+    }
+
+    /// Allocation-free `G·l` (decode hot path: one call per sub-vector).
+    fn point_into(&self, coords: &[i64], out: &mut [f64]);
 
     /// `Q_Λ(x)` — the nearest lattice point itself.
     fn quantize(&self, x: &[f64]) -> Vec<f64> {
         self.point(&self.nearest(x))
     }
+
+    /// Batched `Q_Λ` over contiguous blocks, allocation-free given
+    /// `scratch`. Bit-identical to per-block [`Lattice::quantize`].
+    fn quantize_batch_into(&self, xs: &[f64], out: &mut [f64], scratch: &mut Scratch) {
+        let l = self.dim();
+        debug_assert_eq!(xs.len() % l, 0);
+        debug_assert_eq!(xs.len(), out.len());
+        let mut coords = std::mem::take(&mut scratch.i1);
+        coords.clear();
+        coords.resize(xs.len(), 0);
+        self.nearest_batch_into(xs, &mut coords, scratch);
+        for (c, o) in coords.chunks_exact(l).zip(out.chunks_exact_mut(l)) {
+            self.point_into(c, o);
+        }
+        scratch.i1 = coords;
+    }
+
+    /// Real-valued (Babai) coordinates `G⁻¹·x` of an ambient point —
+    /// the cached quantity behind the encoder's single-pass scale search
+    /// (rounding these approximates `nearest` and is exact for diagonal
+    /// generators).
+    fn coords_real_into(&self, x: &[f64], out: &mut [f64]);
 
     /// Volume of the basic cell, `|det G|`.
     fn cell_volume(&self) -> f64;
@@ -64,9 +132,15 @@ pub trait Lattice: Send + Sync {
     /// deterministic Monte-Carlo estimator in [`moment`] otherwise.
     fn second_moment(&self) -> f64;
 
+    /// Borrowed row-major generator matrix (`L×L`) — the allocation-free
+    /// accessor the dither fill and batch kernels use.
+    fn generator(&self) -> &[f64];
+
     /// The generator matrix in row-major order (`L×L`), for logging and
     /// for shipping to the Pallas kernel.
-    fn generator_row_major(&self) -> Vec<f64>;
+    fn generator_row_major(&self) -> Vec<f64> {
+        self.generator().to_vec()
+    }
 
     /// Short name for configs and logs.
     fn name(&self) -> String;

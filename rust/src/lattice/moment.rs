@@ -6,17 +6,27 @@
 //! function of the lattice — important because σ̄² enters the theoretical
 //! bounds reported in EXPERIMENTS.md.
 
-use super::dither::sample_dither;
-use super::Lattice;
+use super::dither::fill_dither;
+use super::{Lattice, Scratch};
 use crate::prng::Xoshiro256pp;
 
 /// Deterministic Monte-Carlo estimate of `E‖U‖²`, `U ~ Unif(P₀)`.
+/// Runs through the batched dither fill in reused buffers — this executes
+/// at lattice construction (400k samples for D4/E8/hex), so allocation
+/// per sample would dominate.
 pub fn monte_carlo_second_moment(lat: &dyn Lattice, samples: usize, seed: u64) -> f64 {
     let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let l = lat.dim();
+    let mut scratch = Scratch::new();
+    let mut block = vec![0.0f64; 1024 * l];
     let mut acc = 0.0f64;
-    for _ in 0..samples {
-        let z = sample_dither(lat, &mut rng);
-        acc += z.iter().map(|v| v * v).sum::<f64>();
+    let mut done = 0usize;
+    while done < samples {
+        let n = (samples - done).min(1024);
+        let buf = &mut block[..n * l];
+        fill_dither(lat, &mut rng, buf, &mut scratch);
+        acc += buf.iter().map(|v| v * v).sum::<f64>();
+        done += n;
     }
     acc / samples as f64
 }

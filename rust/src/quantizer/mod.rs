@@ -52,7 +52,7 @@ pub mod uveqfed;
 pub use identity::IdentityCodec;
 pub use qsgd::Qsgd;
 pub use rotation::RotationUniform;
-pub use session::{BufferedSink, EntryStream, SliceStream, DEFAULT_CHUNK};
+pub use session::{BufferedSink, EntryStream, SliceStream, SymbolMapStream, DEFAULT_CHUNK};
 pub use signsgd::SignSgd;
 pub use spec::{CodecSpec, LatticeDim};
 pub use subsample::SubsampleUniform;

@@ -17,7 +17,8 @@
 //! range-coded via the incremental [`SymbolDecoder`]).
 
 use super::{
-    BufferedSink, CodecContext, DecodeStream, Encoded, EncodeSink, EntryStream, UpdateCodec,
+    BufferedSink, CodecContext, DecodeStream, Encoded, EncodeSink, EntryStream, SymbolMapStream,
+    UpdateCodec,
 };
 use crate::entropy::elias::EliasGamma;
 use crate::entropy::range::{AdaptiveRangeCoder, SymbolDecoder};
@@ -139,12 +140,6 @@ impl Qsgd {
     }
 }
 
-/// The two single-pass QSGD wire formats a decode session can be in.
-enum QsgdMode<'a> {
-    Elias(BitReader<'a>),
-    Range(SymbolDecoder<'a>),
-}
-
 impl UpdateCodec for Qsgd {
     fn name(&self) -> String {
         "qsgd".into()
@@ -175,22 +170,20 @@ impl UpdateCodec for Qsgd {
             return Box::new(EntryStream::new(m, || 0.0));
         }
         let s = levels as f64;
-        let mut mode = if range_coded {
-            QsgdMode::Range(SymbolDecoder::from_embedded(&msg.bytes, &mut r, 1))
+        if range_coded {
+            // Batched symbol pulls over the range-coded fallback stream.
+            let sd = SymbolDecoder::from_embedded(&msg.bytes, &mut r, 1);
+            Box::new(SymbolMapStream::new(sd, m, move |xi| (norm * xi as f64 / s) as f32))
         } else {
-            QsgdMode::Elias(r)
-        };
-        Box::new(EntryStream::new(m, move || match &mut mode {
-            QsgdMode::Elias(r) => {
-                let xi = EliasGamma::get(r) - 1;
+            Box::new(EntryStream::new(m, move || {
+                let xi = EliasGamma::get(&mut r) - 1;
                 let mut v = norm * xi as f64 / s;
                 if xi > 0 && r.read_bit() {
                     v = -v;
                 }
                 v as f32
-            }
-            QsgdMode::Range(sd) => (norm * sd.next_symbol() as f64 / s) as f32,
-        }))
+            }))
+        }
     }
 }
 

@@ -44,15 +44,18 @@ impl ScaleHint {
 /// Find the (approximately) smallest `s` in `[lo_bound, ∞)` with
 /// `cost(s) ≤ budget`, where `cost` is non-increasing in `s`.
 ///
-/// `cost` is the *estimated* bit count; `exact` the exact one. Returns the
-/// accepted scale. Panics only if no scale up to `lo_bound · 2^60` fits —
+/// `cost` is the *estimated* bit count; `exact` the exact one. Both are
+/// `FnMut` so callers can thread scratch buffers and memoize the last
+/// exact encoding (UVeQFed reuses it verbatim at commit). Returns the
+/// accepted scale; the final accepted value is always probed through
+/// `exact` last. Panics only if no scale up to `lo_bound · 2^60` fits —
 /// which cannot happen for entropy-coded streams (all-zero indices cost
 /// O(M) bits).
 pub fn search_scale(
     budget: usize,
     init: f64,
-    cost: impl Fn(f64) -> usize,
-    exact: impl Fn(f64) -> usize,
+    mut cost: impl FnMut(f64) -> usize,
+    mut exact: impl FnMut(f64) -> usize,
 ) -> f64 {
     assert!(init > 0.0 && init.is_finite());
     // Bracket: grow/shrink geometrically until we straddle the budget.

@@ -21,6 +21,7 @@
 //! the `fleet_scale` bench meters it.
 
 use super::{DecodeStream, Encoded, EncodeSink};
+use crate::entropy::range::SymbolDecoder;
 
 /// Entries per chunk yielded by buffered decode streams and used by the
 /// fleet driver when pushing client updates through an [`EncodeSink`].
@@ -107,9 +108,11 @@ pub struct EntryStream<F> {
 }
 
 impl<F: FnMut() -> f32> EntryStream<F> {
-    /// Stream of exactly `m` entries drawn from `next_entry`.
+    /// Stream of exactly `m` entries drawn from `next_entry`. The chunk
+    /// buffer is preallocated here so steady-state `next_chunk` never
+    /// allocates.
     pub fn new(m: usize, next_entry: F) -> Self {
-        Self { remaining: m, scratch: Vec::new(), next_entry }
+        Self { remaining: m, scratch: Vec::with_capacity(m.min(DEFAULT_CHUNK)), next_entry }
     }
 }
 
@@ -123,6 +126,54 @@ impl<F: FnMut() -> f32> DecodeStream for EntryStream<F> {
         for _ in 0..n {
             let v = (self.next_entry)();
             self.scratch.push(v);
+        }
+        self.remaining -= n;
+        Some(&self.scratch)
+    }
+}
+
+/// [`DecodeStream`] over a range-coded symbol payload: pulls
+/// [`DEFAULT_CHUNK`] symbols per chunk through the **batched**
+/// [`SymbolDecoder::decode_into`] and maps each to an f32. This is the
+/// shared single-pass skeleton for the range-coded codecs (QSGD's
+/// sub-1-bit fallback, TernGrad); buffers are preallocated so
+/// steady-state `next_chunk` performs zero heap allocation.
+pub struct SymbolMapStream<'a, F> {
+    sym: SymbolDecoder<'a>,
+    remaining: usize,
+    ibuf: Vec<i64>,
+    scratch: Vec<f32>,
+    map: F,
+}
+
+impl<'a, F: FnMut(i64) -> f32> SymbolMapStream<'a, F> {
+    /// Stream of exactly `m` entries: symbol `i` decodes via `sym` and
+    /// reconstructs as `map(symbol)`.
+    pub fn new(sym: SymbolDecoder<'a>, m: usize, map: F) -> Self {
+        let cap = m.min(DEFAULT_CHUNK);
+        Self {
+            sym,
+            remaining: m,
+            ibuf: Vec::with_capacity(cap),
+            scratch: Vec::with_capacity(cap),
+            map,
+        }
+    }
+}
+
+impl<F: FnMut(i64) -> f32> DecodeStream for SymbolMapStream<'_, F> {
+    fn next_chunk(&mut self) -> Option<&[f32]> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let n = self.remaining.min(DEFAULT_CHUNK);
+        self.ibuf.clear();
+        self.ibuf.resize(n, 0);
+        self.sym.decode_into(&mut self.ibuf);
+        self.scratch.clear();
+        for &v in self.ibuf.iter() {
+            let f = (self.map)(v);
+            self.scratch.push(f);
         }
         self.remaining -= n;
         Some(&self.scratch)

@@ -10,7 +10,8 @@
 //! via the incremental [`SymbolDecoder`].
 
 use super::{
-    BufferedSink, CodecContext, DecodeStream, Encoded, EncodeSink, EntryStream, UpdateCodec,
+    BufferedSink, CodecContext, DecodeStream, Encoded, EncodeSink, EntryStream, SymbolMapStream,
+    UpdateCodec,
 };
 use crate::entropy::range::{AdaptiveRangeCoder, SymbolDecoder};
 use crate::entropy::{BitReader, BitWriter, IntCoder};
@@ -77,8 +78,9 @@ impl UpdateCodec for TernGrad {
         if max == 0.0 {
             return Box::new(EntryStream::new(m, || 0.0));
         }
-        let mut sd = SymbolDecoder::from_embedded(&msg.bytes, &mut r, 1);
-        Box::new(EntryStream::new(m, move || (sd.next_symbol() as f64 * max) as f32))
+        let sd = SymbolDecoder::from_embedded(&msg.bytes, &mut r, 1);
+        // Batched symbol pulls (one `decode_into` per chunk).
+        Box::new(SymbolMapStream::new(sd, m, move |x| (x as f64 * max) as f32))
     }
 }
 

@@ -11,8 +11,8 @@
 //! 3. *Quantize* — `Q_{sΛ}(h̄_i + s·z_i) = s·G·NN_Λ(h̄_i/s + z_i)` where the
 //!    scale `s` is chosen by the rate controller so the coded stream fits
 //!    the `R·m`-bit budget (the paper's "scale `G`" procedure, §V-A).
-//! 4. *Entropy-code* — adaptive binary range coder over the integer
-//!    lattice coordinates.
+//! 4. *Entropy-code* — adaptive table-driven range coder over the integer
+//!    lattice coordinates (one model per lattice dimension).
 //!
 //! Decoder (D1–D3): entropy-decode, **subtract the dither**, rescale by
 //! `ζ‖h‖` and reassemble. The dither subtraction is what makes the error
@@ -36,11 +36,37 @@ use super::{
 };
 use crate::entropy::range::{AdaptiveRangeCoder, SymbolDecoder};
 use crate::entropy::{BitReader, BitWriter, IntCoder};
-use crate::lattice::dither::{sample_dither, sample_dither_block};
-use crate::lattice::{self, Lattice};
+use crate::lattice::dither::fill_dither;
+use crate::lattice::{self, Lattice, Scratch};
 use crate::prng::{StreamKind, Xoshiro256pp};
 use crate::util::stats::l2_norm;
+use crate::util::threadpool::with_scratch;
 use std::sync::Arc;
+
+/// Per-thread encode arena: every buffer the whole-buffer encoder needs,
+/// reused across clients on the same worker thread via
+/// [`with_scratch`] so steady-state encodes stop allocating
+/// (`FleetDriver` fans thousands of client encodes per round through each
+/// worker).
+#[derive(Default)]
+struct EncodeArena {
+    /// Normalized update h̄ (zero-padded to whole lattice blocks).
+    hbar: Vec<f64>,
+    /// Per-round dither, one block per sub-vector.
+    dither: Vec<f64>,
+    /// Cached real-valued Babai coordinates `G⁻¹h̄` (per coordinate).
+    babai: Vec<f64>,
+    /// Cached `G⁻¹z` for the dither.
+    dbabai: Vec<f64>,
+    /// Integer coordinates (scale probes and the final encode).
+    coords: Vec<i64>,
+    /// `h̄/s + z` staging buffer for exact quantization passes.
+    y: Vec<f64>,
+    /// One-block coordinate buffer for the estimate pass.
+    cbuf: Vec<i64>,
+    /// Lattice batch-kernel scratch.
+    scratch: Scratch,
+}
 
 /// ζ selection. The paper uses `ζ = (2 + R/5)/√M` in the §V experiments
 /// (rate-adaptive spread) and motivates `3/√M` from Chebyshev in §III-B.
@@ -123,33 +149,17 @@ impl UVeQFed {
         self.base.second_moment()
     }
 
-    /// Compute integer lattice coordinates for all sub-vectors at scale
-    /// `s`: `NN_Λ(h̄_i/s + z_i)`, flattened `[M*L]`.
-    fn coords_at_scale(&self, hbar: &[f64], dither: &[f64], s: f64) -> Vec<i64> {
-        let l = self.base.dim();
-        let m = hbar.len() / l;
-        let mut out = vec![0i64; hbar.len()];
-        let mut y = vec![0.0f64; l];
-        let inv_s = 1.0 / s;
-        for i in 0..m {
-            for j in 0..l {
-                y[j] = hbar[i * l + j] * inv_s + dither[i * l + j];
-            }
-            let c = &mut out[i * l..(i + 1) * l];
-            self.base.nearest_into(&y, c);
-            // residual-predict coordinates: order-0 coder then operates on
-            // (near-)decorrelated integers (see Lattice::decorrelate).
-            self.base.decorrelate(c);
-        }
-        out
-    }
-
     /// Header bits: ζ‖h‖ (f32) + lattice scale (f32).
     const HEADER_BITS: usize = 64;
 
     /// Whole-buffer encoder — runs at `EncodeSink::finish` (E1 needs ‖h‖
     /// and the rate search re-reads every coordinate; see module docs).
+    /// All working memory comes from the worker thread's [`EncodeArena`].
     fn encode_whole(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+        with_scratch::<EncodeArena, _>(|arena| self.encode_in_arena(h, ctx, arena))
+    }
+
+    fn encode_in_arena(&self, h: &[f32], ctx: &CodecContext, arena: &mut EncodeArena) -> Encoded {
         let m = h.len();
         let l = self.base.dim();
         let n_sub = m.div_ceil(l);
@@ -169,41 +179,69 @@ impl UVeQFed {
             return Encoded { bytes: w.into_bytes(), bits };
         }
 
+        let base = self.base.as_ref();
+        let EncodeArena { hbar, dither, babai, dbabai, coords, y, cbuf, scratch } = arena;
+
         // E1: normalize & partition (f64 internally for exactness).
-        let mut hbar = vec![0.0f64; padded];
+        hbar.clear();
+        hbar.resize(padded, 0.0);
         for (i, &v) in h.iter().enumerate() {
             hbar[i] = v as f64 / scale_factor;
         }
 
         // E2: dither from common randomness (base-lattice cell; scaled by
         // the rate controller's `s` implicitly via the identity
-        // Unif(P₀(sΛ)) = s·Unif(P₀(Λ))).
+        // Unif(P₀(sΛ)) = s·Unif(P₀(Λ))), filled into the reused buffer.
         let mut rng = ctx.crand.stream(ctx.user, ctx.round, StreamKind::Dither);
-        let dither = sample_dither_block(self.base.as_ref(), &mut rng, n_sub);
+        dither.clear();
+        dither.resize(padded, 0.0);
+        fill_dither(base, &mut rng, dither, scratch);
+
+        // Single coordinate pass for the scale search: cache the real
+        // Babai coordinates a = G⁻¹h̄ and b = G⁻¹z once, then every
+        // candidate scale probes `round(a/s + b)` — a multiply/round per
+        // coordinate instead of a full re-quantization of the update.
+        // Exact for diagonal generators; for the others a tight statistical
+        // proxy, and the accepted scale is always verified (and the final
+        // payload encoded) through the exact batched nearest-point kernel.
+        babai.clear();
+        babai.resize(padded, 0.0);
+        dbabai.clear();
+        dbabai.resize(padded, 0.0);
+        for b in 0..n_sub {
+            base.coords_real_into(&hbar[b * l..(b + 1) * l], &mut babai[b * l..(b + 1) * l]);
+            base.coords_real_into(&dither[b * l..(b + 1) * l], &mut dbabai[b * l..(b + 1) * l]);
+        }
 
         // E3 + E4 with rate targeting.
         let payload_budget = budget - Self::HEADER_BITS;
         let coder = AdaptiveRangeCoder::with_dims(l);
-        // Cheap size estimate for the scale search (§Perf iteration 2):
-        // entropy from a strided ~25% sample of sub-vectors via an
-        // array-indexed histogram — 4–5× cheaper than a full pass with a
-        // HashMap, and the exact-encode verification below absorbs the
-        // sampling error.
+        // Initial scale: per-entry RMS of h̄ (≈ 1/(ζ√m) by construction),
+        // warm-started from the previous accepted scale.
+        let rms = (hbar.iter().map(|v| v * v).sum::<f64>() / padded as f64).sqrt();
+
+        // Cheap size estimate for the scale search: entropy of the cached
+        // rescaled-Babai coordinates over a strided ~25% sample of
+        // sub-vectors via an array-indexed histogram; the exact-encode
+        // verification below absorbs estimation error.
         let stride = if n_sub >= 512 { 4 } else { 1 };
-        let est = |s: f64| {
+        cbuf.clear();
+        cbuf.resize(l, 0);
+        let babai_ref: &[f64] = babai;
+        let dbabai_ref: &[f64] = dbabai;
+        let mut est = |s: f64| {
+            let inv_s = 1.0 / s;
             let mut hist = [0u32; 257]; // [-128,127] + overflow bucket
             let mut total = 0usize;
-            let mut y = vec![0.0f64; l];
-            let mut c = vec![0i64; l];
-            let inv_s = 1.0 / s;
             let mut i = 0;
             while i < n_sub {
+                let off = i * l;
                 for j in 0..l {
-                    y[j] = hbar[i * l + j] * inv_s + dither[i * l + j];
+                    let v = babai_ref[off + j] * inv_s + dbabai_ref[off + j];
+                    cbuf[j] = if v.is_finite() { v.round() as i64 } else { 0 };
                 }
-                self.base.nearest_into(&y, &mut c);
-                self.base.decorrelate(&mut c);
-                for &v in c.iter() {
+                base.decorrelate(cbuf);
+                for &v in cbuf.iter() {
                     let idx =
                         if (-128..128).contains(&v) { (v + 128) as usize } else { 256 };
                     hist[idx] += 1;
@@ -212,7 +250,7 @@ impl UVeQFed {
                 i += stride;
             }
             let n = total as f64;
-            let h: f64 = hist
+            let hbits: f64 = hist
                 .iter()
                 .filter(|&&cnt| cnt > 0)
                 .map(|&cnt| {
@@ -222,17 +260,35 @@ impl UVeQFed {
                 .sum();
             // overflow bucket symbols are long; charge them 24 bits each
             let overflow_penalty = hist[256] as f64 * 24.0 * stride as f64;
-            ((h * (n_sub * l) as f64) + overflow_penalty).ceil() as usize + 64
+            ((hbits * (n_sub * l) as f64) + overflow_penalty).ceil() as usize + 64
         };
-        let exact = |s: f64| {
-            let coords = self.coords_at_scale(&hbar, &dither, s);
+        // Exact coded size at scale `s`, batched through the lattice
+        // kernels; memoizes the encoded payload so the accepted scale's
+        // stream is stitched into the message without re-encoding.
+        let hbar_ref: &[f64] = hbar;
+        let dither_ref: &[f64] = dither;
+        let mut cache: Option<(f64, BitWriter)> = None;
+        let mut exact = |s: f64| {
+            let inv_s = 1.0 / s;
+            y.clear();
+            y.resize(padded, 0.0);
+            for i in 0..padded {
+                y[i] = hbar_ref[i] * inv_s + dither_ref[i];
+            }
+            coords.clear();
+            coords.resize(padded, 0);
+            base.nearest_batch_into(y, coords, scratch);
+            // residual-predict coordinates: order-0 coder then operates on
+            // (near-)decorrelated integers (see Lattice::decorrelate).
+            for blk in coords.chunks_exact_mut(l) {
+                base.decorrelate(blk);
+            }
             let mut tw = BitWriter::new();
-            coder.encode(&coords, &mut tw);
-            tw.bit_len()
+            coder.encode(coords, &mut tw);
+            let bits = tw.bit_len();
+            cache = Some((s, tw));
+            bits
         };
-        // Initial scale: per-entry RMS of h̄ (≈ 1/(ζ√m) by construction),
-        // warm-started from the previous accepted scale.
-        let rms = (hbar.iter().map(|v| v * v).sum::<f64>() / padded as f64).sqrt();
         // Feasibility floor: tiny messages can't cover even the coder's
         // fixed overhead (length prefix) — fall back to the zero message.
         if exact(rms.max(1e-12) * 1e9) > payload_budget {
@@ -243,14 +299,21 @@ impl UVeQFed {
             return Encoded { bytes: w.into_bytes(), bits };
         }
         let init = self.hint.get().unwrap_or(rms.max(1e-12));
-        let s = search_scale(payload_budget, init, est, exact);
+        let s = search_scale(payload_budget, init, &mut est, &mut exact);
         self.hint.set(s);
 
-        // Commit: header then exact payload.
+        // Commit: header, then the memoized exact payload. `search_scale`
+        // only returns after a successful `exact(s)` probe at the accepted
+        // scale, so the cache is guaranteed to hold precisely that stream —
+        // the single copy of the final-encode logic lives in the closure.
         w.push_f32(scale_factor as f32);
         w.push_f32(s as f32);
-        let coords = self.coords_at_scale(&hbar, &dither, s);
-        coder.encode(&coords, &mut w);
+        let (cached_s, tw) = cache.expect("exact() memoizes every probe");
+        assert!(
+            cached_s == s,
+            "scale search returned {s} but last exact probe was {cached_s}"
+        );
+        w.append(&tw);
         let bits = w.bit_len();
         debug_assert!(bits <= budget, "UVeQFed exceeded budget: {bits} > {budget}");
         Encoded { bytes: w.into_bytes(), bits }
@@ -273,7 +336,15 @@ struct UveqfedStream<'a> {
     next_block: usize,
     m: usize,
     blocks_per_chunk: usize,
+    /// Per-session scratch (preallocated at `decoder()`): one block of
+    /// coordinates, the lattice point, the regenerated dither, the lattice
+    /// kernels' scratch, and the yielded f32 chunk. Steady-state
+    /// `next_chunk` performs zero heap allocation (asserted by the
+    /// counting-allocator test).
     coords: Vec<i64>,
+    point: Vec<f64>,
+    zbuf: Vec<f64>,
+    lat_scratch: Scratch,
     scratch: Vec<f32>,
 }
 
@@ -285,15 +356,15 @@ impl DecodeStream for UveqfedStream<'_> {
         self.scratch.clear();
         let blocks = (self.n_sub - self.next_block).min(self.blocks_per_chunk);
         for _ in 0..blocks {
-            // D1: entropy-decode one sub-vector's coordinates.
-            for c in self.coords.iter_mut() {
-                *c = self.sym.next_symbol();
-            }
+            // D1: entropy-decode one sub-vector's coordinates (batched
+            // symbol pull).
+            self.sym.decode_into(&mut self.coords);
             self.base.recorrelate(&mut self.coords);
-            let p = self.base.point(&self.coords); // lattice point at base scale
+            // lattice point at base scale
+            self.base.point_into(&self.coords, &mut self.point);
             // D2: regenerate this block's dither and subtract;
             // D3: rescale and reassemble.
-            let z = sample_dither(self.base, &mut self.rng);
+            fill_dither(self.base, &mut self.rng, &mut self.zbuf, &mut self.lat_scratch);
             for j in 0..self.l {
                 let idx = self.next_block * self.l + j;
                 if idx >= self.m {
@@ -301,9 +372,9 @@ impl DecodeStream for UveqfedStream<'_> {
                 }
                 // Q_{sΛ}(h̄+sz) = s·p; subtract dither s·z; rescale.
                 let v = if self.subtractive {
-                    self.s * (p[j] - z[j])
+                    self.s * (self.point[j] - self.zbuf[j])
                 } else {
-                    self.s * p[j]
+                    self.s * self.point[j]
                 };
                 self.scratch.push((v * self.scale_factor) as f32);
             }
@@ -345,6 +416,7 @@ impl UpdateCodec for UVeQFed {
         }
         let sym = SymbolDecoder::from_embedded(&msg.bytes, &mut r, l);
         let rng = ctx.crand.stream(ctx.user, ctx.round, StreamKind::Dither);
+        let blocks_per_chunk = (DEFAULT_CHUNK / l).max(1);
         Box::new(UveqfedStream {
             base: self.base.as_ref(),
             subtractive: self.subtractive,
@@ -356,9 +428,12 @@ impl UpdateCodec for UVeQFed {
             n_sub,
             next_block: 0,
             m,
-            blocks_per_chunk: (DEFAULT_CHUNK / l).max(1),
+            blocks_per_chunk,
             coords: vec![0i64; l],
-            scratch: Vec::new(),
+            point: vec![0.0; l],
+            zbuf: vec![0.0; l],
+            lat_scratch: Scratch::new(),
+            scratch: Vec::with_capacity(blocks_per_chunk * l),
         })
     }
 }

@@ -1,6 +1,7 @@
-//! Minimal JSON *writer* for results files (serde is not vendorable
-//! offline). Only serialization is needed — experiment outputs are JSON /
-//! CSV consumed by plotting scripts or humans.
+//! Minimal JSON writer + parser for results files (serde is not vendorable
+//! offline). Serialization covers experiment outputs; the parser exists so
+//! the bench baseline file (`BENCH_baseline.json`) can be read back and
+//! merged across bench binaries and snapshots.
 
 use std::fmt::Write as _;
 
@@ -100,6 +101,222 @@ impl Json {
         self.write(&mut s);
         s
     }
+
+    // ── accessors (for parsed documents) ────────────────────────────
+
+    /// Field lookup on an object (first match); `None` otherwise.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Parse a JSON document (strict enough for files this crate writes;
+    /// rejects trailing garbage).
+    pub fn parse(text: &str) -> crate::Result<Json> {
+        let bytes = text.as_bytes();
+        let mut p = Parser { bytes, pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != bytes.len() {
+            crate::bail!("trailing garbage at byte {} of JSON document", p.pos);
+        }
+        Ok(v)
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> crate::Result<()> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            crate::bail!("expected '{}' at byte {} of JSON document", c as char, self.pos)
+        }
+    }
+
+    fn eat_lit(&mut self, lit: &str) -> bool {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn value(&mut self) -> crate::Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'n') if self.eat_lit("null") => Ok(Json::Null),
+            Some(b't') if self.eat_lit("true") => Ok(Json::Bool(true)),
+            Some(b'f') if self.eat_lit("false") => Ok(Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => {
+                self.pos += 1;
+                let mut items = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => crate::bail!("expected ',' or ']' at byte {}", self.pos),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                let mut fields = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                loop {
+                    self.skip_ws();
+                    let key = self.string()?;
+                    self.skip_ws();
+                    self.expect(b':')?;
+                    let val = self.value()?;
+                    fields.push((key, val));
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(Json::Obj(fields));
+                        }
+                        _ => crate::bail!("expected ',' or '}}' at byte {}", self.pos),
+                    }
+                }
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let start = self.pos;
+                self.pos += 1;
+                while self
+                    .peek()
+                    .map(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+                    .unwrap_or(false)
+                {
+                    self.pos += 1;
+                }
+                let s = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii");
+                s.parse::<f64>()
+                    .map(Json::Num)
+                    .map_err(|_| crate::util::error::Error::msg(format!("bad number '{s}'")))
+            }
+            _ => crate::bail!("unexpected character at byte {} of JSON document", self.pos),
+        }
+    }
+
+    fn string(&mut self) -> crate::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(c) = self.peek() else {
+                crate::bail!("unterminated JSON string");
+            };
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        crate::bail!("unterminated escape in JSON string");
+                    };
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                crate::bail!("truncated \\u escape");
+                            }
+                            let hex =
+                                std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                                    .ok()
+                                    .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                    .and_then(char::from_u32);
+                            self.pos += 4;
+                            match hex {
+                                Some(ch) => out.push(ch),
+                                None => crate::bail!("bad \\u escape"),
+                            }
+                        }
+                        other => crate::bail!("bad escape '\\{}'", other as char),
+                    }
+                }
+                _ => {
+                    // Copy the raw UTF-8 byte run starting here.
+                    let start = self.pos - 1;
+                    while self
+                        .peek()
+                        .map(|c| c != b'"' && c != b'\\')
+                        .unwrap_or(false)
+                    {
+                        self.pos += 1;
+                    }
+                    match std::str::from_utf8(&self.bytes[start..self.pos]) {
+                        Ok(s) => out.push_str(s),
+                        Err(_) => crate::bail!("invalid UTF-8 in JSON string"),
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -130,5 +347,43 @@ mod tests {
     #[test]
     fn nan_becomes_null() {
         assert_eq!(Json::num(f64::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let mut o = Json::obj();
+        o.push("name", Json::str("base\"line\n"));
+        o.push("n", Json::num(-12.5e-3));
+        o.push("flag", Json::Bool(false));
+        o.push("none", Json::Null);
+        o.push("xs", Json::arr_nums(&[1.0, 2.0, 3.5]));
+        let mut inner = Json::obj();
+        inner.push("k", Json::num(7.0));
+        o.push("meta", inner);
+        let text = o.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed, o);
+    }
+
+    #[test]
+    fn parse_accessors_and_whitespace() {
+        let doc = Json::parse(
+            "{\n  \"snapshots\": [ {\"label\": \"pre\", \"median\": 0.25} ],\n  \"schema\": 1\n}",
+        )
+        .unwrap();
+        assert_eq!(doc.get("schema").and_then(Json::as_num), Some(1.0));
+        let snaps = doc.get("snapshots").and_then(Json::as_arr).unwrap();
+        assert_eq!(snaps.len(), 1);
+        assert_eq!(snaps[0].get("label").and_then(Json::as_str), Some("pre"));
+        assert_eq!(snaps[0].get("median").and_then(Json::as_num), Some(0.25));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1, 2,]").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("nul").is_err());
     }
 }

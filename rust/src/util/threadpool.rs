@@ -1,9 +1,38 @@
 //! Scoped worker pool for the federated clients (tokio is not vendorable
 //! offline; the workload — K independent local-training jobs per round —
 //! is CPU-bound fan-out/fan-in, which scoped threads model exactly).
+//!
+//! Workers also get a typed **thread-local scratch registry**
+//! ([`with_scratch`]): per-thread reusable arenas keyed by type, so the
+//! per-client encode hot path (UVeQFed's buffers, lattice batch scratch)
+//! allocates once per worker thread instead of once per client, and
+//! `FleetDriver` rounds scale with cores instead of with the allocator.
 
+use std::any::{Any, TypeId};
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+thread_local! {
+    /// Per-thread arena registry: one instance of each scratch type per
+    /// thread, created on first use and reused for the thread's lifetime.
+    static SCRATCH: RefCell<HashMap<TypeId, Box<dyn Any>>> = RefCell::new(HashMap::new());
+}
+
+/// Borrow this thread's reusable instance of scratch type `T` (created via
+/// `Default` on first use). The instance is *removed* from the registry for
+/// the duration of `f`, so nested `with_scratch::<T>` calls see a fresh
+/// value instead of aliasing — reuse simply doesn't compound across
+/// recursion, which the hot paths never do.
+pub fn with_scratch<T: Default + 'static, R>(f: impl FnOnce(&mut T) -> R) -> R {
+    let mut boxed: Box<dyn Any> = SCRATCH
+        .with(|c| c.borrow_mut().remove(&TypeId::of::<T>()))
+        .unwrap_or_else(|| Box::<T>::default());
+    let r = f(boxed.downcast_mut::<T>().expect("scratch registry type confusion"));
+    SCRATCH.with(|c| c.borrow_mut().insert(TypeId::of::<T>(), boxed));
+    r
+}
 
 /// Run `f(i)` for `i in 0..n` on up to `workers` OS threads, collecting
 /// results in index order. Panics in jobs propagate.
@@ -103,6 +132,27 @@ pub fn default_workers() -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn scratch_is_reused_and_nesting_is_safe() {
+        let cap = with_scratch::<Vec<u8>, _>(|v| {
+            v.clear();
+            v.reserve(128);
+            v.capacity()
+        });
+        assert!(cap >= 128);
+        let cap2 = with_scratch::<Vec<u8>, _>(|v| v.capacity());
+        assert!(cap2 >= 128, "second borrow must see the reused buffer");
+        // Nested borrow of the same type must get a fresh value, not alias.
+        with_scratch::<Vec<u8>, _>(|outer| {
+            outer.clear();
+            outer.push(1);
+            with_scratch::<Vec<u8>, _>(|inner| {
+                assert!(inner.is_empty(), "nested scratch must not alias");
+            });
+            assert_eq!(outer.len(), 1);
+        });
+    }
 
     #[test]
     fn results_in_order() {

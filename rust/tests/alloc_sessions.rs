@@ -1,0 +1,128 @@
+//! Steady-state allocation audit for the codec session hot path.
+//!
+//! The fleet driver pushes every client update through `EncodeSink::push`
+//! and folds every server-side `DecodeStream::next_chunk` — at 10k+
+//! clients × thousands of chunks per round, a single heap allocation per
+//! chunk dominates the profile. This test installs a counting
+//! `#[global_allocator]` and asserts the contract the session API
+//! documents: after the first (warm-up) chunk, `push` and `next_chunk`
+//! perform **zero** heap allocations for every single-pass/streaming
+//! codec (uveqfed, qsgd, terngrad, identity, signsgd).
+//!
+//! This file deliberately contains exactly one `#[test]`: the counter is
+//! process-global, so no other test may run concurrently in this binary.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use uveqfed::prng::{Normal, Rng, Xoshiro256pp};
+use uveqfed::quantizer::{self, CodecContext};
+
+struct CountingAlloc;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Run `f` with allocation counting enabled; returns the event count.
+fn counted(f: impl FnOnce()) -> u64 {
+    COUNTING.store(true, Ordering::SeqCst);
+    let before = ALLOC_EVENTS.load(Ordering::SeqCst);
+    f();
+    let after = ALLOC_EVENTS.load(Ordering::SeqCst);
+    COUNTING.store(false, Ordering::SeqCst);
+    after - before
+}
+
+/// The codecs whose sessions promise zero steady-state allocation.
+const CODECS: &[&str] =
+    &["uveqfed-l1", "uveqfed-l2", "qsgd", "terngrad", "identity", "signsgd"];
+
+#[test]
+fn steady_state_sessions_do_not_allocate() {
+    let m = 4096 + 13; // several DEFAULT_CHUNK decode chunks + ragged tail
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    let h = Normal::new(0.0, 0.5).vec_f32(&mut rng, m);
+
+    for name in CODECS {
+        let codec = quantizer::make(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let ctx = CodecContext::new(3, 7, 11, 2.0);
+        // Warm the per-thread encode arena (UVeQFed) and the scale hint so
+        // the session below runs in steady state.
+        let _ = codec.encode(&h, &ctx);
+
+        // ── EncodeSink: first push warms, every later push must not
+        //    allocate.
+        let mut sink = codec.encoder(&ctx, m);
+        let chunks: Vec<&[f32]> = h.chunks(512).collect();
+        sink.push(chunks[0]);
+        let n = counted(|| {
+            for c in &chunks[1..] {
+                sink.push(c);
+            }
+        });
+        assert_eq!(n, 0, "{name}: EncodeSink::push allocated {n} time(s)");
+        let enc = sink.finish();
+
+        // ── DecodeStream: first chunk warms the per-session scratch,
+        //    the rest of the drain must not allocate.
+        let mut stream = codec.decoder(&enc, m, &ctx);
+        let mut total = stream.next_chunk().expect("empty decode stream").len();
+        let n = counted(|| {
+            while let Some(c) = stream.next_chunk() {
+                total += c.len();
+            }
+        });
+        assert_eq!(n, 0, "{name}: DecodeStream::next_chunk allocated {n} time(s)");
+        assert_eq!(total, m, "{name}: decode stream yielded wrong length");
+    }
+
+    // QSGD's sub-1-bit budget switches to the range-coded wire format,
+    // which decodes through the batched SymbolMapStream — audit that
+    // steady state too.
+    let mut rng = Xoshiro256pp::seed_from_u64(43);
+    let sparse: Vec<f32> = (0..m)
+        .map(|_| if rng.uniform() < 0.005 { rng.normal_f32() } else { 0.0 })
+        .collect();
+    let codec = quantizer::make("qsgd").unwrap();
+    let ctx = CodecContext::new(0, 0, 7, 0.2);
+    let enc = codec.encode(&sparse, &ctx);
+    let mut stream = codec.decoder(&enc, m, &ctx);
+    let mut total = stream.next_chunk().expect("empty qsgd range stream").len();
+    let n = counted(|| {
+        while let Some(c) = stream.next_chunk() {
+            total += c.len();
+        }
+    });
+    assert_eq!(n, 0, "qsgd range fallback: next_chunk allocated {n} time(s)");
+    assert_eq!(total, m);
+}

@@ -3,7 +3,7 @@
 
 use uveqfed::entropy::elias::{EliasDelta, EliasGamma, EliasOmega};
 use uveqfed::entropy::huffman::HuffmanCoder;
-use uveqfed::entropy::range::AdaptiveRangeCoder;
+use uveqfed::entropy::range::{AdaptiveRangeCoder, BitwiseRangeCoder};
 use uveqfed::entropy::{BitReader, BitWriter, IntCoder};
 use uveqfed::lattice::{self, Lattice};
 use uveqfed::prng::{Rng, Xoshiro256pp};
@@ -117,6 +117,95 @@ fn prop_lattice_error_within_covering_radius() {
             let err: f64 =
                 x.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
             err <= bound + 1e-9
+        });
+    }
+}
+
+#[test]
+fn prop_batched_kernels_bit_identical_to_scalar_paths() {
+    // The encoder hot path runs the batched allocation-free kernels; the
+    // legacy per-block slice methods are the spec. For every registered
+    // lattice, any scale, any block count, and any aligned sub-range
+    // (stride) the two must agree bit-for-bit.
+    let gen = SeedScaleGen { max_scale: 3.0 };
+    for name in ["scalar", "hex", "hex-a2", "cubic2", "cubic4", "d4", "e8"] {
+        let base = lattice::by_name(name).unwrap();
+        check(&format!("batch-parity-{name}"), &gen, cfgn(48), |&(seed, scale)| {
+            let lat = base.boxed_scaled(scale);
+            let l = lat.dim();
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let blocks = 1 + rng.gen_index(37);
+            let xs: Vec<f64> = (0..blocks * l).map(|_| rng.normal() * 5.0).collect();
+            let mut scratch = lattice::Scratch::new();
+
+            // nearest: batched vs per-block scalar path.
+            let mut batch = vec![0i64; xs.len()];
+            lat.nearest_batch_into(&xs, &mut batch, &mut scratch);
+            let mut one = vec![0i64; l];
+            for (b, x) in xs.chunks_exact(l).enumerate() {
+                lat.nearest_into(x, &mut one);
+                if one[..] != batch[b * l..(b + 1) * l] {
+                    return false;
+                }
+            }
+
+            // A batch over a random aligned sub-range (stride) must equal
+            // the corresponding slice of the full batch.
+            let start = rng.gen_index(blocks);
+            let end = start + 1 + rng.gen_index(blocks - start);
+            let sub = &xs[start * l..end * l];
+            let mut sub_out = vec![0i64; sub.len()];
+            lat.nearest_batch_into(sub, &mut sub_out, &mut scratch);
+            if sub_out[..] != batch[start * l..end * l] {
+                return false;
+            }
+
+            // quantize: batched vs per-block, bit-identical f64s.
+            let mut qbatch = vec![0.0f64; xs.len()];
+            lat.quantize_batch_into(&xs, &mut qbatch, &mut scratch);
+            for (b, x) in xs.chunks_exact(l).enumerate() {
+                let q = lat.quantize(x);
+                let same = q
+                    .iter()
+                    .zip(&qbatch[b * l..(b + 1) * l])
+                    .all(|(a, c)| a.to_bits() == c.to_bits());
+                if !same {
+                    return false;
+                }
+            }
+
+            // point_into vs point on the first block's coordinates.
+            let mut p = vec![0.0f64; l];
+            lat.point_into(&batch[..l], &mut p);
+            p == lat.point(&batch[..l])
+        });
+    }
+}
+
+#[test]
+fn prop_table_coder_round_trips_against_bitwise_oracle() {
+    // The table-driven range coder (new wire format) and the retained
+    // bit-by-bit coder must both round-trip any fuzzed symbol stream and
+    // decode to the SAME symbols — the old coder is the compatibility
+    // oracle for the new tables.
+    let gen = VecI64Gen { min_len: 1, max_len: 600, magnitude: 1 << 30 };
+    for dims in [1usize, 2, 8] {
+        let table = AdaptiveRangeCoder::with_dims(dims);
+        let bitwise = BitwiseRangeCoder::with_dims(dims);
+        check(&format!("range-v2-vs-oracle-dims{dims}"), &gen, cfgn(64), |xs| {
+            let mut w = BitWriter::new();
+            table.encode(xs, &mut w);
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            let dec_table = table.decode(xs.len(), &mut r);
+
+            let mut w = BitWriter::new();
+            bitwise.encode(xs, &mut w);
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            let dec_bitwise = bitwise.decode(xs.len(), &mut r);
+
+            dec_table == *xs && dec_bitwise == dec_table
         });
     }
 }
