@@ -185,6 +185,7 @@ fn fig67(rate: f64) {
         eval_every: (rounds / 25).max(1),
         verbose: false,
         fleet: uveqfed::fleet::Scenario::full(),
+        channel: None,
     };
     let mut histories = Vec::new();
     for run in CONVERGENCE_RUNS {
@@ -222,6 +223,7 @@ fn fig89(rate: f64) {
             eval_every: (rounds / 25).max(1),
             verbose: false,
             fleet: uveqfed::fleet::Scenario::full(),
+            channel: None,
         };
         let mut histories = Vec::new();
         for run in CONVERGENCE_RUNS.iter().filter(|r| {
@@ -279,6 +281,7 @@ fn fig1011(rate: f64) {
             eval_every: (rounds / 12).max(1),
             verbose: false,
             fleet: uveqfed::fleet::Scenario::full(),
+            channel: None,
         };
         let mut histories = Vec::new();
         for run in CONVERGENCE_RUNS.iter().filter(|r| {

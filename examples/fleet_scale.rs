@@ -51,6 +51,7 @@ fn main() {
             batch_size: 0,
             trainer: &trainer,
             codec: codec.as_ref(),
+            rate_override: None,
         };
         let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
         wire_total += rep.wire_bytes;
@@ -93,6 +94,7 @@ fn main() {
             batch_size: 0,
             trainer: &trainer,
             codec: codec.as_ref(),
+            rate_override: None,
         };
         ref_driver.run_round(&spec, &mut wr, &ref_pool, &mut ref_clock);
     }

@@ -1,0 +1,137 @@
+//! Heterogeneous uplinks walkthrough: a cohort-sampled fleet whose
+//! clients sit on three capacity tiers (0.5×, 1×, 2× the base rate),
+//! trained under each rate-allocation policy — uniform, capacity-
+//! proportional, and theory-guided (Theorem-2 reverse water-filling).
+//!
+//! Prints per-policy accuracy, realized rate spread, and the Thm-2
+//! aggregate-distortion bound of each round-0 allocation at equal total
+//! bits — the comparison the rate controller exists to win.
+//!
+//! Run: `cargo run --release --example hetero_channel`
+
+use uveqfed::coordinator::rate_control::{
+    controller_by_name, thm2_bound_for_allocation, AllocRequest, RateController, TheoryGuided,
+};
+use uveqfed::data::{partition, PartitionScheme, SynthMnist};
+use uveqfed::fl::{NativeTrainer, Trainer};
+use uveqfed::fleet::{
+    Channel, ChannelModel, FleetDriver, RatePlan, RoundRobinPool, RoundSpec, Scenario,
+    VirtualClock,
+};
+use uveqfed::fleet::ClientPool;
+use uveqfed::models::LogReg;
+use uveqfed::quantizer;
+
+fn main() {
+    let seed = 11u64;
+    let population = 20_000usize;
+    let cohort = 96usize;
+    let rounds = 25usize;
+    let base_rate = 2.0;
+
+    let n_templates = 24;
+    let per = 100;
+    let gen = SynthMnist::new(seed);
+    let ds = gen.dataset(n_templates * per);
+    let test = gen.test_dataset(500);
+    let templates = partition(&ds, n_templates, per, PartitionScheme::Iid, seed);
+    let pool = RoundRobinPool::synthetic(population, templates, seed);
+    let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
+    let codec = quantizer::make("uveqfed-l2").expect("codec");
+
+    println!(
+        "hetero_channel — population {population}, cohort {cohort}, tiers \
+         [{:.1}, {:.1}, {:.1}] b/entry, UVeQFed L=2\n",
+        0.5 * base_rate,
+        base_rate,
+        2.0 * base_rate
+    );
+    println!(
+        "{:<14} {:>8} {:>10} {:>22} {:>12}",
+        "policy", "acc", "bits(MB)", "rate min/avg/max", "thm2 bound"
+    );
+
+    let mut bounds: Vec<(String, f64)> = Vec::new();
+    // Round-0 allocation inputs of the uniform run, for the equal-bits
+    // comparison below (same seed ⇒ every policy sees the same cohort
+    // and capacities in round 0).
+    let mut round0: Option<(Vec<f64>, Vec<f64>, f64)> = None; // (caps, alphas, uniform spend)
+    for policy in ["uniform", "proportional", "theory"] {
+        let plan = RatePlan::new(
+            Channel::new(
+                ChannelModel::by_name("tiers", base_rate).expect("preset"),
+                seed,
+            ),
+            controller_by_name(policy).expect("policy"),
+        );
+        let driver = FleetDriver::new(seed, base_rate, 8, Scenario::sampled(cohort))
+            .with_rate_plan(plan);
+        let mut clock = VirtualClock::new();
+        let mut w = trainer.init_params(seed);
+        let m = w.len();
+        let mut bits_total = 0usize;
+        let mut spread = (f64::INFINITY, 0.0f64, 0.0f64); // (min, Σmean, max)
+        let mut round0_bound = 0.0;
+        for round in 0..rounds {
+            let spec = RoundSpec::new(round as u64, 1, 0.5, 0, &trainer, codec.as_ref());
+            let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
+            assert_eq!(rep.budget_violations, 0, "codec must fit every assigned budget");
+            bits_total += rep.uplink_bits;
+            spread = (
+                spread.0.min(rep.channel.min_rate),
+                spread.1 + rep.channel.mean_rate, // averaged over rounds below
+                spread.2.max(rep.channel.max_rate),
+            );
+            if round == 0 {
+                // Thm-2 bound of this round's realized allocation: the
+                // yardstick the policies compete on.
+                let folded: Vec<_> =
+                    rep.clients.iter().filter(|c| c.achieved_bits > 0).collect();
+                let rates: Vec<f64> = folded.iter().map(|c| c.assigned_rate).collect();
+                let alphas: Vec<f64> =
+                    folded.iter().map(|c| pool.weight(c.user as usize)).collect();
+                round0_bound = thm2_bound_for_allocation(&rates, &alphas, m);
+                if policy == "uniform" {
+                    let caps: Vec<f64> = folded.iter().map(|c| c.capacity).collect();
+                    round0 = Some((caps, alphas, rates.iter().sum()));
+                }
+                assert!(
+                    rep.channel.distinct_budgets >= 3 || policy == "uniform",
+                    "tiers must produce ≥3 budgets under capacity-aware policies"
+                );
+            }
+        }
+        let eval = trainer.evaluate(&w, &test);
+        println!(
+            "{:<14} {:>8.4} {:>10.2} {:>10.2}/{:>4.2}/{:>4.2} {:>12.3e}",
+            policy,
+            eval.accuracy,
+            bits_total as f64 / 8e6,
+            spread.0,
+            spread.1 / rounds as f64,
+            spread.2,
+            round0_bound,
+        );
+        bounds.push((policy.to_string(), round0_bound));
+    }
+
+    // Equal-total-bits comparison: uniform strands mass behind capacity
+    // caps, so re-run the water-filling at exactly the mass uniform
+    // realized in round 0 (not each policy's own spend).
+    let uni_bound = bounds.iter().find(|(p, _)| p == "uniform").unwrap().1;
+    let (caps, alphas, spent_uni) = round0.expect("uniform run records round 0");
+    let m = trainer.init_params(seed).len();
+    let eq = TheoryGuided.allocate(&AllocRequest {
+        capacities: &caps,
+        alphas: &alphas,
+        total_rate: spent_uni,
+    });
+    let eq_bound = thm2_bound_for_allocation(&eq, &alphas, m);
+    println!(
+        "\nTheorem-2 aggregate bound at equal total bits ({spent_uni:.1} b/entry):\n\
+         theory {eq_bound:.3e} vs uniform {uni_bound:.3e} ({}x tighter)\n\
+         Water-filling spends bits where α²-weighted distortion hurts the\n\
+         aggregate most; uniform strands budget behind slow uplinks.",
+        (uni_bound / eq_bound).max(1.0) as u32
+    );
+}

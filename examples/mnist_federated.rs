@@ -74,6 +74,7 @@ fn main() {
         eval_every: 5,
         verbose: true,
         fleet: uveqfed::fleet::Scenario::full(),
+        channel: None,
     };
     let hist = run_federated(&cfg, trainer.as_ref(), &shards, &test, codec.as_ref());
     let last = hist.rows.last().unwrap();

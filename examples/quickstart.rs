@@ -39,6 +39,7 @@ fn main() {
         eval_every: 10,
         verbose: true,
         fleet: uveqfed::fleet::Scenario::full(),
+        channel: None,
     };
     let hist = run_federated(&cfg, &trainer, &shards, &test, codec.as_ref());
 

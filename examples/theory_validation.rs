@@ -90,6 +90,7 @@ fn thm2() {
             eval_every: 1,
             verbose: false,
             fleet: uveqfed::fleet::Scenario::full(),
+            channel: None,
         };
         cfg.eval_every = 1;
         let hist = run_federated(&cfg, &trainer, &shards, &test, codec.as_ref());
@@ -127,6 +128,7 @@ fn thm3() {
         eval_every: 20,
         verbose: false,
         fleet: uveqfed::fleet::Scenario::full(),
+        channel: None,
     };
     // Evaluate on the training union: the recorded loss is then exactly
     // the global objective F(w_t) of eq. (1).

@@ -69,6 +69,7 @@ fn main() {
                 batch_size: 0,
                 trainer: &noop,
                 codec: codec.as_ref(),
+                rate_override: None,
             };
             driver.run_round(&spec, &mut w, &shards, &alphas);
             round += 1;
@@ -93,6 +94,7 @@ fn main() {
             batch_size: 0,
             trainer: &trainer,
             codec: codec.as_ref(),
+            rate_override: None,
         };
         driver.run_round(&spec, &mut w, &shards, &alphas);
         round += 1;

@@ -62,6 +62,7 @@ fn main() {
                     eval_every: (rounds / 8).max(1),
                     verbose: false,
                     fleet: uveqfed::fleet::Scenario::full(),
+                    channel: None,
                 };
                 let mut best = 0.0;
                 let mut curve = Vec::new();

@@ -13,10 +13,12 @@
 //! Run: `cargo bench --bench fleet_scale` (BENCH_QUICK=1 for a smoke run).
 
 use uveqfed::bench::{run, smoke_mode, BenchConfig, Recorder};
+use uveqfed::coordinator::rate_control::{controller_by_name, TheoryGuided};
 use uveqfed::data::Dataset;
 use uveqfed::fl::Trainer;
 use uveqfed::fleet::{
-    FleetDriver, RoundRobinPool, RoundSpec, Scenario, StreamingAggregator, VirtualClock,
+    Channel, ChannelModel, FleetDriver, RatePlan, RoundRobinPool, RoundSpec, Scenario,
+    StreamingAggregator, VirtualClock,
 };
 use uveqfed::models::EvalReport;
 use uveqfed::prng::{Normal, Xoshiro256pp};
@@ -96,6 +98,7 @@ fn main() {
                 batch_size: 0,
                 trainer: &trainer,
                 codec: codec.as_ref(),
+                rate_override: None,
             };
             let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
             aggregated = rep.aggregated;
@@ -130,6 +133,7 @@ fn main() {
                 batch_size: 0,
                 trainer: &trainer,
                 codec: codec.as_ref(),
+                rate_override: None,
             };
             driver.run_round(&spec, &mut w, &big_pool, &mut clock);
             round += 1;
@@ -182,5 +186,73 @@ fn main() {
             );
         }
     }
+
+    // ── D: heterogeneous uplinks — the rate-diverse scenario engine.
+    //      Per-round cost of drawing channel capacities + running the
+    //      rate controller + encoding every client at its own budget,
+    //      vs the same-pipe baseline from section A. The theory-guided
+    //      water-filling runs on the coordinator thread, so this also
+    //      bounds the allocation's serial overhead.
+    let hetero_pop = if smoke { 400usize } else { 10_000 };
+    let hetero_pool = RoundRobinPool::synthetic(hetero_pop, vec![tiny_template()], 4);
+    println!("# hetero-channel rounds — population={hetero_pop}, m={m}");
+    for (channel_name, policy) in
+        [("tiers", "theory"), ("tiers", "proportional"), ("markov", "theory"), ("lognormal", "uniform")]
+    {
+        let codec = quantizer::make("uveqfed-l2").expect("codec spec");
+        let plan = RatePlan::new(
+            Channel::new(ChannelModel::by_name(channel_name, 2.0).expect("preset"), 4),
+            controller_by_name(policy).expect("policy"),
+        );
+        let driver =
+            FleetDriver::new(4, 2.0, workers, Scenario::full()).with_rate_plan(plan);
+        let mut clock = VirtualClock::new();
+        let mut w = trainer.init_params(1);
+        let mut round = 0u64;
+        let mut distinct = 0usize;
+        let mut violations = 0usize;
+        let r = run(&format!("hetero-round/{channel_name}/{policy}"), cfg, || {
+            let spec = RoundSpec {
+                round,
+                local_steps: 1,
+                lr: 0.1,
+                batch_size: 0,
+                trainer: &trainer,
+                codec: codec.as_ref(),
+                rate_override: None,
+            };
+            let rep = driver.run_round(&spec, &mut w, &hetero_pool, &mut clock);
+            distinct = rep.channel.distinct_budgets;
+            violations += rep.budget_violations;
+            round += 1;
+        });
+        rec.add_with_items(&r, hetero_pop as f64);
+        assert_eq!(violations, 0, "every encode must fit its assigned budget");
+        println!(
+            "    ↳ {:.1} ms/round, {} distinct budgets, {:.2}k client-updates/s",
+            r.median_secs * 1e3,
+            distinct,
+            hetero_pop as f64 / r.median_secs / 1e3
+        );
+    }
+    // Pure allocation cost at fleet cohort sizes (no training/codec):
+    // the controller must stay negligible against the round itself.
+    let k_alloc = if smoke { 1_000usize } else { 100_000 };
+    let caps: Vec<f64> = (0..k_alloc).map(|i| [0.5, 2.0, 4.0][i % 3]).collect();
+    let alphas: Vec<f64> = (0..k_alloc).map(|i| 1.0 + (i % 7) as f64).collect();
+    let r = run(&format!("rate-alloc/theory/{k_alloc}"), cfg, || {
+        use uveqfed::coordinator::rate_control::{AllocRequest, RateController};
+        let req = AllocRequest {
+            capacities: &caps,
+            alphas: &alphas,
+            total_rate: 2.0 * k_alloc as f64,
+        };
+        std::hint::black_box(TheoryGuided.allocate(&req));
+    });
+    rec.add_with_items(&r, k_alloc as f64);
+    println!(
+        "    ↳ theory-guided allocation over {k_alloc} clients: {:.2} ms",
+        r.median_secs * 1e3
+    );
     rec.save_or_warn();
 }

@@ -191,6 +191,12 @@ impl Recorder {
     /// hermetic — no process-global env mutation).
     fn save_to(&self, path: std::path::PathBuf) -> crate::Result<std::path::PathBuf> {
         let mut kept: Vec<Json> = Vec::new();
+        // A smoke run must never clobber a real measurement under the
+        // same (label, bench): smoke sizes/iteration counts are garbage
+        // as a perf trajectory, and a careless `--smoke` rerun used to
+        // silently poison the committed baseline (merge bug found while
+        // writing the population procedure).
+        let mut keep_existing = false;
         // Top-level fields other than schema/snapshots (e.g. a "note")
         // are preserved verbatim across merges.
         let mut extra: Vec<(String, Json)> = Vec::new();
@@ -211,6 +217,15 @@ impl Recorder {
                         && s.get("bench").and_then(Json::as_str) == Some(self.bench.as_str());
                     if !same {
                         kept.push(s.clone());
+                    } else if self.smoke
+                        && s.get("smoke") != Some(&Json::Bool(true))
+                    {
+                        eprintln!(
+                            "warning: not replacing real '{}'/'{}' baseline snapshot with a smoke run",
+                            self.label, self.bench
+                        );
+                        kept.push(s.clone());
+                        keep_existing = true;
                     }
                 }
             }
@@ -238,7 +253,9 @@ impl Recorder {
             arr.push(o);
         }
         snap.push("entries", Json::Arr(arr));
-        kept.push(snap);
+        if !keep_existing {
+            kept.push(snap);
+        }
         let mut doc = Json::obj();
         doc.push("schema", Json::num(1.0));
         for (k, v) in extra {
@@ -322,6 +339,68 @@ mod tests {
         assert_eq!(entries[0].get("median_secs").and_then(Json::as_num), Some(0.5));
         // The replacement dropped the throughput field of the first save.
         assert!(entries[0].get("items_per_sec").is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn smoke_run_cannot_clobber_a_real_snapshot() {
+        let path = std::env::temp_dir()
+            .join(format!("uveqfed-baseline-smoke-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let res = BenchResult {
+            name: "encode/uveqfed-l2/r2".into(),
+            median_secs: 0.25,
+            mean_secs: 0.25,
+            sem_secs: 0.01,
+            iters: 15,
+        };
+        // Real measurement lands first…
+        let mut real = Recorder::new("codec_micro");
+        real.label = "pre".into();
+        real.smoke = false;
+        real.add(&res);
+        real.save_to(path.clone()).unwrap();
+        // …then a smoke rerun under the same (label, bench) must NOT
+        // replace it…
+        let fast = BenchResult { median_secs: 1e-6, ..res.clone() };
+        let mut smoke = Recorder::new("codec_micro");
+        smoke.label = "pre".into();
+        smoke.smoke = true;
+        smoke.add(&fast);
+        smoke.save_to(path.clone()).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let snaps = doc.get("snapshots").and_then(Json::as_arr).unwrap();
+        assert_eq!(snaps.len(), 1);
+        let entry = &snaps[0].get("entries").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(entry.get("median_secs").and_then(Json::as_num), Some(0.25));
+        // …while smoke-over-smoke and real-over-anything still replace.
+        let mut smoke2 = Recorder::new("lattice_micro");
+        smoke2.label = "pre".into();
+        smoke2.smoke = true;
+        smoke2.add(&fast);
+        smoke2.save_to(path.clone()).unwrap();
+        let mut smoke3 = Recorder::new("lattice_micro");
+        smoke3.label = "pre".into();
+        smoke3.smoke = true;
+        smoke3.add(&res);
+        smoke3.save_to(path.clone()).unwrap();
+        let mut real2 = Recorder::new("codec_micro");
+        real2.label = "pre".into();
+        real2.smoke = false;
+        real2.add(&fast);
+        real2.save_to(path.clone()).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let snaps = doc.get("snapshots").and_then(Json::as_arr).unwrap();
+        assert_eq!(snaps.len(), 2, "one per bench");
+        for s in snaps {
+            let e = &s.get("entries").and_then(Json::as_arr).unwrap()[0];
+            let want = if s.get("bench").and_then(Json::as_str) == Some("codec_micro") {
+                1e-6 // real run replaced the real snapshot
+            } else {
+                0.25 // smoke replaced smoke
+            };
+            assert_eq!(e.get("median_secs").and_then(Json::as_num), Some(want));
+        }
         let _ = std::fs::remove_file(&path);
     }
 

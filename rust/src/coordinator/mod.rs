@@ -8,8 +8,13 @@
 //! decoded updates — O(K·m) — before aggregating). The uplink budget
 //! enforcement still lives in exactly one place: [`UplinkChannel`].
 
+pub mod rate_control;
 mod uplink;
 
+pub use rate_control::{
+    controller_by_name, thm2_bound_for_allocation, AllocRequest, CapacityProportional,
+    RateController, TheoryGuided, UniformRate,
+};
 pub use uplink::{UplinkChannel, UplinkError, UplinkStats};
 
 pub use crate::fleet::RoundSpec;
@@ -80,7 +85,7 @@ mod tests {
         trainer: &'a dyn crate::fl::Trainer,
         codec: &'a dyn crate::quantizer::UpdateCodec,
     ) -> RoundSpec<'a> {
-        RoundSpec { round: 0, local_steps: 1, lr: 0.5, batch_size: 0, trainer, codec }
+        RoundSpec::new(0, 1, 0.5, 0, trainer, codec)
     }
 
     #[test]

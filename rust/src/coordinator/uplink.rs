@@ -69,7 +69,20 @@ impl UplinkChannel {
     /// are violated — so fleet fault-injection can observe and count
     /// violations instead of aborting the whole simulation.
     pub fn try_transmit(&self, user: u64, enc: &Encoded, m: usize) -> Result<(), UplinkError> {
-        let budget = (self.rate * m as f64).floor() as usize;
+        self.try_transmit_rate(user, enc, m, self.rate)
+    }
+
+    /// [`Self::try_transmit`] with a per-message rate override — the
+    /// heterogeneous-uplink path, where the coordinator's rate controller
+    /// assigns each client its own budget (`fleet::RatePlan`).
+    pub fn try_transmit_rate(
+        &self,
+        user: u64,
+        enc: &Encoded,
+        m: usize,
+        rate: f64,
+    ) -> Result<(), UplinkError> {
+        let budget = (rate * m as f64).floor() as usize;
         if self.enforce && enc.bits > budget {
             return Err(UplinkError::OverBudget { user, bits: enc.bits, budget });
         }
@@ -142,6 +155,16 @@ mod tests {
     fn over_budget_panics_when_enforced() {
         let ch = UplinkChannel::new(1.0, true);
         ch.transmit(0, &enc(101), 100);
+    }
+
+    #[test]
+    fn per_message_rate_override_sets_the_budget() {
+        // Channel rate 1.0, but this client was assigned 2.0 bits/entry.
+        let ch = UplinkChannel::new(1.0, true);
+        ch.try_transmit_rate(4, &enc(150), 100, 2.0).unwrap();
+        let err = ch.try_transmit_rate(4, &enc(150), 100, 1.0).unwrap_err();
+        assert_eq!(err, UplinkError::OverBudget { user: 4, bits: 150, budget: 100 });
+        assert_eq!(ch.stats().messages, 1);
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! Federated run configuration + learning-rate schedules.
 
+use crate::coordinator::rate_control::controller_by_name;
+use crate::fleet::{
+    Channel, ChannelModel, FaultPlan, LatencyModel, RatePlan, SamplerKind, Scenario,
+};
+
 use crate::data::Dataset;
-use crate::fleet::{FaultPlan, LatencyModel, SamplerKind, Scenario};
 use crate::util::config::Config;
 
 /// Learning-rate schedule.
@@ -47,6 +51,32 @@ pub struct FlConfig {
     /// Participation + fault scenario (`Scenario::full()` reproduces the
     /// seed's every-user-every-round behavior).
     pub fleet: Scenario,
+    /// Heterogeneous uplink plan (`[channel]` config block); `None` keeps
+    /// the legacy same-pipe-for-everyone uplink.
+    pub channel: Option<ChannelPlanSpec>,
+}
+
+/// Plain-data description of a heterogeneous-uplink plan: the capacity
+/// model plus the rate-control policy name. Separated from the live
+/// [`RatePlan`] so `FlConfig` stays `Clone` and the Markov channel state
+/// is created fresh per run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChannelPlanSpec {
+    pub model: ChannelModel,
+    /// Rate-control policy: `uniform` | `proportional` | `theory`.
+    pub policy: String,
+}
+
+impl ChannelPlanSpec {
+    /// Instantiate the live plan for a run (validates the model and
+    /// resolves the policy; both fail with named-alternative errors).
+    pub fn build(&self, seed: u64) -> crate::Result<RatePlan> {
+        self.model.validate()?;
+        Ok(RatePlan::new(
+            Channel::new(self.model.clone(), seed),
+            controller_by_name(&self.policy)?,
+        ))
+    }
 }
 
 impl FlConfig {
@@ -72,7 +102,67 @@ impl FlConfig {
             eval_every: c.usize_or("fl.eval_every", 5),
             verbose: c.bool_or("fl.verbose", false),
             fleet: Self::fleet_from_config(c)?,
+            channel: Self::channel_from_config(c)?,
         })
+    }
+
+    /// Parse the optional `[channel]` section. Grammar:
+    ///
+    /// ```toml
+    /// [channel]
+    /// model = "tiers"            # uniform | tiers | lognormal | markov
+    /// policy = "theory"          # uniform | proportional | theory
+    /// # model parameters (each defaults to its preset value, derived
+    /// # from quantizer.rate):
+    /// tiers = [1.0, 2.0, 4.0]    # tiers: capacity classes (bits/entry)
+    /// median = 2.0               # lognormal: median capacity
+    /// sigma = 0.6                # lognormal: log-std
+    /// good = 4.0                 # markov: good-state capacity
+    /// bad = 0.5                  # markov: bad-state capacity
+    /// p_good_to_bad = 0.2        # markov: per-round transition
+    /// p_bad_to_good = 0.4
+    /// ```
+    ///
+    /// Absent section (no `channel.model` key) = homogeneous uplink.
+    fn channel_from_config(c: &Config) -> crate::Result<Option<ChannelPlanSpec>> {
+        let Some(model_name) = c.get("channel.model").and_then(|v| v.as_str()) else {
+            crate::ensure!(
+                c.get("channel.policy").is_none(),
+                "[channel] has a policy but no model — set channel.model"
+            );
+            return Ok(None);
+        };
+        let base_rate = c.f64_or("quantizer.rate", 2.0);
+        // Start from the preset at the run's base rate, then let explicit
+        // keys override each parameter.
+        let mut model = ChannelModel::by_name(model_name, base_rate)?;
+        match &mut model {
+            ChannelModel::Fixed { rate } => {
+                *rate = c.f64_or("channel.rate", *rate);
+            }
+            ChannelModel::Tiers { rates } => {
+                if let Some(arr) = c.get("channel.tiers").and_then(|v| v.as_array()) {
+                    let parsed: Option<Vec<f64>> = arr.iter().map(|v| v.as_f64()).collect();
+                    *rates = parsed
+                        .ok_or_else(|| crate::format_err!("channel.tiers must be numeric"))?;
+                }
+            }
+            ChannelModel::LogNormal { median, sigma } => {
+                *median = c.f64_or("channel.median", *median);
+                *sigma = c.f64_or("channel.sigma", *sigma);
+            }
+            ChannelModel::Markov { good, bad, p_good_to_bad, p_bad_to_good } => {
+                *good = c.f64_or("channel.good", *good);
+                *bad = c.f64_or("channel.bad", *bad);
+                *p_good_to_bad = c.f64_or("channel.p_good_to_bad", *p_good_to_bad);
+                *p_bad_to_good = c.f64_or("channel.p_bad_to_good", *p_bad_to_good);
+            }
+        }
+        model.validate()?;
+        let policy = c.str_or("channel.policy", "uniform");
+        // Resolve now so config typos fail at load, not mid-run.
+        controller_by_name(&policy)?;
+        Ok(Some(ChannelPlanSpec { model, policy }))
     }
 
     /// Parse the optional `[fleet]` section. Absent section = full
@@ -146,6 +236,7 @@ mod tests {
             eval_every: 1,
             verbose: false,
             fleet: Scenario::full(),
+            channel: None,
         };
         let a = cfg.alphas(&[mk(30), mk(10)]);
         assert!((a[0] - 0.75).abs() < 1e-12);
@@ -186,5 +277,57 @@ mod tests {
         let c = Config::parse("[fleet]\ncohort = 8").unwrap();
         let f = FlConfig::from_config(&c).unwrap();
         assert_eq!(f.fleet.sampler, SamplerKind::Uniform { cohort: 8 });
+    }
+
+    #[test]
+    fn absent_channel_section_means_homogeneous_uplink() {
+        let c = Config::parse("[fl]\nusers = 2").unwrap();
+        assert_eq!(FlConfig::from_config(&c).unwrap().channel, None);
+    }
+
+    #[test]
+    fn channel_section_parses_presets_and_overrides() {
+        let c = Config::parse(
+            "[quantizer]\nrate = 2.0\n[channel]\nmodel = \"tiers\"\npolicy = \"theory\"\n\
+             tiers = [0.5, 2.0, 8.0]",
+        )
+        .unwrap();
+        let spec = FlConfig::from_config(&c).unwrap().channel.unwrap();
+        assert_eq!(spec.model, ChannelModel::Tiers { rates: vec![0.5, 2.0, 8.0] });
+        assert_eq!(spec.policy, "theory");
+        spec.build(7).unwrap();
+
+        // Preset parameters derive from quantizer.rate when not given.
+        let c = Config::parse("[quantizer]\nrate = 4.0\n[channel]\nmodel = \"lognormal\"")
+            .unwrap();
+        let spec = FlConfig::from_config(&c).unwrap().channel.unwrap();
+        assert_eq!(spec.model, ChannelModel::LogNormal { median: 4.0, sigma: 0.6 });
+        assert_eq!(spec.policy, "uniform");
+
+        let c = Config::parse(
+            "[channel]\nmodel = \"markov\"\ngood = 6.0\nbad = 0.5\n\
+             p_good_to_bad = 0.1\np_bad_to_good = 0.9\npolicy = \"proportional\"",
+        )
+        .unwrap();
+        let spec = FlConfig::from_config(&c).unwrap().channel.unwrap();
+        assert_eq!(
+            spec.model,
+            ChannelModel::Markov { good: 6.0, bad: 0.5, p_good_to_bad: 0.1, p_bad_to_good: 0.9 }
+        );
+    }
+
+    #[test]
+    fn channel_config_mistakes_are_errors() {
+        for bad in [
+            "[channel]\nmodel = \"nope\"",
+            "[channel]\npolicy = \"theory\"", // policy without model
+            "[channel]\nmodel = \"tiers\"\npolicy = \"nope\"",
+            "[channel]\nmodel = \"tiers\"\ntiers = [\"a\"]",
+            "[channel]\nmodel = \"lognormal\"\nsigma = -1.0",
+            "[channel]\nmodel = \"markov\"\np_good_to_bad = 2.0",
+        ] {
+            let c = Config::parse(bad).unwrap();
+            assert!(FlConfig::from_config(&c).is_err(), "{bad} should fail");
+        }
     }
 }

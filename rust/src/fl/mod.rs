@@ -10,7 +10,7 @@
 mod config;
 mod trainer;
 
-pub use config::{FlConfig, LrSchedule};
+pub use config::{ChannelPlanSpec, FlConfig, LrSchedule};
 pub use trainer::{NativeTrainer, Trainer};
 
 use crate::data::Dataset;
@@ -41,6 +41,11 @@ pub struct HistoryRow {
     pub round_latency: f64,
     /// Cumulative serialized uplink bytes (frame headers included).
     pub wire_bytes: f64,
+    /// Selected clients that missed the round deadline.
+    pub deadline_misses: usize,
+    /// Mean assigned rate over the round's aggregated clients
+    /// (bits/entry); equals the configured rate on a homogeneous uplink.
+    pub mean_assigned_rate: f64,
 }
 
 /// One column of the run history: CSV header name + value extractor.
@@ -63,6 +68,8 @@ pub const HISTORY_COLUMNS: &[HistoryColumn] = &[
     ("alpha_mass", |r| r.alpha_mass),
     ("round_latency", |r| r.round_latency),
     ("wire_bytes", |r| r.wire_bytes),
+    ("deadline_misses", |r| r.deadline_misses as f64),
+    ("mean_assigned_rate", |r| r.mean_assigned_rate),
 ];
 
 /// Full run record; converts to CSV for the figure harnesses.
@@ -103,12 +110,19 @@ pub fn run_federated(
     let alphas = cfg.alphas(shards);
     let pool = ShardPool::with_weights(shards, &alphas);
     let mut w = trainer.init_params(cfg.seed);
-    let driver = FleetDriver::new(
+    let mut driver = FleetDriver::new(
         cfg.seed,
         cfg.rate,
         cfg.workers.min(trainer.max_workers()),
         cfg.fleet.clone(),
     );
+    if let Some(spec) = &cfg.channel {
+        // Config-file paths validated this at load; programmatically
+        // constructed FlConfigs surface the registry's own error here.
+        driver = driver.with_rate_plan(
+            spec.build(cfg.seed).unwrap_or_else(|e| panic!("invalid [channel] plan: {e}")),
+        );
+    }
     let mut clock = VirtualClock::new();
     let mut history = FlHistory::default();
     let wall = Timer::start();
@@ -124,16 +138,25 @@ pub fn run_federated(
             batch_size: cfg.batch_size,
             trainer,
             codec,
+            rate_override: None,
         };
         let rep: FleetRoundReport = driver.run_round(&spec, &mut w, &pool, &mut clock);
-        // Budget violations are codec bugs, never injected faults (faults
-        // model latency/dropout, not bit inflation) — abort loudly rather
-        // than silently training on a shrunken cohort. Callers that want
-        // to observe violations drive `FleetDriver` directly.
+        // Budget violations are codec bugs or a rate plan starving a
+        // fixed-length codec — never injected faults (faults model
+        // latency/dropout, not bit inflation). Abort loudly rather than
+        // silently training on a shrunken cohort; callers that want to
+        // observe violations drive `FleetDriver` directly.
         assert_eq!(
             rep.budget_violations, 0,
-            "round {round}: {} uplink budget violation(s) — codec bug",
-            rep.budget_violations
+            "round {round}: {} uplink budget violation(s) — {}",
+            rep.budget_violations,
+            if cfg.channel.is_some() {
+                "codec bug, or the [channel] plan starves a fixed-length codec \
+                 (terngrad/signsgd cannot shrink below their floor; use a \
+                 variable-rate codec or raise the bad-state capacity)"
+            } else {
+                "codec bug"
+            }
         );
         uplink_total += rep.uplink_bits as f64;
         wire_total += rep.wire_bytes as f64;
@@ -153,6 +176,8 @@ pub fn run_federated(
                 alpha_mass: rep.alpha_mass,
                 round_latency: rep.timing.duration,
                 wire_bytes: wire_total,
+                deadline_misses: rep.late,
+                mean_assigned_rate: rep.channel.mean_rate,
             });
             if cfg.verbose {
                 println!(
@@ -193,6 +218,7 @@ mod tests {
             eval_every: rounds.max(1),
             verbose: false,
             fleet: crate::fleet::Scenario::full(),
+            channel: None,
         }
     }
 
@@ -259,6 +285,28 @@ mod tests {
         for w in table.rows.windows(2) {
             assert!(w[1][bits_col] >= w[0][bits_col]);
         }
+    }
+
+    #[test]
+    fn heterogeneous_channel_run_learns_and_reports_rates() {
+        let gen = SynthMnist::new(15);
+        let ds = gen.dataset(300);
+        let test = gen.test_dataset(100);
+        let shards = partition(&ds, 6, 50, PartitionScheme::Iid, 3);
+        let model = LogReg::new(ds.features, ds.classes, 1e-3);
+        let trainer = NativeTrainer::new(model);
+        let codec = quantizer::make("uveqfed-l2").unwrap();
+        let mut cfg = quick_cfg(6, 15, 2.0);
+        cfg.channel = Some(ChannelPlanSpec {
+            model: crate::fleet::ChannelModel::Tiers { rates: vec![1.0, 2.0, 4.0] },
+            policy: "theory".into(),
+        });
+        cfg.eval_every = 5;
+        let hist = run_federated(&cfg, &trainer, &shards, &test, codec.as_ref());
+        for r in &hist.rows {
+            assert!(r.mean_assigned_rate > 0.0, "rate metrics must be surfaced");
+        }
+        assert!(hist.final_accuracy() > 0.4, "acc {}", hist.final_accuracy());
     }
 
     #[test]

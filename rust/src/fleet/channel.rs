@@ -1,0 +1,294 @@
+//! Heterogeneous uplink capacity models.
+//!
+//! UVeQFed's premise is conveying model updates over *rate-constrained*
+//! uplink channels (§V-A scales the lattice so codewords fit `R·m` bits)
+//! — but a real fleet of millions of devices does not share one pipe:
+//! capacities span orders of magnitude and drift over time (FedVQCS,
+//! arXiv 2204.07692, and "Federated Learning With Quantized Global Model
+//! Updates", arXiv 2006.10672, both evaluate exactly this regime). This
+//! module models the per-client uplink capacity `C_u(t)` in **bits per
+//! model entry** and the coordinator's rate controller
+//! ([`crate::coordinator::rate_control`]) decides how much of each
+//! client's capacity to actually spend.
+//!
+//! Every draw is a pure function of `(root seed, client, round)` through
+//! the shared randomness streams ([`StreamKind::Channel`]) — capacities
+//! are bit-reproducible and independent of cohort selection, worker
+//! interleaving, or query order. The Markov fading chain is advanced by
+//! the round clock: [`Channel::capacity`] walks each client's chain from
+//! its last observed round (round 0 on first touch), so per-round
+//! advancement is O(1) amortized and the state at round `t` never depends
+//! on *which* rounds the client was sampled in.
+
+use crate::prng::{CommonRandomness, Rng, StreamKind};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Per-client uplink capacity model (bits per model entry).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChannelModel {
+    /// Every client, every round, the same capacity — the legacy
+    /// "same pipe for everyone" degenerate preset.
+    Fixed { rate: f64 },
+    /// Static capacity classes: client `u` is pinned (by a seeded hash)
+    /// to `rates[tier(u)]` for the whole run — device classes
+    /// (wifi / LTE / constrained IoT).
+    Tiers { rates: Vec<f64> },
+    /// I.i.d. per-(client, round) log-normal bandwidth draws:
+    /// `median · exp(σ·Z)` — heavy-tailed cell-edge variation.
+    LogNormal { median: f64, sigma: f64 },
+    /// Two-state Gilbert–Elliott fading per client: capacity `good` in
+    /// the good state, `bad` in the bad state, with per-round transition
+    /// probabilities. The chain starts from its stationary distribution
+    /// and advances one step per round.
+    Markov { good: f64, bad: f64, p_good_to_bad: f64, p_bad_to_good: f64 },
+}
+
+impl ChannelModel {
+    /// Preset by CLI/config name, parameterized by the run's base rate
+    /// `R` so presets stay meaningful at any budget scale.
+    pub fn by_name(name: &str, base_rate: f64) -> crate::Result<Self> {
+        crate::ensure!(
+            base_rate.is_finite() && base_rate > 0.0,
+            "channel presets need a positive base rate (got {base_rate})"
+        );
+        Ok(match name {
+            "uniform" | "fixed" => ChannelModel::Fixed { rate: base_rate },
+            // Three device classes around R: constrained, nominal, fast.
+            "tiers" => ChannelModel::Tiers {
+                rates: vec![0.5 * base_rate, base_rate, 2.0 * base_rate],
+            },
+            "lognormal" => ChannelModel::LogNormal { median: base_rate, sigma: 0.6 },
+            "markov" => ChannelModel::Markov {
+                good: 2.0 * base_rate,
+                bad: 0.25 * base_rate,
+                p_good_to_bad: 0.2,
+                p_bad_to_good: 0.4,
+            },
+            other => crate::bail!(
+                "unknown channel preset '{other}' (uniform|tiers|lognormal|markov)"
+            ),
+        })
+    }
+
+    /// Validate model parameters (config values arrive unchecked).
+    pub fn validate(&self) -> crate::Result<()> {
+        fn pos(v: f64, what: &str) -> crate::Result<()> {
+            crate::ensure!(v.is_finite() && v > 0.0, "channel {what} must be > 0 (got {v})");
+            Ok(())
+        }
+        match self {
+            ChannelModel::Fixed { rate } => pos(*rate, "rate"),
+            ChannelModel::Tiers { rates } => {
+                crate::ensure!(!rates.is_empty(), "channel tiers must be non-empty");
+                for &r in rates {
+                    pos(r, "tier rate")?;
+                }
+                Ok(())
+            }
+            ChannelModel::LogNormal { median, sigma } => {
+                pos(*median, "median")?;
+                crate::ensure!(
+                    sigma.is_finite() && *sigma >= 0.0,
+                    "channel sigma must be ≥ 0 (got {sigma})"
+                );
+                Ok(())
+            }
+            ChannelModel::Markov { good, bad, p_good_to_bad, p_bad_to_good } => {
+                pos(*good, "good-state rate")?;
+                pos(*bad, "bad-state rate")?;
+                for (p, what) in
+                    [(*p_good_to_bad, "p_good_to_bad"), (*p_bad_to_good, "p_bad_to_good")]
+                {
+                    crate::ensure!(
+                        (0.0..=1.0).contains(&p),
+                        "channel {what} must be in [0, 1] (got {p})"
+                    );
+                }
+                crate::ensure!(
+                    *p_good_to_bad + *p_bad_to_good > 0.0,
+                    "channel Markov chain must mix (both transition probabilities are 0)"
+                );
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Cached Markov fading state of one client.
+#[derive(Debug, Clone, Copy)]
+struct MarkovCell {
+    /// Round the cached state applies to.
+    round: u64,
+    good: bool,
+}
+
+/// A seeded channel instance: the model plus the lazily-advanced Markov
+/// state (other models are stateless functions of `(user, round)`).
+#[derive(Debug)]
+pub struct Channel {
+    model: ChannelModel,
+    crand: CommonRandomness,
+    /// Per-client fading chains, advanced as the round clock moves. The
+    /// mutex is touched once per (selected client, round) on the
+    /// coordinator thread — never inside the worker fan-out.
+    markov: Mutex<HashMap<u64, MarkovCell>>,
+}
+
+impl Channel {
+    pub fn new(model: ChannelModel, seed: u64) -> Self {
+        Self { model, crand: CommonRandomness::new(seed), markov: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn model(&self) -> &ChannelModel {
+        &self.model
+    }
+
+    /// Uniform draw for `(user, round)` from the channel stream.
+    fn draw(&self, user: u64, round: u64) -> f64 {
+        self.crand.stream(user, round, StreamKind::Channel).uniform()
+    }
+
+    /// Capacity of `user`'s uplink in `round`, bits per model entry.
+    /// Deterministic in `(seed, user, round)` for every model.
+    pub fn capacity(&self, user: u64, round: u64) -> f64 {
+        match self.model {
+            ChannelModel::Fixed { rate } => rate,
+            ChannelModel::Tiers { ref rates } => {
+                // Stable per-client class: seeded hash, constant over rounds.
+                let tier =
+                    self.crand.derive_seed(user, 0, StreamKind::Channel) as usize % rates.len();
+                rates[tier]
+            }
+            ChannelModel::LogNormal { median, sigma } => {
+                let z = self.crand.stream(user, round, StreamKind::Channel).normal();
+                median * (sigma * z).exp()
+            }
+            ChannelModel::Markov { good, bad, p_good_to_bad, p_bad_to_good } => {
+                let state = self.markov_state(user, round, p_good_to_bad, p_bad_to_good);
+                if state {
+                    good
+                } else {
+                    bad
+                }
+            }
+        }
+    }
+
+    /// Markov state (true = good) of `user` at `round`: advance the
+    /// cached chain forward, or replay from round 0 when queried behind
+    /// the cache (pure function of `(seed, user, round)` either way).
+    fn markov_state(&self, user: u64, round: u64, p_gb: f64, p_bg: f64) -> bool {
+        let mut cells = self.markov.lock().unwrap();
+        let mut cell = match cells.get(&user) {
+            Some(&c) if c.round <= round => c,
+            _ => {
+                // Stationary start: P(good) = p_bg / (p_gb + p_bg).
+                let pi_good = p_bg / (p_gb + p_bg);
+                MarkovCell { round: 0, good: self.draw(user, 0) < pi_good }
+            }
+        };
+        while cell.round < round {
+            cell.round += 1;
+            let u = self.draw(user, cell.round);
+            cell.good = if cell.good { u >= p_gb } else { u < p_bg };
+        }
+        cells.insert(user, cell);
+        cell.good
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_construct_and_validate() {
+        for name in ["uniform", "tiers", "lognormal", "markov"] {
+            let m = ChannelModel::by_name(name, 2.0).unwrap();
+            m.validate().unwrap();
+        }
+        assert!(ChannelModel::by_name("nope", 2.0).is_err());
+        assert!(ChannelModel::by_name("tiers", 0.0).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_parameters() {
+        assert!(ChannelModel::Fixed { rate: -1.0 }.validate().is_err());
+        assert!(ChannelModel::Tiers { rates: vec![] }.validate().is_err());
+        assert!(ChannelModel::Tiers { rates: vec![1.0, 0.0] }.validate().is_err());
+        assert!(
+            ChannelModel::LogNormal { median: 1.0, sigma: -0.1 }.validate().is_err()
+        );
+        assert!(ChannelModel::Markov {
+            good: 2.0,
+            bad: 1.0,
+            p_good_to_bad: 1.5,
+            p_bad_to_good: 0.5
+        }
+        .validate()
+        .is_err());
+        assert!(ChannelModel::Markov {
+            good: 2.0,
+            bad: 1.0,
+            p_good_to_bad: 0.0,
+            p_bad_to_good: 0.0
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn tiers_are_stable_per_client_and_cover_all_classes() {
+        let ch = Channel::new(ChannelModel::by_name("tiers", 2.0).unwrap(), 7);
+        let mut seen = std::collections::BTreeSet::new();
+        for u in 0..300u64 {
+            let c0 = ch.capacity(u, 0);
+            assert_eq!(c0, ch.capacity(u, 5), "tier must not change across rounds");
+            seen.insert(c0.to_bits());
+        }
+        assert_eq!(seen.len(), 3, "300 clients must cover all 3 tiers");
+    }
+
+    #[test]
+    fn lognormal_is_deterministic_and_round_varying() {
+        let model = ChannelModel::LogNormal { median: 2.0, sigma: 0.6 };
+        let a = Channel::new(model.clone(), 9);
+        let b = Channel::new(model, 9);
+        assert_eq!(a.capacity(4, 2), b.capacity(4, 2));
+        assert_ne!(a.capacity(4, 2), a.capacity(4, 3), "capacity must vary by round");
+        // Median sanity over many draws.
+        let mut v: Vec<f64> = (0..4001u64).map(|u| a.capacity(u, 0)).collect();
+        v.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let med = v[v.len() / 2];
+        assert!((med - 2.0).abs() < 0.15, "median {med}");
+    }
+
+    #[test]
+    fn markov_state_is_query_order_independent() {
+        let model = ChannelModel::Markov {
+            good: 4.0,
+            bad: 0.5,
+            p_good_to_bad: 0.3,
+            p_bad_to_good: 0.3,
+        };
+        // Forward walk…
+        let fwd = Channel::new(model.clone(), 11);
+        let forward: Vec<f64> = (0..40u64).map(|r| fwd.capacity(5, r)).collect();
+        // …must equal arbitrary-order queries (each replays from 0 or
+        // advances the cache).
+        let rnd = Channel::new(model, 11);
+        let order = [7u64, 0, 39, 12, 7, 3, 39, 20];
+        for &r in &order {
+            assert_eq!(rnd.capacity(5, r), forward[r as usize], "round {r}");
+        }
+    }
+
+    #[test]
+    fn markov_visits_both_states() {
+        let ch = Channel::new(ChannelModel::by_name("markov", 2.0).unwrap(), 13);
+        let caps: Vec<f64> = (0..200u64).map(|r| ch.capacity(1, r)).collect();
+        let goods = caps.iter().filter(|&&c| c > 2.0).count();
+        assert!(goods > 20 && goods < 180, "chain stuck: {goods}/200 good rounds");
+    }
+}

@@ -34,17 +34,20 @@
 //! cohort's weight made it before the deadline.
 
 pub mod aggregate;
+pub mod channel;
 pub mod clock;
 pub mod faults;
 pub mod sampler;
 pub mod wire;
 
 pub use aggregate::StreamingAggregator;
+pub use channel::{Channel, ChannelModel};
 pub use clock::{RoundTiming, VirtualClock};
 pub use faults::{ClientFate, FaultPlan, LatencyModel};
 pub use sampler::{CohortSampler, SamplerKind};
 pub use wire::{decode_frame, encode_frame, Frame, WireError};
 
+use crate::coordinator::rate_control::{AllocRequest, RateController};
 use crate::coordinator::UplinkChannel;
 use crate::data::Dataset;
 use crate::fl::Trainer;
@@ -71,6 +74,31 @@ pub struct RoundSpec<'a> {
     pub batch_size: usize,
     pub trainer: &'a dyn Trainer,
     pub codec: &'a dyn UpdateCodec,
+    /// Per-round budget override (bits/entry): replaces the driver's base
+    /// rate for this round only — every variable-rate codec sees it
+    /// through `CodecContext::rate` (rate schedules, warm-up rounds). A
+    /// `RatePlan` on the driver further splits this mass per client.
+    pub rate_override: Option<f64>,
+}
+
+impl<'a> RoundSpec<'a> {
+    /// Spec with the driver's base rate (no per-round override).
+    pub fn new(
+        round: u64,
+        local_steps: usize,
+        lr: f32,
+        batch_size: usize,
+        trainer: &'a dyn Trainer,
+        codec: &'a dyn UpdateCodec,
+    ) -> Self {
+        Self { round, local_steps, lr, batch_size, trainer, codec, rate_override: None }
+    }
+
+    /// Override this round's rate budget (bits/entry).
+    pub fn with_rate(mut self, rate: f64) -> Self {
+        self.rate_override = Some(rate);
+        self
+    }
 }
 
 /// A (possibly enormous) client population the fleet can draw from.
@@ -245,8 +273,48 @@ impl Scenario {
     }
 }
 
+/// Per-(selected client, round) uplink outcome — the rate-diverse
+/// observability the heterogeneous-channel work adds. One record per
+/// *selected* client, in cohort (ascending-id) order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClientRoundRecord {
+    pub user: u64,
+    /// Channel capacity this round (bits/entry); the base rate when no
+    /// rate plan is active.
+    pub capacity: f64,
+    /// Rate the controller assigned (bits/entry). 0 when the client never
+    /// transmitted (dropped / late / cut by over-selection).
+    pub assigned_rate: f64,
+    /// Exact coded bits of the folded update (0 when not aggregated) —
+    /// always ≤ ⌊assigned_rate·m⌋ for rate-constrained codecs.
+    pub achieved_bits: usize,
+    /// Client finished local work but missed the round deadline.
+    pub deadline_miss: bool,
+    /// Client dropped out (sent nothing).
+    pub dropped: bool,
+}
+
+/// Round-level summary of the rate allocation (all zeros when the driver
+/// has no rate plan and ran the legacy same-pipe-for-everyone uplink).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ChannelRoundStats {
+    /// A rate plan was active this round.
+    pub enabled: bool,
+    /// Min / mean / max assigned rate over aggregated clients (bits/entry).
+    pub min_rate: f64,
+    pub mean_rate: f64,
+    pub max_rate: f64,
+    /// Distinct assigned budgets (⌊R_u·m⌋ granularity) — ≥ 3 under the
+    /// tiers preset.
+    pub distinct_budgets: usize,
+    /// Σ channel capacity over aggregated clients (bits/entry mass).
+    pub capacity_mass: f64,
+    /// Σ assigned rate over aggregated clients (≤ capacity_mass).
+    pub assigned_mass: f64,
+}
+
 /// Everything the server learns from one fleet round.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct FleetRoundReport {
     pub round: u64,
     /// Clients selected (target + over-selection headroom).
@@ -277,9 +345,28 @@ pub struct FleetRoundReport {
     /// Real compute seconds spent inside client jobs (sum over clients).
     pub client_secs: f64,
     pub timing: RoundTiming,
+    /// Rate-allocation summary (zeroed when no rate plan is active).
+    pub channel: ChannelRoundStats,
+    /// Per-selected-client uplink outcomes (capacity, assigned rate,
+    /// achieved bits, deadline misses), ascending client id.
+    pub clients: Vec<ClientRoundRecord>,
 }
 
-/// Drives fleet rounds: sample cohort → fault fates → fan out local
+/// A heterogeneous-uplink plan: the capacity model plus the policy that
+/// splits the round's rate mass across clients.
+pub struct RatePlan {
+    pub channel: Channel,
+    pub controller: Box<dyn RateController>,
+}
+
+impl RatePlan {
+    pub fn new(channel: Channel, controller: Box<dyn RateController>) -> Self {
+        Self { channel, controller }
+    }
+}
+
+/// Drives fleet rounds: sample cohort → fault fates → (optionally) draw
+/// per-client channel capacities and allocate rates → fan out local
 /// training over the arrivals → frame/unframe each update through the
 /// metered uplink → stream-fold into the O(m) aggregate → apply.
 pub struct FleetDriver {
@@ -288,11 +375,33 @@ pub struct FleetDriver {
     workers: usize,
     scenario: Scenario,
     sampler: CohortSampler,
+    /// Heterogeneous uplink: per-client capacities + rate controller.
+    /// `None` = the legacy fixed budget for everyone.
+    rate_plan: Option<RatePlan>,
 }
 
 impl FleetDriver {
     pub fn new(seed: u64, rate: f64, workers: usize, scenario: Scenario) -> Self {
-        Self { seed, rate, workers: workers.max(1), scenario, sampler: CohortSampler::new(seed) }
+        Self {
+            seed,
+            rate,
+            workers: workers.max(1),
+            scenario,
+            sampler: CohortSampler::new(seed),
+            rate_plan: None,
+        }
+    }
+
+    /// Attach a heterogeneous-uplink rate plan: per-client capacities are
+    /// drawn each round and `plan.controller` splits `rate · |cohort|`
+    /// bits/entry of mass across the arrivals.
+    pub fn with_rate_plan(mut self, plan: RatePlan) -> Self {
+        self.rate_plan = Some(plan);
+        self
+    }
+
+    pub fn rate_plan(&self) -> Option<&RatePlan> {
+        self.rate_plan.as_ref()
     }
 
     pub fn scenario(&self) -> &Scenario {
@@ -323,20 +432,47 @@ impl FleetDriver {
         // Fault fates — pure functions of (seed, user, round).
         let crand = CommonRandomness::new(self.seed);
         let mut arrivals: Vec<(f64, usize)> = Vec::with_capacity(selected.len());
+        let mut fates: Vec<ClientFate> = Vec::with_capacity(selected.len());
         let mut dropped = 0usize;
         let mut late = 0usize;
         for &u in &selected {
-            match self.scenario.faults.fate(&crand, u as u64, round) {
+            let fate = self.scenario.faults.fate(&crand, u as u64, round);
+            match fate {
                 ClientFate::Arrives { latency } => arrivals.push((latency, u)),
                 ClientFate::Late { .. } => late += 1,
                 ClientFate::Dropped => dropped += 1,
             }
+            fates.push(fate);
         }
         arrivals.sort_by(|a, b| {
             a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
         });
         let surplus = arrivals.len().saturating_sub(target);
         arrivals.truncate(target);
+
+        // Per-client uplink budget: draw channel capacities and run the
+        // rate controller over the aggregating set (coordinator thread —
+        // allocation sees the whole cohort, workers only their own rate).
+        let base_rate = spec.rate_override.unwrap_or(self.rate);
+        let (capacities, rates) = match &self.rate_plan {
+            Some(plan) => {
+                let caps: Vec<f64> = arrivals
+                    .iter()
+                    .map(|&(_, u)| plan.channel.capacity(u as u64, round))
+                    .collect();
+                let cohort_alphas: Vec<f64> =
+                    arrivals.iter().map(|&(_, u)| pool.weight(u)).collect();
+                let req = AllocRequest {
+                    capacities: &caps,
+                    alphas: &cohort_alphas,
+                    total_rate: base_rate * arrivals.len() as f64,
+                };
+                let rates = plan.controller.allocate(&req);
+                debug_assert_eq!(rates.len(), arrivals.len());
+                (caps, rates)
+            }
+            None => (vec![base_rate; arrivals.len()], vec![base_rate; arrivals.len()]),
+        };
 
         // α re-normalization over the set that actually aggregates.
         let arrived_weight: f64 = arrivals.iter().map(|&(_, u)| pool.weight(u)).sum();
@@ -347,7 +483,7 @@ impl FleetDriver {
         );
 
         // Fan out local training over arrivals; stream-fold as frames land.
-        let uplink = UplinkChannel::new(self.rate, spec.codec.rate_constrained());
+        let uplink = UplinkChannel::new(base_rate, spec.codec.rate_constrained());
         let wire_codec_id =
             quantizer::codec_id(&spec.codec.name()).unwrap_or(quantizer::CODEC_ID_UNREGISTERED);
         let mut agg = StreamingAggregator::new(m);
@@ -355,9 +491,12 @@ impl FleetDriver {
         let mut client_secs = 0.0f64;
         let mut wire_bytes = 0usize;
         let mut budget_violations = 0usize;
+        let mut achieved_bits = vec![0usize; arrivals.len()];
         {
             let w_snapshot: &[f32] = w;
             let arrivals_ref: &[(f64, usize)] = &arrivals;
+            let rates_ref: &[f64] = &rates;
+            let achieved_ref = &mut achieved_bits;
             parallel_map_fold(
                 arrivals_ref.len(),
                 self.workers,
@@ -384,8 +523,9 @@ impl FleetDriver {
                     }
                     // Client side of the session API: the update streams
                     // through the encode sink in tensor chunks (layer-style
-                    // granularity), not as one monolithic buffer.
-                    let ctx = CodecContext::new(u as u64, round, self.seed, self.rate);
+                    // granularity), not as one monolithic buffer. The
+                    // client's assigned rate arrives via CodecContext.
+                    let ctx = CodecContext::new(u as u64, round, self.seed, rates_ref[i]);
                     let mut sink = spec.codec.encoder(&ctx, m);
                     for chunk in h.chunks(DEFAULT_CHUNK) {
                         sink.push(chunk);
@@ -400,11 +540,15 @@ impl FleetDriver {
                     let f = wire::decode_frame(&frame)
                         .expect("in-memory frame failed integrity check");
                     debug_assert_eq!(f.user, arrivals_ref[i].1 as u64);
-                    match uplink.try_transmit(f.user, &f.payload, m) {
+                    match uplink.try_transmit_rate(f.user, &f.payload, m, rates_ref[i]) {
                         Ok(()) => {
+                            achieved_ref[i] = f.payload.bits;
                             let alpha = pool.weight(arrivals_ref[i].1) / arrived_weight;
+                            // The decoder must see the same per-client rate
+                            // (subsample/rotation derive their layout from
+                            // the budget).
                             let ctx =
-                                CodecContext::new(f.user, f.round, self.seed, self.rate);
+                                CodecContext::new(f.user, f.round, self.seed, rates_ref[i]);
                             // Server side of the session API: decode-stream
                             // chunks fold straight into the fixed-point
                             // accumulator — no per-user Vec<f32> is ever
@@ -429,6 +573,53 @@ impl FleetDriver {
         let waited = if arrivals.len() < target { self.scenario.faults.deadline } else { None };
         let timing = clock.close_round(&latencies, waited);
 
+        // Per-client records (ascending client id = `selected` order) and
+        // the round's rate-allocation summary. The user→arrival index is
+        // a sorted side table probed by binary search — O(n log n) with
+        // one small allocation, no hashing on the per-round path.
+        let mut by_user: Vec<(usize, usize)> =
+            arrivals.iter().enumerate().map(|(i, &(_, u))| (u, i)).collect();
+        by_user.sort_unstable();
+        let clients: Vec<ClientRoundRecord> = selected
+            .iter()
+            .zip(&fates)
+            .map(|(&u, fate)| {
+                let idx = by_user
+                    .binary_search_by_key(&u, |&(user, _)| user)
+                    .ok()
+                    .map(|pos| by_user[pos].1);
+                ClientRoundRecord {
+                    user: u as u64,
+                    capacity: match (&self.rate_plan, idx) {
+                        (_, Some(i)) => capacities[i],
+                        (Some(plan), None) => plan.channel.capacity(u as u64, round),
+                        (None, None) => base_rate,
+                    },
+                    assigned_rate: idx.map(|i| rates[i]).unwrap_or(0.0),
+                    achieved_bits: idx.map(|i| achieved_bits[i]).unwrap_or(0),
+                    deadline_miss: matches!(fate, ClientFate::Late { .. }),
+                    dropped: matches!(fate, ClientFate::Dropped),
+                }
+            })
+            .collect();
+        let channel = if arrivals.is_empty() {
+            ChannelRoundStats { enabled: self.rate_plan.is_some(), ..Default::default() }
+        } else {
+            let mut budgets: Vec<usize> =
+                rates.iter().map(|&r| (r * m as f64).floor() as usize).collect();
+            budgets.sort_unstable();
+            budgets.dedup();
+            ChannelRoundStats {
+                enabled: self.rate_plan.is_some(),
+                min_rate: rates.iter().cloned().fold(f64::INFINITY, f64::min),
+                mean_rate: rates.iter().sum::<f64>() / rates.len() as f64,
+                max_rate: rates.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+                distinct_budgets: budgets.len(),
+                capacity_mass: capacities.iter().sum(),
+                assigned_mass: rates.iter().sum(),
+            }
+        };
+
         FleetRoundReport {
             round,
             selected: selected.len(),
@@ -445,6 +636,8 @@ impl FleetDriver {
             aggregate_distortion,
             client_secs,
             timing,
+            channel,
+            clients,
         }
     }
 }
@@ -471,7 +664,7 @@ mod tests {
         trainer: &'a dyn Trainer,
         codec: &'a dyn UpdateCodec,
     ) -> RoundSpec<'a> {
-        RoundSpec { round, local_steps: 1, lr: 0.5, batch_size: 0, trainer, codec }
+        RoundSpec::new(round, 1, 0.5, 0, trainer, codec)
     }
 
     #[test]
@@ -526,6 +719,112 @@ mod tests {
         assert_eq!(rep.dropped, rep.selected);
         assert_eq!(rep.completion_rate, 0.0);
         assert_eq!(w, w0, "no arrivals must leave the model untouched");
+    }
+
+    #[test]
+    fn rate_plan_assigns_distinct_budgets_and_respects_them() {
+        use crate::coordinator::rate_control::CapacityProportional;
+        let (shards, trainer) = setup(12, 25);
+        let pool = ShardPool::new(&shards);
+        let codec = quantizer::make("uveqfed-l2").unwrap();
+        let plan = RatePlan::new(
+            Channel::new(ChannelModel::by_name("tiers", 2.0).unwrap(), 5),
+            Box::new(CapacityProportional),
+        );
+        let driver =
+            FleetDriver::new(5, 2.0, 2, Scenario::full()).with_rate_plan(plan);
+        let mut clock = VirtualClock::new();
+        let mut w = trainer.init_params(3);
+        let m = w.len();
+        let rep = driver.run_round(&spec(0, &trainer, codec.as_ref()), &mut w, &pool, &mut clock);
+        assert_eq!(rep.budget_violations, 0, "codec must fit every assigned budget");
+        assert!(rep.channel.enabled);
+        assert!(
+            rep.channel.distinct_budgets >= 3,
+            "tiers preset must yield ≥3 distinct budgets, got {}",
+            rep.channel.distinct_budgets
+        );
+        assert!(rep.channel.min_rate < rep.channel.max_rate);
+        assert!(rep.channel.assigned_mass <= rep.channel.capacity_mass + 1e-9);
+        assert_eq!(rep.clients.len(), 12);
+        for c in &rep.clients {
+            assert!(c.assigned_rate <= c.capacity + 1e-9, "client {}: over capacity", c.user);
+            assert!(
+                c.achieved_bits <= (c.assigned_rate * m as f64).floor() as usize,
+                "client {}: {} bits > ⌊{}·{m}⌋",
+                c.user,
+                c.achieved_bits,
+                c.assigned_rate
+            );
+            // Everyone folded; a starved budget may legitimately fold the
+            // empty zero message (0 bits).
+            assert!(
+                c.achieved_bits > 0 || c.assigned_rate * (m as f64) < 128.0,
+                "client {} sent nothing at a workable budget",
+                c.user
+            );
+        }
+    }
+
+    #[test]
+    fn rate_plan_rounds_are_worker_count_independent() {
+        use crate::coordinator::rate_control::TheoryGuided;
+        let (shards, trainer) = setup(8, 20);
+        let pool = ShardPool::new(&shards);
+        let codec = quantizer::make("qsgd").unwrap();
+        let run = |workers: usize| {
+            let plan = RatePlan::new(
+                Channel::new(
+                    ChannelModel::Markov {
+                        good: 4.0,
+                        bad: 1.0,
+                        p_good_to_bad: 0.3,
+                        p_bad_to_good: 0.5,
+                    },
+                    9,
+                ),
+                Box::new(TheoryGuided),
+            );
+            let driver = FleetDriver::new(9, 2.0, workers, Scenario::sampled(5))
+                .with_rate_plan(plan);
+            let mut clock = VirtualClock::new();
+            let mut w = trainer.init_params(1);
+            for round in 0..3 {
+                driver.run_round(&spec(round, &trainer, codec.as_ref()), &mut w, &pool, &mut clock);
+            }
+            w
+        };
+        assert_eq!(run(1), run(4), "per-client rates must not depend on fold order");
+    }
+
+    #[test]
+    fn rate_override_rules_the_round_budget() {
+        let (shards, trainer) = setup(3, 20);
+        let pool = ShardPool::new(&shards);
+        let codec = quantizer::make("uveqfed-l2").unwrap();
+        let driver = FleetDriver::new(4, 1.0, 2, Scenario::full());
+        let mut clock = VirtualClock::new();
+        let mut w = trainer.init_params(2);
+        let m = w.len();
+        let spec_hi = spec(0, &trainer, codec.as_ref()).with_rate(6.0);
+        let rep = driver.run_round(&spec_hi, &mut w, &pool, &mut clock);
+        assert_eq!(rep.budget_violations, 0);
+        // At R=6 the coded sizes may exceed the driver's base R=1 budget —
+        // the override governs, and the extra rate is actually usable.
+        for c in &rep.clients {
+            assert_eq!(c.assigned_rate, 6.0);
+            assert!(c.achieved_bits <= 6 * m, "{}", c.achieved_bits);
+        }
+        let rep_lo = driver.run_round(
+            &spec(1, &trainer, codec.as_ref()).with_rate(1.0),
+            &mut w,
+            &pool,
+            &mut clock,
+        );
+        assert!(
+            rep_lo.uplink_bits < rep.uplink_bits,
+            "R=1 round must code fewer bits than R=6 round"
+        );
     }
 
     #[test]

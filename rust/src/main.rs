@@ -15,9 +15,15 @@
 //! typos and bad parameters surface as errors listing the valid codecs,
 //! never as panics.
 
+use uveqfed::coordinator::rate_control::{
+    controller_by_name, thm2_bound_for_allocation, RateController, UniformRate,
+};
 use uveqfed::data::{partition, PartitionScheme, SynthCifar, SynthMnist};
 use uveqfed::fl::{run_federated, FlConfig, NativeTrainer, Trainer};
-use uveqfed::fleet::{FleetDriver, RoundRobinPool, RoundSpec, Scenario, VirtualClock};
+use uveqfed::fleet::{
+    Channel, ChannelModel, ClientPool, FleetDriver, RatePlan, RoundRobinPool, RoundSpec,
+    Scenario, VirtualClock,
+};
 use uveqfed::lattice;
 use uveqfed::models::LogReg;
 use uveqfed::models::{CnnLite, MlpMnist};
@@ -40,7 +46,8 @@ fn main() {
             println!(
                 "uveqfed — Universal Vector Quantization for Federated Learning\n\n\
                  subcommands:\n  train   --config <file> [--codec SPEC] [--rate R] [--rounds N]\n  \
-                 fleet   --population N --cohort K --scenario NAME [--rounds N] [--codec SPEC]\n  \
+                 fleet   --population N --cohort K --scenario NAME [--rounds N] [--codec SPEC]\n          \
+                 [--channel uniform|tiers|lognormal|markov --policy uniform|proportional|theory]\n  \
                  distort --codec SPEC --rate R [--size N]\n  info\n\n\
                  Codec SPEC grammar: name[:key=value,...] — e.g. uveqfed-l2, qsgd:max_levels=4096.\n\
                  See configs/*.toml for the paper's experiment setups."
@@ -184,7 +191,9 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
         .opt("deadline", "", "override round deadline (virtual seconds)")
         .opt("dropout", "", "override per-client dropout probability")
         .opt("templates", "16", "distinct template shards backing the population")
-        .opt("samples", "120", "samples per template shard");
+        .opt("samples", "120", "samples per template shard")
+        .opt("channel", "", "uplink capacity model: uniform|tiers|lognormal|markov")
+        .opt("policy", "theory", "rate allocation: uniform|proportional|theory");
     let args = parse_args(&cli, argv)?;
     let population = args.get_usize("population");
     let cohort = args.get_usize("cohort");
@@ -215,18 +224,31 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
 
     let codec = quantizer::make(args.get("codec"))?;
     let rate = args.get_f64("rate");
-    let driver = FleetDriver::new(seed, rate, workers, scenario.clone());
+    let mut driver = FleetDriver::new(seed, rate, workers, scenario.clone());
+    let channel_name = args.get("channel");
+    let hetero = !channel_name.is_empty() && channel_name != "uniform";
+    if !channel_name.is_empty() {
+        let model = ChannelModel::by_name(channel_name, rate)?;
+        let controller = controller_by_name(args.get("policy"))?;
+        driver = driver.with_rate_plan(RatePlan::new(Channel::new(model, seed), controller));
+    }
     let mut clock = VirtualClock::new();
     let mut w = trainer.init_params(seed);
 
     println!(
-        "fleet: population={population} cohort={cohort} scenario={} codec={} rate={rate} rounds={rounds}",
+        "fleet: population={population} cohort={cohort} scenario={} codec={} rate={rate} rounds={rounds}{}",
         args.get("scenario"),
         codec.name(),
+        if channel_name.is_empty() {
+            String::new()
+        } else {
+            format!(" channel={channel_name} policy={}", args.get("policy"))
+        },
     );
     println!(
-        "{:>5} {:>9} {:>9} {:>7} {:>6} {:>8} {:>9} {:>10} {:>9}",
-        "round", "selected", "done", "drop", "late", "compl", "αmass", "wireKB", "p95lat"
+        "{:>5} {:>9} {:>9} {:>7} {:>6} {:>8} {:>9} {:>10} {:>9} {:>17}",
+        "round", "selected", "done", "drop", "late", "compl", "αmass", "wireKB", "p95lat",
+        "rate min/avg/max"
     );
     let mut wire_total = 0usize;
     let mut violations = 0usize;
@@ -238,12 +260,13 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
             batch_size: 0,
             trainer: &trainer,
             codec: codec.as_ref(),
+            rate_override: None,
         };
         let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
         wire_total += rep.wire_bytes;
         violations += rep.budget_violations;
         println!(
-            "{:>5} {:>9} {:>9} {:>7} {:>6} {:>8.3} {:>9.3} {:>10.1} {:>9.3}",
+            "{:>5} {:>9} {:>9} {:>7} {:>6} {:>8.3} {:>9.3} {:>10.1} {:>9.3} {:>5.2}/{:>4.2}/{:>4.2}",
             round,
             rep.selected,
             rep.aggregated,
@@ -253,7 +276,58 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
             rep.alpha_mass,
             rep.wire_bytes as f64 / 1e3,
             rep.timing.p95_latency,
+            rep.channel.min_rate,
+            rep.channel.mean_rate,
+            rep.channel.max_rate,
         );
+        if hetero && round == 0 {
+            // Sanity surface for the heterogeneous preset: the allocation
+            // must actually be rate-diverse and every coded message must
+            // fit its own budget.
+            let m = w.len();
+            let over = rep
+                .clients
+                .iter()
+                .filter(|c| c.achieved_bits > (c.assigned_rate * m as f64).floor() as usize)
+                .count();
+            println!(
+                "      channel: {} distinct budgets, {} clients over-budget, \
+                 capacity mass {:.1} b/entry, assigned {:.1}",
+                rep.channel.distinct_budgets, over, rep.channel.capacity_mass,
+                rep.channel.assigned_mass,
+            );
+            // Thm-2 bound of the active policy vs the uniform baseline at
+            // equal total bits: uniform strands mass behind capacity caps,
+            // so the fair comparison re-runs the active policy at the mass
+            // uniform actually spent (same methodology as the tests).
+            let folded: Vec<&uveqfed::fleet::ClientRoundRecord> =
+                rep.clients.iter().filter(|c| c.achieved_bits > 0).collect();
+            let caps: Vec<f64> = folded.iter().map(|c| c.capacity).collect();
+            let alphas: Vec<f64> =
+                folded.iter().map(|c| pool.weight(c.user as usize)).collect();
+            let offered = rate * folded.len() as f64;
+            let uni = UniformRate.allocate(&uveqfed::coordinator::AllocRequest {
+                capacities: &caps,
+                alphas: &alphas,
+                total_rate: offered,
+            });
+            let spent_uni: f64 = uni.iter().sum();
+            let plan = driver.rate_plan().expect("hetero implies a rate plan");
+            let eq = plan.controller.allocate(&uveqfed::coordinator::AllocRequest {
+                capacities: &caps,
+                alphas: &alphas,
+                total_rate: spent_uni,
+            });
+            let b_policy = thm2_bound_for_allocation(&eq, &alphas, m);
+            let b_uniform = thm2_bound_for_allocation(&uni, &alphas, m);
+            println!(
+                "      thm2 aggregate bound: {} {:.3e} vs uniform {:.3e} at {:.1} b/entry total",
+                args.get("policy"),
+                b_policy,
+                b_uniform,
+                spent_uni
+            );
+        }
     }
     let eval = trainer.evaluate(&w, &test);
     println!(

@@ -33,6 +33,9 @@ pub enum StreamKind {
     Latency = 6,
     /// Per-(client, round) dropout draw (`fleet::faults`).
     Dropout = 7,
+    /// Per-(client, round) uplink-capacity draw (`fleet::channel`): tier
+    /// assignment, log-normal bandwidth, Markov fading transitions.
+    Channel = 8,
 }
 
 impl CommonRandomness {

@@ -95,11 +95,10 @@ impl Qsgd {
         let budget = ctx.budget_bits(h.len());
         let norm = l2_norm(h);
         if norm == 0.0 || budget < 96 {
-            let mut w = BitWriter::new();
-            w.push_f32(0.0);
-            w.push_u32(0);
-            let bits = w.bit_len();
-            return Encoded { bytes: w.into_bytes(), bits };
+            // Empty zero message: decodes as zeros (the reader
+            // zero-fills), fits any budget — including the near-zero
+            // rates a heterogeneous-uplink controller can assign.
+            return Encoded { bytes: Vec::new(), bits: 0 };
         }
         // QSGD's distortion falls with the level count while the Elias
         // stream grows only logarithmically, so the fair rate-R baseline
@@ -114,6 +113,12 @@ impl Qsgd {
             // ternary fallback (heavily-zero streams go sub-1-bit there).
             let w = self.encode_at_levels(h, norm, 1, ctx, true);
             let bits = w.bit_len();
+            if bits > budget {
+                // Even the entropy-coded ternary stream overflows a
+                // starvation budget — send the empty zero message rather
+                // than violate the uplink contract.
+                return Encoded { bytes: Vec::new(), bits: 0 };
+            }
             return Encoded { bytes: w.into_bytes(), bits };
         }
         let mut lo = 1u32; // feasible

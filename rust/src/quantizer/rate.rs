@@ -9,35 +9,128 @@
 //!
 //! The search uses a cheap entropy-based size estimate for bracketing and
 //! bisection, then verifies with the exact coder, nudging coarser until the
-//! exact encoding fits. A cross-round warm-start hint (atomic, shared
-//! across clients of the same codec instance) collapses the search to a
-//! couple of probes in steady state because update statistics drift slowly
-//! between FL rounds.
+//! exact encoding fits. A cross-round warm-start ([`ScaleHintMap`], keyed
+//! by quarter-bit rate tier) shortens the bracketing in steady state
+//! because update statistics drift slowly between FL rounds — but reads
+//! are **round-frozen** and writes pick a deterministic winner, so the
+//! warm start can never leak scheduling order into the accepted scale
+//! (sharing a plain mutable cell across concurrently-encoding clients
+//! did exactly that before the heterogeneous-uplink rework, and is the
+//! pattern to avoid).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+/// Number of warm-start tiers in a [`ScaleHintMap`]: rates `0..16`
+/// bits/entry at quarter-bit resolution.
+const HINT_BUCKETS: usize = 64;
 
-/// Warm-start cell: stores the last accepted scale as f64 bits.
-#[derive(Debug, Default)]
-pub struct ScaleHint {
-    bits: AtomicU64,
+/// One rate tier's warm-start state. The committed value is what readers
+/// see; the pending value is this round's candidate, promoted the first
+/// time a *later* round touches the cell.
+#[derive(Debug, Clone, Copy, Default)]
+struct HintCell {
+    committed: Option<f64>,
+    /// Round whose winner produced `pending` (and, implicitly, an upper
+    /// bound on the rounds folded into `committed`).
+    pending_round: u64,
+    pending_user: u64,
+    pending: Option<f64>,
 }
 
-impl ScaleHint {
+impl HintCell {
+    /// Fold `pending` into `committed` when `round` has moved past it.
+    fn promote(&mut self, round: u64) {
+        if self.pending.is_some() && self.pending_round < round {
+            self.committed = self.pending;
+        }
+    }
+}
+
+/// Rate-keyed, **round-frozen** warm-start map: one cell per quarter-bit
+/// rate tier.
+///
+/// Two problems with the old single shared-atomic cell, both fixed here:
+///
+/// * **tier thrash** — with heterogeneous uplinks one codec instance
+///   serves clients whose budgets differ by an order of magnitude, and a
+///   shared cell degrades every tier's warm start back to a cold search.
+///   Rates within the same quarter-bit share a cell; their accepted
+///   scales are within the search's own bracket tolerance of each other.
+/// * **nondeterminism** — the old cell was read/written mid-round by
+///   concurrently-encoding clients, so a client's search *init* — and
+///   with it the accepted scale serialized into its message — depended
+///   on worker interleaving, breaking the fleet's worker-count-
+///   independence contract. Here reads at round `r` only ever observe the
+///   value committed by a round `< r`, and the within-round writer is
+///   chosen deterministically (smallest user id), so every client's
+///   encode is a pure function of `(h, ctx)` again.
+#[derive(Debug)]
+pub struct ScaleHintMap {
+    cells: [std::sync::Mutex<HintCell>; HINT_BUCKETS],
+}
+
+impl Default for ScaleHintMap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScaleHintMap {
     pub fn new() -> Self {
-        Self { bits: AtomicU64::new(0) }
+        Self { cells: std::array::from_fn(|_| std::sync::Mutex::new(HintCell::default())) }
     }
 
-    pub fn get(&self) -> Option<f64> {
-        let b = self.bits.load(Ordering::Relaxed);
-        if b == 0 {
-            None
-        } else {
-            Some(f64::from_bits(b))
+    /// Quarter-bit tier index for a rate (bits/entry), clamped to the
+    /// table. Non-finite / negative rates share bucket 0.
+    fn bucket(rate: f64) -> usize {
+        if !rate.is_finite() || rate <= 0.0 {
+            return 0;
+        }
+        ((rate * 4.0).round() as usize).min(HINT_BUCKETS - 1)
+    }
+
+    /// A round counter moving backwards means a new run is reusing this
+    /// codec instance — reset the cell so the rerun behaves exactly like
+    /// a fresh instance (`RoundDriver`-vs-`FleetDriver` bitwise parity
+    /// depends on this).
+    fn rewind_check(c: &mut HintCell, round: u64) {
+        if c.pending.is_some() && round < c.pending_round {
+            *c = HintCell::default();
         }
     }
 
-    pub fn set(&self, s: f64) {
-        self.bits.store(s.to_bits(), Ordering::Relaxed);
+    /// Warm-start scale for this rate tier at `round`: the accepted scale
+    /// of the most recent *earlier* round (never a same-round value — the
+    /// round freeze is what makes concurrent encodes deterministic).
+    pub fn get(&self, rate: f64, round: u64) -> Option<f64> {
+        let mut c = self.cells[Self::bucket(rate)].lock().unwrap();
+        Self::rewind_check(&mut c, round);
+        c.promote(round);
+        c.committed
+    }
+
+    /// Record `user`'s accepted scale for this tier at `round`. Among the
+    /// writers of one round the smallest user id wins, so the value the
+    /// next round warm-starts from is schedule-independent.
+    pub fn set(&self, rate: f64, round: u64, user: u64, s: f64) {
+        let mut c = self.cells[Self::bucket(rate)].lock().unwrap();
+        Self::rewind_check(&mut c, round);
+        let newer = round > c.pending_round || c.pending.is_none();
+        let same_round_winner =
+            round == c.pending_round && c.pending.is_some() && user < c.pending_user;
+        if newer {
+            c.promote(round);
+        }
+        if newer || same_round_winner {
+            c.pending = Some(s);
+            c.pending_round = round;
+            c.pending_user = user;
+        }
+    }
+
+    /// Latest recorded scale for a tier regardless of round (tests /
+    /// diagnostics — NOT the deterministic read path).
+    pub fn peek(&self, rate: f64) -> Option<f64> {
+        let c = self.cells[Self::bucket(rate)].lock().unwrap();
+        c.pending.or(c.committed)
     }
 }
 
@@ -144,10 +237,47 @@ mod tests {
     }
 
     #[test]
-    fn hint_roundtrip() {
-        let h = ScaleHint::new();
-        assert!(h.get().is_none());
-        h.set(0.125);
-        assert_eq!(h.get(), Some(0.125));
+    fn hint_map_isolates_rate_tiers() {
+        let h = ScaleHintMap::new();
+        assert!(h.get(2.0, 1).is_none());
+        h.set(2.0, 0, 3, 0.25);
+        h.set(8.0, 0, 3, 0.001);
+        assert_eq!(h.get(2.0, 1), Some(0.25), "tier 2.0 must keep its own scale");
+        assert_eq!(h.get(8.0, 1), Some(0.001));
+        // Same quarter-bit tier shares the cell…
+        assert_eq!(h.get(2.05, 1), Some(0.25));
+        // …a different tier does not.
+        assert!(h.get(4.0, 1).is_none());
+        // Degenerate rates are safe, not panics.
+        h.set(f64::NAN, 0, 0, 1.0);
+        h.set(-3.0, 0, 0, 1.0);
+        assert_eq!(h.get(0.0, 1), Some(1.0));
+        h.set(1e9, 0, 0, 2.0);
+        assert_eq!(h.get(1e9, 1), Some(2.0));
+    }
+
+    #[test]
+    fn hint_map_is_round_frozen_with_deterministic_winner() {
+        let h = ScaleHintMap::new();
+        // Round 0 writes are invisible to round-0 readers…
+        h.set(2.0, 0, 5, 0.5);
+        assert!(h.get(2.0, 0).is_none(), "same-round reads must stay frozen");
+        // …and visible from round 1 on.
+        assert_eq!(h.get(2.0, 1), Some(0.5));
+        // Within a round, the smallest user id wins regardless of order.
+        h.set(2.0, 1, 9, 0.9);
+        h.set(2.0, 1, 2, 0.2);
+        h.set(2.0, 1, 7, 0.7);
+        // Reads during round 1 still see round 0's value…
+        assert_eq!(h.get(2.0, 1), Some(0.5));
+        // …and round 2 sees the smallest-user winner of round 1.
+        assert_eq!(h.get(2.0, 2), Some(0.2), "winner must be the smallest user");
+        // A later round's write supersedes.
+        h.set(2.0, 3, 8, 0.8);
+        assert_eq!(h.get(2.0, 4), Some(0.8));
+        // Rewinding the round counter (a fresh run) resets the cell.
+        assert!(h.get(2.0, 0).is_none(), "rewound reader must reset and go cold");
+        assert!(h.get(2.0, 4).is_none(), "reset is sticky until something is recorded");
+        assert_eq!(h.peek(2.0), None);
     }
 }

@@ -60,12 +60,9 @@ impl RotationUniform {
         let b = ((payload / n2).clamp(1, 16)) as u32;
         let n_tx = (payload / b as usize).min(n2);
         if n_tx == 0 {
-            let mut w = BitWriter::new();
-            w.push_f32(0.0);
-            w.push_f32(0.0);
-            w.push_bits(0, 8);
-            let bits = w.bit_len();
-            return Encoded { bytes: w.into_bytes(), bits };
+            // Budget below the header: empty zero message (the decoder
+            // recomputes n_tx == 0 from the same budget and never reads).
+            return Encoded { bytes: Vec::new(), bits: 0 };
         }
 
         // rotate: y = (1/√n2) H D x

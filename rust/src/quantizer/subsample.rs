@@ -46,13 +46,12 @@ impl SubsampleUniform {
         } else {
             0
         };
-        let mut w = BitWriter::with_capacity(budget / 8 + 16);
         if k == 0 {
-            w.push_f32(0.0);
-            w.push_f32(0.0);
-            let bits = w.bit_len();
-            return Encoded { bytes: w.into_bytes(), bits };
+            // Budget below the header: empty zero message (the decoder
+            // recomputes k == 0 from the same budget and returns zeros).
+            return Encoded { bytes: Vec::new(), bits: 0 };
         }
+        let mut w = BitWriter::with_capacity(budget / 8 + 16);
         let idx = self.kept_indices(m, k, ctx);
         let vals: Vec<f64> = idx.iter().map(|&i| h[i] as f64).collect();
         let lo = vals.iter().cloned().fold(f64::INFINITY, f64::min);

@@ -24,12 +24,12 @@ impl TernGrad {
     /// Whole-buffer encoder (runs at `EncodeSink::finish`).
     fn encode_whole(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
         let max = h.iter().fold(0.0f32, |a, &b| a.max(b.abs())) as f64;
+        if max == 0.0 {
+            // Empty zero message (decodes as zeros, fits any budget).
+            return Encoded { bytes: Vec::new(), bits: 0 };
+        }
         let mut w = BitWriter::new();
         w.push_f32(max as f32);
-        if max == 0.0 {
-            let bits = w.bit_len();
-            return Encoded { bytes: w.into_bytes(), bits };
-        }
         let mut rng = ctx.crand.stream(ctx.user, ctx.round, StreamKind::Rounding);
         let syms: Vec<i64> = h
             .iter()

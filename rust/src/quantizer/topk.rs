@@ -36,6 +36,11 @@ impl TopK {
         let header = 64 + 32;
         let k = if budget > header { ((budget - header) / per).min(m) } else { 0 };
 
+        if k == 0 {
+            // Budget below the header: empty zero message (reading the
+            // empty buffer yields k = 0 → an all-zero reconstruction).
+            return Encoded { bytes: Vec::new(), bits: 0 };
+        }
         let mut w = BitWriter::with_capacity(budget / 8 + 16);
         let mut order: Vec<usize> = (0..m).collect();
         order.sort_by(|&a, &b| h[b].abs().partial_cmp(&h[a].abs()).unwrap());

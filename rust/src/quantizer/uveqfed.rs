@@ -29,7 +29,7 @@
 //! the fly, and yields chunks on lattice-block boundaries — O(chunk)
 //! server memory for the paper's codec.
 
-use super::rate::{search_scale, ScaleHint};
+use super::rate::{search_scale, ScaleHintMap};
 use super::session::DEFAULT_CHUNK;
 use super::{
     BufferedSink, CodecContext, DecodeStream, Encoded, EncodeSink, EntryStream, UpdateCodec,
@@ -96,7 +96,14 @@ pub struct UVeQFed {
     /// scheme; false degrades to a QSGD-like non-subtractive decoder —
     /// used by the ablation bench to quantify the dither-subtraction gain).
     pub subtractive: bool,
-    hint: ScaleHint,
+    /// Cross-round warm-start for the rate search, keyed by quarter-bit
+    /// rate tier: heterogeneous uplinks mean one codec instance serves
+    /// clients at very different budgets, and a single shared hint would
+    /// thrash between tiers. Round-frozen with a deterministic
+    /// within-round winner, so every encode stays a pure function of
+    /// `(h, ctx)` — worker interleaving cannot leak into the accepted
+    /// scale (see [`ScaleHintMap`]).
+    hint: ScaleHintMap,
 }
 
 impl UVeQFed {
@@ -105,7 +112,7 @@ impl UVeQFed {
             base,
             zeta_mode: ZetaMode::PaperRateAdaptive,
             subtractive: true,
-            hint: ScaleHint::new(),
+            hint: ScaleHintMap::new(),
         }
     }
 
@@ -172,11 +179,12 @@ impl UVeQFed {
 
         let mut w = BitWriter::with_capacity(budget / 8 + 16);
         if norm == 0.0 || budget <= Self::HEADER_BITS {
-            // Degenerate: all-zero update or no budget for payload.
-            w.push_f32(0.0);
-            w.push_f32(0.0);
-            let bits = w.bit_len();
-            return Encoded { bytes: w.into_bytes(), bits };
+            // Degenerate: all-zero update or no budget for payload. The
+            // empty message decodes as zeros (the reader zero-fills) and —
+            // unlike a zeroed header — fits ANY budget, including the
+            // near-zero allocations a rate controller hands to dead
+            // uplinks.
+            return Encoded { bytes: Vec::new(), bits: 0 };
         }
 
         let base = self.base.as_ref();
@@ -290,17 +298,14 @@ impl UVeQFed {
             bits
         };
         // Feasibility floor: tiny messages can't cover even the coder's
-        // fixed overhead (length prefix) — fall back to the zero message.
+        // fixed overhead (length prefix) — fall back to the empty zero
+        // message (0 bits, decodes as zeros).
         if exact(rms.max(1e-12) * 1e9) > payload_budget {
-            let mut w = BitWriter::new();
-            w.push_f32(0.0);
-            w.push_f32(0.0);
-            let bits = w.bit_len();
-            return Encoded { bytes: w.into_bytes(), bits };
+            return Encoded { bytes: Vec::new(), bits: 0 };
         }
-        let init = self.hint.get().unwrap_or(rms.max(1e-12));
+        let init = self.hint.get(ctx.rate, ctx.round).unwrap_or(rms.max(1e-12));
         let s = search_scale(payload_budget, init, &mut est, &mut exact);
-        self.hint.set(s);
+        self.hint.set(ctx.rate, ctx.round, ctx.user, s);
 
         // Commit: header, then the memoized exact payload. `search_scale`
         // only returns after a successful `exact(s)` probe at the accepted
@@ -670,12 +675,77 @@ mod tests {
     fn warm_start_reuses_scale() {
         let codec = UVeQFed::hexagonal();
         let h = gaussian(2048, 78);
-        let ctx = CodecContext::new(0, 0, 7, 2.0);
-        let _ = codec.encode(&h, &ctx);
-        let s1 = codec.hint.get().unwrap();
-        let _ = codec.encode(&h, &ctx);
-        let s2 = codec.hint.get().unwrap();
+        let _ = codec.encode(&h, &CodecContext::new(0, 0, 7, 2.0));
+        let s1 = codec.hint.peek(2.0).unwrap();
+        // The next round warm-starts from round 0's accepted scale and
+        // must land in the same neighborhood on the same data.
+        let _ = codec.encode(&h, &CodecContext::new(0, 1, 7, 2.0));
+        let s2 = codec.hint.peek(2.0).unwrap();
         assert!((s1 - s2).abs() / s1 < 0.25, "hint unstable: {s1} vs {s2}");
+    }
+
+    #[test]
+    fn warm_start_is_round_frozen_and_deterministic() {
+        // Concurrent clients of one round must not see each other's
+        // accepted scales: encoding (user 0, round 1) then (user 1,
+        // round 1) must produce exactly the bytes of encoding them in
+        // the opposite order — the fleet's worker-count-independence
+        // contract at the codec level.
+        let h = gaussian(2048, 80);
+        let encode_pair = |first: u64, second: u64| {
+            let codec = UVeQFed::hexagonal();
+            let _ = codec.encode(&h, &CodecContext::new(0, 0, 7, 2.0)); // warm round 0
+            let a = codec.encode(&h, &CodecContext::new(first, 1, 7, 2.0));
+            let b = codec.encode(&h, &CodecContext::new(second, 1, 7, 2.0));
+            (a, b)
+        };
+        let (a01, b01) = encode_pair(0, 1);
+        let (b10, a10) = encode_pair(1, 0);
+        assert_eq!(a01, a10, "user 0's encode must not depend on encode order");
+        assert_eq!(b01, b10, "user 1's encode must not depend on encode order");
+    }
+
+    #[test]
+    fn warm_start_rewinds_for_a_fresh_run() {
+        // Re-running a schedule on the same instance (round counter back
+        // to 0) must reproduce the first run bit-for-bit — the
+        // RoundDriver-vs-FleetDriver parity test reuses one codec.
+        let codec = UVeQFed::hexagonal();
+        let h = gaussian(1024, 81);
+        let run = |codec: &UVeQFed| {
+            (0..3)
+                .map(|round| codec.encode(&h, &CodecContext::new(0, round, 7, 2.0)))
+                .collect::<Vec<_>>()
+        };
+        let first = run(&codec);
+        let second = run(&codec);
+        assert_eq!(first, second, "instance reuse must not leak warm-start state");
+    }
+
+    #[test]
+    fn warm_start_tiers_do_not_cross_contaminate() {
+        // One codec instance serving two very different budgets must keep
+        // one warm-start scale per tier: the R=8 scale is far finer than
+        // the R=1 scale, and each tier's hint must retain its own value
+        // after interleaved encodes (the heterogeneous-uplink regime).
+        let codec = UVeQFed::hexagonal();
+        let h = gaussian(4096, 79);
+        for round in 0..3 {
+            let _ = codec.encode(&h, &CodecContext::new(0, round, 7, 1.0));
+            let _ = codec.encode(&h, &CodecContext::new(1, round, 7, 8.0));
+        }
+        let coarse = codec.hint.peek(1.0).unwrap();
+        let fine = codec.hint.peek(8.0).unwrap();
+        assert!(
+            fine < coarse,
+            "R=8 must warm-start at a finer scale than R=1: {fine} !< {coarse}"
+        );
+        // Encodes at either tier still fit their budgets.
+        for rate in [1.0, 8.0] {
+            let ctx = CodecContext::new(2, 9, 7, rate);
+            let enc = codec.encode(&h, &ctx);
+            assert!(enc.bits <= ctx.budget_bits(h.len()), "rate {rate}");
+        }
     }
 
     #[test]

@@ -19,6 +19,7 @@ fn cfg(users: usize, rounds: usize, rate: f64, seed: u64) -> FlConfig {
         eval_every: 5,
         verbose: false,
         fleet: uveqfed::fleet::Scenario::full(),
+        channel: None,
     }
 }
 

@@ -10,8 +10,8 @@ use uveqfed::coordinator::RoundDriver;
 use uveqfed::data::{partition, Dataset, PartitionScheme, SynthMnist};
 use uveqfed::fl::{NativeTrainer, Trainer};
 use uveqfed::fleet::{
-    decode_frame, encode_frame, FleetDriver, RoundSpec, SamplerKind, Scenario, ShardPool,
-    VirtualClock,
+    decode_frame, encode_frame, wire, FleetDriver, RoundSpec, SamplerKind, Scenario,
+    ShardPool, VirtualClock, WireError,
 };
 use uveqfed::models::LogReg;
 use uveqfed::prng::{Rng, Xoshiro256pp};
@@ -30,7 +30,7 @@ fn spec<'a>(
     trainer: &'a dyn Trainer,
     codec: &'a dyn UpdateCodec,
 ) -> RoundSpec<'a> {
-    RoundSpec { round, local_steps: 1, lr: 0.5, batch_size: 0, trainer, codec }
+    RoundSpec::new(round, 1, 0.5, 0, trainer, codec)
 }
 
 #[test]
@@ -89,6 +89,36 @@ fn wire_frames_roundtrip_every_registered_codec_with_exact_bits() {
         let framed = codec.decode(&frame.payload, m, &ctx);
         assert_eq!(direct, framed, "{name}: wire round-trip changed the decode");
     }
+}
+
+#[test]
+fn v1_frame_decode_fails_with_typed_version_error() {
+    // Regression for the frame-format v1 → v2 bump (range coder v2
+    // changed the payload byte stream): a structurally valid *version-1*
+    // frame — correct magic, correct CRC, plausible payload — must be
+    // rejected with the typed `WireError::BadVersion(1)`, not decoded
+    // into garbage symbols and folded into the aggregate, and not panic.
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let h: Vec<f32> = (0..64).map(|_| rng.normal_f32() * 0.1).collect();
+    let codec = quantizer::make("uveqfed-l2").unwrap();
+    let ctx = CodecContext::new(1, 2, 3, 4.0);
+    let enc = codec.encode(&h, &ctx);
+    let mut buf = encode_frame(1, 2, quantizer::codec_id("uveqfed-l2").unwrap(), &enc);
+    // Rewrite the version byte to 1 and re-seal the CRC so the ONLY
+    // defect is the version — exactly what a stale v1 sender produces.
+    buf[4] = 1;
+    let body = buf.len() - wire::TRAILER_BYTES;
+    let crc = wire::crc32(&buf[..body]);
+    buf[body..].copy_from_slice(&crc.to_le_bytes());
+    match decode_frame(&buf) {
+        Err(WireError::BadVersion(1)) => {}
+        other => panic!("v1 frame must fail with BadVersion(1), got {other:?}"),
+    }
+    // Sanity: the same bytes at the current version still decode.
+    buf[4] = wire::VERSION;
+    let crc = wire::crc32(&buf[..body]);
+    buf[body..].copy_from_slice(&crc.to_le_bytes());
+    assert_eq!(decode_frame(&buf).unwrap().payload.bits, enc.bits);
 }
 
 #[test]

@@ -1,0 +1,74 @@
+#!/usr/bin/env bash
+# Populate BENCH_baseline.json with real measured numbers (DESIGN.md §9.4).
+#
+# Labels:
+#   post-pr4 — the three perf benches on the CURRENT tree (always runs);
+#   pre-<n>  — optionally, the same benches at an earlier ref that already
+#              contains the Recorder harness (PRE_REF=<ref> env var).
+#
+# NOTE on the PR-4 comparison specifically: the Recorder harness was
+# introduced BY the hot-path-overhaul commit, so its parent cannot record
+# snapshots at all — there is no mechanical pre-pr4 leg. That comparison
+# is instead self-contained in every post-pr4 run: `lattice_micro`
+# measures the legacy per-block path (nearest-scalar/*) next to the
+# batched kernels (nearest-batch/*). PRE_REF exists for FUTURE perf PRs,
+# where both refs carry the harness.
+#
+# Run from the workspace root on a quiet machine:
+#
+#   [PRE_REF=<ref>] scripts/populate_bench_baseline.sh
+#
+# Never run these with --smoke / BENCH_QUICK=1: smoke numbers are not a
+# perf trajectory, and Recorder refuses to overwrite real snapshots with
+# smoke ones anyway.
+set -euo pipefail
+
+if ! command -v cargo >/dev/null; then
+    echo "error: cargo not found — this procedure needs the Rust toolchain" >&2
+    exit 1
+fi
+if [ -n "$(git status --porcelain)" ]; then
+    echo "error: working tree is dirty; commit or stash first" >&2
+    exit 1
+fi
+
+# Work against a temp copy so checking out refs that also track
+# BENCH_baseline.json can neither clobber fresh snapshots nor abort the
+# checkout on a dirty tracked file; merged back at the end.
+BASELINE_FINAL="$(pwd)/BENCH_baseline.json"
+BASELINE="$(mktemp --suffix=.json)"
+cp "$BASELINE_FINAL" "$BASELINE" 2>/dev/null || true
+# On a detached HEAD `--abbrev-ref` would be the literal string "HEAD";
+# pin the branch name when there is one, the commit sha otherwise, and
+# always restore it — even when a bench run fails mid-way.
+CUR_REF="$(git symbolic-ref --quiet --short HEAD || git rev-parse HEAD)"
+trap 'git checkout --quiet "$CUR_REF"' EXIT
+BENCHES=(lattice_micro codec_micro fleet_scale)
+
+run_label() {
+    local label="$1"
+    for b in "${BENCHES[@]}"; do
+        UVEQFED_BENCH_LABEL="$label" UVEQFED_BENCH_BASELINE="$BASELINE" \
+            cargo bench --bench "$b"
+    done
+}
+
+if [ -n "${PRE_REF:-}" ]; then
+    echo "== pre run at $PRE_REF"
+    git checkout --quiet "$PRE_REF"
+    if grep -q "pub struct Recorder" rust/src/bench/mod.rs 2>/dev/null; then
+        run_label "pre-$(git rev-parse --short "$PRE_REF")"
+    else
+        echo "error: $PRE_REF has no Recorder harness — it cannot record" >&2
+        echo "       snapshots (see the header note about the PR-4 case)" >&2
+        exit 1
+    fi
+    git checkout --quiet "$CUR_REF"
+fi
+
+echo "== post-pr4 run at $CUR_REF"
+run_label post-pr4
+
+cp "$BASELINE" "$BASELINE_FINAL"
+echo "baseline written to $BASELINE_FINAL:"
+python3 -c "import json; d=json.load(open('$BASELINE_FINAL')); print(*[(s['label'], s['bench'], len(s['entries'])) for s in d['snapshots']], sep='\n')"
