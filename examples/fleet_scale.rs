@@ -52,6 +52,7 @@ fn main() {
             trainer: &trainer,
             codec: codec.as_ref(),
             rate_override: None,
+            telemetry: None,
         };
         let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
         wire_total += rep.wire_bytes;
@@ -95,6 +96,7 @@ fn main() {
             trainer: &trainer,
             codec: codec.as_ref(),
             rate_override: None,
+            telemetry: None,
         };
         ref_driver.run_round(&spec, &mut wr, &ref_pool, &mut ref_clock);
     }

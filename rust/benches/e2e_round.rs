@@ -70,6 +70,7 @@ fn main() {
                 trainer: &noop,
                 codec: codec.as_ref(),
                 rate_override: None,
+                telemetry: None,
             };
             driver.run_round(&spec, &mut w, &shards, &alphas);
             round += 1;
@@ -95,6 +96,7 @@ fn main() {
             trainer: &trainer,
             codec: codec.as_ref(),
             rate_override: None,
+            telemetry: None,
         };
         driver.run_round(&spec, &mut w, &shards, &alphas);
         round += 1;

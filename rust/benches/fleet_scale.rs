@@ -23,6 +23,7 @@ use uveqfed::fleet::{
 use uveqfed::models::EvalReport;
 use uveqfed::prng::{Normal, Xoshiro256pp};
 use uveqfed::quantizer::{self, CodecContext};
+use uveqfed::telemetry::Collector;
 
 /// Trainer that fabricates a deterministic pseudo-update without touching
 /// data: the round cost is purely coordinator + codec + aggregation.
@@ -99,6 +100,7 @@ fn main() {
                 trainer: &trainer,
                 codec: codec.as_ref(),
                 rate_override: None,
+                telemetry: None,
             };
             let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
             aggregated = rep.aggregated;
@@ -134,6 +136,7 @@ fn main() {
                 trainer: &trainer,
                 codec: codec.as_ref(),
                 rate_override: None,
+                telemetry: None,
             };
             driver.run_round(&spec, &mut w, &big_pool, &mut clock);
             round += 1;
@@ -220,6 +223,7 @@ fn main() {
                 trainer: &trainer,
                 codec: codec.as_ref(),
                 rate_override: None,
+                telemetry: None,
             };
             let rep = driver.run_round(&spec, &mut w, &hetero_pool, &mut clock);
             distinct = rep.channel.distinct_budgets;
@@ -253,6 +257,45 @@ fn main() {
     println!(
         "    ↳ theory-guided allocation over {k_alloc} clients: {:.2} ms",
         r.median_secs * 1e3
+    );
+
+    // ── E: telemetry overhead — the section-A round re-run with a live
+    //      collector (spans + histograms + per-chunk fold timing, drained
+    //      each iteration) vs `telemetry: None` above. The delta is the
+    //      full observability tax; the README quotes this number.
+    println!("# traced rounds — population={population}, m={m}");
+    let codec = quantizer::make("uveqfed-l2").expect("codec spec");
+    let collector = Collector::for_cohort(population);
+    let driver = FleetDriver::new(1, 2.0, workers, Scenario::full());
+    let mut clock = VirtualClock::new();
+    let mut w = trainer.init_params(1);
+    let mut round = 0u64;
+    let mut events = 0usize;
+    let mut dropped = 0u64;
+    let r = run("traced-10k-round/uveqfed-l2", cfg, || {
+        let spec = RoundSpec {
+            round,
+            local_steps: 1,
+            lr: 0.1,
+            batch_size: 0,
+            trainer: &trainer,
+            codec: codec.as_ref(),
+            rate_override: None,
+            telemetry: Some(&collector),
+        };
+        driver.run_round(&spec, &mut w, &pool, &mut clock);
+        events = collector.drain().len();
+        dropped += collector.take_dropped();
+        round += 1;
+    });
+    rec.add_with_items(&r, population as f64);
+    assert_eq!(dropped, 0, "cohort-sized ring must not drop events");
+    assert_eq!(events, population * 5 + 1, "5 spans per client + rate_alloc");
+    println!(
+        "    ↳ {:.1} ms/round traced ({} spans/round), {:.2}k client-updates/s",
+        r.median_secs * 1e3,
+        events,
+        population as f64 / r.median_secs / 1e3
     );
     rec.save_or_warn();
 }

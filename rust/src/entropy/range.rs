@@ -433,9 +433,13 @@ impl IntCoder for AdaptiveRangeCoder {
     fn encode(&self, xs: &[i64], w: &mut BitWriter) {
         let mut enc = RangeEncoder::new();
         let mut models: Vec<SymbolModel> = vec![SymbolModel::default(); self.dims];
+        let mut escapes = 0u64;
         for (i, &x) in xs.iter().enumerate() {
-            models[i % self.dims].encode(&mut enc, zigzag(x));
+            let sym = zigzag(x);
+            escapes += u64::from(sym >= DIRECT_SYMS as u64);
+            models[i % self.dims].encode(&mut enc, sym);
         }
+        crate::telemetry::probe::add_symbols(xs.len() as u64, escapes);
         let payload = enc.finish();
         w.push_u32(payload.len() as u32);
         for b in payload {

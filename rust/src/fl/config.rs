@@ -54,6 +54,19 @@ pub struct FlConfig {
     /// Heterogeneous uplink plan (`[channel]` config block); `None` keeps
     /// the legacy same-pipe-for-everyone uplink.
     pub channel: Option<ChannelPlanSpec>,
+    /// Round-lifecycle tracing (`[telemetry]` config block); `None` runs
+    /// untraced.
+    pub telemetry: Option<TelemetrySpec>,
+}
+
+/// Plain-data description of a tracing setup (`[telemetry]` section):
+/// where the JSONL trace goes and how large the event ring should be.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TelemetrySpec {
+    /// JSONL trace output path.
+    pub trace: String,
+    /// Event-ring capacity; 0 = auto-size from the per-round cohort.
+    pub capacity: usize,
 }
 
 /// Plain-data description of a heterogeneous-uplink plan: the capacity
@@ -103,7 +116,30 @@ impl FlConfig {
             verbose: c.bool_or("fl.verbose", false),
             fleet: Self::fleet_from_config(c)?,
             channel: Self::channel_from_config(c)?,
+            telemetry: Self::telemetry_from_config(c)?,
         })
+    }
+
+    /// Parse the optional `[telemetry]` section. Grammar:
+    ///
+    /// ```toml
+    /// [telemetry]
+    /// trace = "runs/trace.jsonl"  # required when the section is present
+    /// capacity = 0                # event ring size; 0 = auto from cohort
+    /// ```
+    fn telemetry_from_config(c: &Config) -> crate::Result<Option<TelemetrySpec>> {
+        let Some(trace) = c.get("telemetry.trace").and_then(|v| v.as_str()) else {
+            crate::ensure!(
+                c.get("telemetry.capacity").is_none(),
+                "[telemetry] has a capacity but no trace path — set telemetry.trace"
+            );
+            return Ok(None);
+        };
+        crate::ensure!(!trace.is_empty(), "telemetry.trace must not be empty");
+        Ok(Some(TelemetrySpec {
+            trace: trace.to_string(),
+            capacity: c.usize_or("telemetry.capacity", 0),
+        }))
     }
 
     /// Parse the optional `[channel]` section. Grammar:
@@ -237,6 +273,7 @@ mod tests {
             verbose: false,
             fleet: Scenario::full(),
             channel: None,
+            telemetry: None,
         };
         let a = cfg.alphas(&[mk(30), mk(10)]);
         assert!((a[0] - 0.75).abs() < 1e-12);
@@ -283,6 +320,26 @@ mod tests {
     fn absent_channel_section_means_homogeneous_uplink() {
         let c = Config::parse("[fl]\nusers = 2").unwrap();
         assert_eq!(FlConfig::from_config(&c).unwrap().channel, None);
+    }
+
+    #[test]
+    fn telemetry_section_parses() {
+        let c = Config::parse("[fl]\nusers = 2").unwrap();
+        assert_eq!(FlConfig::from_config(&c).unwrap().telemetry, None);
+
+        let c = Config::parse("[telemetry]\ntrace = \"runs/t.jsonl\"\ncapacity = 4096").unwrap();
+        assert_eq!(
+            FlConfig::from_config(&c).unwrap().telemetry,
+            Some(TelemetrySpec { trace: "runs/t.jsonl".to_string(), capacity: 4096 })
+        );
+
+        let c = Config::parse("[telemetry]\ntrace = \"t.jsonl\"").unwrap();
+        assert_eq!(FlConfig::from_config(&c).unwrap().telemetry.unwrap().capacity, 0);
+
+        for bad in ["[telemetry]\ncapacity = 64", "[telemetry]\ntrace = \"\""] {
+            let c = Config::parse(bad).unwrap();
+            assert!(FlConfig::from_config(&c).is_err(), "{bad} should fail");
+        }
     }
 
     #[test]

@@ -10,13 +10,14 @@
 mod config;
 mod trainer;
 
-pub use config::{ChannelPlanSpec, FlConfig, LrSchedule};
+pub use config::{ChannelPlanSpec, FlConfig, LrSchedule, TelemetrySpec};
 pub use trainer::{NativeTrainer, Trainer};
 
 use crate::data::Dataset;
 use crate::fleet::{FleetDriver, FleetRoundReport, RoundSpec, ShardPool, VirtualClock};
 use crate::metrics::{CsvTable, Timer};
 use crate::quantizer::UpdateCodec;
+use crate::telemetry::{summarize, Collector, TraceWriter};
 
 /// One evaluation point of a federated run.
 #[derive(Debug, Clone, Copy)]
@@ -123,6 +124,23 @@ pub fn run_federated(
             spec.build(cfg.seed).unwrap_or_else(|e| panic!("invalid [channel] plan: {e}")),
         );
     }
+    // Optional [telemetry] tracing: one collector for the run, drained to
+    // JSONL after every round. File errors abort with context — a traced
+    // experiment that silently loses its trace is worse than one that
+    // stops.
+    let (collector, mut tracer) = match &cfg.telemetry {
+        Some(tspec) => {
+            let collector = if tspec.capacity > 0 {
+                Collector::new(tspec.capacity)
+            } else {
+                Collector::for_cohort(cfg.fleet.sampler.target(cfg.users))
+            };
+            let writer = TraceWriter::create(&tspec.trace)
+                .unwrap_or_else(|e| panic!("telemetry.trace '{}': {e}", tspec.trace));
+            (collector, Some(writer))
+        }
+        None => (Collector::disabled(), None),
+    };
     let mut clock = VirtualClock::new();
     let mut history = FlHistory::default();
     let wall = Timer::start();
@@ -139,8 +157,19 @@ pub fn run_federated(
             trainer,
             codec,
             rate_override: None,
+            telemetry: Some(&collector),
         };
         let rep: FleetRoundReport = driver.run_round(&spec, &mut w, &pool, &mut clock);
+        if let Some(writer) = tracer.as_mut() {
+            let events = collector.drain();
+            let dropped = collector.take_dropped();
+            writer.write_events(&events).expect("write trace spans");
+            for (i, s) in summarize(&events).into_iter().enumerate() {
+                writer
+                    .write_round(&s, if i == 0 { dropped } else { 0 })
+                    .expect("write trace round line");
+            }
+        }
         // Budget violations are codec bugs or a rate plan starving a
         // fixed-length codec — never injected faults (faults model
         // latency/dropout, not bit inflation). Abort loudly rather than
@@ -194,6 +223,9 @@ pub fn run_federated(
             }
         }
     }
+    if let Some(mut writer) = tracer {
+        writer.flush().expect("flush trace");
+    }
     history.final_weights = w;
     history
 }
@@ -219,6 +251,7 @@ mod tests {
             verbose: false,
             fleet: crate::fleet::Scenario::full(),
             channel: None,
+            telemetry: None,
         }
     }
 
@@ -307,6 +340,46 @@ mod tests {
             assert!(r.mean_assigned_rate > 0.0, "rate metrics must be surfaced");
         }
         assert!(hist.final_accuracy() > 0.4, "acc {}", hist.final_accuracy());
+    }
+
+    #[test]
+    fn traced_run_writes_jsonl_and_matches_untraced() {
+        let gen = SynthMnist::new(21);
+        let ds = gen.dataset(120);
+        let test = gen.test_dataset(50);
+        let shards = partition(&ds, 3, 40, PartitionScheme::Iid, 3);
+        let model = LogReg::new(ds.features, ds.classes, 1e-3);
+        let trainer = NativeTrainer::new(model);
+        let codec = quantizer::make("qsgd").unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("uveqfed_fl_trace_{}.jsonl", std::process::id()));
+        let mut cfg = quick_cfg(3, 2, 2.0);
+        cfg.telemetry =
+            Some(TelemetrySpec { trace: path.to_string_lossy().into_owned(), capacity: 0 });
+        let traced = run_federated(&cfg, &trainer, &shards, &test, codec.as_ref());
+        cfg.telemetry = None;
+        let untraced = run_federated(&cfg, &trainer, &shards, &test, codec.as_ref());
+        assert_eq!(
+            traced.final_weights, untraced.final_weights,
+            "tracing must not perturb training"
+        );
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut spans = 0usize;
+        let mut rounds = 0usize;
+        for (i, line) in text.lines().enumerate() {
+            let j = crate::util::json::Json::parse(line).unwrap();
+            let ty = j.get("type").and_then(crate::util::json::Json::as_str).unwrap();
+            match ty {
+                "meta" => assert_eq!(i, 0, "meta must be the first line"),
+                "span" => spans += 1,
+                "round" => rounds += 1,
+                other => panic!("unexpected line type {other}"),
+            }
+        }
+        // 2 rounds × 3 clients × 5 lifecycle spans + 2 rate_alloc spans.
+        assert_eq!(spans, 2 * (3 * 5 + 1));
+        assert_eq!(rounds, 2);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -54,6 +54,7 @@ use crate::fl::Trainer;
 use crate::metrics::Timer;
 use crate::prng::{CommonRandomness, SplitMix64};
 use crate::quantizer::{self, CodecContext, UpdateCodec, DEFAULT_CHUNK};
+use crate::telemetry::{probe, Collector, HistMetric, SpanData, SpanEvent, SpanKind};
 use crate::util::threadpool::parallel_map_fold;
 
 /// Everything one round needs beyond the mutable state (`w`, the pool and
@@ -79,6 +80,12 @@ pub struct RoundSpec<'a> {
     /// through `CodecContext::rate` (rate schedules, warm-up rounds). A
     /// `RatePlan` on the driver further splits this mass per client.
     pub rate_override: Option<f64>,
+    /// Opt-in round-lifecycle tracing: when set (and the collector is
+    /// enabled), the driver records per-client `client_train` / `encode` /
+    /// `transmit` / `decode` / `fold` spans plus a round-scoped
+    /// `rate_alloc` span into it. `None` (or a disabled collector) keeps
+    /// the untraced hot path byte-for-byte identical.
+    pub telemetry: Option<&'a Collector>,
 }
 
 impl<'a> RoundSpec<'a> {
@@ -91,12 +98,27 @@ impl<'a> RoundSpec<'a> {
         trainer: &'a dyn Trainer,
         codec: &'a dyn UpdateCodec,
     ) -> Self {
-        Self { round, local_steps, lr, batch_size, trainer, codec, rate_override: None }
+        Self {
+            round,
+            local_steps,
+            lr,
+            batch_size,
+            trainer,
+            codec,
+            rate_override: None,
+            telemetry: None,
+        }
     }
 
     /// Override this round's rate budget (bits/entry).
     pub fn with_rate(mut self, rate: f64) -> Self {
         self.rate_override = Some(rate);
+        self
+    }
+
+    /// Record this round's lifecycle spans into `collector`.
+    pub fn with_telemetry(mut self, collector: &'a Collector) -> Self {
+        self.telemetry = Some(collector);
         self
     }
 }
@@ -344,6 +366,9 @@ pub struct FleetRoundReport {
     pub aggregate_distortion: f64,
     /// Real compute seconds spent inside client jobs (sum over clients).
     pub client_secs: f64,
+    /// Wall-clock seconds the whole round took on the coordinator (the
+    /// virtual-time view lives in `timing`).
+    pub wall_secs: f64,
     pub timing: RoundTiming,
     /// Rate-allocation summary (zeroed when no rate plan is active).
     pub channel: ChannelRoundStats,
@@ -418,6 +443,13 @@ impl FleetDriver {
     ) -> FleetRoundReport {
         let m = w.len();
         let round = spec.round;
+        // Tracing is opt-in and observation-only: `tel` is `Some` exactly
+        // when a live collector is attached, and every instrumented branch
+        // performs the same arithmetic as the untraced one (the
+        // determinism tests pin this).
+        let tel: Option<&Collector> = spec.telemetry.filter(|c| c.is_enabled());
+        let virt_start = clock.now();
+        let round_timer = Timer::start();
         let population = pool.population();
         let target = self.scenario.sampler.target(population);
         let n_select = match self.scenario.sampler {
@@ -454,6 +486,8 @@ impl FleetDriver {
         // rate controller over the aggregating set (coordinator thread —
         // allocation sees the whole cohort, workers only their own rate).
         let base_rate = spec.rate_override.unwrap_or(self.rate);
+        let ra_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
+        let ra_timer = Timer::start();
         let (capacities, rates) = match &self.rate_plan {
             Some(plan) => {
                 let caps: Vec<f64> = arrivals
@@ -473,6 +507,21 @@ impl FleetDriver {
             }
             None => (vec![base_rate; arrivals.len()], vec![base_rate; arrivals.len()]),
         };
+        if let Some(c) = tel {
+            c.record(SpanEvent {
+                kind: SpanKind::RateAlloc,
+                round,
+                user: SpanEvent::ROUND_SCOPED,
+                wall_start_s: ra_start,
+                wall_dur_s: ra_timer.elapsed_secs(),
+                virt_s: virt_start,
+                data: SpanData::RateAlloc {
+                    clients: arrivals.len() as u32,
+                    capacity_mass: capacities.iter().sum(),
+                    assigned_mass: rates.iter().sum(),
+                },
+            });
+        }
 
         // α re-normalization over the set that actually aggregates.
         let arrived_weight: f64 = arrivals.iter().map(|&(_, u)| pool.weight(u)).sum();
@@ -503,6 +552,7 @@ impl FleetDriver {
                 |i| {
                     let u = arrivals_ref[i].1;
                     let t = Timer::start();
+                    let train_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
                     // Same per-(user, round) derivation as the seed driver,
                     // so full participation reproduces it bit-for-bit.
                     let local_seed = SplitMix64::new(
@@ -521,17 +571,61 @@ impl FleetDriver {
                     for (hv, &wv) in h.iter_mut().zip(w_snapshot.iter()) {
                         *hv -= wv;
                     }
+                    if let Some(c) = tel {
+                        c.record(SpanEvent {
+                            kind: SpanKind::ClientTrain,
+                            round,
+                            user: u as u64,
+                            wall_start_s: train_start,
+                            wall_dur_s: t.elapsed_secs(),
+                            virt_s: virt_start,
+                            data: SpanData::ClientTrain {
+                                local_steps: spec.local_steps as u32,
+                                m: m as u64,
+                            },
+                        });
+                        // Attribute codec-internal work counters (scale
+                        // probes, range symbols) to this client's encode.
+                        probe::reset();
+                    }
+                    let enc_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
+                    let enc_timer = Timer::start();
                     // Client side of the session API: the update streams
                     // through the encode sink in tensor chunks (layer-style
                     // granularity), not as one monolithic buffer. The
                     // client's assigned rate arrives via CodecContext.
                     let ctx = CodecContext::new(u as u64, round, self.seed, rates_ref[i]);
                     let mut sink = spec.codec.encoder(&ctx, m);
+                    let mut enc_chunks = 0u32;
                     for chunk in h.chunks(DEFAULT_CHUNK) {
                         sink.push(chunk);
+                        enc_chunks += 1;
                     }
                     let enc = sink.finish();
                     let frame = wire::encode_frame(u as u64, round, wire_codec_id, &enc);
+                    if let Some(c) = tel {
+                        let enc_secs = enc_timer.elapsed_secs();
+                        let p = probe::take();
+                        c.record(SpanEvent {
+                            kind: SpanKind::Encode,
+                            round,
+                            user: u as u64,
+                            wall_start_s: enc_start,
+                            wall_dur_s: enc_secs,
+                            virt_s: virt_start,
+                            data: SpanData::Encode {
+                                assigned_bits: (rates_ref[i] * m as f64).floor() as u64,
+                                achieved_bits: enc.bits as u64,
+                                chunks: enc_chunks,
+                                scale_probes_est: p.scale_probes_est,
+                                scale_probes_exact: p.scale_probes_exact,
+                                symbols: p.symbols,
+                                escapes: p.escapes,
+                            },
+                        });
+                        c.record_hist(HistMetric::EncodeNanos, (enc_secs * 1e9) as u64);
+                        c.record_hist(HistMetric::MessageBytes, frame.len() as u64);
+                    }
                     (frame, h, t.elapsed_secs())
                 },
                 |i, (frame, h, secs)| {
@@ -540,7 +634,30 @@ impl FleetDriver {
                     let f = wire::decode_frame(&frame)
                         .expect("in-memory frame failed integrity check");
                     debug_assert_eq!(f.user, arrivals_ref[i].1 as u64);
-                    match uplink.try_transmit_rate(f.user, &f.payload, m, rates_ref[i]) {
+                    // In virtual time the message lands when its client's
+                    // latency elapses; transmit/decode/fold all happen at
+                    // that instant (the server folds as frames arrive).
+                    let arrival_virt = virt_start + arrivals_ref[i].0;
+                    let tx_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
+                    let tx_timer = Timer::start();
+                    let admitted =
+                        uplink.try_transmit_rate(f.user, &f.payload, m, rates_ref[i]);
+                    if let Some(c) = tel {
+                        c.record(SpanEvent {
+                            kind: SpanKind::Transmit,
+                            round,
+                            user: f.user,
+                            wall_start_s: tx_start,
+                            wall_dur_s: tx_timer.elapsed_secs(),
+                            virt_s: arrival_virt,
+                            data: SpanData::Transmit {
+                                wire_bytes: frame.len() as u64,
+                                payload_bits: f.payload.bits as u64,
+                                accepted: admitted.is_ok(),
+                            },
+                        });
+                    }
+                    match admitted {
                         Ok(()) => {
                             achieved_ref[i] = f.payload.bits;
                             let alpha = pool.weight(arrivals_ref[i].1) / arrived_weight;
@@ -554,7 +671,75 @@ impl FleetDriver {
                             // accumulator — no per-user Vec<f32> is ever
                             // materialized here.
                             let mut stream = spec.codec.decoder(&f.payload, m, &ctx);
-                            agg.fold_stream(alpha, stream.as_mut());
+                            match tel {
+                                None => agg.fold_stream(alpha, stream.as_mut()),
+                                Some(c) => {
+                                    // Instrumented replica of `fold_stream`:
+                                    // the same next_chunk → fold_chunk →
+                                    // commit sequence (bit-identical folds),
+                                    // with the decode and fold halves of
+                                    // each chunk timed separately.
+                                    let stream = stream.as_mut();
+                                    let dec_start = c.wall_now();
+                                    let mut fold_start = dec_start;
+                                    let mut dec_secs = 0.0f64;
+                                    let mut fold_secs = 0.0f64;
+                                    let mut offset = 0usize;
+                                    let mut fold_chunks = 0u32;
+                                    loop {
+                                        let t_dec = Timer::start();
+                                        let Some(chunk) = stream.next_chunk() else {
+                                            break;
+                                        };
+                                        dec_secs += t_dec.elapsed_secs();
+                                        if fold_chunks == 0 {
+                                            fold_start = c.wall_now();
+                                        }
+                                        let t_fold = Timer::start();
+                                        agg.fold_chunk(offset, alpha, chunk);
+                                        let dt = t_fold.elapsed_secs();
+                                        fold_secs += dt;
+                                        c.record_hist(
+                                            HistMetric::FoldChunkNanos,
+                                            (dt * 1e9) as u64,
+                                        );
+                                        offset += chunk.len();
+                                        fold_chunks += 1;
+                                    }
+                                    assert_eq!(
+                                        offset, m,
+                                        "decode stream yielded {offset} of {m} entries"
+                                    );
+                                    let t_commit = Timer::start();
+                                    agg.commit(alpha);
+                                    fold_secs += t_commit.elapsed_secs();
+                                    c.record(SpanEvent {
+                                        kind: SpanKind::Decode,
+                                        round,
+                                        user: f.user,
+                                        wall_start_s: dec_start,
+                                        wall_dur_s: dec_secs,
+                                        virt_s: arrival_virt,
+                                        data: SpanData::Decode {
+                                            chunks: fold_chunks,
+                                            entries: offset as u64,
+                                        },
+                                    });
+                                    c.record(SpanEvent {
+                                        kind: SpanKind::Fold,
+                                        round,
+                                        user: f.user,
+                                        wall_start_s: fold_start,
+                                        wall_dur_s: fold_secs,
+                                        virt_s: arrival_virt,
+                                        data: SpanData::Fold {
+                                            chunks: fold_chunks,
+                                            entries: offset as u64,
+                                            alpha,
+                                        },
+                                    });
+                                }
+                            }
                             desired.fold(alpha, &h);
                         }
                         Err(_) => budget_violations += 1,
@@ -635,6 +820,7 @@ impl FleetDriver {
             budget_violations,
             aggregate_distortion,
             client_secs,
+            wall_secs: round_timer.elapsed_secs(),
             timing,
             channel,
             clients,
@@ -691,16 +877,25 @@ mod tests {
         let pool = ShardPool::new(&shards);
         let codec = quantizer::make("uveqfed-l2").unwrap();
         let scenario = Scenario::stragglers(4, 5.0);
-        let run = |workers: usize| {
+        let run = |workers: usize, traced: bool| {
+            let collector =
+                if traced { Collector::with_default_capacity() } else { Collector::disabled() };
             let driver = FleetDriver::new(9, 2.0, workers, scenario.clone());
             let mut clock = VirtualClock::new();
             let mut w = trainer.init_params(1);
             for round in 0..3 {
-                driver.run_round(&spec(round, &trainer, codec.as_ref()), &mut w, &pool, &mut clock);
+                let s = spec(round, &trainer, codec.as_ref()).with_telemetry(&collector);
+                driver.run_round(&s, &mut w, &pool, &mut clock);
+            }
+            if traced {
+                assert!(!collector.drain().is_empty(), "traced run must record spans");
             }
             w
         };
-        assert_eq!(run(1), run(4), "aggregation must be arrival-order independent");
+        let baseline = run(1, false);
+        assert_eq!(baseline, run(4, false), "aggregation must be arrival-order independent");
+        assert_eq!(baseline, run(1, true), "tracing must not perturb the round");
+        assert_eq!(baseline, run(4, true), "tracing must not perturb parallel rounds");
     }
 
     #[test]
@@ -772,7 +967,8 @@ mod tests {
         let (shards, trainer) = setup(8, 20);
         let pool = ShardPool::new(&shards);
         let codec = quantizer::make("qsgd").unwrap();
-        let run = |workers: usize| {
+        let run = |workers: usize, traced: bool| {
+            let collector = if traced { Collector::for_cohort(5) } else { Collector::disabled() };
             let plan = RatePlan::new(
                 Channel::new(
                     ChannelModel::Markov {
@@ -790,11 +986,14 @@ mod tests {
             let mut clock = VirtualClock::new();
             let mut w = trainer.init_params(1);
             for round in 0..3 {
-                driver.run_round(&spec(round, &trainer, codec.as_ref()), &mut w, &pool, &mut clock);
+                let s = spec(round, &trainer, codec.as_ref()).with_telemetry(&collector);
+                driver.run_round(&s, &mut w, &pool, &mut clock);
             }
             w
         };
-        assert_eq!(run(1), run(4), "per-client rates must not depend on fold order");
+        let baseline = run(1, false);
+        assert_eq!(baseline, run(4, false), "per-client rates must not depend on fold order");
+        assert_eq!(baseline, run(4, true), "tracing must not perturb rate-planned rounds");
     }
 
     #[test]

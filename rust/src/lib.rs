@@ -35,6 +35,7 @@ pub mod models;
 pub mod prng;
 pub mod quantizer;
 pub mod runtime;
+pub mod telemetry;
 pub mod tensor;
 pub mod theory;
 pub mod util;

@@ -29,6 +29,7 @@ use uveqfed::models::LogReg;
 use uveqfed::models::{CnnLite, MlpMnist};
 use uveqfed::quantizer;
 use uveqfed::runtime;
+use uveqfed::telemetry::{summarize, Collector, TelemetryReport, TraceWriter};
 use uveqfed::util::cli::{Args, Cli};
 use uveqfed::util::config::Config;
 use uveqfed::util::error::{Context, Error};
@@ -47,7 +48,8 @@ fn main() {
                 "uveqfed — Universal Vector Quantization for Federated Learning\n\n\
                  subcommands:\n  train   --config <file> [--codec SPEC] [--rate R] [--rounds N]\n  \
                  fleet   --population N --cohort K --scenario NAME [--rounds N] [--codec SPEC]\n          \
-                 [--channel uniform|tiers|lognormal|markov --policy uniform|proportional|theory]\n  \
+                 [--channel uniform|tiers|lognormal|markov --policy uniform|proportional|theory]\n          \
+                 [--trace FILE.jsonl --trace-report FILE.md]\n  \
                  distort --codec SPEC --rate R [--size N]\n  info\n\n\
                  Codec SPEC grammar: name[:key=value,...] — e.g. uveqfed-l2, qsgd:max_levels=4096.\n\
                  See configs/*.toml for the paper's experiment setups."
@@ -193,7 +195,9 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
         .opt("templates", "16", "distinct template shards backing the population")
         .opt("samples", "120", "samples per template shard")
         .opt("channel", "", "uplink capacity model: uniform|tiers|lognormal|markov")
-        .opt("policy", "theory", "rate allocation: uniform|proportional|theory");
+        .opt("policy", "theory", "rate allocation: uniform|proportional|theory")
+        .opt("trace", "", "write round-lifecycle spans to this JSONL file")
+        .opt("trace-report", "", "write the per-round telemetry Markdown table here");
     let args = parse_args(&cli, argv)?;
     let population = args.get_usize("population");
     let cohort = args.get_usize("cohort");
@@ -235,6 +239,22 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
     let mut clock = VirtualClock::new();
     let mut w = trainer.init_params(seed);
 
+    // Opt-in tracing: size the event ring for the per-round cohort so a
+    // round's spans never overflow it, drain once per round.
+    let trace_path = args.get("trace").to_string();
+    let report_path = args.get("trace-report").to_string();
+    let collector = if trace_path.is_empty() && report_path.is_empty() {
+        Collector::disabled()
+    } else {
+        Collector::for_cohort(scenario.sampler.target(population))
+    };
+    let mut tracer = if trace_path.is_empty() {
+        None
+    } else {
+        Some(TraceWriter::create(&trace_path).context("create trace file")?)
+    };
+    let mut telemetry_report = TelemetryReport::default();
+
     println!(
         "fleet: population={population} cohort={cohort} scenario={} codec={} rate={rate} rounds={rounds}{}",
         args.get("scenario"),
@@ -261,10 +281,25 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
             trainer: &trainer,
             codec: codec.as_ref(),
             rate_override: None,
+            telemetry: Some(&collector),
         };
         let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
         wire_total += rep.wire_bytes;
         violations += rep.budget_violations;
+        if collector.is_enabled() {
+            let events = collector.drain();
+            let dropped = collector.take_dropped();
+            if let Some(t) = tracer.as_mut() {
+                t.write_events(&events).context("write trace spans")?;
+            }
+            for (i, s) in summarize(&events).into_iter().enumerate() {
+                if let Some(t) = tracer.as_mut() {
+                    t.write_round(&s, if i == 0 { dropped } else { 0 })
+                        .context("write trace round line")?;
+                }
+                telemetry_report.push(s);
+            }
+        }
         println!(
             "{:>5} {:>9} {:>9} {:>7} {:>6} {:>8.3} {:>9.3} {:>10.1} {:>9.3} {:>5.2}/{:>4.2}/{:>4.2}",
             round,
@@ -328,6 +363,15 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
                 spent_uni
             );
         }
+    }
+    if let Some(mut t) = tracer {
+        t.flush().context("flush trace")?;
+        println!("trace → {trace_path}");
+    }
+    if !report_path.is_empty() {
+        std::fs::write(&report_path, telemetry_report.to_markdown())
+            .context("write trace report")?;
+        println!("trace report → {report_path}");
     }
     let eval = trainer.evaluate(&w, &test);
     println!(

@@ -6,7 +6,9 @@ use std::io::Write;
 use std::path::Path;
 use std::time::Instant;
 
-/// Simple scoped timer.
+/// Simple scoped timer. **Wall-clock only** — in fleet code, which runs on
+/// a simulated [`crate::fleet::VirtualClock`], pair measurements with the
+/// virtual domain via [`DualTimer`] instead of mixing the two.
 #[derive(Debug)]
 pub struct Timer {
     start: Instant,
@@ -26,6 +28,41 @@ impl Timer {
     }
 }
 
+/// A timer spanning both clock domains: wall time from [`Timer`] and
+/// simulated fleet time from a caller-supplied virtual clock reading.
+///
+/// The fleet's `VirtualClock` only advances at round close, so the caller
+/// passes the current virtual reading at start and (optionally) at stop —
+/// this type stays decoupled from `fleet::` and merely keeps the two
+/// measurements together so span records can't mix domains by accident.
+#[derive(Debug, Clone, Copy)]
+pub struct DualTimer {
+    wall_start: Instant,
+    virt_start: f64,
+}
+
+impl DualTimer {
+    /// Start both domains; `virt_now` is the current virtual-clock reading.
+    pub fn start(virt_now: f64) -> Self {
+        Self { wall_start: Instant::now(), virt_start: virt_now }
+    }
+
+    /// Wall seconds since start.
+    pub fn wall_secs(&self) -> f64 {
+        self.wall_start.elapsed().as_secs_f64()
+    }
+
+    /// Virtual-clock reading captured at start.
+    pub fn virt_start(&self) -> f64 {
+        self.virt_start
+    }
+
+    /// `(wall_elapsed, virt_elapsed)` given the current virtual reading.
+    pub fn elapsed(&self, virt_now: f64) -> (f64, f64) {
+        (self.wall_secs(), virt_now - self.virt_start)
+    }
+}
+
 /// Accumulating named counters/gauges for a run; rendered as a summary or
 /// merged into result JSON.
 #[derive(Debug, Default, Clone)]
@@ -38,8 +75,18 @@ impl Counters {
         Self::default()
     }
 
+    /// Accumulate `v` into `key`. Allocates only on the first insert of a
+    /// key; steady-state calls on a warmed key are allocation-free (the
+    /// old `entry(key.to_string())` cloned the key on *every* call). For
+    /// fleet hot paths prefer `telemetry::Collector::add_counter`, whose
+    /// `&'static str` keys never allocate at all.
     pub fn add(&mut self, key: &str, v: f64) {
-        *self.vals.entry(key.to_string()).or_insert(0.0) += v;
+        match self.vals.get_mut(key) {
+            Some(slot) => *slot += v,
+            None => {
+                self.vals.insert(key.to_string(), v);
+            }
+        }
     }
 
     pub fn set(&mut self, key: &str, v: f64) {
@@ -147,6 +194,17 @@ mod tests {
     fn width_mismatch_panics() {
         let mut t = CsvTable::new(&["a"]);
         t.push(vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn dual_timer_tracks_both_domains() {
+        let t = DualTimer::start(12.5);
+        assert_eq!(t.virt_start(), 12.5);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let (wall, virt) = t.elapsed(20.0);
+        assert!(wall > 0.0);
+        assert_eq!(virt, 7.5);
+        assert!(t.wall_secs() >= wall);
     }
 
     #[test]

@@ -238,6 +238,7 @@ impl UVeQFed {
         let babai_ref: &[f64] = babai;
         let dbabai_ref: &[f64] = dbabai;
         let mut est = |s: f64| {
+            crate::telemetry::probe::add_scale_est(1);
             let inv_s = 1.0 / s;
             let mut hist = [0u32; 257]; // [-128,127] + overflow bucket
             let mut total = 0usize;
@@ -277,6 +278,7 @@ impl UVeQFed {
         let dither_ref: &[f64] = dither;
         let mut cache: Option<(f64, BitWriter)> = None;
         let mut exact = |s: f64| {
+            crate::telemetry::probe::add_scale_exact(1);
             let inv_s = 1.0 / s;
             y.clear();
             y.resize(padded, 0.0);

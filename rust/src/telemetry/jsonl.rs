@@ -1,0 +1,252 @@
+//! JSONL trace sink (schema 1), built on `util::json`.
+//!
+//! One JSON object per line:
+//!
+//! * line 1 — `{"type":"meta","schema":1,"source":"uveqfed-trace"}`;
+//! * `{"type":"span",...}` — one per [`SpanEvent`], with `kind` from
+//!   [`super::SpanKind::name`], `user: null` for round-scoped spans, both
+//!   clock domains, and a `data` object whose fields depend on `kind`;
+//! * `{"type":"round",...}` — one per [`RoundSummary`], carrying the
+//!   per-round aggregates plus `dropped_events` (ring overflow count).
+//!
+//! `scripts/validate_trace.py` is the out-of-tree schema check; CI runs
+//! it against a traced smoke round. The schema version bumps whenever a
+//! field is renamed or removed (additions are compatible).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::report::RoundSummary;
+use super::{SpanData, SpanEvent};
+
+/// Trace schema version emitted in the meta line.
+pub const TRACE_SCHEMA: u32 = 1;
+
+/// Serialize one span event as a `{"type":"span",...}` object.
+pub fn span_to_json(ev: &SpanEvent) -> Json {
+    let mut o = Json::obj();
+    o.push("type", Json::str("span"));
+    o.push("kind", Json::str(ev.kind.name()));
+    o.push("round", Json::num(ev.round as f64));
+    if ev.user == SpanEvent::ROUND_SCOPED {
+        o.push("user", Json::Null);
+    } else {
+        o.push("user", Json::num(ev.user as f64));
+    }
+    o.push("wall_start_s", Json::num(ev.wall_start_s));
+    o.push("wall_dur_s", Json::num(ev.wall_dur_s));
+    o.push("virt_s", Json::num(ev.virt_s));
+    let mut d = Json::obj();
+    match ev.data {
+        SpanData::ClientTrain { local_steps, m } => {
+            d.push("local_steps", Json::num(local_steps as f64));
+            d.push("m", Json::num(m as f64));
+        }
+        SpanData::Encode {
+            assigned_bits,
+            achieved_bits,
+            chunks,
+            scale_probes_est,
+            scale_probes_exact,
+            symbols,
+            escapes,
+        } => {
+            d.push("assigned_bits", Json::num(assigned_bits as f64));
+            d.push("achieved_bits", Json::num(achieved_bits as f64));
+            d.push("chunks", Json::num(chunks as f64));
+            d.push("scale_probes_est", Json::num(scale_probes_est as f64));
+            d.push("scale_probes_exact", Json::num(scale_probes_exact as f64));
+            d.push("symbols", Json::num(symbols as f64));
+            d.push("escapes", Json::num(escapes as f64));
+        }
+        SpanData::Transmit { wire_bytes, payload_bits, accepted } => {
+            d.push("wire_bytes", Json::num(wire_bytes as f64));
+            d.push("payload_bits", Json::num(payload_bits as f64));
+            d.push("accepted", Json::Bool(accepted));
+        }
+        SpanData::Decode { chunks, entries } => {
+            d.push("chunks", Json::num(chunks as f64));
+            d.push("entries", Json::num(entries as f64));
+        }
+        SpanData::Fold { chunks, entries, alpha } => {
+            d.push("chunks", Json::num(chunks as f64));
+            d.push("entries", Json::num(entries as f64));
+            d.push("alpha", Json::num(alpha));
+        }
+        SpanData::RateAlloc { clients, capacity_mass, assigned_mass } => {
+            d.push("clients", Json::num(clients as f64));
+            d.push("capacity_mass", Json::num(capacity_mass));
+            d.push("assigned_mass", Json::num(assigned_mass));
+        }
+    }
+    o.push("data", d);
+    o
+}
+
+/// Serialize one round summary as a `{"type":"round",...}` object.
+pub fn round_to_json(s: &RoundSummary, dropped_events: u64) -> Json {
+    let mut o = Json::obj();
+    o.push("type", Json::str("round"));
+    o.push("round", Json::num(s.round as f64));
+    o.push("clients", Json::num(s.clients as f64));
+    o.push("aggregated", Json::num(s.aggregated as f64));
+    o.push("rejected", Json::num(s.rejected as f64));
+    o.push("assigned_bits", Json::num(s.assigned_bits as f64));
+    o.push("achieved_bits", Json::num(s.achieved_bits as f64));
+    o.push("uplink_bits", Json::num(s.uplink_bits as f64));
+    o.push("wire_bytes", Json::num(s.wire_bytes as f64));
+    o.push("alpha_sum", Json::num(s.alpha_sum));
+    o.push("encode_chunks", Json::num(s.encode_chunks as f64));
+    o.push("fold_chunks", Json::num(s.fold_chunks as f64));
+    o.push("entries_folded", Json::num(s.entries_folded as f64));
+    o.push("scale_probes", Json::num(s.scale_probes as f64));
+    o.push("range_symbols", Json::num(s.range_symbols as f64));
+    o.push("range_escapes", Json::num(s.range_escapes as f64));
+    o.push("train_secs", Json::num(s.train_secs));
+    o.push("encode_secs", Json::num(s.encode_secs));
+    o.push("decode_secs", Json::num(s.decode_secs));
+    o.push("fold_secs", Json::num(s.fold_secs));
+    o.push("rate_alloc_secs", Json::num(s.rate_alloc_secs));
+    o.push("virt_start_s", Json::num(s.virt_start_s));
+    o.push("dropped_events", Json::num(dropped_events as f64));
+    o
+}
+
+/// Buffered JSONL trace file writer. Off the hot path: the fleet drains
+/// its collector once per round and hands the batch here.
+#[derive(Debug)]
+pub struct TraceWriter {
+    out: BufWriter<File>,
+}
+
+impl TraceWriter {
+    /// Create (truncate) the trace file and write the meta line. Parent
+    /// directories are created as needed.
+    pub fn create(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut w = Self { out: BufWriter::new(File::create(path)?) };
+        let mut meta = Json::obj();
+        meta.push("type", Json::str("meta"));
+        meta.push("schema", Json::num(TRACE_SCHEMA as f64));
+        meta.push("source", Json::str("uveqfed-trace"));
+        w.write_line(&meta)?;
+        Ok(w)
+    }
+
+    fn write_line(&mut self, j: &Json) -> crate::Result<()> {
+        self.out.write_all(j.to_string().as_bytes())?;
+        self.out.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Append one span line per event.
+    pub fn write_events(&mut self, events: &[SpanEvent]) -> crate::Result<()> {
+        for ev in events {
+            self.write_line(&span_to_json(ev))?;
+        }
+        Ok(())
+    }
+
+    /// Append one round-summary line.
+    pub fn write_round(&mut self, s: &RoundSummary, dropped_events: u64) -> crate::Result<()> {
+        self.write_line(&round_to_json(s, dropped_events))
+    }
+
+    /// Flush buffered lines to disk.
+    pub fn flush(&mut self) -> crate::Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SpanKind;
+    use super::*;
+
+    #[test]
+    fn span_json_shape_per_kind() {
+        let ev = SpanEvent {
+            kind: SpanKind::Transmit,
+            round: 2,
+            user: 9,
+            wall_start_s: 0.5,
+            wall_dur_s: 0.0,
+            virt_s: 1.25,
+            data: SpanData::Transmit { wire_bytes: 64, payload_bits: 400, accepted: true },
+        };
+        let j = span_to_json(&ev);
+        assert_eq!(j.get("type").and_then(Json::as_str), Some("span"));
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("transmit"));
+        assert_eq!(j.get("round").and_then(Json::as_num), Some(2.0));
+        assert_eq!(j.get("user").and_then(Json::as_num), Some(9.0));
+        assert_eq!(j.get("virt_s").and_then(Json::as_num), Some(1.25));
+        let d = j.get("data").unwrap();
+        assert_eq!(d.get("wire_bytes").and_then(Json::as_num), Some(64.0));
+        assert_eq!(d.get("accepted"), Some(&Json::Bool(true)));
+
+        let ra = SpanEvent {
+            kind: SpanKind::RateAlloc,
+            user: SpanEvent::ROUND_SCOPED,
+            data: SpanData::RateAlloc { clients: 4, capacity_mass: 8.0, assigned_mass: 8.0 },
+            ..SpanEvent::default()
+        };
+        let j = span_to_json(&ra);
+        assert_eq!(j.get("user"), Some(&Json::Null), "round-scoped user must be null");
+
+        // Writer output must round-trip through the strict parser.
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("kind").and_then(Json::as_str), Some("rate_alloc"));
+    }
+
+    #[test]
+    fn round_json_carries_reconciliation_fields() {
+        let s = RoundSummary {
+            round: 1,
+            aggregated: 5,
+            uplink_bits: 1000,
+            wire_bytes: 300,
+            ..RoundSummary::default()
+        };
+        let j = round_to_json(&s, 2);
+        assert_eq!(j.get("type").and_then(Json::as_str), Some("round"));
+        assert_eq!(j.get("aggregated").and_then(Json::as_num), Some(5.0));
+        assert_eq!(j.get("uplink_bits").and_then(Json::as_num), Some(1000.0));
+        assert_eq!(j.get("dropped_events").and_then(Json::as_num), Some(2.0));
+        Json::parse(&j.to_string()).unwrap();
+    }
+
+    #[test]
+    fn trace_writer_emits_meta_then_lines() {
+        let path = std::env::temp_dir()
+            .join(format!("uveqfed_jsonl_unit_{}.jsonl", std::process::id()));
+        let mut w = TraceWriter::create(&path).unwrap();
+        let ev = SpanEvent::default();
+        w.write_events(&[ev]).unwrap();
+        w.write_round(&RoundSummary::default(), 0).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let meta = Json::parse(lines[0]).unwrap();
+        assert_eq!(meta.get("type").and_then(Json::as_str), Some("meta"));
+        assert_eq!(meta.get("schema").and_then(Json::as_num), Some(TRACE_SCHEMA as f64));
+        assert_eq!(
+            Json::parse(lines[1]).unwrap().get("type").and_then(Json::as_str),
+            Some("span")
+        );
+        assert_eq!(
+            Json::parse(lines[2]).unwrap().get("type").and_then(Json::as_str),
+            Some("round")
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}

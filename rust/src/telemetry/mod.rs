@@ -1,0 +1,557 @@
+//! Round-lifecycle telemetry: structured tracing spans, log-scale
+//! histograms, and static-key counters with a zero-allocation hot path.
+//!
+//! The fleet driver can only be trusted at 10k+ clients per round if
+//! observing it costs nothing it can't afford: a [`Collector`]
+//! preallocates a fixed ring of [`SpanEvent`]s at construction, the
+//! histograms are fixed arrays of atomics, and counter keys are
+//! `&'static str` — so recording a span, a histogram sample, or a counter
+//! increment from the encode/decode/fold hot paths performs **zero** heap
+//! allocations (enforced by the counting-allocator test
+//! `tests/alloc_sessions.rs`). A `Collector::disabled()` collector makes
+//! every record call a branch-and-return, so untraced rounds pay nothing.
+//!
+//! Every span carries **two clock domains**: real wall-clock seconds
+//! (`wall_start_s`/`wall_dur_s`, measured from the collector's epoch) and
+//! the fleet's simulated [`crate::fleet::VirtualClock`] time (`virt_s`),
+//! so "how long did encoding actually take" and "when in simulated time
+//! did this client's message land" stay coherent in one trace. See
+//! `DESIGN.md` §10 for the event taxonomy and the JSONL schema emitted by
+//! [`jsonl::TraceWriter`].
+
+pub mod jsonl;
+pub mod probe;
+pub mod report;
+
+pub use jsonl::TraceWriter;
+pub use probe::EncodeProbe;
+pub use report::{summarize, RoundSummary, TelemetryReport, CLIENT_LIFECYCLE};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default event-ring capacity: comfortably holds the ~5 spans/client of
+/// a 10k-client round plus the round-scoped spans.
+pub const DEFAULT_EVENT_CAPACITY: usize = 1 << 16;
+
+/// Static-key counter slots preallocated per collector.
+const COUNTER_SLOTS: usize = 64;
+
+/// The lifecycle stage a span instruments. Discriminant order is the
+/// per-client lifecycle order; [`Collector::drain`] sorts on it so traces
+/// are deterministic regardless of worker interleaving.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Local SGD on one client (worker thread).
+    ClientTrain,
+    /// Session encode of one client update (worker thread).
+    Encode,
+    /// Uplink admission of one framed message (coordinator thread).
+    Transmit,
+    /// Decode-stream drain of one accepted message (coordinator thread).
+    Decode,
+    /// Fixed-point fold of one accepted message (coordinator thread).
+    Fold,
+    /// Per-round capacity draw + rate allocation (round-scoped).
+    RateAlloc,
+}
+
+impl SpanKind {
+    /// Stable wire name (the JSONL `kind` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::ClientTrain => "client_train",
+            SpanKind::Encode => "encode",
+            SpanKind::Transmit => "transmit",
+            SpanKind::Decode => "decode",
+            SpanKind::Fold => "fold",
+            SpanKind::RateAlloc => "rate_alloc",
+        }
+    }
+}
+
+/// Stage-specific span payload. Kept `Copy` (no heap) so the event ring
+/// can be preallocated and overwritten in place.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SpanData {
+    /// Local training: τ and the model size.
+    ClientTrain { local_steps: u32, m: u64 },
+    /// Session encode: the budget the rate controller assigned
+    /// (⌊R_u·m⌋), the exact coded bits achieved, chunks pushed through
+    /// the sink, and the codec's internal work counters (scale-search
+    /// probes, range-coder symbols/escapes) from [`probe`].
+    Encode {
+        assigned_bits: u64,
+        achieved_bits: u64,
+        chunks: u32,
+        scale_probes_est: u32,
+        scale_probes_exact: u32,
+        symbols: u64,
+        escapes: u64,
+    },
+    /// Uplink admission: serialized frame bytes, exact payload bits, and
+    /// whether the budget check admitted the message.
+    Transmit { wire_bytes: u64, payload_bits: u64, accepted: bool },
+    /// Decode-stream drain: chunks yielded and entries produced.
+    Decode { chunks: u32, entries: u64 },
+    /// Aggregator fold: chunks folded, entries, and the client's
+    /// re-normalized weight α.
+    Fold { chunks: u32, entries: u64, alpha: f64 },
+    /// Rate allocation over the round's arrivals: client count, Σ channel
+    /// capacity and Σ assigned rate (bits/entry mass).
+    RateAlloc { clients: u32, capacity_mass: f64, assigned_mass: f64 },
+}
+
+/// One recorded span. `user` is [`SpanEvent::ROUND_SCOPED`] for events
+/// that belong to the round rather than a client.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    pub round: u64,
+    pub user: u64,
+    /// Wall-clock start, seconds since the collector's construction.
+    pub wall_start_s: f64,
+    /// Wall-clock duration in seconds (0 for instantaneous events).
+    pub wall_dur_s: f64,
+    /// Fleet [`crate::fleet::VirtualClock`] timestamp (simulated
+    /// seconds): the round's virtual start for client-side spans, the
+    /// message's virtual arrival for transmit/decode/fold.
+    pub virt_s: f64,
+    pub data: SpanData,
+}
+
+impl SpanEvent {
+    /// Sentinel `user` id for round-scoped events (e.g. rate allocation).
+    pub const ROUND_SCOPED: u64 = u64::MAX;
+}
+
+impl Default for SpanEvent {
+    fn default() -> Self {
+        Self {
+            kind: SpanKind::ClientTrain,
+            round: 0,
+            user: Self::ROUND_SCOPED,
+            wall_start_s: 0.0,
+            wall_dur_s: 0.0,
+            virt_s: 0.0,
+            data: SpanData::ClientTrain { local_steps: 0, m: 0 },
+        }
+    }
+}
+
+/// Metrics with a fixed log₂-bucket histogram on the collector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HistMetric {
+    /// Per-client session-encode latency, nanoseconds.
+    EncodeNanos = 0,
+    /// Per-client serialized frame size, bytes.
+    MessageBytes = 1,
+    /// Per-chunk aggregator fold time, nanoseconds.
+    FoldChunkNanos = 2,
+}
+
+impl HistMetric {
+    /// Number of distinct metrics (histogram array length).
+    pub const COUNT: usize = 3;
+
+    /// All metrics, in index order.
+    pub const ALL: [HistMetric; Self::COUNT] =
+        [HistMetric::EncodeNanos, HistMetric::MessageBytes, HistMetric::FoldChunkNanos];
+
+    /// Stable name for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            HistMetric::EncodeNanos => "encode_nanos",
+            HistMetric::MessageBytes => "message_bytes",
+            HistMetric::FoldChunkNanos => "fold_chunk_nanos",
+        }
+    }
+}
+
+/// Fixed log₂-bucket histogram: value `v` lands in bucket
+/// `⌊log₂ v⌋ + 1` (0 holds `v = 0`), so 64 buckets cover the full `u64`
+/// range. All-atomic — recording never locks or allocates.
+#[derive(Debug)]
+pub struct LogHistogram {
+    buckets: [AtomicU64; 64],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LogHistogram {
+    /// Bucket index for a value.
+    pub fn bucket_of(value: u64) -> usize {
+        (64 - value.leading_zeros() as usize).min(63)
+    }
+
+    /// Lower bound of a bucket (inclusive): 0, 1, 2, 4, 8, …
+    pub fn bucket_floor(bucket: usize) -> u64 {
+        if bucket == 0 {
+            0
+        } else {
+            1u64 << (bucket - 1)
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&self, value: u64) {
+        self.buckets[Self::bucket_of(value)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Snapshot of the 64 bucket counts.
+    pub fn buckets(&self) -> [u64; 64] {
+        let mut out = [0u64; 64];
+        for (o, b) in out.iter_mut().zip(&self.buckets) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Approximate percentile (bucket-floor resolution): the lower bound
+    /// of the bucket containing the `p`-quantile sample, `p` in [0, 100].
+    pub fn percentile(&self, p: f64) -> u64 {
+        let counts = self.buckets();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_floor(i);
+            }
+        }
+        Self::bucket_floor(63)
+    }
+}
+
+/// Preallocated span storage: a fixed ring that overwrites its oldest
+/// event (and counts the overwrite) when full.
+#[derive(Debug)]
+struct EventRing {
+    buf: Vec<SpanEvent>,
+    start: usize,
+    len: usize,
+    dropped: u64,
+}
+
+impl EventRing {
+    fn with_capacity(capacity: usize) -> Self {
+        Self { buf: vec![SpanEvent::default(); capacity], start: 0, len: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, ev: SpanEvent) {
+        let cap = self.buf.len();
+        if cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.len < cap {
+            self.buf[(self.start + self.len) % cap] = ev;
+            self.len += 1;
+        } else {
+            self.buf[self.start] = ev;
+            self.start = (self.start + 1) % cap;
+            self.dropped += 1;
+        }
+    }
+}
+
+/// Preallocated `&'static str`-keyed counters: linear-scan lookup, first
+/// use of a key claims a free slot (no allocation — the slot vector's
+/// capacity is reserved at construction).
+#[derive(Debug)]
+struct CounterBank {
+    slots: Vec<(&'static str, f64)>,
+    overflowed: u64,
+}
+
+impl CounterBank {
+    fn add(&mut self, key: &'static str, v: f64) {
+        for slot in self.slots.iter_mut() {
+            if std::ptr::eq(slot.0, key) || slot.0 == key {
+                slot.1 += v;
+                return;
+            }
+        }
+        if self.slots.len() < self.slots.capacity() {
+            self.slots.push((key, v));
+        } else {
+            self.overflowed += 1;
+        }
+    }
+}
+
+/// Thread-safe telemetry sink for one run: span ring + histograms +
+/// counters. `&Collector` is `Sync`, so fleet workers record through the
+/// same shared reference the coordinator drains.
+#[derive(Debug)]
+pub struct Collector {
+    enabled: bool,
+    epoch: Instant,
+    ring: Mutex<EventRing>,
+    hists: [LogHistogram; HistMetric::COUNT],
+    counters: Mutex<CounterBank>,
+}
+
+impl Collector {
+    /// Active collector holding up to `capacity` events between drains.
+    /// All steady-state storage is allocated here, up front.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            enabled: true,
+            epoch: Instant::now(),
+            ring: Mutex::new(EventRing::with_capacity(capacity)),
+            hists: Default::default(),
+            counters: Mutex::new(CounterBank {
+                slots: Vec::with_capacity(COUNTER_SLOTS),
+                overflowed: 0,
+            }),
+        }
+    }
+
+    /// Active collector with [`DEFAULT_EVENT_CAPACITY`].
+    pub fn with_default_capacity() -> Self {
+        Self::new(DEFAULT_EVENT_CAPACITY)
+    }
+
+    /// Capacity sized for per-round drains over cohorts of `n` clients
+    /// (≈5 client spans each, plus round-scoped headroom).
+    pub fn for_cohort(n: usize) -> Self {
+        Self::new(n.saturating_mul(6).saturating_add(64))
+    }
+
+    /// No-op collector: every record call returns after one branch, no
+    /// storage is allocated. The near-zero-overhead "tracing off" state.
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            epoch: Instant::now(),
+            ring: Mutex::new(EventRing::with_capacity(0)),
+            hists: Default::default(),
+            counters: Mutex::new(CounterBank { slots: Vec::new(), overflowed: 0 }),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Wall-clock seconds since this collector was constructed (the
+    /// `wall_start_s` domain of every span it records).
+    pub fn wall_now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Record a span. Zero-allocation; oldest event is overwritten (and
+    /// counted dropped) if the ring is full.
+    pub fn record(&self, ev: SpanEvent) {
+        if !self.enabled {
+            return;
+        }
+        self.ring.lock().expect("telemetry ring poisoned").push(ev);
+    }
+
+    /// Record one histogram sample. Zero-allocation, lock-free.
+    pub fn record_hist(&self, metric: HistMetric, value: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.hists[metric as usize].record(value);
+    }
+
+    /// Add to a static-key counter. Zero-allocation (slots preallocated).
+    pub fn add_counter(&self, key: &'static str, v: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.counters.lock().expect("telemetry counters poisoned").add(key, v);
+    }
+
+    /// Take all buffered events, emptying the ring. Events are sorted by
+    /// `(round, user, kind)` so the trace is deterministic for any worker
+    /// count (the recording order is completion order, which is not).
+    /// Off the hot path — allocation here is fine.
+    pub fn drain(&self) -> Vec<SpanEvent> {
+        let mut ring = self.ring.lock().expect("telemetry ring poisoned");
+        let cap = ring.buf.len();
+        let mut out = Vec::with_capacity(ring.len);
+        for k in 0..ring.len {
+            out.push(ring.buf[(ring.start + k) % cap]);
+        }
+        ring.start = 0;
+        ring.len = 0;
+        drop(ring);
+        out.sort_by_key(|e| (e.round, e.user, e.kind));
+        out
+    }
+
+    /// Events lost to ring overflow since the last call; resets to zero.
+    pub fn take_dropped(&self) -> u64 {
+        let mut ring = self.ring.lock().expect("telemetry ring poisoned");
+        std::mem::take(&mut ring.dropped)
+    }
+
+    /// The histogram for `metric`.
+    pub fn histogram(&self, metric: HistMetric) -> &LogHistogram {
+        &self.hists[metric as usize]
+    }
+
+    /// Snapshot of all counters (key, value), in first-use order, plus
+    /// the number of adds lost to slot exhaustion.
+    pub fn counters_snapshot(&self) -> (Vec<(&'static str, f64)>, u64) {
+        let bank = self.counters.lock().expect("telemetry counters poisoned");
+        (bank.slots.clone(), bank.overflowed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(round: u64, user: u64, kind: SpanKind) -> SpanEvent {
+        SpanEvent { kind, round, user, ..SpanEvent::default() }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let col = Collector::new(4);
+        for u in 0..7u64 {
+            col.record(ev(0, u, SpanKind::Encode));
+        }
+        let events = col.drain();
+        assert_eq!(events.len(), 4);
+        let users: Vec<u64> = events.iter().map(|e| e.user).collect();
+        assert_eq!(users, vec![3, 4, 5, 6], "oldest three must be overwritten");
+        assert_eq!(col.take_dropped(), 3);
+        assert_eq!(col.take_dropped(), 0, "dropped counter must reset");
+        assert!(col.drain().is_empty(), "drain must empty the ring");
+    }
+
+    #[test]
+    fn drain_sorts_by_round_user_kind() {
+        let col = Collector::new(16);
+        col.record(ev(1, 2, SpanKind::Fold));
+        col.record(ev(0, 5, SpanKind::Encode));
+        col.record(ev(1, 2, SpanKind::ClientTrain));
+        col.record(ev(0, SpanEvent::ROUND_SCOPED, SpanKind::RateAlloc));
+        col.record(ev(0, 5, SpanKind::ClientTrain));
+        let events = col.drain();
+        let keys: Vec<(u64, u64, SpanKind)> =
+            events.iter().map(|e| (e.round, e.user, e.kind)).collect();
+        assert_eq!(
+            keys,
+            vec![
+                (0, 5, SpanKind::ClientTrain),
+                (0, 5, SpanKind::Encode),
+                (0, SpanEvent::ROUND_SCOPED, SpanKind::RateAlloc),
+                (1, 2, SpanKind::ClientTrain),
+                (1, 2, SpanKind::Fold),
+            ]
+        );
+    }
+
+    #[test]
+    fn disabled_collector_is_a_no_op() {
+        let col = Collector::disabled();
+        assert!(!col.is_enabled());
+        col.record(ev(0, 1, SpanKind::Encode));
+        col.record_hist(HistMetric::EncodeNanos, 500);
+        col.add_counter("x", 1.0);
+        assert!(col.drain().is_empty());
+        assert_eq!(col.histogram(HistMetric::EncodeNanos).count(), 0);
+        assert_eq!(col.counters_snapshot().0.len(), 0);
+        assert_eq!(col.take_dropped(), 0, "disabled record must not count drops");
+    }
+
+    #[test]
+    fn histogram_buckets_and_stats() {
+        assert_eq!(LogHistogram::bucket_of(0), 0);
+        assert_eq!(LogHistogram::bucket_of(1), 1);
+        assert_eq!(LogHistogram::bucket_of(2), 2);
+        assert_eq!(LogHistogram::bucket_of(3), 2);
+        assert_eq!(LogHistogram::bucket_of(4), 3);
+        assert_eq!(LogHistogram::bucket_of(u64::MAX), 63);
+        assert_eq!(LogHistogram::bucket_floor(0), 0);
+        assert_eq!(LogHistogram::bucket_floor(1), 1);
+        assert_eq!(LogHistogram::bucket_floor(3), 4);
+
+        let h = LogHistogram::default();
+        for v in [0u64, 1, 3, 8, 8, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum(), 1020);
+        assert!((h.mean() - 170.0).abs() < 1e-9);
+        let b = h.buckets();
+        assert_eq!(b[0], 1); // 0
+        assert_eq!(b[1], 1); // 1
+        assert_eq!(b[2], 1); // 3
+        assert_eq!(b[4], 2); // 8, 8
+        assert_eq!(b[10], 1); // 1000 ∈ [512, 1024)
+        assert_eq!(h.percentile(0.0), 0);
+        assert_eq!(h.percentile(100.0), 512);
+        assert!(h.percentile(50.0) <= h.percentile(95.0));
+    }
+
+    #[test]
+    fn counters_accumulate_under_static_keys() {
+        let col = Collector::new(4);
+        col.add_counter("bits", 10.0);
+        col.add_counter("bits", 5.0);
+        col.add_counter("chunks", 1.0);
+        let (snap, overflowed) = col.counters_snapshot();
+        assert_eq!(overflowed, 0);
+        assert_eq!(snap, vec![("bits", 15.0), ("chunks", 1.0)]);
+    }
+
+    #[test]
+    fn collector_is_sync_and_workers_can_record() {
+        let col = Collector::new(1024);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let col = &col;
+                s.spawn(move || {
+                    for u in 0..50u64 {
+                        col.record(ev(0, t * 100 + u, SpanKind::Encode));
+                        col.record_hist(HistMetric::MessageBytes, u + 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(col.drain().len(), 200);
+        assert_eq!(col.histogram(HistMetric::MessageBytes).count(), 200);
+    }
+}

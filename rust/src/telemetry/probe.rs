@@ -1,0 +1,117 @@
+//! Thread-local encode-path work counters.
+//!
+//! The interesting per-client encode statistics — scale-search probe
+//! counts in `quantizer::uveqfed`, symbol/escape counts in
+//! `entropy::range` — arise deep inside codec internals that know nothing
+//! about telemetry (and must not: the codec API carries no collector).
+//! Instead the hot paths bump a thread-local [`EncodeProbe`] through
+//! plain `Cell` reads/writes (no heap, no atomics, no TLS destructor),
+//! and the fleet worker brackets each client encode with [`reset`] /
+//! [`take`] to attribute the counts to that client's `encode` span.
+//!
+//! The hooks increment unconditionally — a few `Cell` operations per
+//! scale probe and one per coder invocation, far below measurement noise
+//! — and all arithmetic saturates, so an untraced process that never
+//! calls [`take`] stays well-defined.
+
+use std::cell::Cell;
+
+/// Work counters accumulated by the codec internals during one encode.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EncodeProbe {
+    /// Entropy-estimate probes evaluated by the UVeQFed scale search.
+    pub scale_probes_est: u32,
+    /// Exact-encode probes evaluated by the UVeQFed scale search.
+    pub scale_probes_exact: u32,
+    /// Symbols pushed through the adaptive range coder.
+    pub symbols: u64,
+    /// Symbols that escaped the direct table into the long-tail model.
+    pub escapes: u64,
+}
+
+thread_local! {
+    static PROBE: Cell<EncodeProbe> = const {
+        Cell::new(EncodeProbe {
+            scale_probes_est: 0,
+            scale_probes_exact: 0,
+            symbols: 0,
+            escapes: 0,
+        })
+    };
+}
+
+/// Zero this thread's probe (call before an attributed encode).
+pub fn reset() {
+    PROBE.with(|p| p.set(EncodeProbe::default()));
+}
+
+/// Read and zero this thread's probe (call after the encode finishes).
+pub fn take() -> EncodeProbe {
+    PROBE.with(|p| p.replace(EncodeProbe::default()))
+}
+
+/// Count `n` scale-search entropy-estimate probes.
+pub fn add_scale_est(n: u32) {
+    PROBE.with(|p| {
+        let mut v = p.get();
+        v.scale_probes_est = v.scale_probes_est.saturating_add(n);
+        p.set(v);
+    });
+}
+
+/// Count `n` scale-search exact-encode probes.
+pub fn add_scale_exact(n: u32) {
+    PROBE.with(|p| {
+        let mut v = p.get();
+        v.scale_probes_exact = v.scale_probes_exact.saturating_add(n);
+        p.set(v);
+    });
+}
+
+/// Count one range-coder invocation: `symbols` coded, of which `escapes`
+/// left the direct table.
+pub fn add_symbols(symbols: u64, escapes: u64) {
+    PROBE.with(|p| {
+        let mut v = p.get();
+        v.symbols = v.symbols.saturating_add(symbols);
+        v.escapes = v.escapes.saturating_add(escapes);
+        p.set(v);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_accumulates_and_take_resets() {
+        reset();
+        add_scale_est(3);
+        add_scale_exact(2);
+        add_symbols(100, 7);
+        add_symbols(50, 0);
+        let p = take();
+        assert_eq!(
+            p,
+            EncodeProbe {
+                scale_probes_est: 3,
+                scale_probes_exact: 2,
+                symbols: 150,
+                escapes: 7
+            }
+        );
+        assert_eq!(take(), EncodeProbe::default(), "take must zero the probe");
+    }
+
+    #[test]
+    fn probe_is_per_thread() {
+        reset();
+        add_symbols(10, 1);
+        std::thread::spawn(|| {
+            assert_eq!(take(), EncodeProbe::default(), "fresh thread starts zeroed");
+        })
+        .join()
+        .unwrap();
+        assert_eq!(take().symbols, 10, "other threads must not see this probe");
+    }
+}

@@ -1,0 +1,341 @@
+//! Per-round summarization of drained span events, with Markdown and CSV
+//! renderers.
+//!
+//! A [`RoundSummary`] is pure arithmetic over [`SpanEvent`]s, so its
+//! integer aggregates reconcile **exactly** with the
+//! `fleet::FleetRoundReport` of the same round (asserted by
+//! `tests/integration_telemetry.rs`): `aggregated` = fold-span count,
+//! `uplink_bits` = Σ payload bits of *accepted* transmit spans (rejected
+//! messages never enter the uplink meter), `wire_bytes` = Σ frame bytes
+//! of *all* transmit spans (frames cost wire whether or not they are
+//! admitted), `rejected` = `budget_violations`.
+
+use crate::metrics::CsvTable;
+
+use super::{SpanData, SpanEvent, SpanKind};
+
+/// Aggregates of one round's spans.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RoundSummary {
+    pub round: u64,
+    /// Clients that ran local training (arrived before cut/deadline).
+    pub clients: usize,
+    /// Updates folded into the aggregate (= fold spans).
+    pub aggregated: usize,
+    /// Messages rejected by the uplink budget check.
+    pub rejected: usize,
+    /// Σ assigned budgets ⌊R_u·m⌋ over encode spans.
+    pub assigned_bits: u64,
+    /// Σ exact coded bits over encode spans.
+    pub achieved_bits: u64,
+    /// Σ payload bits over **accepted** transmits (the uplink meter).
+    pub uplink_bits: u64,
+    /// Σ serialized frame bytes over **all** transmits.
+    pub wire_bytes: u64,
+    /// Σ α over fold spans (≈1 by re-normalization).
+    pub alpha_sum: f64,
+    /// Σ chunks pushed through encode sinks.
+    pub encode_chunks: u64,
+    /// Σ chunks folded out of decode streams.
+    pub fold_chunks: u64,
+    /// Σ tensor entries folded (= aggregated · m).
+    pub entries_folded: u64,
+    /// Σ UVeQFed scale-search probes (estimate + exact).
+    pub scale_probes: u64,
+    /// Σ range-coder symbols coded.
+    pub range_symbols: u64,
+    /// Σ range-coder escape symbols.
+    pub range_escapes: u64,
+    /// Σ wall seconds per stage.
+    pub train_secs: f64,
+    pub encode_secs: f64,
+    pub decode_secs: f64,
+    pub fold_secs: f64,
+    pub rate_alloc_secs: f64,
+    /// Virtual-clock time at round start (simulated seconds).
+    pub virt_start_s: f64,
+}
+
+impl RoundSummary {
+    fn fold_event(&mut self, ev: &SpanEvent) {
+        match ev.data {
+            SpanData::ClientTrain { .. } => {
+                self.clients += 1;
+                self.train_secs += ev.wall_dur_s;
+            }
+            SpanData::Encode {
+                assigned_bits,
+                achieved_bits,
+                chunks,
+                scale_probes_est,
+                scale_probes_exact,
+                symbols,
+                escapes,
+            } => {
+                self.assigned_bits += assigned_bits;
+                self.achieved_bits += achieved_bits;
+                self.encode_chunks += chunks as u64;
+                self.encode_secs += ev.wall_dur_s;
+                self.scale_probes += scale_probes_est as u64 + scale_probes_exact as u64;
+                self.range_symbols += symbols;
+                self.range_escapes += escapes;
+            }
+            SpanData::Transmit { wire_bytes, payload_bits, accepted } => {
+                self.wire_bytes += wire_bytes;
+                if accepted {
+                    self.uplink_bits += payload_bits;
+                } else {
+                    self.rejected += 1;
+                }
+            }
+            SpanData::Decode { .. } => {
+                self.decode_secs += ev.wall_dur_s;
+            }
+            SpanData::Fold { chunks, entries, alpha } => {
+                self.aggregated += 1;
+                self.fold_chunks += chunks as u64;
+                self.entries_folded += entries;
+                self.alpha_sum += alpha;
+                self.fold_secs += ev.wall_dur_s;
+            }
+            SpanData::RateAlloc { .. } => {
+                self.rate_alloc_secs += ev.wall_dur_s;
+            }
+        }
+    }
+}
+
+/// Group events by round (ascending) and reduce each group to a
+/// [`RoundSummary`]. Input order does not matter; the per-round float
+/// sums run in the deterministic `(round, user, kind)` order
+/// [`super::Collector::drain`] already established, re-sorting if needed.
+pub fn summarize(events: &[SpanEvent]) -> Vec<RoundSummary> {
+    let mut sorted: Vec<&SpanEvent> = events.iter().collect();
+    sorted.sort_by_key(|e| (e.round, e.user, e.kind));
+    let mut out: Vec<RoundSummary> = Vec::new();
+    for ev in sorted {
+        let need_new = out.last().map(|s| s.round != ev.round).unwrap_or(true);
+        if need_new {
+            out.push(RoundSummary {
+                round: ev.round,
+                virt_start_s: ev.virt_s,
+                ..RoundSummary::default()
+            });
+        }
+        let cur = out.last_mut().expect("just pushed");
+        cur.virt_start_s = cur.virt_start_s.min(ev.virt_s);
+        cur.fold_event(ev);
+    }
+    out
+}
+
+/// One summary column: header name + extractor (the single source of
+/// truth for both the CSV and the Markdown table).
+type SummaryColumn = (&'static str, fn(&RoundSummary) -> f64);
+
+const SUMMARY_COLUMNS: &[SummaryColumn] = &[
+    ("round", |s| s.round as f64),
+    ("clients", |s| s.clients as f64),
+    ("aggregated", |s| s.aggregated as f64),
+    ("rejected", |s| s.rejected as f64),
+    ("assigned_bits", |s| s.assigned_bits as f64),
+    ("achieved_bits", |s| s.achieved_bits as f64),
+    ("uplink_bits", |s| s.uplink_bits as f64),
+    ("wire_bytes", |s| s.wire_bytes as f64),
+    ("alpha_sum", |s| s.alpha_sum),
+    ("encode_chunks", |s| s.encode_chunks as f64),
+    ("fold_chunks", |s| s.fold_chunks as f64),
+    ("scale_probes", |s| s.scale_probes as f64),
+    ("range_symbols", |s| s.range_symbols as f64),
+    ("range_escapes", |s| s.range_escapes as f64),
+    ("train_secs", |s| s.train_secs),
+    ("encode_secs", |s| s.encode_secs),
+    ("decode_secs", |s| s.decode_secs),
+    ("fold_secs", |s| s.fold_secs),
+    ("rate_alloc_secs", |s| s.rate_alloc_secs),
+    ("virt_start_s", |s| s.virt_start_s),
+];
+
+/// Whole-run report: one [`RoundSummary`] per round, rendered as a
+/// Markdown or CSV table.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryReport {
+    pub rounds: Vec<RoundSummary>,
+}
+
+impl TelemetryReport {
+    /// Build a report directly from drained events (possibly spanning
+    /// multiple rounds).
+    pub fn from_events(events: &[SpanEvent]) -> Self {
+        Self { rounds: summarize(events) }
+    }
+
+    /// Append one round's summary.
+    pub fn push(&mut self, summary: RoundSummary) {
+        self.rounds.push(summary);
+    }
+
+    /// Per-round table as `metrics::CsvTable` (f64 cells, shared header).
+    pub fn to_csv_table(&self) -> CsvTable {
+        let names: Vec<&str> = SUMMARY_COLUMNS.iter().map(|&(n, _)| n).collect();
+        let mut t = CsvTable::new(&names);
+        for s in &self.rounds {
+            t.push(SUMMARY_COLUMNS.iter().map(|&(_, f)| f(s)).collect());
+        }
+        t
+    }
+
+    /// GitHub-flavored Markdown table, one row per round.
+    pub fn to_markdown(&self) -> String {
+        let mut md = String::from("# uveqfed telemetry report\n\n");
+        md.push_str(&format!("{} round(s) traced.\n\n", self.rounds.len()));
+        md.push('|');
+        for (name, _) in SUMMARY_COLUMNS {
+            md.push_str(&format!(" {name} |"));
+        }
+        md.push_str("\n|");
+        for _ in SUMMARY_COLUMNS {
+            md.push_str(" ---: |");
+        }
+        md.push('\n');
+        for s in &self.rounds {
+            md.push('|');
+            for (name, f) in SUMMARY_COLUMNS {
+                let v = f(s);
+                // Integer-valued columns print as integers, timings with
+                // enough digits to be useful.
+                if name.ends_with("_secs") || name.ends_with("_s") || *name == "alpha_sum" {
+                    md.push_str(&format!(" {v:.6} |"));
+                } else {
+                    md.push_str(&format!(" {v:.0} |"));
+                }
+            }
+            md.push('\n');
+        }
+        md
+    }
+}
+
+/// Names of the event kinds a complete per-client lifecycle emits when
+/// the update aggregates (useful for schema validators and tests).
+pub const CLIENT_LIFECYCLE: [SpanKind; 5] = [
+    SpanKind::ClientTrain,
+    SpanKind::Encode,
+    SpanKind::Transmit,
+    SpanKind::Decode,
+    SpanKind::Fold,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn client_events(round: u64, user: u64, accepted: bool) -> Vec<SpanEvent> {
+        let base = SpanEvent { round, user, ..SpanEvent::default() };
+        let mut evs = vec![
+            SpanEvent {
+                kind: SpanKind::ClientTrain,
+                wall_dur_s: 0.01,
+                data: SpanData::ClientTrain { local_steps: 1, m: 100 },
+                ..base
+            },
+            SpanEvent {
+                kind: SpanKind::Encode,
+                wall_dur_s: 0.002,
+                data: SpanData::Encode {
+                    assigned_bits: 200,
+                    achieved_bits: 180,
+                    chunks: 2,
+                    scale_probes_est: 5,
+                    scale_probes_exact: 2,
+                    symbols: 100,
+                    escapes: 3,
+                },
+                ..base
+            },
+            SpanEvent {
+                kind: SpanKind::Transmit,
+                data: SpanData::Transmit { wire_bytes: 40, payload_bits: 180, accepted },
+                ..base
+            },
+        ];
+        if accepted {
+            evs.push(SpanEvent {
+                kind: SpanKind::Decode,
+                wall_dur_s: 0.001,
+                data: SpanData::Decode { chunks: 2, entries: 100 },
+                ..base
+            });
+            evs.push(SpanEvent {
+                kind: SpanKind::Fold,
+                wall_dur_s: 0.0005,
+                data: SpanData::Fold { chunks: 2, entries: 100, alpha: 0.5 },
+                ..base
+            });
+        }
+        evs
+    }
+
+    #[test]
+    fn summarize_reconciles_per_round() {
+        let mut events = Vec::new();
+        events.extend(client_events(0, 3, true));
+        events.extend(client_events(0, 7, true));
+        events.extend(client_events(0, 9, false));
+        events.push(SpanEvent {
+            kind: SpanKind::RateAlloc,
+            round: 0,
+            user: SpanEvent::ROUND_SCOPED,
+            wall_dur_s: 0.0001,
+            data: SpanData::RateAlloc { clients: 3, capacity_mass: 6.0, assigned_mass: 6.0 },
+            ..SpanEvent::default()
+        });
+        events.extend(client_events(1, 3, true));
+
+        let rounds = summarize(&events);
+        assert_eq!(rounds.len(), 2);
+        let r0 = &rounds[0];
+        assert_eq!(r0.round, 0);
+        assert_eq!(r0.clients, 3);
+        assert_eq!(r0.aggregated, 2);
+        assert_eq!(r0.rejected, 1);
+        assert_eq!(r0.assigned_bits, 600);
+        assert_eq!(r0.achieved_bits, 540);
+        assert_eq!(r0.uplink_bits, 360, "rejected payloads must not be metered");
+        assert_eq!(r0.wire_bytes, 120, "every frame costs wire bytes");
+        assert_eq!(r0.encode_chunks, 6);
+        assert_eq!(r0.fold_chunks, 4);
+        assert_eq!(r0.entries_folded, 200);
+        assert_eq!(r0.scale_probes, 21);
+        assert_eq!(r0.range_symbols, 300);
+        assert_eq!(r0.range_escapes, 9);
+        assert!((r0.alpha_sum - 1.0).abs() < 1e-12);
+        assert!(r0.rate_alloc_secs > 0.0);
+        assert_eq!(rounds[1].round, 1);
+        assert_eq!(rounds[1].clients, 1);
+    }
+
+    #[test]
+    fn report_renders_csv_and_markdown() {
+        let events = client_events(0, 1, true);
+        let rep = TelemetryReport::from_events(&events);
+        let table = rep.to_csv_table();
+        assert_eq!(table.header.len(), SUMMARY_COLUMNS.len());
+        assert_eq!(table.rows.len(), 1);
+        let md = rep.to_markdown();
+        assert!(md.contains("| round |"), "{md}");
+        assert!(md.lines().count() >= 4, "{md}");
+        // Column lookup by name stays stable for downstream consumers.
+        let col = table.header.iter().position(|h| h == "uplink_bits").unwrap();
+        assert_eq!(table.rows[0][col], 180.0);
+    }
+
+    #[test]
+    fn summarize_is_input_order_independent() {
+        let mut a = client_events(0, 1, true);
+        a.extend(client_events(0, 2, true));
+        let mut b = a.clone();
+        b.reverse();
+        assert_eq!(summarize(&a), summarize(&b));
+    }
+}

@@ -15,8 +15,11 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
+use uveqfed::fleet::StreamingAggregator;
+use uveqfed::metrics::Counters;
 use uveqfed::prng::{Normal, Rng, Xoshiro256pp};
 use uveqfed::quantizer::{self, CodecContext};
+use uveqfed::telemetry::{Collector, HistMetric, SpanData, SpanEvent, SpanKind};
 
 struct CountingAlloc;
 
@@ -125,4 +128,81 @@ fn steady_state_sessions_do_not_allocate() {
     });
     assert_eq!(n, 0, "qsgd range fallback: next_chunk allocated {n} time(s)");
     assert_eq!(total, m);
+
+    // ── Telemetry collector: spans, histogram samples and static-key
+    //    counters must all record without touching the heap — including
+    //    the ring-overwrite path (more records than capacity) and the
+    //    disabled no-op path.
+    for collector in [Collector::new(64), Collector::disabled()] {
+        collector.add_counter("warm", 1.0); // claim the slot up front
+        let span = SpanEvent {
+            kind: SpanKind::Encode,
+            round: 1,
+            user: 2,
+            wall_start_s: 0.0,
+            wall_dur_s: 0.001,
+            virt_s: 0.0,
+            data: SpanData::Encode {
+                assigned_bits: 100,
+                achieved_bits: 90,
+                chunks: 4,
+                scale_probes_est: 3,
+                scale_probes_exact: 1,
+                symbols: 50,
+                escapes: 2,
+            },
+        };
+        let n = counted(|| {
+            for i in 0..200u64 {
+                collector.record(span);
+                collector.record_hist(HistMetric::EncodeNanos, i * 17);
+                collector.add_counter("warm", 1.0);
+            }
+        });
+        assert_eq!(
+            n, 0,
+            "collector (enabled={}) allocated {n} time(s) on the record path",
+            collector.is_enabled()
+        );
+    }
+
+    // ── metrics::Counters: adding to a warmed key must not allocate (the
+    //    old entry-API implementation cloned the key on every call).
+    let mut counters = Counters::new();
+    counters.add("uplink_bits", 1.0);
+    let n = counted(|| {
+        for _ in 0..100 {
+            counters.add("uplink_bits", 2.0);
+        }
+    });
+    assert_eq!(n, 0, "Counters::add on a warmed key allocated {n} time(s)");
+    assert_eq!(counters.get("uplink_bits"), 201.0);
+
+    // ── The fleet's instrumented fold loop: decode-stream chunks folding
+    //    into the fixed-point aggregator while a live collector records a
+    //    per-chunk histogram sample. This is exactly the traced server
+    //    hot path of `FleetDriver::run_round`.
+    let collector = Collector::new(64);
+    let codec = quantizer::make("uveqfed-l2").unwrap();
+    let ctx = CodecContext::new(5, 9, 11, 2.0);
+    let enc = codec.encode(&h, &ctx);
+    let mut agg = StreamingAggregator::new(m);
+    let mut stream = codec.decoder(&enc, m, &ctx);
+    let mut offset = {
+        let first = stream.next_chunk().expect("empty decode stream");
+        agg.fold_chunk(0, 0.5, first);
+        collector.record_hist(HistMetric::FoldChunkNanos, 100);
+        first.len()
+    };
+    let n = counted(|| {
+        while let Some(chunk) = stream.next_chunk() {
+            agg.fold_chunk(offset, 0.5, chunk);
+            collector.record_hist(HistMetric::FoldChunkNanos, 100);
+            offset += chunk.len();
+        }
+        agg.commit(0.5);
+    });
+    assert_eq!(n, 0, "instrumented fold loop allocated {n} time(s)");
+    assert_eq!(offset, m);
+    assert!(collector.histogram(HistMetric::FoldChunkNanos).count() > 1);
 }

@@ -1,0 +1,282 @@
+//! Integration: the telemetry subsystem against real fleet rounds.
+//!
+//! Covers the observability acceptance surface: a traced round emits the
+//! full client lifecycle (`client_train` → `encode` → `transmit` →
+//! `decode` → `fold`) for every aggregated client plus one round-scoped
+//! `rate_alloc` span; the summarized report reconciles **exactly** with
+//! the `FleetRoundReport` integer aggregates; the JSONL sink round-trips
+//! through the strict parser; and tracing is observation-only — final
+//! weights are bit-identical traced vs untraced at any worker count.
+
+use std::collections::BTreeMap;
+
+use uveqfed::coordinator::rate_control::TheoryGuided;
+use uveqfed::data::{partition, Dataset, PartitionScheme, SynthMnist};
+use uveqfed::fl::{NativeTrainer, Trainer};
+use uveqfed::fleet::{
+    Channel, ChannelModel, FleetDriver, RatePlan, RoundSpec, Scenario, ShardPool,
+    VirtualClock,
+};
+use uveqfed::models::LogReg;
+use uveqfed::quantizer::{self, UpdateCodec};
+use uveqfed::telemetry::{
+    summarize, Collector, HistMetric, SpanEvent, SpanKind, TelemetryReport, TraceWriter,
+    CLIENT_LIFECYCLE,
+};
+use uveqfed::util::json::Json;
+
+fn setup(k: usize, per: usize, seed: u64) -> (Vec<Dataset>, NativeTrainer<LogReg>) {
+    let gen = SynthMnist::new(seed);
+    let ds = gen.dataset(k * per);
+    let shards = partition(&ds, k, per, PartitionScheme::Iid, seed);
+    let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
+    (shards, trainer)
+}
+
+fn spec<'a>(
+    round: u64,
+    trainer: &'a dyn Trainer,
+    codec: &'a dyn UpdateCodec,
+) -> RoundSpec<'a> {
+    RoundSpec::new(round, 1, 0.5, 0, trainer, codec)
+}
+
+/// Group per-client span kinds (round-scoped spans excluded).
+fn kinds_by_user(events: &[SpanEvent]) -> BTreeMap<u64, Vec<SpanKind>> {
+    let mut map: BTreeMap<u64, Vec<SpanKind>> = BTreeMap::new();
+    for ev in events {
+        if ev.user != SpanEvent::ROUND_SCOPED {
+            map.entry(ev.user).or_default().push(ev.kind);
+        }
+    }
+    map
+}
+
+#[test]
+fn traced_rounds_reconcile_exactly_with_fleet_reports() {
+    let (shards, trainer) = setup(8, 25, 91);
+    let pool = ShardPool::new(&shards);
+    let codec = quantizer::make("uveqfed-l2").unwrap();
+    let plan = RatePlan::new(
+        Channel::new(ChannelModel::by_name("tiers", 2.0).unwrap(), 5),
+        Box::new(TheoryGuided),
+    );
+    let driver = FleetDriver::new(13, 2.0, 3, Scenario::full()).with_rate_plan(plan);
+    let collector = Collector::for_cohort(8);
+    let mut clock = VirtualClock::new();
+    let mut w = trainer.init_params(4);
+    let m = w.len();
+    let mut report = TelemetryReport::default();
+
+    for round in 0..2u64 {
+        let s = spec(round, &trainer, codec.as_ref()).with_telemetry(&collector);
+        let rep = driver.run_round(&s, &mut w, &pool, &mut clock);
+        assert_eq!(rep.budget_violations, 0, "codec must fit every assigned budget");
+
+        let events = collector.drain();
+        assert_eq!(collector.take_dropped(), 0, "for_cohort capacity must not overflow");
+        let rounds = summarize(&events);
+        assert_eq!(rounds.len(), 1, "one drain per round must summarize to one row");
+        let sum = rounds[0];
+
+        // Exact integer reconciliation with the driver's own report.
+        assert_eq!(sum.round, round);
+        assert_eq!(sum.clients, rep.aggregated + rep.budget_violations);
+        assert_eq!(sum.aggregated, rep.aggregated);
+        assert_eq!(sum.rejected, rep.budget_violations);
+        assert_eq!(sum.uplink_bits, rep.uplink_bits as u64);
+        assert_eq!(sum.wire_bytes, rep.wire_bytes as u64);
+        assert_eq!(sum.entries_folded, (rep.aggregated * m) as u64);
+        assert!((sum.alpha_sum - rep.alpha_sum).abs() < 1e-12);
+        let assigned: u64 = rep
+            .clients
+            .iter()
+            .map(|c| (c.assigned_rate * m as f64).floor() as u64)
+            .sum();
+        let achieved: u64 = rep.clients.iter().map(|c| c.achieved_bits as u64).sum();
+        assert_eq!(sum.assigned_bits, assigned);
+        assert_eq!(sum.achieved_bits, achieved);
+        assert!(sum.achieved_bits <= sum.assigned_bits, "rate budgets must bind encodes");
+
+        // Exactly one round-scoped rate_alloc span, carrying the same
+        // allocation masses as the report's channel stats.
+        let ra: Vec<&SpanEvent> =
+            events.iter().filter(|e| e.kind == SpanKind::RateAlloc).collect();
+        assert_eq!(ra.len(), 1);
+        assert_eq!(ra[0].user, SpanEvent::ROUND_SCOPED);
+        if let uveqfed::telemetry::SpanData::RateAlloc {
+            clients,
+            capacity_mass,
+            assigned_mass,
+        } = ra[0].data
+        {
+            assert_eq!(clients as usize, rep.aggregated + rep.budget_violations);
+            assert!((capacity_mass - rep.channel.capacity_mass).abs() < 1e-9);
+            assert!((assigned_mass - rep.channel.assigned_mass).abs() < 1e-9);
+        } else {
+            panic!("rate_alloc span carries wrong payload: {:?}", ra[0].data);
+        }
+
+        // Every aggregated client emitted the complete lifecycle, in the
+        // `(round, user, kind)` order `drain()` promises.
+        let per_user = kinds_by_user(&events);
+        assert_eq!(per_user.len(), rep.aggregated);
+        for (user, kinds) in &per_user {
+            assert_eq!(kinds, &CLIENT_LIFECYCLE, "client {user}: incomplete lifecycle");
+        }
+        report.push(sum);
+    }
+
+    // Latency histograms saw one encode + one message per arrival and at
+    // least one fold chunk per aggregated update.
+    assert_eq!(collector.histogram(HistMetric::EncodeNanos).count(), 16);
+    assert_eq!(collector.histogram(HistMetric::MessageBytes).count(), 16);
+    assert!(collector.histogram(HistMetric::FoldChunkNanos).count() >= 16);
+    assert!(collector.histogram(HistMetric::MessageBytes).mean() > 0.0);
+
+    let md = report.to_markdown();
+    assert!(md.contains("2 round(s) traced."), "{md}");
+    assert_eq!(report.to_csv_table().rows.len(), 2);
+}
+
+#[test]
+fn straggler_trace_keeps_clock_domains_consistent() {
+    let (shards, trainer) = setup(16, 20, 92);
+    let pool = ShardPool::new(&shards);
+    let codec = quantizer::make("qsgd").unwrap();
+    let driver = FleetDriver::new(17, 2.0, 4, Scenario::stragglers(6, 3.0));
+    let collector = Collector::with_default_capacity();
+    let mut clock = VirtualClock::new();
+    let mut w = trainer.init_params(5);
+
+    let mut virt_floor = 0.0f64;
+    for round in 0..4u64 {
+        let s = spec(round, &trainer, codec.as_ref()).with_telemetry(&collector);
+        let rep = driver.run_round(&s, &mut w, &pool, &mut clock);
+        let events = collector.drain();
+        let per_user = kinds_by_user(&events);
+        assert_eq!(per_user.len(), rep.aggregated + rep.budget_violations);
+        for ev in &events {
+            assert!(ev.wall_dur_s >= 0.0);
+            assert!(ev.wall_start_s >= 0.0, "wall clock runs from the collector epoch");
+            // Virtual time never runs backwards: client-side spans sit at
+            // the round's virtual start, server-side spans at the
+            // client's (later) arrival instant.
+            assert!(
+                ev.virt_s >= virt_floor - 1e-12,
+                "round {round} {:?}: virt {} < round start {virt_floor}",
+                ev.kind,
+                ev.virt_s
+            );
+        }
+        // Server-side spans land when the message arrives, not before.
+        for (user, kinds) in &per_user {
+            if kinds.contains(&SpanKind::Fold) {
+                let virt_of = |k: SpanKind| {
+                    events
+                        .iter()
+                        .find(|e| e.user == *user && e.kind == k)
+                        .map(|e| e.virt_s)
+                        .unwrap()
+                };
+                assert!(virt_of(SpanKind::Transmit) >= virt_of(SpanKind::ClientTrain));
+                assert_eq!(virt_of(SpanKind::Transmit), virt_of(SpanKind::Fold));
+            }
+        }
+        virt_floor = clock.now();
+    }
+    assert!(virt_floor > 0.0, "straggler rounds must advance virtual time");
+}
+
+#[test]
+fn jsonl_pipeline_round_trips_through_the_parser() {
+    let (shards, trainer) = setup(5, 20, 93);
+    let pool = ShardPool::new(&shards);
+    let codec = quantizer::make("uveqfed-l2").unwrap();
+    let driver = FleetDriver::new(19, 2.0, 2, Scenario::full());
+    let collector = Collector::for_cohort(5);
+    let mut clock = VirtualClock::new();
+    let mut w = trainer.init_params(2);
+
+    let path = std::env::temp_dir()
+        .join(format!("uveqfed_trace_it_{}.jsonl", std::process::id()));
+    let mut writer = TraceWriter::create(&path).unwrap();
+    let mut span_lines = 0usize;
+    for round in 0..2u64 {
+        let s = spec(round, &trainer, codec.as_ref()).with_telemetry(&collector);
+        driver.run_round(&s, &mut w, &pool, &mut clock);
+        let events = collector.drain();
+        writer.write_events(&events).unwrap();
+        for summary in summarize(&events) {
+            writer.write_round(&summary, collector.take_dropped()).unwrap();
+        }
+        span_lines += events.len();
+    }
+    writer.flush().unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    // 5 lifecycle spans per client + 1 rate_alloc per round, then one
+    // round line per round, after the meta line.
+    assert_eq!(span_lines, 2 * (5 * 5 + 1));
+    assert_eq!(lines.len(), 1 + span_lines + 2);
+    let meta = Json::parse(lines[0]).unwrap();
+    assert_eq!(meta.get("type").and_then(Json::as_str), Some("meta"));
+    assert_eq!(meta.get("schema").and_then(Json::as_num), Some(1.0));
+
+    let mut kinds_seen: BTreeMap<String, usize> = BTreeMap::new();
+    let mut round_lines = 0usize;
+    for line in &lines[1..] {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("bad JSONL line: {e}\n{line}"));
+        match j.get("type").and_then(Json::as_str) {
+            Some("span") => {
+                let kind = j.get("kind").and_then(Json::as_str).unwrap().to_string();
+                *kinds_seen.entry(kind).or_insert(0) += 1;
+                assert!(j.get("data").is_some());
+                assert!(j.get("wall_dur_s").and_then(Json::as_num).is_some());
+                assert!(j.get("virt_s").and_then(Json::as_num).is_some());
+            }
+            Some("round") => {
+                round_lines += 1;
+                assert_eq!(j.get("aggregated").and_then(Json::as_num), Some(5.0));
+                assert_eq!(j.get("rejected").and_then(Json::as_num), Some(0.0));
+                assert_eq!(j.get("dropped_events").and_then(Json::as_num), Some(0.0));
+            }
+            other => panic!("unexpected line type {other:?}: {line}"),
+        }
+    }
+    assert_eq!(round_lines, 2);
+    for kind in &CLIENT_LIFECYCLE {
+        assert_eq!(kinds_seen.get(kind.name()), Some(&10), "{}", kind.name());
+    }
+    assert_eq!(kinds_seen.get("rate_alloc"), Some(&2));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn tracing_is_observation_only_across_worker_counts() {
+    let (shards, trainer) = setup(12, 20, 94);
+    let pool = ShardPool::new(&shards);
+    let codec = quantizer::make("terngrad").unwrap();
+    let scenario = Scenario::flaky(6, 4.0);
+    let run = |workers: usize, traced: bool| {
+        let collector =
+            if traced { Collector::with_default_capacity() } else { Collector::disabled() };
+        let driver = FleetDriver::new(23, 2.0, workers, scenario.clone());
+        let mut clock = VirtualClock::new();
+        let mut w = trainer.init_params(6);
+        for round in 0..3u64 {
+            let s = spec(round, &trainer, codec.as_ref()).with_telemetry(&collector);
+            driver.run_round(&s, &mut w, &pool, &mut clock);
+        }
+        (w, collector.drain().len())
+    };
+    let (baseline, none) = run(1, false);
+    assert_eq!(none, 0, "disabled collector must record nothing");
+    let (w_serial, spans_serial) = run(1, true);
+    let (w_par, spans_par) = run(8, true);
+    assert_eq!(baseline, w_serial, "tracing must not perturb serial rounds");
+    assert_eq!(baseline, w_par, "tracing must not perturb parallel rounds");
+    assert_eq!(spans_serial, spans_par, "span count must be worker-count independent");
+    assert!(spans_serial > 0);
+}

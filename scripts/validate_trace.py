@@ -1,0 +1,186 @@
+#!/usr/bin/env python3
+"""Schema + reconciliation validator for uveqfed JSONL traces (schema 1).
+
+Usage: validate_trace.py TRACE.jsonl
+
+Checks, exiting non-zero on the first violation:
+
+* line 1 is the meta line (``type: meta``, ``schema: 1``,
+  ``source: uveqfed-trace``); every later line is a ``span`` or ``round``
+  object that parses as JSON;
+* every span has a known ``kind``, integer ``round``, ``user`` (integer,
+  or null only for ``rate_alloc``), numeric ``wall_start_s`` /
+  ``wall_dur_s`` / ``virt_s`` and the per-kind ``data`` fields;
+* per (round, user): a ``fold`` span implies the full lifecycle
+  (``client_train``, ``encode``, ``transmit``, ``decode``) is present,
+  and every encode satisfies ``achieved_bits <= assigned_bits``;
+* per round line: the aggregates reconcile exactly with the span lines of
+  that round (clients / aggregated / rejected counts; assigned, achieved,
+  uplink and wire sums — rejected transmits cost wire bytes but are never
+  metered as uplink bits; alpha_sum within 1e-9 of the fold-span sum).
+"""
+
+import json
+import sys
+
+SCHEMA = 1
+SPAN_FIELDS = ("kind", "round", "user", "wall_start_s", "wall_dur_s", "virt_s", "data")
+DATA_FIELDS = {
+    "client_train": ("local_steps", "m"),
+    "encode": (
+        "assigned_bits",
+        "achieved_bits",
+        "chunks",
+        "scale_probes_est",
+        "scale_probes_exact",
+        "symbols",
+        "escapes",
+    ),
+    "transmit": ("wire_bytes", "payload_bits", "accepted"),
+    "decode": ("chunks", "entries"),
+    "fold": ("chunks", "entries", "alpha"),
+    "rate_alloc": ("clients", "capacity_mass", "assigned_mass"),
+}
+LIFECYCLE = ("client_train", "encode", "transmit", "decode", "fold")
+
+
+def fail(lineno, msg):
+    print(f"validate_trace: line {lineno}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def require(cond, lineno, msg):
+    if not cond:
+        fail(lineno, msg)
+
+
+def blank_round_tally():
+    return {
+        "clients": 0,
+        "aggregated": 0,
+        "rejected": 0,
+        "assigned_bits": 0,
+        "achieved_bits": 0,
+        "uplink_bits": 0,
+        "wire_bytes": 0,
+        "alpha_sum": 0.0,
+        "kinds_by_user": {},
+    }
+
+
+def check_span(obj, lineno, tally):
+    for field in SPAN_FIELDS:
+        require(field in obj, lineno, f"span missing field '{field}'")
+    kind = obj["kind"]
+    require(kind in DATA_FIELDS, lineno, f"unknown span kind '{kind}'")
+    user = obj["user"]
+    if user is None:
+        require(kind == "rate_alloc", lineno, f"null user on non-round-scoped '{kind}' span")
+    else:
+        require(user == int(user) >= 0, lineno, f"bad user {user!r}")
+    for field in ("wall_start_s", "wall_dur_s", "virt_s"):
+        v = obj[field]
+        require(isinstance(v, (int, float)) and v >= 0, lineno, f"bad {field}: {v!r}")
+    data = obj["data"]
+    for field in DATA_FIELDS[kind]:
+        require(field in data, lineno, f"'{kind}' data missing '{field}'")
+
+    r = tally.setdefault(obj["round"], blank_round_tally())
+    if user is not None:
+        r["kinds_by_user"].setdefault(user, set()).add(kind)
+    if kind == "client_train":
+        r["clients"] += 1
+    elif kind == "encode":
+        require(
+            data["achieved_bits"] <= data["assigned_bits"],
+            lineno,
+            f"user {user}: achieved {data['achieved_bits']} > assigned {data['assigned_bits']}",
+        )
+        r["assigned_bits"] += data["assigned_bits"]
+        r["achieved_bits"] += data["achieved_bits"]
+    elif kind == "transmit":
+        r["wire_bytes"] += data["wire_bytes"]
+        if data["accepted"]:
+            r["uplink_bits"] += data["payload_bits"]
+        else:
+            r["rejected"] += 1
+    elif kind == "fold":
+        r["aggregated"] += 1
+        r["alpha_sum"] += data["alpha"]
+
+
+def check_round_line(obj, lineno, tally):
+    rnd = obj["round"]
+    require(rnd in tally, lineno, f"round line {rnd} has no preceding spans")
+    r = tally[rnd]
+    for field in (
+        "clients",
+        "aggregated",
+        "rejected",
+        "assigned_bits",
+        "achieved_bits",
+        "uplink_bits",
+        "wire_bytes",
+    ):
+        require(field in obj, lineno, f"round line missing '{field}'")
+        require(
+            obj[field] == r[field],
+            lineno,
+            f"round {rnd}: {field} = {obj[field]} but spans sum to {r[field]}",
+        )
+    require("dropped_events" in obj, lineno, "round line missing 'dropped_events'")
+    require(
+        abs(obj["alpha_sum"] - r["alpha_sum"]) < 1e-9,
+        lineno,
+        f"round {rnd}: alpha_sum {obj['alpha_sum']} != fold-span sum {r['alpha_sum']}",
+    )
+    for user, kinds in sorted(r["kinds_by_user"].items()):
+        if "fold" in kinds:
+            missing = [k for k in LIFECYCLE if k not in kinds]
+            require(
+                not missing,
+                lineno,
+                f"round {rnd} user {user}: folded but missing spans {missing}",
+            )
+
+
+def main(path):
+    tally = {}
+    spans = rounds = 0
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, start=1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                fail(lineno, f"not valid JSON: {e}")
+            if lineno == 1:
+                require(obj.get("type") == "meta", 1, "first line must be the meta line")
+                require(obj.get("schema") == SCHEMA, 1, f"schema {obj.get('schema')} != {SCHEMA}")
+                require(obj.get("source") == "uveqfed-trace", 1, "bad meta source")
+                continue
+            kind = obj.get("type")
+            if kind == "span":
+                spans += 1
+                check_span(obj, lineno, tally)
+            elif kind == "round":
+                rounds += 1
+                check_round_line(obj, lineno, tally)
+            else:
+                fail(lineno, f"unknown line type {kind!r}")
+    if spans == 0 or rounds == 0:
+        print(f"validate_trace: {path}: empty trace ({spans} spans, {rounds} rounds)",
+              file=sys.stderr)
+        sys.exit(1)
+    folded = sum(r["aggregated"] for r in tally.values())
+    print(f"validate_trace: OK — {spans} spans, {rounds} round(s), {folded} folds, "
+          f"{len(tally)} round group(s)")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    main(sys.argv[1])
