@@ -7,7 +7,9 @@
 
 use uveqfed::data::{partition, PartitionScheme, SynthMnist};
 use uveqfed::fl::{NativeTrainer, Trainer};
-use uveqfed::fleet::{FleetDriver, RoundRobinPool, RoundSpec, Scenario, VirtualClock};
+use uveqfed::fleet::{
+    ClientRecords, FleetDriver, RoundRobinPool, RoundSpec, Scenario, VirtualClock,
+};
 use uveqfed::models::LogReg;
 use uveqfed::quantizer;
 
@@ -53,6 +55,7 @@ fn main() {
             codec: codec.as_ref(),
             rate_override: None,
             telemetry: None,
+            client_records: ClientRecords::Full,
         };
         let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
         wire_total += rep.wire_bytes;
@@ -97,6 +100,7 @@ fn main() {
             codec: codec.as_ref(),
             rate_override: None,
             telemetry: None,
+            client_records: ClientRecords::Full,
         };
         ref_driver.run_round(&spec, &mut wr, &ref_pool, &mut ref_clock);
     }

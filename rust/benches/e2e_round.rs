@@ -7,6 +7,7 @@ use uveqfed::bench::{run, BenchConfig};
 use uveqfed::coordinator::{RoundDriver, RoundSpec};
 use uveqfed::data::{partition, Dataset, PartitionScheme, SynthMnist};
 use uveqfed::fl::{NativeTrainer, Trainer};
+use uveqfed::fleet::ClientRecords;
 use uveqfed::models::{EvalReport, MlpMnist};
 use uveqfed::quantizer;
 
@@ -71,6 +72,7 @@ fn main() {
                 codec: codec.as_ref(),
                 rate_override: None,
                 telemetry: None,
+                client_records: ClientRecords::Full,
             };
             driver.run_round(&spec, &mut w, &shards, &alphas);
             round += 1;
@@ -97,6 +99,7 @@ fn main() {
             codec: codec.as_ref(),
             rate_override: None,
             telemetry: None,
+            client_records: ClientRecords::Full,
         };
         driver.run_round(&spec, &mut w, &shards, &alphas);
         round += 1;

@@ -17,8 +17,8 @@ use uveqfed::coordinator::rate_control::{controller_by_name, TheoryGuided};
 use uveqfed::data::Dataset;
 use uveqfed::fl::Trainer;
 use uveqfed::fleet::{
-    Channel, ChannelModel, FleetDriver, RatePlan, RoundRobinPool, RoundSpec, Scenario,
-    StreamingAggregator, VirtualClock,
+    Channel, ChannelModel, ClientRecords, FleetDriver, RatePlan, RoundRobinPool, RoundSpec,
+    Scenario, StreamingAggregator, VirtualClock,
 };
 use uveqfed::models::EvalReport;
 use uveqfed::prng::{Normal, Xoshiro256pp};
@@ -101,6 +101,7 @@ fn main() {
                 codec: codec.as_ref(),
                 rate_override: None,
                 telemetry: None,
+                client_records: ClientRecords::Full,
             };
             let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
             aggregated = rep.aggregated;
@@ -137,6 +138,7 @@ fn main() {
                 codec: codec.as_ref(),
                 rate_override: None,
                 telemetry: None,
+                client_records: ClientRecords::Full,
             };
             driver.run_round(&spec, &mut w, &big_pool, &mut clock);
             round += 1;
@@ -224,6 +226,7 @@ fn main() {
                 codec: codec.as_ref(),
                 rate_override: None,
                 telemetry: None,
+                client_records: ClientRecords::Full,
             };
             let rep = driver.run_round(&spec, &mut w, &hetero_pool, &mut clock);
             distinct = rep.channel.distinct_budgets;
@@ -282,6 +285,7 @@ fn main() {
             codec: codec.as_ref(),
             rate_override: None,
             telemetry: Some(&collector),
+            client_records: ClientRecords::Full,
         };
         driver.run_round(&spec, &mut w, &pool, &mut clock);
         events = collector.drain().len();
@@ -290,12 +294,139 @@ fn main() {
     });
     rec.add_with_items(&r, population as f64);
     assert_eq!(dropped, 0, "cohort-sized ring must not drop events");
-    assert_eq!(events, population * 5 + 1, "5 spans per client + rate_alloc");
+    assert_eq!(
+        events,
+        population * 5 + 2,
+        "5 spans per client + rate_alloc + shard_fold (single default shard)"
+    );
     println!(
         "    ↳ {:.1} ms/round traced ({} spans/round), {:.2}k client-updates/s",
         r.median_secs * 1e3,
         events,
         population as f64 / r.median_secs / 1e3
     );
+
+    // ── F: the headline scale round — every one of 1M heterogeneous
+    //      clients trains, encodes at its tier's budget, and is folded
+    //      through 8 aggregation shards in one round. The per-shard
+    //      decode/fold stage timing is always on (no trace ring needed at
+    //      this scale), so the run reports how much decode overlapped
+    //      aggregation. Client records are capped: the report must stay
+    //      O(cap), not O(population).
+    let n_shards = 8usize;
+    let scale_pop = if smoke { 20_000usize } else { 1_000_000 };
+    let scale_m = if smoke { 256usize } else { 1_024 };
+    let scale_cfg = if smoke {
+        BenchConfig::smoke()
+    } else {
+        // One measured pass: a 1M-client round is minutes, not millis.
+        BenchConfig { warmup_iters: 0, measure_iters: 1, max_secs: 600.0 }
+    };
+    println!("# scale round — population={scale_pop}, m={scale_m}, shards={n_shards}");
+    let scale_trainer = MockTrainer { m: scale_m };
+    let scale_pool = RoundRobinPool::synthetic(scale_pop, vec![tiny_template()], 6);
+    let codec = quantizer::make("uveqfed-l2").expect("codec spec");
+    let plan = RatePlan::new(
+        Channel::new(ChannelModel::by_name("tiers", 2.0).expect("preset"), 6),
+        controller_by_name("theory").expect("policy"),
+    );
+    let driver = FleetDriver::new(6, 2.0, workers, Scenario::full())
+        .with_rate_plan(plan)
+        .with_shards(n_shards);
+    let mut clock = VirtualClock::new();
+    let mut w = scale_trainer.init_params(1);
+    let mut round = 0u64;
+    let mut decode_secs = 0.0f64;
+    let mut fold_secs = 0.0f64;
+    let mut busy_secs = 0.0f64;
+    let r = run(&format!("scale-round/{scale_pop}-clients"), scale_cfg, || {
+        let spec = RoundSpec {
+            round,
+            local_steps: 1,
+            lr: 0.1,
+            batch_size: 0,
+            trainer: &scale_trainer,
+            codec: codec.as_ref(),
+            rate_override: None,
+            telemetry: None,
+            client_records: ClientRecords::Capped(1_000),
+        };
+        let rep = driver.run_round(&spec, &mut w, &scale_pool, &mut clock);
+        assert_eq!(rep.aggregated, scale_pop, "full participation at scale");
+        assert_eq!(rep.clients_total, scale_pop, "exact count survives the cap");
+        assert!(rep.clients.len() <= 1_000, "capped records must stay O(cap)");
+        assert_eq!(rep.shards.len(), n_shards);
+        decode_secs = rep.shards.iter().map(|s| s.decode_secs).sum();
+        fold_secs = rep.shards.iter().map(|s| s.fold_secs).sum();
+        busy_secs = rep.shards.iter().map(|s| s.busy_secs).sum();
+        round += 1;
+    });
+    rec.add_with_items(&r, scale_pop as f64);
+    println!(
+        "    ↳ {:.2} s/round wall; shard work: decode {:.2} s + fold {:.2} s \
+         (overlap factor {:.2}× — shard-seconds per wall-second)",
+        r.median_secs, decode_secs, fold_secs, busy_secs / r.median_secs
+    );
+
+    // ── F (theory): distortion vs cohort size K — Theorems 2 & 3 say the
+    //      aggregate distortion ‖Σα(ĥ−h)‖²/m vanishes as K grows (α=1/K
+    //      averaging beats down per-client quantization noise). One full
+    //      round per K through the sharded server; traced at the sizes
+    //      where a ring is affordable, proving shard spans never drop.
+    let sweep_m = if smoke { 256usize } else { 512 };
+    let sweep_ks: &[usize] =
+        if smoke { &[100, 1_000, 10_000] } else { &[100, 1_000, 10_000, 100_000, 1_000_000] };
+    let sweep_trainer = MockTrainer { m: sweep_m };
+    println!("# thm2-distortion sweep — m={sweep_m}, shards={n_shards}, K={sweep_ks:?}");
+    let mut curve: Vec<(usize, f64)> = Vec::new();
+    for &k in sweep_ks {
+        let sweep_cfg = if smoke || k <= 10_000 { cfg } else { scale_cfg };
+        let sweep_pool = RoundRobinPool::synthetic(k, vec![tiny_template()], 7);
+        let collector = if k <= 10_000 {
+            Collector::for_cohort(k)
+        } else {
+            Collector::disabled()
+        };
+        let driver =
+            FleetDriver::new(7, 2.0, workers, Scenario::full()).with_shards(n_shards);
+        let mut clock = VirtualClock::new();
+        let mut w = sweep_trainer.init_params(1);
+        let mut round = 0u64;
+        let mut distortion = f64::NAN;
+        let r = run(&format!("thm2-distortion/K-{k}"), sweep_cfg, || {
+            let spec = RoundSpec {
+                round,
+                local_steps: 1,
+                lr: 0.1,
+                batch_size: 0,
+                trainer: &sweep_trainer,
+                codec: codec.as_ref(),
+                rate_override: None,
+                telemetry: Some(&collector),
+                client_records: ClientRecords::Capped(0),
+            };
+            let rep = driver.run_round(&spec, &mut w, &sweep_pool, &mut clock);
+            assert_eq!(rep.aggregated, k);
+            assert!(rep.clients.is_empty(), "Capped(0) must keep no records");
+            distortion = rep.aggregate_distortion;
+            if collector.is_enabled() {
+                let events = collector.drain().len();
+                assert_eq!(collector.take_dropped(), 0, "ring must absorb shard spans");
+                assert_eq!(events, k * 5 + 1 + n_shards, "lifecycle + rate_alloc + shard_fold");
+            }
+            round += 1;
+        });
+        rec.add_with_items(&r, k as f64);
+        println!("    ↳ K={k:>8}: aggregate distortion {distortion:.3e}");
+        curve.push((k, distortion));
+    }
+    for pair in curve.windows(2) {
+        assert!(
+            pair[1].1 < pair[0].1,
+            "Thm 2/3: distortion must vanish with K, got {:?} -> {:?}",
+            pair[0],
+            pair[1]
+        );
+    }
     rec.save_or_warn();
 }

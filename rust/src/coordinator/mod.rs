@@ -45,6 +45,13 @@ impl RoundDriver {
         Self { driver: FleetDriver::new(seed, rate, workers, Scenario::full()) }
     }
 
+    /// Split the server fold across `n` aggregation shards (pass-through
+    /// to [`FleetDriver::with_shards`]; bit-identical for any `n`).
+    pub fn with_shards(mut self, n: usize) -> Self {
+        self.driver = self.driver.with_shards(n);
+        self
+    }
+
     /// Execute the round described by `spec` over `shards` with
     /// per-client weights `alphas`, updating `w` in place. Returns stats.
     pub fn run_round(
@@ -130,12 +137,13 @@ mod tests {
         let trainer = NativeTrainer::new(model);
         let codec = quantizer::make("qsgd").unwrap();
         let alphas = [0.25; 4];
-        let run = |workers: usize| {
+        let run = |workers: usize, agg_shards: usize| {
             let mut w = trainer.init_params(3);
-            let driver = RoundDriver::new(5, 2.0, workers);
+            let driver = RoundDriver::new(5, 2.0, workers).with_shards(agg_shards);
             driver.run_round(&spec(&trainer, codec.as_ref()), &mut w, &shards, &alphas);
             w
         };
-        assert_eq!(run(1), run(4));
+        assert_eq!(run(1, 1), run(4, 1));
+        assert_eq!(run(1, 1), run(4, 3), "sharded fold must agree with the serial one");
     }
 }

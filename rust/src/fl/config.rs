@@ -45,6 +45,8 @@ pub struct FlConfig {
     pub seed: u64,
     /// Client-fan-out worker threads.
     pub workers: usize,
+    /// Server aggregation shards (≥ 1; bit-identical for any value).
+    pub shards: usize,
     /// Evaluate every this many rounds.
     pub eval_every: usize,
     pub verbose: bool,
@@ -112,6 +114,7 @@ impl FlConfig {
             rate: c.f64_or("quantizer.rate", 2.0),
             seed: c.i64_or("fl.seed", 1) as u64,
             workers: c.usize_or("fl.workers", crate::util::threadpool::default_workers()),
+            shards: c.usize_or("fl.shards", 1),
             eval_every: c.usize_or("fl.eval_every", 5),
             verbose: c.bool_or("fl.verbose", false),
             fleet: Self::fleet_from_config(c)?,
@@ -269,6 +272,7 @@ mod tests {
             rate: 2.0,
             seed: 1,
             workers: 1,
+            shards: 1,
             eval_every: 1,
             verbose: false,
             fleet: Scenario::full(),
@@ -288,6 +292,7 @@ mod tests {
         assert_eq!(f.users, 3);
         assert_eq!(f.rounds, 7);
         assert_eq!(f.local_steps, 1);
+        assert_eq!(f.shards, 1, "absent fl.shards = single-aggregator fold");
         assert_eq!(f.fleet, Scenario::full(), "absent [fleet] = full participation");
     }
 

@@ -14,7 +14,9 @@ pub use config::{ChannelPlanSpec, FlConfig, LrSchedule, TelemetrySpec};
 pub use trainer::{NativeTrainer, Trainer};
 
 use crate::data::Dataset;
-use crate::fleet::{FleetDriver, FleetRoundReport, RoundSpec, ShardPool, VirtualClock};
+use crate::fleet::{
+    ClientRecords, FleetDriver, FleetRoundReport, RoundSpec, ShardPool, VirtualClock,
+};
 use crate::metrics::{CsvTable, Timer};
 use crate::quantizer::UpdateCodec;
 use crate::telemetry::{summarize, Collector, TraceWriter};
@@ -116,7 +118,8 @@ pub fn run_federated(
         cfg.rate,
         cfg.workers.min(trainer.max_workers()),
         cfg.fleet.clone(),
-    );
+    )
+    .with_shards(cfg.shards);
     if let Some(spec) = &cfg.channel {
         // Config-file paths validated this at load; programmatically
         // constructed FlConfigs surface the registry's own error here.
@@ -158,6 +161,7 @@ pub fn run_federated(
             codec,
             rate_override: None,
             telemetry: Some(&collector),
+            client_records: ClientRecords::Full,
         };
         let rep: FleetRoundReport = driver.run_round(&spec, &mut w, &pool, &mut clock);
         if let Some(writer) = tracer.as_mut() {
@@ -247,6 +251,7 @@ mod tests {
             rate,
             seed: 7,
             workers: 4,
+            shards: 1,
             eval_every: rounds.max(1),
             verbose: false,
             fleet: crate::fleet::Scenario::full(),
@@ -376,8 +381,9 @@ mod tests {
                 other => panic!("unexpected line type {other}"),
             }
         }
-        // 2 rounds × 3 clients × 5 lifecycle spans + 2 rate_alloc spans.
-        assert_eq!(spans, 2 * (3 * 5 + 1));
+        // 2 rounds × (3 clients × 5 lifecycle spans + rate_alloc +
+        // shard_fold for the single default shard).
+        assert_eq!(spans, 2 * (3 * 5 + 2));
         assert_eq!(rounds, 2);
         std::fs::remove_file(&path).ok();
     }

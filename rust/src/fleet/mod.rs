@@ -17,6 +17,10 @@
 //!   CRC), so the channel meters real serialized bytes;
 //! * [`aggregate`] — order-independent fixed-point streaming fold of
 //!   `Σ α_k ĥ_k`, O(m) server memory regardless of cohort size;
+//! * [`shard`] — N-way sharded server fold: arrivals are partitioned by
+//!   `arrival_index % shards` onto dedicated decode+fold threads behind
+//!   bounded channels, and the fixed-point partials merge in ascending
+//!   shard order — bit-identical for any shard count (DESIGN.md §11);
 //! * [`clock`] — virtual time: latency statistics without sleeping.
 //!
 //! `coordinator::RoundDriver` now runs on top of this layer with
@@ -38,6 +42,7 @@ pub mod channel;
 pub mod clock;
 pub mod faults;
 pub mod sampler;
+pub mod shard;
 pub mod wire;
 
 pub use aggregate::StreamingAggregator;
@@ -45,6 +50,7 @@ pub use channel::{Channel, ChannelModel};
 pub use clock::{RoundTiming, VirtualClock};
 pub use faults::{ClientFate, FaultPlan, LatencyModel};
 pub use sampler::{CohortSampler, SamplerKind};
+pub use shard::{ShardRoundStats, MAX_SHARDS};
 pub use wire::{decode_frame, encode_frame, Frame, WireError};
 
 use crate::coordinator::rate_control::{AllocRequest, RateController};
@@ -86,6 +92,24 @@ pub struct RoundSpec<'a> {
     /// `rate_alloc` span into it. `None` (or a disabled collector) keeps
     /// the untraced hot path byte-for-byte identical.
     pub telemetry: Option<&'a Collector>,
+    /// How many per-client [`ClientRoundRecord`]s the report keeps —
+    /// `Full` is O(cohort) memory (~1M records at north-star scale), so
+    /// million-client rounds should cap or drop them; the exact count
+    /// always survives in [`FleetRoundReport::clients_total`].
+    pub client_records: ClientRecords,
+}
+
+/// Per-client record retention policy for [`FleetRoundReport::clients`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientRecords {
+    /// One record per selected client (the default; backward compatible).
+    Full,
+    /// Keep at most `n` records, chosen by a deterministic stride over
+    /// the selected cohort (every `⌈selected/n⌉`-th client, ascending
+    /// id) — a representative, reproducible sample. `Capped(0)` keeps
+    /// none. `FleetRoundReport::clients_total` still reports the exact
+    /// selected count.
+    Capped(usize),
 }
 
 impl<'a> RoundSpec<'a> {
@@ -107,6 +131,7 @@ impl<'a> RoundSpec<'a> {
             codec,
             rate_override: None,
             telemetry: None,
+            client_records: ClientRecords::Full,
         }
     }
 
@@ -119,6 +144,12 @@ impl<'a> RoundSpec<'a> {
     /// Record this round's lifecycle spans into `collector`.
     pub fn with_telemetry(mut self, collector: &'a Collector) -> Self {
         self.telemetry = Some(collector);
+        self
+    }
+
+    /// Choose how many per-client records the round report retains.
+    pub fn with_client_records(mut self, records: ClientRecords) -> Self {
+        self.client_records = records;
         self
     }
 }
@@ -373,8 +404,16 @@ pub struct FleetRoundReport {
     /// Rate-allocation summary (zeroed when no rate plan is active).
     pub channel: ChannelRoundStats,
     /// Per-selected-client uplink outcomes (capacity, assigned rate,
-    /// achieved bits, deadline misses), ascending client id.
+    /// achieved bits, deadline misses), ascending client id. Under
+    /// [`ClientRecords::Capped`] this is a deterministic stride sample;
+    /// `clients_total` always holds the exact count.
     pub clients: Vec<ClientRoundRecord>,
+    /// Exact number of selected clients (== `selected`; kept explicit so
+    /// capped-record reports stay self-describing).
+    pub clients_total: usize,
+    /// Per-shard fold statistics, ascending shard order — always
+    /// populated (tracing or not), one entry per aggregation shard.
+    pub shards: Vec<ShardRoundStats>,
 }
 
 /// A heterogeneous-uplink plan: the capacity model plus the policy that
@@ -403,6 +442,8 @@ pub struct FleetDriver {
     /// Heterogeneous uplink: per-client capacities + rate controller.
     /// `None` = the legacy fixed budget for everyone.
     rate_plan: Option<RatePlan>,
+    /// Aggregation shards the server fold is split across (≥ 1).
+    shards: usize,
 }
 
 impl FleetDriver {
@@ -414,7 +455,27 @@ impl FleetDriver {
             scenario,
             sampler: CohortSampler::new(seed),
             rate_plan: None,
+            shards: 1,
         }
+    }
+
+    /// Split the server fold across `n` aggregation shards. The merged
+    /// result is bit-identical for any `n` (fixed-point partials combined
+    /// in ascending shard order), so this is purely a throughput knob.
+    ///
+    /// # Panics
+    /// When `n` is outside `1..=`[`MAX_SHARDS`].
+    pub fn with_shards(mut self, n: usize) -> Self {
+        assert!(
+            (1..=MAX_SHARDS).contains(&n),
+            "shards must be in 1..={MAX_SHARDS}, got {n}"
+        );
+        self.shards = n;
+        self
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     /// Attach a heterogeneous-uplink rate plan: per-client capacities are
@@ -531,222 +592,217 @@ impl FleetDriver {
             "aggregating cohort has zero total weight"
         );
 
-        // Fan out local training over arrivals; stream-fold as frames land.
+        // Fan out local training over arrivals. The coordinator meters,
+        // integrity-checks and admits each frame, then hands it to its
+        // owning aggregation shard over a bounded channel: decode+fold
+        // run on the shard threads, pipelined with the workers' local
+        // training/encode. A full shard queue blocks the coordinator,
+        // which stops draining the (also bounded) worker channel — so
+        // backpressure reaches the producers instead of buffering
+        // without bound.
         let uplink = UplinkChannel::new(base_rate, spec.codec.rate_constrained());
         let wire_codec_id =
             quantizer::codec_id(&spec.codec.name()).unwrap_or(quantizer::CODEC_ID_UNREGISTERED);
-        let mut agg = StreamingAggregator::new(m);
-        let mut desired = StreamingAggregator::new(m);
+        let n_shards = self.shards;
         let mut client_secs = 0.0f64;
         let mut wire_bytes = 0usize;
         let mut budget_violations = 0usize;
         let mut achieved_bits = vec![0usize; arrivals.len()];
-        {
+        let mut folded = vec![false; arrivals.len()];
+        let (agg, desired, shard_stats) = {
             let w_snapshot: &[f32] = w;
             let arrivals_ref: &[(f64, usize)] = &arrivals;
             let rates_ref: &[f64] = &rates;
             let achieved_ref = &mut achieved_bits;
-            parallel_map_fold(
-                arrivals_ref.len(),
-                self.workers,
-                |i| {
-                    let u = arrivals_ref[i].1;
-                    let t = Timer::start();
-                    let train_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
-                    // Same per-(user, round) derivation as the seed driver,
-                    // so full participation reproduces it bit-for-bit.
-                    let local_seed = SplitMix64::new(
-                        self.seed ^ (u as u64) << 32 ^ round.wrapping_mul(0x9E37),
-                    )
-                    .next();
-                    let w_new = spec.trainer.local_update(
-                        w_snapshot,
-                        pool.shard(u),
-                        spec.local_steps,
-                        spec.lr,
-                        spec.batch_size,
-                        local_seed,
-                    );
-                    let mut h = w_new;
-                    for (hv, &wv) in h.iter_mut().zip(w_snapshot.iter()) {
-                        *hv -= wv;
-                    }
-                    if let Some(c) = tel {
-                        c.record(SpanEvent {
-                            kind: SpanKind::ClientTrain,
-                            round,
-                            user: u as u64,
-                            wall_start_s: train_start,
-                            wall_dur_s: t.elapsed_secs(),
-                            virt_s: virt_start,
-                            data: SpanData::ClientTrain {
-                                local_steps: spec.local_steps as u32,
-                                m: m as u64,
-                            },
-                        });
-                        // Attribute codec-internal work counters (scale
-                        // probes, range symbols) to this client's encode.
-                        probe::reset();
-                    }
-                    let enc_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
-                    let enc_timer = Timer::start();
-                    // Client side of the session API: the update streams
-                    // through the encode sink in tensor chunks (layer-style
-                    // granularity), not as one monolithic buffer. The
-                    // client's assigned rate arrives via CodecContext.
-                    let ctx = CodecContext::new(u as u64, round, self.seed, rates_ref[i]);
-                    let mut sink = spec.codec.encoder(&ctx, m);
-                    let mut enc_chunks = 0u32;
-                    for chunk in h.chunks(DEFAULT_CHUNK) {
-                        sink.push(chunk);
-                        enc_chunks += 1;
-                    }
-                    let enc = sink.finish();
-                    let frame = wire::encode_frame(u as u64, round, wire_codec_id, &enc);
-                    if let Some(c) = tel {
-                        let enc_secs = enc_timer.elapsed_secs();
-                        let p = probe::take();
-                        c.record(SpanEvent {
-                            kind: SpanKind::Encode,
-                            round,
-                            user: u as u64,
-                            wall_start_s: enc_start,
-                            wall_dur_s: enc_secs,
-                            virt_s: virt_start,
-                            data: SpanData::Encode {
-                                assigned_bits: (rates_ref[i] * m as f64).floor() as u64,
-                                achieved_bits: enc.bits as u64,
-                                chunks: enc_chunks,
-                                scale_probes_est: p.scale_probes_est,
-                                scale_probes_exact: p.scale_probes_exact,
-                                symbols: p.symbols,
-                                escapes: p.escapes,
-                            },
-                        });
-                        c.record_hist(HistMetric::EncodeNanos, (enc_secs * 1e9) as u64);
-                        c.record_hist(HistMetric::MessageBytes, frame.len() as u64);
-                    }
-                    (frame, h, t.elapsed_secs())
-                },
-                |i, (frame, h, secs)| {
-                    client_secs += secs;
-                    wire_bytes += frame.len();
-                    let f = wire::decode_frame(&frame)
-                        .expect("in-memory frame failed integrity check");
-                    debug_assert_eq!(f.user, arrivals_ref[i].1 as u64);
-                    // In virtual time the message lands when its client's
-                    // latency elapses; transmit/decode/fold all happen at
-                    // that instant (the server folds as frames arrive).
-                    let arrival_virt = virt_start + arrivals_ref[i].0;
-                    let tx_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
-                    let tx_timer = Timer::start();
-                    let admitted =
-                        uplink.try_transmit_rate(f.user, &f.payload, m, rates_ref[i]);
-                    if let Some(c) = tel {
-                        c.record(SpanEvent {
-                            kind: SpanKind::Transmit,
-                            round,
-                            user: f.user,
-                            wall_start_s: tx_start,
-                            wall_dur_s: tx_timer.elapsed_secs(),
-                            virt_s: arrival_virt,
-                            data: SpanData::Transmit {
-                                wire_bytes: frame.len() as u64,
-                                payload_bits: f.payload.bits as u64,
-                                accepted: admitted.is_ok(),
-                            },
-                        });
-                    }
-                    match admitted {
-                        Ok(()) => {
-                            achieved_ref[i] = f.payload.bits;
-                            let alpha = pool.weight(arrivals_ref[i].1) / arrived_weight;
-                            // The decoder must see the same per-client rate
-                            // (subsample/rotation derive their layout from
-                            // the budget).
-                            let ctx =
-                                CodecContext::new(f.user, f.round, self.seed, rates_ref[i]);
-                            // Server side of the session API: decode-stream
-                            // chunks fold straight into the fixed-point
-                            // accumulator — no per-user Vec<f32> is ever
-                            // materialized here.
-                            let mut stream = spec.codec.decoder(&f.payload, m, &ctx);
-                            match tel {
-                                None => agg.fold_stream(alpha, stream.as_mut()),
-                                Some(c) => {
-                                    // Instrumented replica of `fold_stream`:
-                                    // the same next_chunk → fold_chunk →
-                                    // commit sequence (bit-identical folds),
-                                    // with the decode and fold halves of
-                                    // each chunk timed separately.
-                                    let stream = stream.as_mut();
-                                    let dec_start = c.wall_now();
-                                    let mut fold_start = dec_start;
-                                    let mut dec_secs = 0.0f64;
-                                    let mut fold_secs = 0.0f64;
-                                    let mut offset = 0usize;
-                                    let mut fold_chunks = 0u32;
-                                    loop {
-                                        let t_dec = Timer::start();
-                                        let Some(chunk) = stream.next_chunk() else {
-                                            break;
-                                        };
-                                        dec_secs += t_dec.elapsed_secs();
-                                        if fold_chunks == 0 {
-                                            fold_start = c.wall_now();
-                                        }
-                                        let t_fold = Timer::start();
-                                        agg.fold_chunk(offset, alpha, chunk);
-                                        let dt = t_fold.elapsed_secs();
-                                        fold_secs += dt;
-                                        c.record_hist(
-                                            HistMetric::FoldChunkNanos,
-                                            (dt * 1e9) as u64,
-                                        );
-                                        offset += chunk.len();
-                                        fold_chunks += 1;
-                                    }
-                                    assert_eq!(
-                                        offset, m,
-                                        "decode stream yielded {offset} of {m} entries"
-                                    );
-                                    let t_commit = Timer::start();
-                                    agg.commit(alpha);
-                                    fold_secs += t_commit.elapsed_secs();
-                                    c.record(SpanEvent {
-                                        kind: SpanKind::Decode,
-                                        round,
-                                        user: f.user,
-                                        wall_start_s: dec_start,
-                                        wall_dur_s: dec_secs,
-                                        virt_s: arrival_virt,
-                                        data: SpanData::Decode {
-                                            chunks: fold_chunks,
-                                            entries: offset as u64,
-                                        },
-                                    });
-                                    c.record(SpanEvent {
-                                        kind: SpanKind::Fold,
-                                        round,
-                                        user: f.user,
-                                        wall_start_s: fold_start,
-                                        wall_dur_s: fold_secs,
-                                        virt_s: arrival_virt,
-                                        data: SpanData::Fold {
-                                            chunks: fold_chunks,
-                                            entries: offset as u64,
-                                            alpha,
-                                        },
-                                    });
-                                }
-                            }
-                            desired.fold(alpha, &h);
+            let folded_ref = &mut folded;
+            let seed = self.seed;
+            let codec = spec.codec;
+            std::thread::scope(|scope| {
+                // Leaf shards: arrival `i` belongs to shard `i % n_shards`.
+                let mut senders = Vec::with_capacity(n_shards);
+                let mut handles = Vec::with_capacity(n_shards);
+                for s in 0..n_shards {
+                    let (tx, rx) = std::sync::mpsc::sync_channel(shard::QUEUE_DEPTH);
+                    senders.push(tx);
+                    handles.push(scope.spawn(move || {
+                        shard::run_shard(s as u32, m, seed, codec, tel, rx)
+                    }));
+                }
+                parallel_map_fold(
+                    arrivals_ref.len(),
+                    self.workers,
+                    |i| {
+                        let u = arrivals_ref[i].1;
+                        let t = Timer::start();
+                        let train_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
+                        // Same per-(user, round) derivation as the seed driver,
+                        // so full participation reproduces it bit-for-bit.
+                        let local_seed = SplitMix64::new(
+                            self.seed ^ (u as u64) << 32 ^ round.wrapping_mul(0x9E37),
+                        )
+                        .next();
+                        let w_new = spec.trainer.local_update(
+                            w_snapshot,
+                            pool.shard(u),
+                            spec.local_steps,
+                            spec.lr,
+                            spec.batch_size,
+                            local_seed,
+                        );
+                        let mut h = w_new;
+                        for (hv, &wv) in h.iter_mut().zip(w_snapshot.iter()) {
+                            *hv -= wv;
                         }
-                        Err(_) => budget_violations += 1,
+                        if let Some(c) = tel {
+                            c.record(SpanEvent {
+                                kind: SpanKind::ClientTrain,
+                                round,
+                                user: u as u64,
+                                wall_start_s: train_start,
+                                wall_dur_s: t.elapsed_secs(),
+                                virt_s: virt_start,
+                                data: SpanData::ClientTrain {
+                                    local_steps: spec.local_steps as u32,
+                                    m: m as u64,
+                                },
+                            });
+                            // Attribute codec-internal work counters (scale
+                            // probes, range symbols) to this client's encode.
+                            probe::reset();
+                        }
+                        let enc_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
+                        let enc_timer = Timer::start();
+                        // Client side of the session API: the update streams
+                        // through the encode sink in tensor chunks (layer-style
+                        // granularity), not as one monolithic buffer. The
+                        // client's assigned rate arrives via CodecContext.
+                        let ctx = CodecContext::new(u as u64, round, self.seed, rates_ref[i]);
+                        let mut sink = spec.codec.encoder(&ctx, m);
+                        let mut enc_chunks = 0u32;
+                        for chunk in h.chunks(DEFAULT_CHUNK) {
+                            sink.push(chunk);
+                            enc_chunks += 1;
+                        }
+                        let enc = sink.finish();
+                        let frame = wire::encode_frame(u as u64, round, wire_codec_id, &enc);
+                        if let Some(c) = tel {
+                            let enc_secs = enc_timer.elapsed_secs();
+                            let p = probe::take();
+                            c.record(SpanEvent {
+                                kind: SpanKind::Encode,
+                                round,
+                                user: u as u64,
+                                wall_start_s: enc_start,
+                                wall_dur_s: enc_secs,
+                                virt_s: virt_start,
+                                data: SpanData::Encode {
+                                    assigned_bits: (rates_ref[i] * m as f64).floor() as u64,
+                                    achieved_bits: enc.bits as u64,
+                                    chunks: enc_chunks,
+                                    scale_probes_est: p.scale_probes_est,
+                                    scale_probes_exact: p.scale_probes_exact,
+                                    symbols: p.symbols,
+                                    escapes: p.escapes,
+                                },
+                            });
+                            c.record_hist(HistMetric::EncodeNanos, (enc_secs * 1e9) as u64);
+                            c.record_hist(HistMetric::MessageBytes, frame.len() as u64);
+                        }
+                        (frame, h, t.elapsed_secs())
+                    },
+                    |i, (frame, h, secs)| {
+                        client_secs += secs;
+                        wire_bytes += frame.len();
+                        let f = wire::decode_frame(&frame)
+                            .expect("in-memory frame failed integrity check");
+                        debug_assert_eq!(f.user, arrivals_ref[i].1 as u64);
+                        // In virtual time the message lands when its client's
+                        // latency elapses; transmit/decode/fold all happen at
+                        // that instant (the server folds as frames arrive).
+                        let arrival_virt = virt_start + arrivals_ref[i].0;
+                        let tx_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
+                        let tx_timer = Timer::start();
+                        let admitted =
+                            uplink.try_transmit_rate(f.user, &f.payload, m, rates_ref[i]);
+                        if let Some(c) = tel {
+                            c.record(SpanEvent {
+                                kind: SpanKind::Transmit,
+                                round,
+                                user: f.user,
+                                wall_start_s: tx_start,
+                                wall_dur_s: tx_timer.elapsed_secs(),
+                                virt_s: arrival_virt,
+                                data: SpanData::Transmit {
+                                    wire_bytes: frame.len() as u64,
+                                    payload_bits: f.payload.bits as u64,
+                                    accepted: admitted.is_ok(),
+                                },
+                            });
+                        }
+                        match admitted {
+                            Ok(()) => {
+                                achieved_ref[i] = f.payload.bits;
+                                folded_ref[i] = true;
+                                let alpha = pool.weight(arrivals_ref[i].1) / arrived_weight;
+                                // Hand off to the owning shard, which rebuilds
+                                // the decoder context (same per-client rate the
+                                // encoder saw) and stream-folds the chunks into
+                                // its fixed-point partial. `send` blocks when
+                                // the shard is `QUEUE_DEPTH` jobs behind.
+                                senders[i % n_shards]
+                                    .send(shard::ShardJob {
+                                        user: f.user,
+                                        round: f.round,
+                                        rate: rates_ref[i],
+                                        alpha,
+                                        virt_s: arrival_virt,
+                                        payload: f.payload,
+                                        h,
+                                    })
+                                    .expect("aggregation shard hung up");
+                            }
+                            Err(_) => budget_violations += 1,
+                        }
+                    },
+                );
+                // Closing the senders ends every shard's receive loop; the
+                // root combiner then folds the partials in fixed (ascending)
+                // shard order. Fixed-point (i128) accumulators make the merge
+                // associative and commutative, so the merged model is
+                // bit-identical for any shard count, worker count, or send
+                // interleaving — `worker_count_does_not_change_the_model` and
+                // `tests/integration_shards.rs` pin this.
+                drop(senders);
+                let mut agg = StreamingAggregator::new(m);
+                let mut desired = StreamingAggregator::new(m);
+                let mut shard_stats: Vec<ShardRoundStats> = Vec::with_capacity(n_shards);
+                for handle in handles {
+                    let out = handle.join().expect("aggregation shard panicked");
+                    agg.merge(&out.agg);
+                    desired.merge(&out.desired);
+                    if let Some(c) = tel {
+                        c.record(SpanEvent {
+                            kind: SpanKind::ShardFold,
+                            round,
+                            user: SpanEvent::ROUND_SCOPED,
+                            wall_start_s: out.wall_start_s,
+                            wall_dur_s: out.stats.busy_secs,
+                            virt_s: virt_start,
+                            data: SpanData::ShardFold {
+                                shard: out.stats.shard as u32,
+                                folds: out.stats.folds as u32,
+                                chunks: out.stats.chunks,
+                                entries: out.stats.entries,
+                                decode_secs: out.stats.decode_secs,
+                                fold_secs: out.stats.fold_secs,
+                            },
+                        });
                     }
-                },
-            );
-        }
+                    shard_stats.push(out.stats);
+                }
+                (agg, desired, shard_stats)
+            })
+        };
 
         // Apply w ← w + Σ α_k ĥ_k and measure the Theorem-2 distortion.
         let aggregate_distortion = StreamingAggregator::mean_sq_diff(&agg, &desired);
@@ -758,17 +814,32 @@ impl FleetDriver {
         let waited = if arrivals.len() < target { self.scenario.faults.deadline } else { None };
         let timing = clock.close_round(&latencies, waited);
 
+        // The folded α mass, re-summed in ascending arrival order: the
+        // shard partials accumulate `alpha_sum` in completion order, so
+        // their f64 running sums can differ in the last ulp across
+        // worker/shard interleavings — this fixed-order recomputation is
+        // what the report exposes, making every report aggregate
+        // topology-independent.
+        let alpha_sum: f64 = arrivals
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| folded[i])
+            .map(|(_, &(_, u))| pool.weight(u) / arrived_weight)
+            .sum();
+
         // Per-client records (ascending client id = `selected` order) and
         // the round's rate-allocation summary. The user→arrival index is
         // a sorted side table probed by binary search — O(n log n) with
-        // one small allocation, no hashing on the per-round path.
-        let mut by_user: Vec<(usize, usize)> =
-            arrivals.iter().enumerate().map(|(i, &(_, u))| (u, i)).collect();
-        by_user.sort_unstable();
-        let clients: Vec<ClientRoundRecord> = selected
-            .iter()
-            .zip(&fates)
-            .map(|(&u, fate)| {
+        // one small allocation, no hashing on the per-round path. Under
+        // `ClientRecords::Capped(n)` only a deterministic stride sample
+        // of the cohort is materialized (O(n) instead of O(cohort)).
+        let clients: Vec<ClientRoundRecord> = if spec.client_records == ClientRecords::Capped(0) {
+            Vec::new()
+        } else {
+            let mut by_user: Vec<(usize, usize)> =
+                arrivals.iter().enumerate().map(|(i, &(_, u))| (u, i)).collect();
+            by_user.sort_unstable();
+            let record_for = |(&u, fate): (&usize, &ClientFate)| {
                 let idx = by_user
                     .binary_search_by_key(&u, |&(user, _)| user)
                     .ok()
@@ -785,8 +856,20 @@ impl FleetDriver {
                     deadline_miss: matches!(fate, ClientFate::Late { .. }),
                     dropped: matches!(fate, ClientFate::Dropped),
                 }
-            })
-            .collect();
+            };
+            match spec.client_records {
+                ClientRecords::Full => selected.iter().zip(&fates).map(record_for).collect(),
+                ClientRecords::Capped(cap) => {
+                    let stride = selected.len().div_ceil(cap).max(1);
+                    selected
+                        .iter()
+                        .zip(&fates)
+                        .step_by(stride)
+                        .map(record_for)
+                        .collect()
+                }
+            }
+        };
         let channel = if arrivals.is_empty() {
             ChannelRoundStats { enabled: self.rate_plan.is_some(), ..Default::default() }
         } else {
@@ -813,7 +896,7 @@ impl FleetDriver {
             late,
             surplus,
             completion_rate: agg.folds() as f64 / target.max(1) as f64,
-            alpha_sum: agg.alpha_sum(),
+            alpha_sum,
             alpha_mass: if selected_weight > 0.0 { arrived_weight / selected_weight } else { 0.0 },
             uplink_bits: uplink.stats().total_bits,
             wire_bytes,
@@ -824,6 +907,8 @@ impl FleetDriver {
             timing,
             channel,
             clients,
+            clients_total: selected.len(),
+            shards: shard_stats,
         }
     }
 }
@@ -877,10 +962,11 @@ mod tests {
         let pool = ShardPool::new(&shards);
         let codec = quantizer::make("uveqfed-l2").unwrap();
         let scenario = Scenario::stragglers(4, 5.0);
-        let run = |workers: usize, traced: bool| {
+        let run = |workers: usize, n_shards: usize, traced: bool| {
             let collector =
                 if traced { Collector::with_default_capacity() } else { Collector::disabled() };
-            let driver = FleetDriver::new(9, 2.0, workers, scenario.clone());
+            let driver =
+                FleetDriver::new(9, 2.0, workers, scenario.clone()).with_shards(n_shards);
             let mut clock = VirtualClock::new();
             let mut w = trainer.init_params(1);
             for round in 0..3 {
@@ -892,10 +978,65 @@ mod tests {
             }
             w
         };
-        let baseline = run(1, false);
-        assert_eq!(baseline, run(4, false), "aggregation must be arrival-order independent");
-        assert_eq!(baseline, run(1, true), "tracing must not perturb the round");
-        assert_eq!(baseline, run(4, true), "tracing must not perturb parallel rounds");
+        let baseline = run(1, 1, false);
+        assert_eq!(baseline, run(4, 1, false), "aggregation must be arrival-order independent");
+        assert_eq!(baseline, run(1, 1, true), "tracing must not perturb the round");
+        assert_eq!(baseline, run(4, 1, true), "tracing must not perturb parallel rounds");
+        // The sharded fold extends the same guarantee: the two-level
+        // merge in fixed shard order is bit-identical for any topology.
+        assert_eq!(baseline, run(1, 3, false), "shard count must not change the model");
+        assert_eq!(baseline, run(4, 7, true), "sharded+traced+parallel must stay bit-identical");
+    }
+
+    #[test]
+    fn capped_client_records_sample_deterministically() {
+        let (shards, trainer) = setup(8, 20);
+        let pool = ShardPool::new(&shards);
+        let codec = quantizer::make("qsgd").unwrap();
+        let driver = FleetDriver::new(5, 2.0, 2, Scenario::full());
+        let mut run = |records: ClientRecords| {
+            let mut clock = VirtualClock::new();
+            let mut w = trainer.init_params(4);
+            let s = spec(0, &trainer, codec.as_ref()).with_client_records(records);
+            driver.run_round(&s, &mut w, &pool, &mut clock)
+        };
+        let full = run(ClientRecords::Full);
+        assert_eq!(full.clients.len(), 8);
+        assert_eq!(full.clients_total, 8);
+        let capped = run(ClientRecords::Capped(3));
+        assert_eq!(capped.clients_total, 8, "exact count must survive the cap");
+        assert!(capped.clients.len() <= 3, "got {}", capped.clients.len());
+        // Stride sampling keeps a subset of the full records, verbatim.
+        for rec in &capped.clients {
+            assert!(full.clients.contains(rec), "capped record {rec:?} not in full set");
+        }
+        let none = run(ClientRecords::Capped(0));
+        assert!(none.clients.is_empty());
+        assert_eq!(none.clients_total, 8);
+        // Aggregates are unaffected by the retention policy.
+        assert_eq!(none.aggregated, full.aggregated);
+        assert_eq!(none.uplink_bits, full.uplink_bits);
+    }
+
+    #[test]
+    fn shard_stats_partition_the_fold() {
+        let (shards, trainer) = setup(9, 20);
+        let pool = ShardPool::new(&shards);
+        let codec = quantizer::make("uveqfed-l2").unwrap();
+        let driver = FleetDriver::new(3, 2.0, 2, Scenario::full()).with_shards(4);
+        let mut clock = VirtualClock::new();
+        let mut w = trainer.init_params(2);
+        let m = w.len();
+        let rep = driver.run_round(&spec(0, &trainer, codec.as_ref()), &mut w, &pool, &mut clock);
+        assert_eq!(rep.shards.len(), 4);
+        for (i, s) in rep.shards.iter().enumerate() {
+            assert_eq!(s.shard, i, "stats must come back in merge (shard) order");
+            assert_eq!(s.entries, s.folds as u64 * m as u64);
+        }
+        // arrival i → shard i % 4: 9 arrivals land 3/2/2/2.
+        let folds: Vec<usize> = rep.shards.iter().map(|s| s.folds).collect();
+        assert_eq!(folds.iter().sum::<usize>(), rep.aggregated);
+        assert_eq!(folds, vec![3, 2, 2, 2]);
     }
 
     #[test]

@@ -1,0 +1,175 @@
+//! Server-side aggregation shards: the leaf level of the deterministic
+//! two-level merge that [`super::FleetDriver::run_round`] runs the fold
+//! on.
+//!
+//! Topology (client-partition, justified in DESIGN.md §11): arrival `i`
+//! of a round is owned by shard `i % n_shards`. Each shard owns a full
+//! pair of fixed-point [`StreamingAggregator`]s (the quantized aggregate
+//! and the "desired" unquantized reference) and folds whole client
+//! streams — decode and fold interleave chunk-by-chunk on the shard
+//! thread, so at most one `DEFAULT_CHUNK` of decoded entries is ever
+//! buffered per shard. The coordinator feeds shards through bounded
+//! [`std::sync::mpsc::sync_channel`]s of depth [`QUEUE_DEPTH`]
+//! (backpressure, never unbounded buffering) and, after dropping the
+//! senders, joins and merges the partials **in ascending shard order**.
+//! Because the accumulators are integer (i128) fixed-point, the merged
+//! model is bit-identical for any shard count and any worker/channel
+//! interleaving.
+
+use std::sync::mpsc::Receiver;
+
+use crate::metrics::Timer;
+use crate::quantizer::{CodecContext, Encoded, UpdateCodec};
+use crate::telemetry::{Collector, HistMetric, SpanData, SpanEvent, SpanKind};
+
+use super::aggregate::StreamingAggregator;
+
+/// Hard upper bound on `FleetDriver::with_shards`; also baked into the
+/// `telemetry::Collector::for_cohort` ring-sizing formula so a maximally
+/// sharded traced round can never drop its per-shard fold spans.
+pub const MAX_SHARDS: usize = 64;
+
+/// Bounded depth of each coordinator→shard hand-off channel. Small on
+/// purpose: in-flight memory is `shards · (QUEUE_DEPTH + 1)` undecoded
+/// frames (+ their reference updates), and a slow shard back-pressures
+/// the coordinator — which stops draining the worker channel — instead
+/// of buffering without bound.
+pub const QUEUE_DEPTH: usize = 4;
+
+/// Per-shard fold statistics for one round, always collected (tracing or
+/// not) so the scale benches can report decode-vs-fold overlap at
+/// populations where a traced event ring would be infeasible.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ShardRoundStats {
+    /// Shard index in `0..n_shards` (also the merge position).
+    pub shard: usize,
+    /// Client streams folded by this shard.
+    pub folds: usize,
+    /// Decoded chunks folded.
+    pub chunks: u64,
+    /// Entries folded (`folds · m` when every stream completes).
+    pub entries: u64,
+    /// Seconds spent pulling chunks out of decode streams.
+    pub decode_secs: f64,
+    /// Seconds spent in `fold_chunk`/`commit`.
+    pub fold_secs: f64,
+    /// Total seconds this shard spent processing jobs (decode + fold +
+    /// reference-update metering); `Σ busy_secs / round wall` is the
+    /// pipeline-overlap factor the §F bench reports.
+    pub busy_secs: f64,
+}
+
+/// One admitted uplink message, handed from the coordinator to its
+/// owning shard. Carries everything the shard needs to rebuild the
+/// decoder context deterministically plus the client's raw update `h`
+/// for the "desired" (unquantized) reference aggregate.
+pub(crate) struct ShardJob {
+    pub user: u64,
+    pub round: u64,
+    /// The rate the controller assigned this client — the decoder must
+    /// see the same budget the encoder did.
+    pub rate: f64,
+    /// Re-normalized aggregation weight.
+    pub alpha: f64,
+    /// Virtual-time arrival instant (stamped on decode/fold spans).
+    pub virt_s: f64,
+    pub payload: Encoded,
+    pub h: Vec<f32>,
+}
+
+/// What a shard thread returns when its channel closes.
+pub(crate) struct ShardOutcome {
+    pub agg: StreamingAggregator,
+    pub desired: StreamingAggregator,
+    pub stats: ShardRoundStats,
+    /// Wall instant the shard started (0 when untraced) — the start of
+    /// its round-scoped `shard_fold` span.
+    pub wall_start_s: f64,
+}
+
+/// Drain `rx` until every sender is dropped, folding each job into this
+/// shard's fixed-point partials.
+///
+/// The chunk loop is the same `next_chunk → fold_chunk → … → commit`
+/// sequence as `StreamingAggregator::fold_stream`, so the arithmetic is
+/// bit-identical to the pre-shard serial fold; the per-chunk timers only
+/// observe. Per-client `decode`/`fold` spans (shard-tagged) are recorded
+/// only when tracing; the coarse [`ShardRoundStats`] are always kept.
+pub(crate) fn run_shard(
+    shard: u32,
+    m: usize,
+    seed: u64,
+    codec: &dyn UpdateCodec,
+    tel: Option<&Collector>,
+    rx: Receiver<ShardJob>,
+) -> ShardOutcome {
+    let mut agg = StreamingAggregator::new(m);
+    let mut desired = StreamingAggregator::new(m);
+    let mut stats = ShardRoundStats { shard: shard as usize, ..Default::default() };
+    let wall_start_s = tel.map(|c| c.wall_now()).unwrap_or(0.0);
+    while let Ok(job) = rx.recv() {
+        let t_job = Timer::start();
+        let ctx = CodecContext::new(job.user, job.round, seed, job.rate);
+        let mut stream = codec.decoder(&job.payload, m, &ctx);
+        let stream = stream.as_mut();
+        let dec_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
+        let mut fold_start = dec_start;
+        let mut dec_secs = 0.0f64;
+        let mut fold_secs = 0.0f64;
+        let mut offset = 0usize;
+        let mut chunks = 0u32;
+        loop {
+            let t_dec = Timer::start();
+            let Some(chunk) = stream.next_chunk() else {
+                break;
+            };
+            dec_secs += t_dec.elapsed_secs();
+            if chunks == 0 {
+                if let Some(c) = tel {
+                    fold_start = c.wall_now();
+                }
+            }
+            let t_fold = Timer::start();
+            agg.fold_chunk(offset, job.alpha, chunk);
+            let dt = t_fold.elapsed_secs();
+            fold_secs += dt;
+            if let Some(c) = tel {
+                c.record_hist(HistMetric::FoldChunkNanos, (dt * 1e9) as u64);
+            }
+            offset += chunk.len();
+            chunks += 1;
+        }
+        assert_eq!(offset, m, "decode stream yielded {offset} of {m} entries");
+        let t_commit = Timer::start();
+        agg.commit(job.alpha);
+        fold_secs += t_commit.elapsed_secs();
+        if let Some(c) = tel {
+            c.record(SpanEvent {
+                kind: SpanKind::Decode,
+                round: job.round,
+                user: job.user,
+                wall_start_s: dec_start,
+                wall_dur_s: dec_secs,
+                virt_s: job.virt_s,
+                data: SpanData::Decode { chunks, entries: offset as u64, shard },
+            });
+            c.record(SpanEvent {
+                kind: SpanKind::Fold,
+                round: job.round,
+                user: job.user,
+                wall_start_s: fold_start,
+                wall_dur_s: fold_secs,
+                virt_s: job.virt_s,
+                data: SpanData::Fold { chunks, entries: offset as u64, alpha: job.alpha, shard },
+            });
+        }
+        desired.fold(job.alpha, &job.h);
+        stats.folds += 1;
+        stats.chunks += u64::from(chunks);
+        stats.entries += offset as u64;
+        stats.decode_secs += dec_secs;
+        stats.fold_secs += fold_secs;
+        stats.busy_secs += t_job.elapsed_secs();
+    }
+    ShardOutcome { agg, desired, stats, wall_start_s }
+}

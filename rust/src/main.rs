@@ -21,8 +21,8 @@ use uveqfed::coordinator::rate_control::{
 use uveqfed::data::{partition, PartitionScheme, SynthCifar, SynthMnist};
 use uveqfed::fl::{run_federated, FlConfig, NativeTrainer, Trainer};
 use uveqfed::fleet::{
-    Channel, ChannelModel, ClientPool, FleetDriver, RatePlan, RoundRobinPool, RoundSpec,
-    Scenario, VirtualClock,
+    Channel, ChannelModel, ClientPool, ClientRecords, FleetDriver, RatePlan, RoundRobinPool,
+    RoundSpec, Scenario, VirtualClock, MAX_SHARDS,
 };
 use uveqfed::lattice;
 use uveqfed::models::LogReg;
@@ -49,7 +49,7 @@ fn main() {
                  subcommands:\n  train   --config <file> [--codec SPEC] [--rate R] [--rounds N]\n  \
                  fleet   --population N --cohort K --scenario NAME [--rounds N] [--codec SPEC]\n          \
                  [--channel uniform|tiers|lognormal|markov --policy uniform|proportional|theory]\n          \
-                 [--trace FILE.jsonl --trace-report FILE.md]\n  \
+                 [--shards N] [--trace FILE.jsonl --trace-report FILE.md]\n  \
                  distort --codec SPEC --rate R [--size N]\n  info\n\n\
                  Codec SPEC grammar: name[:key=value,...] — e.g. uveqfed-l2, qsgd:max_levels=4096.\n\
                  See configs/*.toml for the paper's experiment setups."
@@ -190,6 +190,7 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
         .opt("rate", "2", "bits per model parameter")
         .opt("seed", "1", "root seed")
         .opt("workers", "0", "fan-out threads (0 = auto)")
+        .opt("shards", "1", "server aggregation shards (bit-identical for any value)")
         .opt("deadline", "", "override round deadline (virtual seconds)")
         .opt("dropout", "", "override per-client dropout probability")
         .opt("templates", "16", "distinct template shards backing the population")
@@ -206,6 +207,12 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
     let mut workers = args.get_usize("workers");
     if workers == 0 {
         workers = uveqfed::util::threadpool::default_workers();
+    }
+    let agg_shards = args.get_usize("shards");
+    if !(1..=MAX_SHARDS).contains(&agg_shards) {
+        return Err(Error::msg(format!(
+            "--shards must be in 1..={MAX_SHARDS}, got {agg_shards}"
+        )));
     }
     let mut scenario = Scenario::by_name(args.get("scenario"), cohort)?;
     if !args.get("deadline").is_empty() {
@@ -228,7 +235,8 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
 
     let codec = quantizer::make(args.get("codec"))?;
     let rate = args.get_f64("rate");
-    let mut driver = FleetDriver::new(seed, rate, workers, scenario.clone());
+    let mut driver =
+        FleetDriver::new(seed, rate, workers, scenario.clone()).with_shards(agg_shards);
     let channel_name = args.get("channel");
     let hetero = !channel_name.is_empty() && channel_name != "uniform";
     if !channel_name.is_empty() {
@@ -282,6 +290,7 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
             codec: codec.as_ref(),
             rate_override: None,
             telemetry: Some(&collector),
+            client_records: ClientRecords::Full,
         };
         let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
         wire_total += rep.wire_bytes;

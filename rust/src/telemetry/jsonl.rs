@@ -67,19 +67,29 @@ pub fn span_to_json(ev: &SpanEvent) -> Json {
             d.push("payload_bits", Json::num(payload_bits as f64));
             d.push("accepted", Json::Bool(accepted));
         }
-        SpanData::Decode { chunks, entries } => {
+        SpanData::Decode { chunks, entries, shard } => {
             d.push("chunks", Json::num(chunks as f64));
             d.push("entries", Json::num(entries as f64));
+            d.push("shard", Json::num(shard as f64));
         }
-        SpanData::Fold { chunks, entries, alpha } => {
+        SpanData::Fold { chunks, entries, alpha, shard } => {
             d.push("chunks", Json::num(chunks as f64));
             d.push("entries", Json::num(entries as f64));
             d.push("alpha", Json::num(alpha));
+            d.push("shard", Json::num(shard as f64));
         }
         SpanData::RateAlloc { clients, capacity_mass, assigned_mass } => {
             d.push("clients", Json::num(clients as f64));
             d.push("capacity_mass", Json::num(capacity_mass));
             d.push("assigned_mass", Json::num(assigned_mass));
+        }
+        SpanData::ShardFold { shard, folds, chunks, entries, decode_secs, fold_secs } => {
+            d.push("shard", Json::num(shard as f64));
+            d.push("folds", Json::num(folds as f64));
+            d.push("chunks", Json::num(chunks as f64));
+            d.push("entries", Json::num(entries as f64));
+            d.push("decode_secs", Json::num(decode_secs));
+            d.push("fold_secs", Json::num(fold_secs));
         }
     }
     o.push("data", d);
@@ -110,6 +120,7 @@ pub fn round_to_json(s: &RoundSummary, dropped_events: u64) -> Json {
     o.push("decode_secs", Json::num(s.decode_secs));
     o.push("fold_secs", Json::num(s.fold_secs));
     o.push("rate_alloc_secs", Json::num(s.rate_alloc_secs));
+    o.push("shards", Json::num(s.shards as f64));
     o.push("virt_start_s", Json::num(s.virt_start_s));
     o.push("dropped_events", Json::num(dropped_events as f64));
     o

@@ -49,12 +49,15 @@ pub enum SpanKind {
     Encode,
     /// Uplink admission of one framed message (coordinator thread).
     Transmit,
-    /// Decode-stream drain of one accepted message (coordinator thread).
+    /// Decode-stream drain of one accepted message (shard thread).
     Decode,
-    /// Fixed-point fold of one accepted message (coordinator thread).
+    /// Fixed-point fold of one accepted message (shard thread).
     Fold,
     /// Per-round capacity draw + rate allocation (round-scoped).
     RateAlloc,
+    /// One aggregation shard's whole-round fold summary (round-scoped,
+    /// one span per shard per round, recorded in ascending shard order).
+    ShardFold,
 }
 
 impl SpanKind {
@@ -67,6 +70,7 @@ impl SpanKind {
             SpanKind::Decode => "decode",
             SpanKind::Fold => "fold",
             SpanKind::RateAlloc => "rate_alloc",
+            SpanKind::ShardFold => "shard_fold",
         }
     }
 }
@@ -93,14 +97,27 @@ pub enum SpanData {
     /// Uplink admission: serialized frame bytes, exact payload bits, and
     /// whether the budget check admitted the message.
     Transmit { wire_bytes: u64, payload_bits: u64, accepted: bool },
-    /// Decode-stream drain: chunks yielded and entries produced.
-    Decode { chunks: u32, entries: u64 },
-    /// Aggregator fold: chunks folded, entries, and the client's
-    /// re-normalized weight α.
-    Fold { chunks: u32, entries: u64, alpha: f64 },
+    /// Decode-stream drain: chunks yielded, entries produced, and the
+    /// aggregation shard that owned the stream.
+    Decode { chunks: u32, entries: u64, shard: u32 },
+    /// Aggregator fold: chunks folded, entries, the client's
+    /// re-normalized weight α, and the owning aggregation shard.
+    Fold { chunks: u32, entries: u64, alpha: f64, shard: u32 },
     /// Rate allocation over the round's arrivals: client count, Σ channel
     /// capacity and Σ assigned rate (bits/entry mass).
     RateAlloc { clients: u32, capacity_mass: f64, assigned_mass: f64 },
+    /// One shard's round totals: streams folded, chunks, entries, and the
+    /// decode/fold stage seconds (the per-client `decode`/`fold` spans of
+    /// this round tagged with the same `shard` must sum to these counts —
+    /// `scripts/validate_trace.py` reconciles them).
+    ShardFold {
+        shard: u32,
+        folds: u32,
+        chunks: u64,
+        entries: u64,
+        decode_secs: f64,
+        fold_secs: f64,
+    },
 }
 
 /// One recorded span. `user` is [`SpanEvent::ROUND_SCOPED`] for events
@@ -347,10 +364,14 @@ impl Collector {
         Self::new(DEFAULT_EVENT_CAPACITY)
     }
 
-    /// Capacity sized for per-round drains over cohorts of `n` clients
-    /// (≈5 client spans each, plus round-scoped headroom).
+    /// Capacity sized for per-round drains over cohorts of `n` clients:
+    /// ≈5 client spans each, one `shard_fold` span per aggregation shard
+    /// (≤ `fleet::MAX_SHARDS`), plus round-scoped headroom — a traced
+    /// round at any legal shard count fits without dropping events.
     pub fn for_cohort(n: usize) -> Self {
-        Self::new(n.saturating_mul(6).saturating_add(64))
+        Self::new(
+            n.saturating_mul(6).saturating_add(crate::fleet::MAX_SHARDS).saturating_add(64),
+        )
     }
 
     /// No-op collector: every record call returns after one branch, no

@@ -52,6 +52,8 @@ pub struct RoundSummary {
     pub decode_secs: f64,
     pub fold_secs: f64,
     pub rate_alloc_secs: f64,
+    /// Aggregation shards that participated (= `shard_fold` spans).
+    pub shards: usize,
     /// Virtual-clock time at round start (simulated seconds).
     pub virt_start_s: f64,
 }
@@ -91,7 +93,7 @@ impl RoundSummary {
             SpanData::Decode { .. } => {
                 self.decode_secs += ev.wall_dur_s;
             }
-            SpanData::Fold { chunks, entries, alpha } => {
+            SpanData::Fold { chunks, entries, alpha, .. } => {
                 self.aggregated += 1;
                 self.fold_chunks += chunks as u64;
                 self.entries_folded += entries;
@@ -100,6 +102,12 @@ impl RoundSummary {
             }
             SpanData::RateAlloc { .. } => {
                 self.rate_alloc_secs += ev.wall_dur_s;
+            }
+            // Shard totals replicate the per-client decode/fold spans
+            // (the validator reconciles them), so only the shard count is
+            // summed here — adding their seconds would double-count.
+            SpanData::ShardFold { .. } => {
+                self.shards += 1;
             }
         }
     }
@@ -153,6 +161,7 @@ const SUMMARY_COLUMNS: &[SummaryColumn] = &[
     ("decode_secs", |s| s.decode_secs),
     ("fold_secs", |s| s.fold_secs),
     ("rate_alloc_secs", |s| s.rate_alloc_secs),
+    ("shards", |s| s.shards as f64),
     ("virt_start_s", |s| s.virt_start_s),
 ];
 
@@ -263,13 +272,13 @@ mod tests {
             evs.push(SpanEvent {
                 kind: SpanKind::Decode,
                 wall_dur_s: 0.001,
-                data: SpanData::Decode { chunks: 2, entries: 100 },
+                data: SpanData::Decode { chunks: 2, entries: 100, shard: 0 },
                 ..base
             });
             evs.push(SpanEvent {
                 kind: SpanKind::Fold,
                 wall_dur_s: 0.0005,
-                data: SpanData::Fold { chunks: 2, entries: 100, alpha: 0.5 },
+                data: SpanData::Fold { chunks: 2, entries: 100, alpha: 0.5, shard: 0 },
                 ..base
             });
         }
@@ -288,6 +297,21 @@ mod tests {
             user: SpanEvent::ROUND_SCOPED,
             wall_dur_s: 0.0001,
             data: SpanData::RateAlloc { clients: 3, capacity_mass: 6.0, assigned_mass: 6.0 },
+            ..SpanEvent::default()
+        });
+        events.push(SpanEvent {
+            kind: SpanKind::ShardFold,
+            round: 0,
+            user: SpanEvent::ROUND_SCOPED,
+            wall_dur_s: 0.0015,
+            data: SpanData::ShardFold {
+                shard: 0,
+                folds: 2,
+                chunks: 4,
+                entries: 200,
+                decode_secs: 0.002,
+                fold_secs: 0.001,
+            },
             ..SpanEvent::default()
         });
         events.extend(client_events(1, 3, true));
@@ -311,8 +335,11 @@ mod tests {
         assert_eq!(r0.range_escapes, 9);
         assert!((r0.alpha_sum - 1.0).abs() < 1e-12);
         assert!(r0.rate_alloc_secs > 0.0);
+        assert_eq!(r0.shards, 1, "one shard_fold span = one shard");
+        assert!((r0.fold_secs - 0.001).abs() < 1e-12, "shard totals must not double-count");
         assert_eq!(rounds[1].round, 1);
         assert_eq!(rounds[1].clients, 1);
+        assert_eq!(rounds[1].shards, 0);
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! Integration: sharded aggregation is a pure implementation detail.
+//!
+//! The property the fleet promises (DESIGN.md §11): for any shard count,
+//! any worker count, traced or untraced, a round produces **bit-identical**
+//! model weights and identical report aggregates. Leaf shards fold i128
+//! fixed-point partials and the root combiner merges them in ascending
+//! shard order, so the sum is associativity-safe by construction — these
+//! tests are the executable form of that argument, across both the
+//! uniform uplink and a heterogeneous tiers rate plan.
+
+use uveqfed::coordinator::rate_control::TheoryGuided;
+use uveqfed::data::{partition, Dataset, PartitionScheme, SynthMnist};
+use uveqfed::fl::{NativeTrainer, Trainer};
+use uveqfed::fleet::{
+    Channel, ChannelModel, ChannelRoundStats, ClientRoundRecord, FleetDriver, FleetRoundReport,
+    RatePlan, RoundSpec, Scenario, ShardPool, VirtualClock,
+};
+use uveqfed::models::LogReg;
+use uveqfed::quantizer;
+use uveqfed::telemetry::Collector;
+
+/// The deterministic slice of a [`FleetRoundReport`]: everything except
+/// wall-clock timings and per-shard busy stats, with float aggregates
+/// compared bit-for-bit. Any topology (shards × workers × tracing) must
+/// produce exactly this projection.
+#[derive(Debug, PartialEq)]
+struct ReportFingerprint {
+    round: u64,
+    selected: usize,
+    aggregated: usize,
+    dropped: usize,
+    late: usize,
+    surplus: usize,
+    completion_rate: u64,
+    alpha_sum: u64,
+    alpha_mass: u64,
+    uplink_bits: usize,
+    wire_bytes: usize,
+    budget_violations: usize,
+    aggregate_distortion: u64,
+    clients_total: usize,
+    channel: ChannelRoundStats,
+    clients: Vec<ClientRoundRecord>,
+}
+
+impl ReportFingerprint {
+    fn of(rep: &FleetRoundReport) -> Self {
+        Self {
+            round: rep.round,
+            selected: rep.selected,
+            aggregated: rep.aggregated,
+            dropped: rep.dropped,
+            late: rep.late,
+            surplus: rep.surplus,
+            completion_rate: rep.completion_rate.to_bits(),
+            alpha_sum: rep.alpha_sum.to_bits(),
+            alpha_mass: rep.alpha_mass.to_bits(),
+            uplink_bits: rep.uplink_bits,
+            wire_bytes: rep.wire_bytes,
+            budget_violations: rep.budget_violations,
+            aggregate_distortion: rep.aggregate_distortion.to_bits(),
+            clients_total: rep.clients_total,
+            channel: rep.channel,
+            clients: rep.clients.clone(),
+        }
+    }
+}
+
+fn setup(k: usize, per: usize, seed: u64) -> (Vec<Dataset>, NativeTrainer<LogReg>) {
+    let gen = SynthMnist::new(seed);
+    let ds = gen.dataset(k * per);
+    let shards = partition(&ds, k, per, PartitionScheme::Iid, seed);
+    let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
+    (shards, trainer)
+}
+
+/// Run 2 straggler rounds and return the final weights plus the
+/// per-round deterministic fingerprints. Also checks the structural
+/// shard invariants that *do* depend on topology: one stats entry per
+/// shard, folds partitioning the aggregated cohort.
+fn run_rounds(
+    trainer: &NativeTrainer<LogReg>,
+    pool: &ShardPool<'_>,
+    codec_name: &str,
+    agg_shards: usize,
+    workers: usize,
+    traced: bool,
+    tiers: bool,
+) -> (Vec<f32>, Vec<ReportFingerprint>) {
+    let codec = quantizer::make(codec_name).unwrap();
+    let mut driver =
+        FleetDriver::new(9, 2.0, workers, Scenario::stragglers(6, 5.0)).with_shards(agg_shards);
+    if tiers {
+        let plan = RatePlan::new(
+            Channel::new(ChannelModel::by_name("tiers", 2.0).unwrap(), 9),
+            Box::new(TheoryGuided),
+        );
+        driver = driver.with_rate_plan(plan);
+    }
+    let collector = if traced { Collector::for_cohort(12) } else { Collector::disabled() };
+    let mut clock = VirtualClock::new();
+    let mut w = trainer.init_params(3);
+    let mut prints = Vec::new();
+    for round in 0..2u64 {
+        let spec = RoundSpec::new(round, 1, 0.5, 0, trainer, codec.as_ref())
+            .with_telemetry(&collector);
+        let rep = driver.run_round(&spec, &mut w, pool, &mut clock);
+        if traced {
+            collector.drain();
+            assert_eq!(collector.take_dropped(), 0, "ring must absorb shard_fold spans");
+        }
+        assert_eq!(rep.shards.len(), agg_shards, "one stats entry per shard");
+        let folds: usize = rep.shards.iter().map(|s| s.folds).sum();
+        assert_eq!(folds, rep.aggregated, "shard folds must partition the cohort");
+        for (i, s) in rep.shards.iter().enumerate() {
+            assert_eq!(s.shard, i, "stats keep ascending shard order");
+        }
+        prints.push(ReportFingerprint::of(&rep));
+    }
+    (w, prints)
+}
+
+#[test]
+fn shard_count_never_changes_model_or_report() {
+    let (shards, trainer) = setup(12, 20, 41);
+    let pool = ShardPool::new(&shards);
+    for codec_name in ["uveqfed-l2", "qsgd"] {
+        let (w0, p0) = run_rounds(&trainer, &pool, codec_name, 1, 1, false, false);
+        assert!(p0.iter().all(|p| p.aggregated > 0), "{codec_name}: empty rounds prove nothing");
+        for agg_shards in [2usize, 4, 7] {
+            for workers in [1usize, 8] {
+                for traced in [false, true] {
+                    let (w, p) = run_rounds(
+                        &trainer, &pool, codec_name, agg_shards, workers, traced, false,
+                    );
+                    assert_eq!(
+                        w0, w,
+                        "{codec_name}: weights diverged at shards={agg_shards} \
+                         workers={workers} traced={traced}"
+                    );
+                    assert_eq!(
+                        p0, p,
+                        "{codec_name}: report diverged at shards={agg_shards} \
+                         workers={workers} traced={traced}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharding_commutes_with_heterogeneous_rate_allocation() {
+    // Same property under the tiers channel + theory-guided controller:
+    // per-client rates, budgets, and the folded aggregate must all be
+    // independent of server-side shard topology.
+    let (shards, trainer) = setup(12, 20, 42);
+    let pool = ShardPool::new(&shards);
+    let (w0, p0) = run_rounds(&trainer, &pool, "uveqfed-l2", 1, 1, false, true);
+    assert!(p0[0].channel.enabled, "rate plan must actually be active");
+    for (agg_shards, workers) in [(2usize, 8usize), (7, 1), (4, 4)] {
+        let (w, p) = run_rounds(&trainer, &pool, "uveqfed-l2", agg_shards, workers, true, true);
+        assert_eq!(w0, w, "weights diverged at shards={agg_shards} workers={workers}");
+        assert_eq!(p0, p, "report diverged at shards={agg_shards} workers={workers}");
+    }
+}

@@ -3,8 +3,9 @@
 //! Covers the observability acceptance surface: a traced round emits the
 //! full client lifecycle (`client_train` → `encode` → `transmit` →
 //! `decode` → `fold`) for every aggregated client plus one round-scoped
-//! `rate_alloc` span; the summarized report reconciles **exactly** with
-//! the `FleetRoundReport` integer aggregates; the JSONL sink round-trips
+//! `rate_alloc` span and one `shard_fold` span per aggregation shard;
+//! the summarized report reconciles **exactly** with the
+//! `FleetRoundReport` integer aggregates; the JSONL sink round-trips
 //! through the strict parser; and tracing is observation-only — final
 //! weights are bit-identical traced vs untraced at any worker count.
 
@@ -61,7 +62,8 @@ fn traced_rounds_reconcile_exactly_with_fleet_reports() {
         Channel::new(ChannelModel::by_name("tiers", 2.0).unwrap(), 5),
         Box::new(TheoryGuided),
     );
-    let driver = FleetDriver::new(13, 2.0, 3, Scenario::full()).with_rate_plan(plan);
+    let driver =
+        FleetDriver::new(13, 2.0, 3, Scenario::full()).with_rate_plan(plan).with_shards(2);
     let collector = Collector::for_cohort(8);
     let mut clock = VirtualClock::new();
     let mut w = trainer.init_params(4);
@@ -116,6 +118,27 @@ fn traced_rounds_reconcile_exactly_with_fleet_reports() {
         } else {
             panic!("rate_alloc span carries wrong payload: {:?}", ra[0].data);
         }
+
+        // One round-scoped shard_fold span per shard, whose fold counts
+        // partition the aggregated cohort exactly.
+        let sf: Vec<&SpanEvent> =
+            events.iter().filter(|e| e.kind == SpanKind::ShardFold).collect();
+        assert_eq!(sf.len(), 2, "one shard_fold span per shard");
+        assert_eq!(sum.shards, 2);
+        let mut shard_folds = 0usize;
+        for (i, ev) in sf.iter().enumerate() {
+            assert_eq!(ev.user, SpanEvent::ROUND_SCOPED);
+            if let uveqfed::telemetry::SpanData::ShardFold { shard, folds, entries, .. } =
+                ev.data
+            {
+                assert_eq!(shard as usize, i, "shard_fold spans drain in shard order");
+                assert_eq!(entries, folds as u64 * m as u64);
+                shard_folds += folds as usize;
+            } else {
+                panic!("shard_fold span carries wrong payload: {:?}", ev.data);
+            }
+        }
+        assert_eq!(shard_folds, rep.aggregated, "shard folds must partition the cohort");
 
         // Every aggregated client emitted the complete lifecycle, in the
         // `(round, user, kind)` order `drain()` promises.
@@ -193,7 +216,7 @@ fn jsonl_pipeline_round_trips_through_the_parser() {
     let (shards, trainer) = setup(5, 20, 93);
     let pool = ShardPool::new(&shards);
     let codec = quantizer::make("uveqfed-l2").unwrap();
-    let driver = FleetDriver::new(19, 2.0, 2, Scenario::full());
+    let driver = FleetDriver::new(19, 2.0, 2, Scenario::full()).with_shards(3);
     let collector = Collector::for_cohort(5);
     let mut clock = VirtualClock::new();
     let mut w = trainer.init_params(2);
@@ -216,9 +239,9 @@ fn jsonl_pipeline_round_trips_through_the_parser() {
 
     let text = std::fs::read_to_string(&path).unwrap();
     let lines: Vec<&str> = text.lines().collect();
-    // 5 lifecycle spans per client + 1 rate_alloc per round, then one
-    // round line per round, after the meta line.
-    assert_eq!(span_lines, 2 * (5 * 5 + 1));
+    // 5 lifecycle spans per client + 1 rate_alloc + 3 shard_fold per
+    // round, then one round line per round, after the meta line.
+    assert_eq!(span_lines, 2 * (5 * 5 + 1 + 3));
     assert_eq!(lines.len(), 1 + span_lines + 2);
     let meta = Json::parse(lines[0]).unwrap();
     assert_eq!(meta.get("type").and_then(Json::as_str), Some("meta"));
@@ -240,6 +263,7 @@ fn jsonl_pipeline_round_trips_through_the_parser() {
                 round_lines += 1;
                 assert_eq!(j.get("aggregated").and_then(Json::as_num), Some(5.0));
                 assert_eq!(j.get("rejected").and_then(Json::as_num), Some(0.0));
+                assert_eq!(j.get("shards").and_then(Json::as_num), Some(3.0));
                 assert_eq!(j.get("dropped_events").and_then(Json::as_num), Some(0.0));
             }
             other => panic!("unexpected line type {other:?}: {line}"),
@@ -250,6 +274,7 @@ fn jsonl_pipeline_round_trips_through_the_parser() {
         assert_eq!(kinds_seen.get(kind.name()), Some(&10), "{}", kind.name());
     }
     assert_eq!(kinds_seen.get("rate_alloc"), Some(&2));
+    assert_eq!(kinds_seen.get("shard_fold"), Some(&6), "3 shards × 2 rounds");
     std::fs::remove_file(&path).ok();
 }
 

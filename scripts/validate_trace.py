@@ -9,15 +9,21 @@ Checks, exiting non-zero on the first violation:
   ``source: uveqfed-trace``); every later line is a ``span`` or ``round``
   object that parses as JSON;
 * every span has a known ``kind``, integer ``round``, ``user`` (integer,
-  or null only for ``rate_alloc``), numeric ``wall_start_s`` /
-  ``wall_dur_s`` / ``virt_s`` and the per-kind ``data`` fields;
+  or null only for the round-scoped ``rate_alloc`` / ``shard_fold``
+  kinds), numeric ``wall_start_s`` / ``wall_dur_s`` / ``virt_s`` and the
+  per-kind ``data`` fields;
 * per (round, user): a ``fold`` span implies the full lifecycle
   (``client_train``, ``encode``, ``transmit``, ``decode``) is present,
   and every encode satisfies ``achieved_bits <= assigned_bits``;
 * per round line: the aggregates reconcile exactly with the span lines of
   that round (clients / aggregated / rejected counts; assigned, achieved,
   uplink and wire sums — rejected transmits cost wire bytes but are never
-  metered as uplink bits; alpha_sum within 1e-9 of the fold-span sum).
+  metered as uplink bits; alpha_sum within 1e-9 of the fold-span sum);
+* per (round, shard): at most one ``shard_fold`` span, the round line's
+  ``shards`` field equals the shard-span count, and the per-shard
+  folds / chunks / entries totals reconcile exactly — in both directions —
+  with the shard-tagged client ``fold`` spans, with the shard fold total
+  equal to the round's ``aggregated`` count.
 """
 
 import json
@@ -37,10 +43,12 @@ DATA_FIELDS = {
         "escapes",
     ),
     "transmit": ("wire_bytes", "payload_bits", "accepted"),
-    "decode": ("chunks", "entries"),
-    "fold": ("chunks", "entries", "alpha"),
+    "decode": ("chunks", "entries", "shard"),
+    "fold": ("chunks", "entries", "alpha", "shard"),
     "rate_alloc": ("clients", "capacity_mass", "assigned_mass"),
+    "shard_fold": ("shard", "folds", "chunks", "entries", "decode_secs", "fold_secs"),
 }
+ROUND_SCOPED = ("rate_alloc", "shard_fold")
 LIFECYCLE = ("client_train", "encode", "transmit", "decode", "fold")
 
 
@@ -65,6 +73,8 @@ def blank_round_tally():
         "wire_bytes": 0,
         "alpha_sum": 0.0,
         "kinds_by_user": {},
+        "fold_by_shard": {},
+        "shard_lines": {},
     }
 
 
@@ -75,7 +85,7 @@ def check_span(obj, lineno, tally):
     require(kind in DATA_FIELDS, lineno, f"unknown span kind '{kind}'")
     user = obj["user"]
     if user is None:
-        require(kind == "rate_alloc", lineno, f"null user on non-round-scoped '{kind}' span")
+        require(kind in ROUND_SCOPED, lineno, f"null user on non-round-scoped '{kind}' span")
     else:
         require(user == int(user) >= 0, lineno, f"bad user {user!r}")
     for field in ("wall_start_s", "wall_dur_s", "virt_s"):
@@ -107,6 +117,24 @@ def check_span(obj, lineno, tally):
     elif kind == "fold":
         r["aggregated"] += 1
         r["alpha_sum"] += data["alpha"]
+        by = r["fold_by_shard"].setdefault(
+            data["shard"], {"folds": 0, "chunks": 0, "entries": 0}
+        )
+        by["folds"] += 1
+        by["chunks"] += data["chunks"]
+        by["entries"] += data["entries"]
+    elif kind == "shard_fold":
+        shard = data["shard"]
+        require(
+            shard not in r["shard_lines"],
+            lineno,
+            f"duplicate shard_fold span for shard {shard}",
+        )
+        r["shard_lines"][shard] = {
+            "folds": data["folds"],
+            "chunks": data["chunks"],
+            "entries": data["entries"],
+        }
 
 
 def check_round_line(obj, lineno, tally):
@@ -129,6 +157,38 @@ def check_round_line(obj, lineno, tally):
             f"round {rnd}: {field} = {obj[field]} but spans sum to {r[field]}",
         )
     require("dropped_events" in obj, lineno, "round line missing 'dropped_events'")
+    require("shards" in obj, lineno, "round line missing 'shards'")
+    require(
+        obj["shards"] == len(r["shard_lines"]),
+        lineno,
+        f"round {rnd}: shards = {obj['shards']} but {len(r['shard_lines'])} shard_fold spans",
+    )
+    # Two-way reconciliation: every shard that client fold spans name must
+    # have a shard_fold span with the same totals, and every shard_fold
+    # span claiming work must be backed by client fold spans.
+    for shard, got in sorted(r["fold_by_shard"].items()):
+        require(
+            shard in r["shard_lines"],
+            lineno,
+            f"round {rnd}: client folds name shard {shard} but no shard_fold span",
+        )
+        require(
+            r["shard_lines"][shard] == got,
+            lineno,
+            f"round {rnd} shard {shard}: shard_fold {r['shard_lines'][shard]} "
+            f"!= client-fold sums {got}",
+        )
+    for shard, claimed in sorted(r["shard_lines"].items()):
+        require(
+            claimed["folds"] == 0 or shard in r["fold_by_shard"],
+            lineno,
+            f"round {rnd} shard {shard}: claims {claimed['folds']} folds, no client spans",
+        )
+    require(
+        sum(s["folds"] for s in r["shard_lines"].values()) == r["aggregated"],
+        lineno,
+        f"round {rnd}: shard folds don't partition the {r['aggregated']} aggregated clients",
+    )
     require(
         abs(obj["alpha_sum"] - r["alpha_sum"]) < 1e-9,
         lineno,
