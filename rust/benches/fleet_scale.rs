@@ -17,8 +17,8 @@ use uveqfed::coordinator::rate_control::{controller_by_name, TheoryGuided};
 use uveqfed::data::Dataset;
 use uveqfed::fl::Trainer;
 use uveqfed::fleet::{
-    Channel, ChannelModel, ClientRecords, FleetDriver, RatePlan, RoundRobinPool, RoundSpec,
-    Scenario, StreamingAggregator, VirtualClock,
+    Channel, ChannelModel, ClientRecords, DownlinkSpec, FleetDriver, RatePlan, RoundRobinPool,
+    RoundSpec, Scenario, StreamingAggregator, VirtualClock,
 };
 use uveqfed::models::EvalReport;
 use uveqfed::prng::{Normal, Xoshiro256pp};
@@ -102,6 +102,7 @@ fn main() {
                 rate_override: None,
                 telemetry: None,
                 client_records: ClientRecords::Full,
+                downlink: None,
             };
             let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
             aggregated = rep.aggregated;
@@ -139,6 +140,7 @@ fn main() {
                 rate_override: None,
                 telemetry: None,
                 client_records: ClientRecords::Full,
+                downlink: None,
             };
             driver.run_round(&spec, &mut w, &big_pool, &mut clock);
             round += 1;
@@ -227,6 +229,7 @@ fn main() {
                 rate_override: None,
                 telemetry: None,
                 client_records: ClientRecords::Full,
+                downlink: None,
             };
             let rep = driver.run_round(&spec, &mut w, &hetero_pool, &mut clock);
             distinct = rep.channel.distinct_budgets;
@@ -286,6 +289,7 @@ fn main() {
             rate_override: None,
             telemetry: Some(&collector),
             client_records: ClientRecords::Full,
+            downlink: None,
         };
         driver.run_round(&spec, &mut w, &pool, &mut clock);
         events = collector.drain().len();
@@ -350,6 +354,7 @@ fn main() {
             rate_override: None,
             telemetry: None,
             client_records: ClientRecords::Capped(1_000),
+            downlink: None,
         };
         let rep = driver.run_round(&spec, &mut w, &scale_pool, &mut clock);
         assert_eq!(rep.aggregated, scale_pop, "full participation at scale");
@@ -404,6 +409,7 @@ fn main() {
                 rate_override: None,
                 telemetry: Some(&collector),
                 client_records: ClientRecords::Capped(0),
+                downlink: None,
             };
             let rep = driver.run_round(&spec, &mut w, &sweep_pool, &mut clock);
             assert_eq!(rep.aggregated, k);
@@ -428,5 +434,57 @@ fn main() {
             pair[1]
         );
     }
+
+    // ── G: coded downlink — the section-A round re-run bidirectionally.
+    //      Every arrival's broadcast delta is encoded sequentially on the
+    //      coordinator thread (the determinism contract), so this meters
+    //      the serial downlink tax on a 10k-client round plus the total
+    //      up+down wire split the asymmetric-link experiments care about.
+    println!("# downlink rounds — population={population}, m={m}");
+    let codec = quantizer::make("uveqfed-l2").expect("codec spec");
+    let dl_codec = quantizer::make("uveqfed-l2").expect("codec spec");
+    let driver = FleetDriver::new(8, 2.0, workers, Scenario::full());
+    let mut clock = VirtualClock::new();
+    let mut w = trainer.init_params(1);
+    let mut round = 0u64;
+    let (mut up_bytes, mut down_bytes, mut down_bits) = (0usize, 0usize, 0usize);
+    let mut resyncs = 0usize;
+    let r = run("downlink-10k-round/uveqfed-l2", cfg, || {
+        let spec = RoundSpec {
+            round,
+            local_steps: 1,
+            lr: 0.1,
+            batch_size: 0,
+            trainer: &trainer,
+            codec: codec.as_ref(),
+            rate_override: None,
+            telemetry: None,
+            client_records: ClientRecords::Full,
+            downlink: None,
+        }
+        .with_downlink(DownlinkSpec::new(dl_codec.as_ref(), 2.0));
+        let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
+        up_bytes = rep.wire_bytes;
+        down_bytes = rep.downlink_bytes;
+        down_bits = rep.downlink_bits;
+        resyncs = rep.resyncs;
+        round += 1;
+    });
+    rec.add_with_items(&r, population as f64);
+    assert!(down_bytes > 0, "downlink rounds must put bytes on the wire");
+    assert!(
+        round <= 1 || resyncs == 0,
+        "steady-state full participation must broadcast deltas, not resyncs"
+    );
+    println!(
+        "    ↳ {:.1} ms/round bidirectional; downlink encode {:.1} MB/s of model volume; \
+         wire split up {:.2} MB / down {:.2} MB ({:.0} down bits/entry·client)",
+        r.median_secs * 1e3,
+        population as f64 * m as f64 * 4.0 / 1e6 / r.median_secs,
+        up_bytes as f64 / 1e6,
+        down_bytes as f64 / 1e6,
+        down_bits as f64 / (population as f64 * m as f64)
+    );
+
     rec.save_or_warn();
 }

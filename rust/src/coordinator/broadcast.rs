@@ -1,0 +1,113 @@
+//! Coordinator-side broadcast planner: the server half of the downlink.
+//!
+//! [`crate::fleet::downlink::SyncTable`] owns the per-client mechanics
+//! (stale references, error feedback, frame encode); this planner owns
+//! the *policy*: which rate each client's broadcast gets — the round's
+//! [`crate::fleet::DownlinkSpec`] rate, capped by the downlink capacity
+//! when an asymmetric link is modeled — and the serialized access to the
+//! table from `FleetDriver::run_round`. Broadcasts happen on the
+//! coordinator thread in ascending arrival order, so the planner's lock
+//! is uncontended; it exists only so `run_round(&self)` can mutate
+//! cross-round downlink state, mirroring the `Channel` Markov cache.
+
+use crate::fleet::channel::Channel;
+use crate::fleet::downlink::{BroadcastOutcome, DownlinkSpec, SyncTable};
+use std::sync::Mutex;
+
+/// Per-driver downlink state: the stale-model table plus an optional
+/// downlink capacity model for asymmetric up/down links.
+#[derive(Debug, Default)]
+pub struct BroadcastPlanner {
+    table: Mutex<SyncTable>,
+    channel: Option<Channel>,
+}
+
+impl BroadcastPlanner {
+    /// Empty planner: no clients tracked, no downlink capacity model.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Model per-client downlink capacity; each broadcast's rate becomes
+    /// `min(spec.rate, capacity(user, round))`.
+    pub fn with_channel(mut self, channel: Channel) -> Self {
+        self.channel = Some(channel);
+        self
+    }
+
+    /// The downlink capacity model, when one is set.
+    pub fn channel(&self) -> Option<&Channel> {
+        self.channel.as_ref()
+    }
+
+    /// Effective downlink rate for one client's broadcast.
+    pub fn rate_for(&self, spec: &DownlinkSpec<'_>, user: u64, round: u64) -> f64 {
+        match &self.channel {
+            Some(ch) => spec.rate.min(ch.capacity(user, round)),
+            None => spec.rate,
+        }
+    }
+
+    /// Broadcast the global model `w` to `user`, updating the table.
+    pub fn broadcast(
+        &self,
+        spec: &DownlinkSpec<'_>,
+        seed: u64,
+        round: u64,
+        user: u64,
+        w: &[f32],
+    ) -> BroadcastOutcome {
+        let rate = self.rate_for(spec, user, round);
+        self.table.lock().expect("downlink sync table poisoned").broadcast(
+            spec.codec,
+            rate,
+            spec.resync_every,
+            seed,
+            round,
+            user,
+            w,
+        )
+    }
+
+    /// Number of clients with tracked downlink state.
+    pub fn tracked_clients(&self) -> usize {
+        self.table.lock().expect("downlink sync table poisoned").len()
+    }
+
+    /// The round `user` was last synced at, if ever contacted.
+    pub fn ref_round(&self, user: u64) -> Option<u64> {
+        self.table.lock().expect("downlink sync table poisoned").ref_round(user)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::channel::ChannelModel;
+    use crate::quantizer;
+
+    #[test]
+    fn downlink_channel_caps_the_broadcast_rate() {
+        let codec = quantizer::make("uveqfed-l2").unwrap();
+        let spec = DownlinkSpec::new(codec.as_ref(), 4.0);
+        let free = BroadcastPlanner::new();
+        assert_eq!(free.rate_for(&spec, 3, 0), 4.0);
+        let capped = BroadcastPlanner::new()
+            .with_channel(Channel::new(ChannelModel::Fixed { rate: 1.5 }, 9));
+        assert_eq!(capped.rate_for(&spec, 3, 0), 1.5);
+    }
+
+    #[test]
+    fn planner_tracks_clients_across_broadcasts() {
+        let codec = quantizer::make("uveqfed-l2").unwrap();
+        let spec = DownlinkSpec::new(codec.as_ref(), 2.0);
+        let planner = BroadcastPlanner::new();
+        assert_eq!(planner.tracked_clients(), 0);
+        let w = vec![0.25f32; 64];
+        let out = planner.broadcast(&spec, 7, 0, 11, &w);
+        assert!(out.resync);
+        assert_eq!(planner.tracked_clients(), 1);
+        assert_eq!(planner.ref_round(11), Some(0));
+        assert_eq!(planner.ref_round(12), None);
+    }
+}

@@ -8,9 +8,11 @@
 //! decoded updates — O(K·m) — before aggregating). The uplink budget
 //! enforcement still lives in exactly one place: [`UplinkChannel`].
 
+pub mod broadcast;
 pub mod rate_control;
 mod uplink;
 
+pub use broadcast::BroadcastPlanner;
 pub use rate_control::{
     controller_by_name, thm2_bound_for_allocation, AllocRequest, CapacityProportional,
     RateController, TheoryGuided, UniformRate,

@@ -59,6 +59,31 @@ pub struct FlConfig {
     /// Round-lifecycle tracing (`[telemetry]` config block); `None` runs
     /// untraced.
     pub telemetry: Option<TelemetrySpec>,
+    /// Coded downlink broadcast (`[downlink]` config block); `None` keeps
+    /// the classic perfect downlink (clients receive `w` verbatim).
+    pub downlink: Option<DownlinkPlanSpec>,
+}
+
+/// Plain-data description of a coded downlink (`[downlink]` section):
+/// the broadcast codec, its bit budget, and the stale-reference resync
+/// bound. The live `DownlinkSpec` borrows the codec, so the boxed codec
+/// is built once per run from this spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DownlinkPlanSpec {
+    /// Broadcast codec name (any `quantizer::make` name).
+    pub codec: String,
+    /// Downlink bits per model entry.
+    pub rate: f64,
+    /// Full-model resync when a reference is more than this many rounds
+    /// stale (0 = first-contact resyncs only).
+    pub resync_every: u64,
+}
+
+impl DownlinkPlanSpec {
+    /// Instantiate the broadcast codec (names were validated at load).
+    pub fn build(&self) -> crate::Result<Box<dyn crate::quantizer::UpdateCodec>> {
+        crate::quantizer::make(&self.codec)
+    }
 }
 
 /// Plain-data description of a tracing setup (`[telemetry]` section):
@@ -120,7 +145,40 @@ impl FlConfig {
             fleet: Self::fleet_from_config(c)?,
             channel: Self::channel_from_config(c)?,
             telemetry: Self::telemetry_from_config(c)?,
+            downlink: Self::downlink_from_config(c)?,
         })
+    }
+
+    /// Parse the optional `[downlink]` section. Grammar:
+    ///
+    /// ```toml
+    /// [downlink]
+    /// codec = "uveqfed-l2"  # required when the section is present
+    /// rate = 2.0            # bits/entry; defaults to quantizer.rate
+    /// resync_every = 0      # staleness bound; 0 = first contact only
+    /// ```
+    ///
+    /// Absent section (no `downlink.codec` key) = perfect downlink.
+    fn downlink_from_config(c: &Config) -> crate::Result<Option<DownlinkPlanSpec>> {
+        let Some(codec) = c.get("downlink.codec").and_then(|v| v.as_str()) else {
+            for orphan in ["downlink.rate", "downlink.resync_every"] {
+                crate::ensure!(
+                    c.get(orphan).is_none(),
+                    "[downlink] has a {} but no codec — set downlink.codec",
+                    orphan.trim_start_matches("downlink.")
+                );
+            }
+            return Ok(None);
+        };
+        // Resolve now so config typos fail at load, not mid-run.
+        crate::quantizer::make(codec)?;
+        let rate = c.f64_or("downlink.rate", c.f64_or("quantizer.rate", 2.0));
+        crate::ensure!(rate > 0.0, "downlink.rate must be > 0, got {rate}");
+        Ok(Some(DownlinkPlanSpec {
+            codec: codec.to_string(),
+            rate,
+            resync_every: c.i64_or("downlink.resync_every", 0) as u64,
+        }))
     }
 
     /// Parse the optional `[telemetry]` section. Grammar:
@@ -278,6 +336,7 @@ mod tests {
             fleet: Scenario::full(),
             channel: None,
             telemetry: None,
+            downlink: None,
         };
         let a = cfg.alphas(&[mk(30), mk(10)]);
         assert!((a[0] - 0.75).abs() < 1e-12);
@@ -376,6 +435,42 @@ mod tests {
             spec.model,
             ChannelModel::Markov { good: 6.0, bad: 0.5, p_good_to_bad: 0.1, p_bad_to_good: 0.9 }
         );
+    }
+
+    #[test]
+    fn downlink_section_parses() {
+        let c = Config::parse("[fl]\nusers = 2").unwrap();
+        assert_eq!(FlConfig::from_config(&c).unwrap().downlink, None);
+
+        let c = Config::parse(
+            "[downlink]\ncodec = \"uveqfed-l2\"\nrate = 1.5\nresync_every = 8",
+        )
+        .unwrap();
+        let spec = FlConfig::from_config(&c).unwrap().downlink.unwrap();
+        assert_eq!(
+            spec,
+            DownlinkPlanSpec { codec: "uveqfed-l2".into(), rate: 1.5, resync_every: 8 }
+        );
+        assert_eq!(spec.build().unwrap().name(), "uveqfed-l2");
+
+        // Rate defaults to the uplink quantizer rate; resync_every to 0.
+        let c = Config::parse("[quantizer]\nrate = 4.0\n[downlink]\ncodec = \"qsgd\"").unwrap();
+        let spec = FlConfig::from_config(&c).unwrap().downlink.unwrap();
+        assert_eq!(spec.rate, 4.0);
+        assert_eq!(spec.resync_every, 0);
+    }
+
+    #[test]
+    fn downlink_config_mistakes_are_errors() {
+        for bad in [
+            "[downlink]\ncodec = \"nope\"",
+            "[downlink]\nrate = 2.0",         // rate without codec
+            "[downlink]\nresync_every = 4",   // bound without codec
+            "[downlink]\ncodec = \"qsgd\"\nrate = 0.0",
+        ] {
+            let c = Config::parse(bad).unwrap();
+            assert!(FlConfig::from_config(&c).is_err(), "{bad} should fail");
+        }
     }
 
     #[test]

@@ -10,12 +10,13 @@
 mod config;
 mod trainer;
 
-pub use config::{ChannelPlanSpec, FlConfig, LrSchedule, TelemetrySpec};
+pub use config::{ChannelPlanSpec, DownlinkPlanSpec, FlConfig, LrSchedule, TelemetrySpec};
 pub use trainer::{NativeTrainer, Trainer};
 
 use crate::data::Dataset;
 use crate::fleet::{
-    ClientRecords, FleetDriver, FleetRoundReport, RoundSpec, ShardPool, VirtualClock,
+    ClientRecords, DownlinkSpec, FleetDriver, FleetRoundReport, RoundSpec, ShardPool,
+    VirtualClock,
 };
 use crate::metrics::{CsvTable, Timer};
 use crate::quantizer::UpdateCodec;
@@ -144,6 +145,13 @@ pub fn run_federated(
         }
         None => (Collector::disabled(), None),
     };
+    // Optional [downlink] coded broadcast: the codec is built once for
+    // the run (the per-round `DownlinkSpec` borrows it). Config-file
+    // paths validated the name at load.
+    let downlink: Option<(Box<dyn UpdateCodec>, f64, u64)> = cfg.downlink.as_ref().map(|d| {
+        let codec = d.build().unwrap_or_else(|e| panic!("invalid [downlink] codec: {e}"));
+        (codec, d.rate, d.resync_every)
+    });
     let mut clock = VirtualClock::new();
     let mut history = FlHistory::default();
     let wall = Timer::start();
@@ -162,6 +170,9 @@ pub fn run_federated(
             rate_override: None,
             telemetry: Some(&collector),
             client_records: ClientRecords::Full,
+            downlink: downlink.as_ref().map(|(dl_codec, rate, resync_every)| {
+                DownlinkSpec::new(dl_codec.as_ref(), *rate).with_resync_every(*resync_every)
+            }),
         };
         let rep: FleetRoundReport = driver.run_round(&spec, &mut w, &pool, &mut clock);
         if let Some(writer) = tracer.as_mut() {
@@ -257,6 +268,7 @@ mod tests {
             fleet: crate::fleet::Scenario::full(),
             channel: None,
             telemetry: None,
+            downlink: None,
         }
     }
 
@@ -345,6 +357,35 @@ mod tests {
             assert!(r.mean_assigned_rate > 0.0, "rate metrics must be surfaced");
         }
         assert!(hist.final_accuracy() > 0.4, "acc {}", hist.final_accuracy());
+    }
+
+    #[test]
+    fn coded_downlink_run_learns_and_lossless_downlink_is_transparent() {
+        let gen = SynthMnist::new(19);
+        let ds = gen.dataset(300);
+        let test = gen.test_dataset(100);
+        let shards = partition(&ds, 5, 60, PartitionScheme::Iid, 3);
+        let model = LogReg::new(ds.features, ds.classes, 1e-3);
+        let trainer = NativeTrainer::new(model);
+        let codec = quantizer::make("uveqfed-l2").unwrap();
+        // An identity downlink ships the exact model every round, so the
+        // run must reproduce the perfect-downlink weights bit-for-bit.
+        let mut cfg = quick_cfg(5, 10, 4.0);
+        let perfect = run_federated(&cfg, &trainer, &shards, &test, codec.as_ref());
+        cfg.downlink =
+            Some(DownlinkPlanSpec { codec: "identity".into(), rate: 4.0, resync_every: 0 });
+        let lossless = run_federated(&cfg, &trainer, &shards, &test, codec.as_ref());
+        assert_eq!(
+            lossless.final_weights, perfect.final_weights,
+            "identity downlink must be transparent"
+        );
+        // A coded downlink distorts the broadcast but still learns.
+        cfg.downlink =
+            Some(DownlinkPlanSpec { codec: "uveqfed-l2".into(), rate: 4.0, resync_every: 0 });
+        cfg.rounds = 25;
+        cfg.eval_every = 25;
+        let coded = run_federated(&cfg, &trainer, &shards, &test, codec.as_ref());
+        assert!(coded.final_accuracy() > 0.5, "acc {}", coded.final_accuracy());
     }
 
     #[test]

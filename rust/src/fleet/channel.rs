@@ -198,6 +198,53 @@ impl Channel {
     }
 }
 
+/// Asymmetric link: independent uplink and downlink capacity models over
+/// decorrelated randomness streams, opening the cheap-uplink vs
+/// cheap-downlink scenario axis (`examples/downlink_asymmetry.rs`). The
+/// downlink half is seeded with [`DOWNLINK_SEED_SALT`] so a client's
+/// up and down draws are independent even under the same model.
+///
+/// [`DOWNLINK_SEED_SALT`]: crate::fleet::downlink::DOWNLINK_SEED_SALT
+#[derive(Debug)]
+pub struct AsymmetricChannel {
+    up: Channel,
+    down: Channel,
+}
+
+impl AsymmetricChannel {
+    pub fn new(up: ChannelModel, down: ChannelModel, seed: u64) -> Self {
+        Self {
+            up: Channel::new(up, seed),
+            down: Channel::new(down, seed ^ crate::fleet::downlink::DOWNLINK_SEED_SALT),
+        }
+    }
+
+    pub fn up(&self) -> &Channel {
+        &self.up
+    }
+
+    pub fn down(&self) -> &Channel {
+        &self.down
+    }
+
+    /// Uplink capacity of `user` in `round`, bits per model entry.
+    pub fn capacity_up(&self, user: u64, round: u64) -> f64 {
+        self.up.capacity(user, round)
+    }
+
+    /// Downlink capacity of `user` in `round`, bits per model entry.
+    pub fn capacity_down(&self, user: u64, round: u64) -> f64 {
+        self.down.capacity(user, round)
+    }
+
+    /// Split into `(uplink, downlink)` halves — the uplink feeds
+    /// [`crate::fleet::RatePlan`], the downlink feeds
+    /// [`crate::coordinator::broadcast::BroadcastPlanner`].
+    pub fn into_parts(self) -> (Channel, Channel) {
+        (self.up, self.down)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -282,6 +329,23 @@ mod tests {
         for &r in &order {
             assert_eq!(rnd.capacity(5, r), forward[r as usize], "round {r}");
         }
+    }
+
+    #[test]
+    fn asymmetric_halves_are_decorrelated_and_deterministic() {
+        let model = ChannelModel::LogNormal { median: 2.0, sigma: 0.6 };
+        let a = AsymmetricChannel::new(model.clone(), model.clone(), 17);
+        let b = AsymmetricChannel::new(model.clone(), model, 17);
+        assert_eq!(a.capacity_up(3, 1), b.capacity_up(3, 1));
+        assert_eq!(a.capacity_down(3, 1), b.capacity_down(3, 1));
+        // Same model both ways, yet the draws must not mirror each other.
+        let mirrored = (0..200u64)
+            .filter(|&u| a.capacity_up(u, 0).to_bits() == a.capacity_down(u, 0).to_bits())
+            .count();
+        assert_eq!(mirrored, 0, "{mirrored}/200 up/down draws coincide");
+        let (up, down) = a.into_parts();
+        assert_eq!(up.capacity(3, 1), b.capacity_up(3, 1));
+        assert_eq!(down.capacity(3, 1), b.capacity_down(3, 1));
     }
 
     #[test]

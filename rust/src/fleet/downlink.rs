@@ -1,0 +1,353 @@
+//! Compressed global-model broadcast: the downlink half of the wire.
+//!
+//! UVeQFed's setting is a rate-constrained channel in *both* directions,
+//! but until this module the simulation compressed only the uplink.
+//! Following "Federated Learning With Quantized Global Model Updates"
+//! (arXiv 2006.10672), the server broadcasts each cohort member a
+//! **global-model delta** `w_t − w_ref(u)` coded against that client's
+//! last-synced reference, with an **error-feedback accumulator** so the
+//! quantization residue of round *t*'s broadcast is folded into round
+//! *t+1*'s delta:
+//!
+//! ```text
+//! d_t(u)  = w_t − ŵ_ref(u) + e_t(u)        (EF-compensated delta)
+//! d̂_t(u)  = Q(d_t(u))                       (shared-dither codec)
+//! ŵ_t(u)  = ŵ_ref(u) + d̂_t(u)              (client reconstruction)
+//! e_{t+1}(u) = d_t(u) − d̂_t(u)             (residue carried forward)
+//! ```
+//!
+//! The recursion telescopes — `ŵ_t = w_t + e_t − e_{t+1}` — so the
+//! broadcast error stays bounded instead of compounding, which is exactly
+//! the mechanism 2006.10672 shows preserves convergence.
+//!
+//! **Stale-model tracking.** A [`SyncTable`] keeps a compact per-client
+//! record: the reference round, the model the client actually holds
+//! (its previous reconstruction), and the EF residue. A client that
+//! missed rounds gets its delta coded against that *stale* reference —
+//! no resend of history — and a periodic full-model resync rule
+//! (`resync_every`) bounds how stale a reference may get before the
+//! server ships the raw model again. First contact is always a resync.
+//!
+//! **Lossless short-circuit.** A codec that is not rate-constrained
+//! (`identity`) gains nothing from delta coding — the delta costs the
+//! same 32 bits/entry as the model itself — so every broadcast takes the
+//! resync path. That keeps the lossless downlink exactly transparent:
+//! the client holds `w_t` bit-for-bit, and an identity-downlink run
+//! reproduces an uplink-only run exactly.
+//!
+//! **Determinism.** Broadcasts run on the coordinator thread in
+//! ascending arrival order, and the codec dither is drawn from
+//! `CodecContext::new(user, round, seed ^ DOWNLINK_SEED_SALT, rate)` —
+//! pure in its inputs and decorrelated from the uplink's dither stream.
+//! Client reconstructions are therefore bit-identical for any worker or
+//! shard count, traced or not. See `DESIGN.md` §12.
+
+use crate::fleet::wire::{self, FrameKind};
+use crate::quantizer::{self, CodecContext, Encoded, UpdateCodec, DEFAULT_CHUNK};
+use std::collections::HashMap;
+
+/// Seed salt decorrelating downlink dither from the uplink stream for
+/// the same `(user, round)`: both sides of the link derive their common
+/// randomness from the run seed, so without a salt the broadcast would
+/// reuse the exact dither sequence of that client's uplink encode.
+pub const DOWNLINK_SEED_SALT: u64 = 0x444F_574E_4C4E_4B21;
+
+/// Per-round downlink configuration, carried on
+/// [`crate::fleet::RoundSpec`] alongside `rate_override`/`telemetry`.
+#[derive(Clone, Copy)]
+pub struct DownlinkSpec<'a> {
+    /// Broadcast codec: server-side encode and the simulated client
+    /// decode share dither through the common-randomness contract (A3).
+    pub codec: &'a dyn UpdateCodec,
+    /// Downlink bit budget per model entry.
+    pub rate: f64,
+    /// Full-model resync when a client's reference is more than this
+    /// many rounds stale (0 = resync only on first contact).
+    pub resync_every: u64,
+}
+
+impl<'a> DownlinkSpec<'a> {
+    /// Downlink at `rate` bits/entry with first-contact-only resyncs.
+    pub fn new(codec: &'a dyn UpdateCodec, rate: f64) -> Self {
+        Self { codec, rate, resync_every: 0 }
+    }
+
+    /// Set the periodic full-model resync staleness bound.
+    pub fn with_resync_every(mut self, rounds: u64) -> Self {
+        self.resync_every = rounds;
+        self
+    }
+}
+
+impl std::fmt::Debug for DownlinkSpec<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DownlinkSpec")
+            .field("codec", &self.codec.name())
+            .field("rate", &self.rate)
+            .field("resync_every", &self.resync_every)
+            .finish()
+    }
+}
+
+/// What one broadcast did: the client's new model plus the accounting
+/// the round report, telemetry spans, and tests reconcile against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BroadcastOutcome {
+    /// The model the client holds after applying this broadcast.
+    pub reconstruction: Vec<f32>,
+    /// Serialized downlink frame bytes (header + payload + CRC).
+    pub frame_bytes: usize,
+    /// Exact coded payload bits.
+    pub payload_bits: usize,
+    /// Bit budget assigned (⌊rate·m⌋ for a delta, 32·m for a resync).
+    pub assigned_bits: usize,
+    /// True when this broadcast was a full-model resync.
+    pub resync: bool,
+    /// Rounds the client's reference lagged (`round + 1` on first
+    /// contact: the client had never been synced).
+    pub staleness: u64,
+    /// Reference round the delta was coded against (`round` for resync).
+    pub ref_round: u64,
+    /// ‖d − d̂‖² of this broadcast (0 for a resync).
+    pub sq_err: f64,
+}
+
+/// One tracked client: its reference round, the model it holds (the
+/// previous reconstruction), and the error-feedback residue.
+#[derive(Debug, Clone)]
+struct ClientSync {
+    ref_round: u64,
+    w_ref: Vec<f32>,
+    err: Vec<f32>,
+}
+
+/// Per-client stale-model table with error-feedback accumulators — the
+/// server's compact record of what every contacted device holds.
+#[derive(Debug, Default)]
+pub struct SyncTable {
+    clients: HashMap<u64, ClientSync>,
+}
+
+impl SyncTable {
+    /// Number of clients with tracked state.
+    pub fn len(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// True when no client has been broadcast to yet.
+    pub fn is_empty(&self) -> bool {
+        self.clients.is_empty()
+    }
+
+    /// The round `user`'s reference model was last synced at.
+    pub fn ref_round(&self, user: u64) -> Option<u64> {
+        self.clients.get(&user).map(|c| c.ref_round)
+    }
+
+    /// Rounds `user`'s reference lags behind `round` (`round + 1` when
+    /// the client has never been contacted).
+    pub fn staleness(&self, user: u64, round: u64) -> u64 {
+        match self.clients.get(&user) {
+            Some(c) => round.saturating_sub(c.ref_round),
+            None => round.saturating_add(1),
+        }
+    }
+
+    /// Encode one broadcast of the global model `w` to `user` and apply
+    /// it to the table. Coordinator-thread only; deterministic in
+    /// `(table state, codec, rate, resync_every, seed, round, user, w)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn broadcast(
+        &mut self,
+        codec: &dyn UpdateCodec,
+        rate: f64,
+        resync_every: u64,
+        seed: u64,
+        round: u64,
+        user: u64,
+        w: &[f32],
+    ) -> BroadcastOutcome {
+        let m = w.len();
+        let staleness = self.staleness(user, round);
+        let wire_codec =
+            quantizer::codec_id(&codec.name()).unwrap_or(quantizer::CODEC_ID_UNREGISTERED);
+        let full_sync = match self.clients.get(&user) {
+            None => true,
+            Some(c) => {
+                c.w_ref.len() != m
+                    || (resync_every > 0 && staleness > resync_every)
+                    || !codec.rate_constrained()
+            }
+        };
+
+        if full_sync {
+            // Raw f32 little-endian model: the client now holds `w`
+            // bit-for-bit, and the EF residue starts clean.
+            let mut bytes = Vec::with_capacity(4 * m);
+            for &x in w {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            let enc = Encoded { bytes, bits: 32 * m };
+            let frame =
+                wire::encode_frame_kind(user, round, wire_codec, FrameKind::DownlinkResync, &enc);
+            self.clients.insert(
+                user,
+                ClientSync { ref_round: round, w_ref: w.to_vec(), err: vec![0.0; m] },
+            );
+            return BroadcastOutcome {
+                reconstruction: w.to_vec(),
+                frame_bytes: frame.len(),
+                payload_bits: enc.bits,
+                assigned_bits: 32 * m,
+                resync: true,
+                staleness,
+                ref_round: round,
+                sq_err: 0.0,
+            };
+        }
+
+        let entry = self.clients.get_mut(&user).expect("checked above");
+        let ref_round = entry.ref_round;
+        // EF-compensated delta against the client's actual (possibly
+        // stale) reference.
+        let mut d = Vec::with_capacity(m);
+        for j in 0..m {
+            d.push(w[j] - entry.w_ref[j] + entry.err[j]);
+        }
+        let ctx = CodecContext::new(user, round, seed ^ DOWNLINK_SEED_SALT, rate);
+        let mut sink = codec.encoder(&ctx, m);
+        for chunk in d.chunks(DEFAULT_CHUNK) {
+            sink.push(chunk);
+        }
+        let enc = sink.finish();
+        let frame =
+            wire::encode_frame_kind(user, round, wire_codec, FrameKind::DownlinkDelta, &enc);
+        // Simulated client decode: shared dither (A3) means this is
+        // exactly what the device computes from the same frame.
+        let d_hat = codec.decode(&enc, m, &ctx);
+        let mut sq_err = 0.0f64;
+        for j in 0..m {
+            let residue = d[j] - d_hat[j];
+            sq_err += residue as f64 * residue as f64;
+            entry.err[j] = residue;
+            entry.w_ref[j] += d_hat[j];
+        }
+        let reconstruction = entry.w_ref.clone();
+        entry.ref_round = round;
+        BroadcastOutcome {
+            reconstruction,
+            frame_bytes: frame.len(),
+            payload_bits: enc.bits,
+            assigned_bits: ctx.budget_bits(m),
+            resync: false,
+            staleness,
+            ref_round,
+            sq_err,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(m: usize, base: f32) -> Vec<f32> {
+        (0..m).map(|j| base + 0.01 * j as f32).collect()
+    }
+
+    #[test]
+    fn first_contact_is_an_exact_resync() {
+        let codec = quantizer::make("uveqfed-l2").unwrap();
+        let mut table = SyncTable::default();
+        let w = model(96, 0.5);
+        let out = table.broadcast(codec.as_ref(), 2.0, 0, 7, 3, 11, &w);
+        assert!(out.resync);
+        assert_eq!(out.staleness, 4, "never-synced staleness is round + 1");
+        assert_eq!(out.ref_round, 3);
+        assert_eq!(out.reconstruction, w);
+        assert_eq!(out.payload_bits, 32 * 96);
+        assert_eq!(out.frame_bytes, wire::frame_len(4 * 96));
+        assert_eq!(out.sq_err, 0.0);
+        assert_eq!(table.ref_round(11), Some(3));
+        assert_eq!(table.len(), 1);
+    }
+
+    #[test]
+    fn lossless_codec_short_circuits_to_resync_every_round() {
+        let codec = quantizer::make("identity").unwrap();
+        let mut table = SyncTable::default();
+        for round in 0..4u64 {
+            let w = model(32, round as f32);
+            let out = table.broadcast(codec.as_ref(), 2.0, 0, 1, round, 5, &w);
+            assert!(out.resync, "identity must resync at round {round}");
+            assert_eq!(out.reconstruction, w, "lossless downlink must be transparent");
+        }
+    }
+
+    #[test]
+    fn error_feedback_residue_is_folded_into_the_next_delta() {
+        let codec = quantizer::make("uveqfed-l2").unwrap();
+        let mut table = SyncTable::default();
+        let m = 128;
+        table.broadcast(codec.as_ref(), 2.0, 0, 9, 0, 2, &model(m, 0.0));
+        let w1 = model(m, 0.3);
+        let out1 = table.broadcast(codec.as_ref(), 2.0, 0, 9, 1, 2, &w1);
+        assert!(!out1.resync);
+        assert!(out1.sq_err > 0.0, "a 2-bit broadcast must leave residue");
+        // Manual replay of round 2 with the EF recursion: the table must
+        // code w2 − ŵ1 + e2, not the plain delta.
+        let e2: Vec<f32> = {
+            let w0 = model(m, 0.0);
+            let d1: Vec<f32> = (0..m).map(|j| w1[j] - w0[j]).collect();
+            let ctx = CodecContext::new(9, 1, 2 ^ DOWNLINK_SEED_SALT, 2.0);
+            let enc = codec.encode(&d1, &ctx);
+            let d1_hat = codec.decode(&enc, m, &ctx);
+            (0..m).map(|j| d1[j] - d1_hat[j]).collect()
+        };
+        let w2 = model(m, 0.7);
+        let expect: Vec<f32> = {
+            let ctx = CodecContext::new(9, 2, 2 ^ DOWNLINK_SEED_SALT, 2.0);
+            let d2: Vec<f32> =
+                (0..m).map(|j| w2[j] - out1.reconstruction[j] + e2[j]).collect();
+            let enc = codec.encode(&d2, &ctx);
+            let d2_hat = codec.decode(&enc, m, &ctx);
+            (0..m).map(|j| out1.reconstruction[j] + d2_hat[j]).collect()
+        };
+        let out2 = table.broadcast(codec.as_ref(), 2.0, 0, 9, 2, 2, &w2);
+        assert_eq!(out2.reconstruction, expect, "EF recursion mismatch");
+    }
+
+    #[test]
+    fn stale_reference_is_used_until_the_resync_bound_trips() {
+        let codec = quantizer::make("uveqfed-l2").unwrap();
+        let mut table = SyncTable::default();
+        table.broadcast(codec.as_ref(), 2.0, 3, 4, 0, 8, &model(64, 0.0));
+        // Missing rounds 1..4: staleness 4 > resync_every 3 → resync.
+        let out = table.broadcast(codec.as_ref(), 2.0, 3, 4, 4, 8, &model(64, 1.0));
+        assert_eq!(out.staleness, 4);
+        assert!(out.resync);
+        // Staleness 3 ≤ 3 → delta against the stale reference.
+        let out = table.broadcast(codec.as_ref(), 2.0, 3, 4, 7, 8, &model(64, 2.0));
+        assert_eq!(out.staleness, 3);
+        assert!(!out.resync);
+        assert_eq!(out.ref_round, 4, "delta must be coded against the stale reference");
+    }
+
+    #[test]
+    fn delta_broadcast_respects_the_bit_budget() {
+        let codec = quantizer::make("uveqfed-l2").unwrap();
+        let mut table = SyncTable::default();
+        let m = 2048;
+        table.broadcast(codec.as_ref(), 2.0, 0, 5, 0, 1, &model(m, 0.0));
+        let out = table.broadcast(codec.as_ref(), 2.0, 0, 5, 1, 1, &model(m, 0.4));
+        assert!(!out.resync);
+        assert!(
+            out.payload_bits <= out.assigned_bits,
+            "coded {} bits over the {}-bit downlink budget",
+            out.payload_bits,
+            out.assigned_bits
+        );
+        let payload_bytes = out.frame_bytes - wire::HEADER_BYTES - wire::TRAILER_BYTES;
+        assert!(out.payload_bits <= 8 * payload_bytes, "phantom bits on the downlink frame");
+    }
+}

@@ -40,19 +40,22 @@
 pub mod aggregate;
 pub mod channel;
 pub mod clock;
+pub mod downlink;
 pub mod faults;
 pub mod sampler;
 pub mod shard;
 pub mod wire;
 
 pub use aggregate::StreamingAggregator;
-pub use channel::{Channel, ChannelModel};
+pub use channel::{AsymmetricChannel, Channel, ChannelModel};
 pub use clock::{RoundTiming, VirtualClock};
+pub use downlink::{BroadcastOutcome, DownlinkSpec, SyncTable};
 pub use faults::{ClientFate, FaultPlan, LatencyModel};
 pub use sampler::{CohortSampler, SamplerKind};
 pub use shard::{ShardRoundStats, MAX_SHARDS};
-pub use wire::{decode_frame, encode_frame, Frame, WireError};
+pub use wire::{decode_frame, encode_frame, Frame, FrameKind, WireError};
 
+use crate::coordinator::broadcast::BroadcastPlanner;
 use crate::coordinator::rate_control::{AllocRequest, RateController};
 use crate::coordinator::UplinkChannel;
 use crate::data::Dataset;
@@ -97,6 +100,11 @@ pub struct RoundSpec<'a> {
     /// million-client rounds should cap or drop them; the exact count
     /// always survives in [`FleetRoundReport::clients_total`].
     pub client_records: ClientRecords,
+    /// Downlink broadcast: when set, every arrival receives a coded
+    /// global-model delta (or a full resync) *before* local training and
+    /// trains on its own reconstruction — see [`downlink`]. `None` keeps
+    /// the classic perfect-downlink round byte-for-byte identical.
+    pub downlink: Option<DownlinkSpec<'a>>,
 }
 
 /// Per-client record retention policy for [`FleetRoundReport::clients`].
@@ -132,6 +140,7 @@ impl<'a> RoundSpec<'a> {
             rate_override: None,
             telemetry: None,
             client_records: ClientRecords::Full,
+            downlink: None,
         }
     }
 
@@ -150,6 +159,14 @@ impl<'a> RoundSpec<'a> {
     /// Choose how many per-client records the round report retains.
     pub fn with_client_records(mut self, records: ClientRecords) -> Self {
         self.client_records = records;
+        self
+    }
+
+    /// Broadcast the global model to this round's arrivals through `dl`
+    /// (coded downlink with per-client stale references and error
+    /// feedback) instead of handing them `w` verbatim.
+    pub fn with_downlink(mut self, dl: DownlinkSpec<'a>) -> Self {
+        self.downlink = Some(dl);
         self
     }
 }
@@ -414,6 +431,19 @@ pub struct FleetRoundReport {
     /// Per-shard fold statistics, ascending shard order — always
     /// populated (tracing or not), one entry per aggregation shard.
     pub shards: Vec<ShardRoundStats>,
+    /// Serialized downlink bytes broadcast this round (delta frames +
+    /// resync frames, headers and CRC included). 0 when downlink is off.
+    pub downlink_bytes: usize,
+    /// Downlink payload bits: entropy-coded bits for delta broadcasts
+    /// plus raw `32·m` bits per full resync.
+    pub downlink_bits: usize,
+    /// Arrivals that received a full-model resync instead of a delta
+    /// (first contact, stale beyond the resync bound, or a lossless
+    /// downlink codec).
+    pub resyncs: usize,
+    /// Mean per-entry squared broadcast error `Σ‖d−d̂‖²/(m·arrivals)`
+    /// over this round's downlink messages (resyncs contribute zero).
+    pub broadcast_distortion: f64,
 }
 
 /// A heterogeneous-uplink plan: the capacity model plus the policy that
@@ -444,6 +474,10 @@ pub struct FleetDriver {
     rate_plan: Option<RatePlan>,
     /// Aggregation shards the server fold is split across (≥ 1).
     shards: usize,
+    /// Downlink broadcast state: per-client reference table + error
+    /// feedback, plus an optional downlink capacity model. Only consulted
+    /// when a round's spec carries a [`DownlinkSpec`].
+    broadcast: BroadcastPlanner,
 }
 
 impl FleetDriver {
@@ -456,6 +490,7 @@ impl FleetDriver {
             sampler: CohortSampler::new(seed),
             rate_plan: None,
             shards: 1,
+            broadcast: BroadcastPlanner::new(),
         }
     }
 
@@ -488,6 +523,21 @@ impl FleetDriver {
 
     pub fn rate_plan(&self) -> Option<&RatePlan> {
         self.rate_plan.as_ref()
+    }
+
+    /// Model per-client downlink capacity (asymmetric links): every
+    /// broadcast's rate becomes `min(spec.rate, capacity(user, round))`.
+    /// Pair with [`AsymmetricChannel::into_parts`] to split one
+    /// asymmetric link into an uplink `RatePlan` and this downlink cap.
+    pub fn with_downlink_channel(mut self, channel: Channel) -> Self {
+        self.broadcast = BroadcastPlanner::new().with_channel(channel);
+        self
+    }
+
+    /// The downlink broadcast planner (per-client reference table + error
+    /// feedback state). Useful for inspecting stale-sync bookkeeping.
+    pub fn broadcast_planner(&self) -> &BroadcastPlanner {
+        &self.broadcast
     }
 
     pub fn scenario(&self) -> &Scenario {
@@ -584,6 +634,68 @@ impl FleetDriver {
             });
         }
 
+        // Downlink broadcast — before the training fan-out: the server
+        // codes each arrival's global-model delta against that client's
+        // last-synced reference (or sends a full resync) and the client
+        // trains on its *reconstruction* of `w`, never on `w` itself.
+        // Runs sequentially on the coordinator thread in ascending
+        // arrival order, so the reference table, the error-feedback
+        // state, and every reconstruction are bit-identical for any
+        // worker or shard count, traced or not.
+        let mut downlink_bytes = 0usize;
+        let mut downlink_bits = 0usize;
+        let mut resyncs = 0usize;
+        let mut broadcast_sq_err = 0.0f64;
+        let reconstructions: Option<Vec<Vec<f32>>> = spec.downlink.as_ref().map(|dl| {
+            arrivals
+                .iter()
+                .map(|&(_, u)| {
+                    let bc_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
+                    let bc_timer = Timer::start();
+                    let out = self.broadcast.broadcast(dl, self.seed, round, u as u64, &*w);
+                    downlink_bytes += out.frame_bytes;
+                    downlink_bits += out.payload_bits;
+                    resyncs += out.resync as usize;
+                    broadcast_sq_err += out.sq_err;
+                    if let Some(c) = tel {
+                        // Exactly one downlink span per arrival: a
+                        // `stale_sync` when the planner fell back to a
+                        // full-model resync, a `broadcast` otherwise.
+                        let (kind, data) = if out.resync {
+                            (
+                                SpanKind::StaleSync,
+                                SpanData::StaleSync {
+                                    staleness: out.staleness,
+                                    bits: out.payload_bits as u64,
+                                    wire_bytes: out.frame_bytes as u64,
+                                },
+                            )
+                        } else {
+                            (
+                                SpanKind::Broadcast,
+                                SpanData::Broadcast {
+                                    assigned_bits: out.assigned_bits as u64,
+                                    achieved_bits: out.payload_bits as u64,
+                                    wire_bytes: out.frame_bytes as u64,
+                                    ref_round: out.ref_round,
+                                },
+                            )
+                        };
+                        c.record(SpanEvent {
+                            kind,
+                            round,
+                            user: u as u64,
+                            wall_start_s: bc_start,
+                            wall_dur_s: bc_timer.elapsed_secs(),
+                            virt_s: virt_start,
+                            data,
+                        });
+                    }
+                    out.reconstruction
+                })
+                .collect()
+        });
+
         // α re-normalization over the set that actually aggregates.
         let arrived_weight: f64 = arrivals.iter().map(|&(_, u)| pool.weight(u)).sum();
         let selected_weight: f64 = selected.iter().map(|&u| pool.weight(u)).sum();
@@ -611,6 +723,7 @@ impl FleetDriver {
         let mut folded = vec![false; arrivals.len()];
         let (agg, desired, shard_stats) = {
             let w_snapshot: &[f32] = w;
+            let recon_ref: Option<&[Vec<f32>]> = reconstructions.as_deref();
             let arrivals_ref: &[(f64, usize)] = &arrivals;
             let rates_ref: &[f64] = &rates;
             let achieved_ref = &mut achieved_bits;
@@ -641,8 +754,16 @@ impl FleetDriver {
                             self.seed ^ (u as u64) << 32 ^ round.wrapping_mul(0x9E37),
                         )
                         .next();
+                        // Downlink-on rounds train from the client's own
+                        // reconstruction of the global model (and report
+                        // the update relative to it); downlink-off rounds
+                        // keep the classic perfect-downlink snapshot.
+                        let w_client: &[f32] = match recon_ref {
+                            Some(r) => &r[i],
+                            None => w_snapshot,
+                        };
                         let w_new = spec.trainer.local_update(
-                            w_snapshot,
+                            w_client,
                             pool.shard(u),
                             spec.local_steps,
                             spec.lr,
@@ -650,7 +771,7 @@ impl FleetDriver {
                             local_seed,
                         );
                         let mut h = w_new;
-                        for (hv, &wv) in h.iter_mut().zip(w_snapshot.iter()) {
+                        for (hv, &wv) in h.iter_mut().zip(w_client.iter()) {
                             *hv -= wv;
                         }
                         if let Some(c) = tel {
@@ -807,6 +928,11 @@ impl FleetDriver {
         // Apply w ← w + Σ α_k ĥ_k and measure the Theorem-2 distortion.
         let aggregate_distortion = StreamingAggregator::mean_sq_diff(&agg, &desired);
         agg.apply_to(w);
+        let broadcast_distortion = if spec.downlink.is_some() && !arrivals.is_empty() && m > 0 {
+            broadcast_sq_err / (m as f64 * arrivals.len() as f64)
+        } else {
+            0.0
+        };
 
         // Virtual time: the round closes at the slowest aggregated
         // arrival, or at the deadline when the quota went unmet.
@@ -909,6 +1035,10 @@ impl FleetDriver {
             clients,
             clients_total: selected.len(),
             shards: shard_stats,
+            downlink_bytes,
+            downlink_bits,
+            resyncs,
+            broadcast_distortion,
         }
     }
 }
@@ -1016,6 +1146,74 @@ mod tests {
         // Aggregates are unaffected by the retention policy.
         assert_eq!(none.aggregated, full.aggregated);
         assert_eq!(none.uplink_bits, full.uplink_bits);
+    }
+
+    #[test]
+    fn capped_records_edge_cases_and_worker_independence() {
+        let (shards, trainer) = setup(8, 20);
+        let pool = ShardPool::new(&shards);
+        let codec = quantizer::make("qsgd").unwrap();
+        // Faulty scenario: the record set mixes arrivals, lates and drops,
+        // so the stride has non-trivial structure to preserve.
+        let run = |workers: usize, records: ClientRecords| {
+            let driver = FleetDriver::new(5, 2.0, workers, Scenario::stragglers(6, 5.0));
+            let mut clock = VirtualClock::new();
+            let mut w = trainer.init_params(4);
+            let s = spec(0, &trainer, codec.as_ref()).with_client_records(records);
+            driver.run_round(&s, &mut w, &pool, &mut clock)
+        };
+        let full = run(1, ClientRecords::Full);
+        assert!(!full.clients.is_empty());
+        // A cap at (or above) the cohort size degenerates to the full set.
+        assert_eq!(run(1, ClientRecords::Capped(full.clients.len())).clients, full.clients);
+        assert_eq!(run(1, ClientRecords::Capped(64)).clients, full.clients);
+        // Capped(0) keeps nothing even when faults shrink the cohort.
+        assert!(run(1, ClientRecords::Capped(0)).clients.is_empty());
+        // The stride sample is a pure function of the selected cohort —
+        // never of the worker count that happened to run the round.
+        for cap in [1usize, 2, 3] {
+            let a = run(1, ClientRecords::Capped(cap));
+            let b = run(4, ClientRecords::Capped(cap));
+            assert_eq!(a.clients, b.clients, "Capped({cap}) differed across worker counts");
+            assert_eq!(a.clients_total, b.clients_total);
+        }
+    }
+
+    #[test]
+    fn downlink_round_reports_broadcast_accounting() {
+        let (shards, trainer) = setup(5, 20);
+        let pool = ShardPool::new(&shards);
+        let codec = quantizer::make("uveqfed-l2").unwrap();
+        let dl_codec = quantizer::make("uveqfed-l2").unwrap();
+        let driver = FleetDriver::new(4, 2.0, 2, Scenario::full());
+        let mut clock = VirtualClock::new();
+        let mut w = trainer.init_params(2);
+        let m = w.len();
+        let mut reports = Vec::new();
+        for round in 0..2u64 {
+            let s = spec(round, &trainer, codec.as_ref())
+                .with_downlink(DownlinkSpec::new(dl_codec.as_ref(), 2.0));
+            reports.push(driver.run_round(&s, &mut w, &pool, &mut clock));
+        }
+        // Round 0: every client is first contact → a raw full resync of
+        // 32·m payload bits each, zero broadcast error.
+        assert_eq!(reports[0].resyncs, 5);
+        assert_eq!(reports[0].downlink_bits, 5 * 32 * m);
+        assert!(reports[0].downlink_bytes > 5 * 4 * m, "frames must add header overhead");
+        assert_eq!(reports[0].broadcast_distortion, 0.0);
+        // Round 1: everyone holds a fresh reference → compressed deltas
+        // inside the 2 bits/entry budget, with nonzero quantization error.
+        assert_eq!(reports[1].resyncs, 0);
+        assert!(reports[1].downlink_bits <= 5 * 2 * m, "delta bits blew the budget");
+        assert!(reports[1].downlink_bits > 0);
+        assert!(reports[1].broadcast_distortion > 0.0, "a 2-bit broadcast must distort");
+        assert_eq!(driver.broadcast_planner().tracked_clients(), 5);
+        // Downlink-off rounds report all-zero downlink fields.
+        let off = driver.run_round(&spec(2, &trainer, codec.as_ref()), &mut w, &pool, &mut clock);
+        assert_eq!(
+            (off.downlink_bytes, off.downlink_bits, off.resyncs, off.broadcast_distortion),
+            (0, 0, 0, 0.0)
+        );
     }
 
     #[test]

@@ -13,7 +13,8 @@
 //! | 0      | 4    | magic `0x4651_5655` (`"UVQF"`) |
 //! | 4      | 1    | version (2) |
 //! | 5      | 1    | codec id (`quantizer::codec_id`) |
-//! | 6      | 2    | reserved (0) |
+//! | 6      | 1    | frame kind ([`FrameKind`]; 0 = uplink update) |
+//! | 7      | 1    | reserved (0) |
 //! | 8      | 8    | user id |
 //! | 16     | 8    | round |
 //! | 24     | 8    | exact payload bits |
@@ -25,6 +26,13 @@
 //! (`R·m` bits, headers included by the caller that meters `frame.len()`)
 //! survives serialization: `bits ≤ 8·payload_len` is enforced on decode,
 //! exactly like `UplinkChannel`'s phantom-bits check.
+//!
+//! Since the downlink subsystem (`fleet::downlink`) the same frame layout
+//! carries server→client traffic: byte 6 — written as reserved-zero by
+//! every historical encoder — is the **frame kind**. Kind 0 is the
+//! original uplink update (all pre-existing frames decode unchanged),
+//! kind 1 a compressed global-model-delta broadcast, kind 2 a full-model
+//! resync. Unknown kinds are rejected with [`WireError::BadKind`].
 
 use crate::quantizer::Encoded;
 use std::fmt;
@@ -41,12 +49,37 @@ pub const VERSION: u8 = 2;
 pub const HEADER_BYTES: usize = 36;
 pub const TRAILER_BYTES: usize = 4;
 
-/// A decoded uplink frame.
+/// Direction/semantics of a frame (header byte 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Client → server model update (the original, pre-downlink traffic;
+    /// historical frames carry a zero here and decode as this kind).
+    Update = 0,
+    /// Server → client compressed global-model-delta broadcast.
+    DownlinkDelta = 1,
+    /// Server → client full-model resync (raw f32 little-endian model).
+    DownlinkResync = 2,
+}
+
+impl FrameKind {
+    fn from_byte(b: u8) -> Result<Self, WireError> {
+        match b {
+            0 => Ok(FrameKind::Update),
+            1 => Ok(FrameKind::DownlinkDelta),
+            2 => Ok(FrameKind::DownlinkResync),
+            other => Err(WireError::BadKind(other)),
+        }
+    }
+}
+
+/// A decoded frame (uplink update or downlink broadcast — see `kind`).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Frame {
     pub user: u64,
     pub round: u64,
     pub codec: u8,
+    pub kind: FrameKind,
     pub payload: Encoded,
 }
 
@@ -59,6 +92,8 @@ pub enum WireError {
     Truncated { have: usize, need: usize },
     BadMagic(u32),
     BadVersion(u8),
+    /// Frame kind byte (offset 6) outside the known [`FrameKind`] set.
+    BadKind(u8),
     /// Buffer longer than header + payload + trailer.
     TrailingGarbage { extra: usize },
     /// Claimed exact bit count exceeds the physical payload.
@@ -75,6 +110,7 @@ impl fmt::Display for WireError {
             }
             WireError::BadMagic(m) => write!(f, "bad frame magic {m:#010x}"),
             WireError::BadVersion(v) => write!(f, "unsupported frame version {v}"),
+            WireError::BadKind(k) => write!(f, "unknown frame kind {k}"),
             WireError::TrailingGarbage { extra } => {
                 write!(f, "{extra} trailing bytes after frame")
             }
@@ -122,13 +158,26 @@ pub fn frame_len(payload_bytes: usize) -> usize {
     HEADER_BYTES + payload_bytes + TRAILER_BYTES
 }
 
-/// Serialize one encoded update into a framed message.
+/// Serialize one encoded uplink update into a framed message
+/// ([`FrameKind::Update`]; byte-identical to the pre-downlink framing).
 pub fn encode_frame(user: u64, round: u64, codec: u8, enc: &Encoded) -> Vec<u8> {
+    encode_frame_kind(user, round, codec, FrameKind::Update, enc)
+}
+
+/// Serialize one encoded payload into a framed message of `kind`.
+pub fn encode_frame_kind(
+    user: u64,
+    round: u64,
+    codec: u8,
+    kind: FrameKind,
+    enc: &Encoded,
+) -> Vec<u8> {
     let mut buf = Vec::with_capacity(frame_len(enc.bytes.len()));
     buf.extend_from_slice(&MAGIC.to_le_bytes());
     buf.push(VERSION);
     buf.push(codec);
-    buf.extend_from_slice(&0u16.to_le_bytes());
+    buf.push(kind as u8);
+    buf.push(0); // reserved
     buf.extend_from_slice(&user.to_le_bytes());
     buf.extend_from_slice(&round.to_le_bytes());
     buf.extend_from_slice(&(enc.bits as u64).to_le_bytes());
@@ -162,6 +211,7 @@ pub fn decode_frame(buf: &[u8]) -> Result<Frame, WireError> {
         return Err(WireError::BadVersion(buf[4]));
     }
     let codec = buf[5];
+    let kind = FrameKind::from_byte(buf[6])?;
     let user = le_u64(&buf[8..16]);
     let round = le_u64(&buf[16..24]);
     let bits = le_u64(&buf[24..32]);
@@ -186,6 +236,7 @@ pub fn decode_frame(buf: &[u8]) -> Result<Frame, WireError> {
         user,
         round,
         codec,
+        kind,
         payload: Encoded { bytes: buf[HEADER_BYTES..body].to_vec(), bits: bits as usize },
     })
 }
@@ -214,8 +265,36 @@ mod tests {
         assert_eq!(f.user, 42);
         assert_eq!(f.round, 7);
         assert_eq!(f.codec, 3);
+        assert_eq!(f.kind, FrameKind::Update);
         assert_eq!(f.payload.bytes, e.bytes);
         assert_eq!(f.payload.bits, 21);
+    }
+
+    #[test]
+    fn downlink_kinds_roundtrip_and_uplink_bytes_are_unchanged() {
+        let e = enc(vec![1, 2, 3], 20);
+        for kind in [FrameKind::DownlinkDelta, FrameKind::DownlinkResync] {
+            let buf = encode_frame_kind(11, 4, 2, kind, &e);
+            assert_eq!(buf[6], kind as u8);
+            let f = decode_frame(&buf).unwrap();
+            assert_eq!(f.kind, kind);
+            assert_eq!(f.payload.bytes, e.bytes);
+        }
+        // The uplink entry point must keep emitting kind-0 frames with the
+        // historical reserved-zero bytes at offsets 6..8.
+        let up = encode_frame(11, 4, 2, &e);
+        assert_eq!(&up[6..8], &[0, 0]);
+        assert_eq!(up, encode_frame_kind(11, 4, 2, FrameKind::Update, &e));
+    }
+
+    #[test]
+    fn unknown_frame_kind_is_rejected() {
+        let mut buf = encode_frame(1, 2, 3, &enc(vec![7], 8));
+        buf[6] = 3; // first unassigned kind
+        let body = HEADER_BYTES + 1;
+        let crc = crc32(&buf[..body]);
+        buf[body..body + 4].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(decode_frame(&buf), Err(WireError::BadKind(3))));
     }
 
     #[test]

@@ -21,8 +21,8 @@ use uveqfed::coordinator::rate_control::{
 use uveqfed::data::{partition, PartitionScheme, SynthCifar, SynthMnist};
 use uveqfed::fl::{run_federated, FlConfig, NativeTrainer, Trainer};
 use uveqfed::fleet::{
-    Channel, ChannelModel, ClientPool, ClientRecords, FleetDriver, RatePlan, RoundRobinPool,
-    RoundSpec, Scenario, VirtualClock, MAX_SHARDS,
+    Channel, ChannelModel, ClientPool, ClientRecords, DownlinkSpec, FleetDriver, RatePlan,
+    RoundRobinPool, RoundSpec, Scenario, VirtualClock, MAX_SHARDS,
 };
 use uveqfed::lattice;
 use uveqfed::models::LogReg;
@@ -49,7 +49,8 @@ fn main() {
                  subcommands:\n  train   --config <file> [--codec SPEC] [--rate R] [--rounds N]\n  \
                  fleet   --population N --cohort K --scenario NAME [--rounds N] [--codec SPEC]\n          \
                  [--channel uniform|tiers|lognormal|markov --policy uniform|proportional|theory]\n          \
-                 [--shards N] [--trace FILE.jsonl --trace-report FILE.md]\n  \
+                 [--shards N] [--trace FILE.jsonl --trace-report FILE.md]\n          \
+                 [--downlink-codec SPEC --downlink-rate R --downlink-resync N]\n  \
                  distort --codec SPEC --rate R [--size N]\n  info\n\n\
                  Codec SPEC grammar: name[:key=value,...] — e.g. uveqfed-l2, qsgd:max_levels=4096.\n\
                  See configs/*.toml for the paper's experiment setups."
@@ -197,6 +198,9 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
         .opt("samples", "120", "samples per template shard")
         .opt("channel", "", "uplink capacity model: uniform|tiers|lognormal|markov")
         .opt("policy", "theory", "rate allocation: uniform|proportional|theory")
+        .opt("downlink-codec", "", "broadcast codec for a coded downlink (off when empty)")
+        .opt("downlink-rate", "", "downlink bits per model entry (default: --rate)")
+        .opt("downlink-resync", "0", "resync when a reference is staler than this (0 = first contact only)")
         .opt("trace", "", "write round-lifecycle spans to this JSONL file")
         .opt("trace-report", "", "write the per-round telemetry Markdown table here");
     let args = parse_args(&cli, argv)?;
@@ -235,6 +239,18 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
 
     let codec = quantizer::make(args.get("codec"))?;
     let rate = args.get_f64("rate");
+    // Coded downlink: broadcast the global model through its own codec
+    // instead of handing clients `w` verbatim.
+    let downlink_codec = match args.get("downlink-codec") {
+        "" => None,
+        spec => Some(quantizer::make(spec)?),
+    };
+    let downlink_rate = if args.get("downlink-rate").is_empty() {
+        rate
+    } else {
+        args.get_f64("downlink-rate")
+    };
+    let downlink_resync = args.get_usize("downlink-resync") as u64;
     let mut driver =
         FleetDriver::new(seed, rate, workers, scenario.clone()).with_shards(agg_shards);
     let channel_name = args.get("channel");
@@ -273,15 +289,22 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
             format!(" channel={channel_name} policy={}", args.get("policy"))
         },
     );
+    if let Some(dl) = &downlink_codec {
+        println!(
+            "downlink: codec={} rate={downlink_rate} resync_every={downlink_resync}",
+            dl.name()
+        );
+    }
     println!(
         "{:>5} {:>9} {:>9} {:>7} {:>6} {:>8} {:>9} {:>10} {:>9} {:>17}",
         "round", "selected", "done", "drop", "late", "compl", "αmass", "wireKB", "p95lat",
         "rate min/avg/max"
     );
     let mut wire_total = 0usize;
+    let mut downlink_total = 0usize;
     let mut violations = 0usize;
     for round in 0..rounds {
-        let spec = RoundSpec {
+        let mut spec = RoundSpec {
             round: round as u64,
             local_steps: 1,
             lr: 0.5,
@@ -291,9 +314,16 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
             rate_override: None,
             telemetry: Some(&collector),
             client_records: ClientRecords::Full,
+            downlink: None,
         };
+        if let Some(dl) = &downlink_codec {
+            spec = spec.with_downlink(
+                DownlinkSpec::new(dl.as_ref(), downlink_rate).with_resync_every(downlink_resync),
+            );
+        }
         let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
         wire_total += rep.wire_bytes;
+        downlink_total += rep.downlink_bytes;
         violations += rep.budget_violations;
         if collector.is_enabled() {
             let events = collector.drain();
@@ -324,6 +354,18 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
             rep.channel.mean_rate,
             rep.channel.max_rate,
         );
+        if downlink_codec.is_some() {
+            // Broadcasts run sequentially on the coordinator, so every
+            // figure here is bit-identical for any worker/shard count —
+            // CI diffs this line across topologies.
+            println!(
+                "      downlink: {:>10.1} KB  {:>12} bits  {:>6} resyncs  bcast dist {:.3e}",
+                rep.downlink_bytes as f64 / 1e3,
+                rep.downlink_bits,
+                rep.resyncs,
+                rep.broadcast_distortion,
+            );
+        }
         if hetero && round == 0 {
             // Sanity surface for the heterogeneous preset: the allocation
             // must actually be rate-diverse and every coded message must
@@ -384,11 +426,16 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
     }
     let eval = trainer.evaluate(&w, &test);
     println!(
-        "\nfinal: acc {:.4}  loss {:.4}  virtual time {:.2}s  wire {:.2} MB  budget violations {violations}",
+        "\nfinal: acc {:.4}  loss {:.4}  virtual time {:.2}s  wire {:.2} MB  budget violations {violations}{}",
         eval.accuracy,
         eval.loss,
         clock.now(),
         wire_total as f64 / 1e6,
+        if downlink_codec.is_some() {
+            format!("  downlink {:.2} MB", downlink_total as f64 / 1e6)
+        } else {
+            String::new()
+        },
     );
     Ok(())
 }

@@ -91,6 +91,17 @@ pub fn span_to_json(ev: &SpanEvent) -> Json {
             d.push("decode_secs", Json::num(decode_secs));
             d.push("fold_secs", Json::num(fold_secs));
         }
+        SpanData::Broadcast { assigned_bits, achieved_bits, wire_bytes, ref_round } => {
+            d.push("assigned_bits", Json::num(assigned_bits as f64));
+            d.push("achieved_bits", Json::num(achieved_bits as f64));
+            d.push("wire_bytes", Json::num(wire_bytes as f64));
+            d.push("ref_round", Json::num(ref_round as f64));
+        }
+        SpanData::StaleSync { staleness, bits, wire_bytes } => {
+            d.push("staleness", Json::num(staleness as f64));
+            d.push("bits", Json::num(bits as f64));
+            d.push("wire_bytes", Json::num(wire_bytes as f64));
+        }
     }
     o.push("data", d);
     o
@@ -120,6 +131,10 @@ pub fn round_to_json(s: &RoundSummary, dropped_events: u64) -> Json {
     o.push("decode_secs", Json::num(s.decode_secs));
     o.push("fold_secs", Json::num(s.fold_secs));
     o.push("rate_alloc_secs", Json::num(s.rate_alloc_secs));
+    o.push("downlink_bytes", Json::num(s.downlink_bytes as f64));
+    o.push("downlink_bits", Json::num(s.downlink_bits as f64));
+    o.push("resyncs", Json::num(s.resyncs as f64));
+    o.push("broadcast_secs", Json::num(s.broadcast_secs));
     o.push("shards", Json::num(s.shards as f64));
     o.push("virt_start_s", Json::num(s.virt_start_s));
     o.push("dropped_events", Json::num(dropped_events as f64));

@@ -58,6 +58,14 @@ pub enum SpanKind {
     /// One aggregation shard's whole-round fold summary (round-scoped,
     /// one span per shard per round, recorded in ascending shard order).
     ShardFold,
+    /// Downlink broadcast of one client's compressed global-model delta
+    /// (coordinator thread). Appended after `ShardFold` so the drain
+    /// sort order of pre-downlink traces is unchanged.
+    Broadcast,
+    /// Full-model downlink resync for a stale or first-contact client
+    /// (coordinator thread; a client gets `Broadcast` *or* `StaleSync`
+    /// per downlink round, never both).
+    StaleSync,
 }
 
 impl SpanKind {
@@ -71,6 +79,8 @@ impl SpanKind {
             SpanKind::Fold => "fold",
             SpanKind::RateAlloc => "rate_alloc",
             SpanKind::ShardFold => "shard_fold",
+            SpanKind::Broadcast => "broadcast",
+            SpanKind::StaleSync => "stale_sync",
         }
     }
 }
@@ -118,6 +128,13 @@ pub enum SpanData {
         decode_secs: f64,
         fold_secs: f64,
     },
+    /// Downlink delta broadcast: the budget assigned (⌊R_dl·m⌋), exact
+    /// coded bits achieved, serialized frame bytes, and the reference
+    /// round the delta was coded against.
+    Broadcast { assigned_bits: u64, achieved_bits: u64, wire_bytes: u64, ref_round: u64 },
+    /// Full-model downlink resync: how many rounds the client's
+    /// reference lagged, raw payload bits (32·m), and frame bytes.
+    StaleSync { staleness: u64, bits: u64, wire_bytes: u64 },
 }
 
 /// One recorded span. `user` is [`SpanEvent::ROUND_SCOPED`] for events
@@ -365,12 +382,14 @@ impl Collector {
     }
 
     /// Capacity sized for per-round drains over cohorts of `n` clients:
-    /// ≈5 client spans each, one `shard_fold` span per aggregation shard
+    /// ≈5 uplink spans plus one downlink `broadcast`/`stale_sync` span
+    /// each, one `shard_fold` span per aggregation shard
     /// (≤ `fleet::MAX_SHARDS`), plus round-scoped headroom — a traced
-    /// round at any legal shard count fits without dropping events.
+    /// bidirectional round at any legal shard count fits without
+    /// dropping events.
     pub fn for_cohort(n: usize) -> Self {
         Self::new(
-            n.saturating_mul(6).saturating_add(crate::fleet::MAX_SHARDS).saturating_add(64),
+            n.saturating_mul(8).saturating_add(crate::fleet::MAX_SHARDS).saturating_add(64),
         )
     }
 

@@ -52,6 +52,16 @@ pub struct RoundSummary {
     pub decode_secs: f64,
     pub fold_secs: f64,
     pub rate_alloc_secs: f64,
+    /// Σ serialized downlink frame bytes over broadcast + stale-sync
+    /// spans (0 when the round ran uplink-only).
+    pub downlink_bytes: u64,
+    /// Σ exact coded downlink payload bits (delta broadcasts + the raw
+    /// 32·m bits of full-model resyncs).
+    pub downlink_bits: u64,
+    /// Full-model resyncs sent (= `stale_sync` spans).
+    pub resyncs: usize,
+    /// Σ wall seconds spent encoding downlink broadcasts.
+    pub broadcast_secs: f64,
     /// Aggregation shards that participated (= `shard_fold` spans).
     pub shards: usize,
     /// Virtual-clock time at round start (simulated seconds).
@@ -109,6 +119,17 @@ impl RoundSummary {
             SpanData::ShardFold { .. } => {
                 self.shards += 1;
             }
+            SpanData::Broadcast { achieved_bits, wire_bytes, .. } => {
+                self.downlink_bytes += wire_bytes;
+                self.downlink_bits += achieved_bits;
+                self.broadcast_secs += ev.wall_dur_s;
+            }
+            SpanData::StaleSync { bits, wire_bytes, .. } => {
+                self.downlink_bytes += wire_bytes;
+                self.downlink_bits += bits;
+                self.resyncs += 1;
+                self.broadcast_secs += ev.wall_dur_s;
+            }
         }
     }
 }
@@ -161,6 +182,10 @@ const SUMMARY_COLUMNS: &[SummaryColumn] = &[
     ("decode_secs", |s| s.decode_secs),
     ("fold_secs", |s| s.fold_secs),
     ("rate_alloc_secs", |s| s.rate_alloc_secs),
+    ("downlink_bytes", |s| s.downlink_bytes as f64),
+    ("downlink_bits", |s| s.downlink_bits as f64),
+    ("resyncs", |s| s.resyncs as f64),
+    ("broadcast_secs", |s| s.broadcast_secs),
     ("shards", |s| s.shards as f64),
     ("virt_start_s", |s| s.virt_start_s),
 ];
@@ -314,6 +339,27 @@ mod tests {
             },
             ..SpanEvent::default()
         });
+        events.push(SpanEvent {
+            kind: SpanKind::Broadcast,
+            round: 0,
+            user: 3,
+            wall_dur_s: 0.0008,
+            data: SpanData::Broadcast {
+                assigned_bits: 200,
+                achieved_bits: 190,
+                wire_bytes: 64,
+                ref_round: 0,
+            },
+            ..SpanEvent::default()
+        });
+        events.push(SpanEvent {
+            kind: SpanKind::StaleSync,
+            round: 0,
+            user: 7,
+            wall_dur_s: 0.0002,
+            data: SpanData::StaleSync { staleness: 1, bits: 3200, wire_bytes: 440 },
+            ..SpanEvent::default()
+        });
         events.extend(client_events(1, 3, true));
 
         let rounds = summarize(&events);
@@ -337,9 +383,14 @@ mod tests {
         assert!(r0.rate_alloc_secs > 0.0);
         assert_eq!(r0.shards, 1, "one shard_fold span = one shard");
         assert!((r0.fold_secs - 0.001).abs() < 1e-12, "shard totals must not double-count");
+        assert_eq!(r0.downlink_bytes, 504, "broadcast + stale_sync frame bytes");
+        assert_eq!(r0.downlink_bits, 3390, "delta bits + resync bits");
+        assert_eq!(r0.resyncs, 1);
+        assert!((r0.broadcast_secs - 0.001).abs() < 1e-12);
         assert_eq!(rounds[1].round, 1);
         assert_eq!(rounds[1].clients, 1);
         assert_eq!(rounds[1].shards, 0);
+        assert_eq!(rounds[1].downlink_bytes, 0, "uplink-only round has no downlink traffic");
     }
 
     #[test]

@@ -1,0 +1,263 @@
+//! Integration: the coded downlink against real fleet rounds.
+//!
+//! Acceptance surface for the broadcast subsystem:
+//! (a) a lossless `identity` downlink reproduces the uplink-only run's
+//!     weights bit-for-bit;
+//! (b) a lossy broadcast with error feedback is bit-identical across
+//!     worker counts {1, 8} × shard counts {1, 4}, traced and untraced;
+//! (c) a client that missed k rounds gets its delta coded against its
+//!     actual stale reference, resyncing when the staleness bound trips;
+//! (d) the report's downlink byte/bit/resync accounting reconciles
+//!     exactly with the telemetry span sums and the round summary.
+
+use std::collections::BTreeMap;
+
+use uveqfed::data::{partition, Dataset, PartitionScheme, SynthMnist};
+use uveqfed::fl::{NativeTrainer, Trainer};
+use uveqfed::fleet::{
+    DownlinkSpec, FleetDriver, FleetRoundReport, RoundSpec, Scenario, ShardPool, VirtualClock,
+};
+use uveqfed::models::LogReg;
+use uveqfed::quantizer::{self, UpdateCodec};
+use uveqfed::telemetry::{summarize, Collector, SpanData, SpanEvent, SpanKind};
+
+fn setup(k: usize, per: usize, seed: u64) -> (Vec<Dataset>, NativeTrainer<LogReg>) {
+    let gen = SynthMnist::new(seed);
+    let ds = gen.dataset(k * per);
+    let shards = partition(&ds, k, per, PartitionScheme::Iid, seed);
+    let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
+    (shards, trainer)
+}
+
+fn spec<'a>(
+    round: u64,
+    trainer: &'a dyn Trainer,
+    codec: &'a dyn UpdateCodec,
+) -> RoundSpec<'a> {
+    RoundSpec::new(round, 1, 0.5, 0, trainer, codec)
+}
+
+fn downlink_spans(events: &[SpanEvent]) -> Vec<&SpanEvent> {
+    events
+        .iter()
+        .filter(|e| matches!(e.kind, SpanKind::Broadcast | SpanKind::StaleSync))
+        .collect()
+}
+
+/// (a) The identity downlink ships the exact model every round, so the
+/// run must be indistinguishable from the classic perfect downlink.
+#[test]
+fn lossless_downlink_reproduces_the_uplink_only_run_bit_for_bit() {
+    let (shards, trainer) = setup(8, 25, 41);
+    let pool = ShardPool::new(&shards);
+    let uplink = quantizer::make("uveqfed-l2").unwrap();
+    let identity = quantizer::make("identity").unwrap();
+    let run = |downlink: bool| {
+        let driver = FleetDriver::new(11, 2.0, 4, Scenario::sampled(3));
+        let mut clock = VirtualClock::new();
+        let mut w = trainer.init_params(9);
+        let mut last = FleetRoundReport::default();
+        for round in 0..5u64 {
+            let mut s = spec(round, &trainer, uplink.as_ref());
+            if downlink {
+                s = s.with_downlink(DownlinkSpec::new(identity.as_ref(), 2.0));
+            }
+            last = driver.run_round(&s, &mut w, &pool, &mut clock);
+        }
+        (w, last)
+    };
+    let (w_plain, rep_plain) = run(false);
+    let (w_lossless, rep_lossless) = run(true);
+    assert_eq!(w_plain, w_lossless, "identity downlink must be transparent");
+    // The lossless run still pays for the broadcast on the wire: every
+    // arrival is a full resync of 32·m bits.
+    assert_eq!(rep_plain.downlink_bytes, 0);
+    assert_eq!(rep_lossless.resyncs, rep_lossless.aggregated + rep_lossless.budget_violations);
+    assert_eq!(
+        rep_lossless.downlink_bits,
+        rep_lossless.resyncs * 32 * w_lossless.len()
+    );
+    assert_eq!(rep_lossless.broadcast_distortion, 0.0);
+}
+
+/// (b) The lossy broadcast path (EF state, dither, reconstruction) is a
+/// pure function of the round inputs: any worker/shard topology, traced
+/// or untraced, yields bit-identical weights and downlink accounting.
+#[test]
+fn lossy_downlink_is_bit_identical_across_topologies_and_tracing() {
+    let (shards, trainer) = setup(10, 20, 42);
+    let pool = ShardPool::new(&shards);
+    let uplink = quantizer::make("uveqfed-l2").unwrap();
+    let dl = quantizer::make("uveqfed-l2").unwrap();
+    let scenario = Scenario::stragglers(5, 4.0);
+    let run = |workers: usize, n_shards: usize, traced: bool| {
+        let collector =
+            if traced { Collector::with_default_capacity() } else { Collector::disabled() };
+        let driver =
+            FleetDriver::new(29, 2.0, workers, scenario.clone()).with_shards(n_shards);
+        let mut clock = VirtualClock::new();
+        let mut w = trainer.init_params(7);
+        let mut acct = Vec::new();
+        for round in 0..3u64 {
+            let s = spec(round, &trainer, uplink.as_ref())
+                .with_downlink(DownlinkSpec::new(dl.as_ref(), 1.5).with_resync_every(4))
+                .with_telemetry(&collector);
+            let rep = driver.run_round(&s, &mut w, &pool, &mut clock);
+            acct.push((
+                rep.downlink_bytes,
+                rep.downlink_bits,
+                rep.resyncs,
+                rep.broadcast_distortion.to_bits(),
+            ));
+            if traced {
+                collector.drain();
+            }
+        }
+        (w, acct)
+    };
+    let (w_base, acct_base) = run(1, 1, false);
+    assert!(acct_base.iter().any(|&(bytes, ..)| bytes > 0), "downlink never engaged");
+    for workers in [1usize, 8] {
+        for n_shards in [1usize, 4] {
+            for traced in [false, true] {
+                let (w_run, acct) = run(workers, n_shards, traced);
+                assert_eq!(
+                    w_base, w_run,
+                    "weights diverged at workers={workers} shards={n_shards} traced={traced}"
+                );
+                assert_eq!(
+                    acct_base, acct,
+                    "accounting diverged at workers={workers} shards={n_shards} traced={traced}"
+                );
+            }
+        }
+    }
+}
+
+/// (c) Stale-reference tracking, end to end: replay the downlink spans
+/// of a cohort-sampled run and check every broadcast against the
+/// client's actual previous contact — deltas reference the (possibly
+/// k-rounds-stale) reference round, and a resync fires exactly when the
+/// staleness bound trips or on first contact.
+#[test]
+fn stale_clients_resync_against_their_actual_reference() {
+    const RESYNC_EVERY: u64 = 3;
+    let (shards, trainer) = setup(8, 20, 43);
+    let pool = ShardPool::new(&shards);
+    let uplink = quantizer::make("qsgd").unwrap();
+    let dl = quantizer::make("uveqfed-l2").unwrap();
+    let driver = FleetDriver::new(31, 2.0, 2, Scenario::sampled(3));
+    let collector = Collector::with_default_capacity();
+    let mut clock = VirtualClock::new();
+    let mut w = trainer.init_params(3);
+
+    let mut last_contact: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut stale_deltas = 0usize;
+    let mut bound_resyncs = 0usize;
+    for round in 0..16u64 {
+        let s = spec(round, &trainer, uplink.as_ref())
+            .with_downlink(DownlinkSpec::new(dl.as_ref(), 2.0).with_resync_every(RESYNC_EVERY))
+            .with_telemetry(&collector);
+        let rep = driver.run_round(&s, &mut w, &pool, &mut clock);
+        let events = collector.drain();
+        let spans = downlink_spans(&events);
+        assert_eq!(spans.len(), 3, "one downlink span per arrival");
+        for ev in spans {
+            match (last_contact.get(&ev.user), ev.kind, ev.data) {
+                // First contact must be a resync with staleness round+1.
+                (None, SpanKind::StaleSync, SpanData::StaleSync { staleness, .. }) => {
+                    assert_eq!(staleness, round + 1, "user {}", ev.user);
+                }
+                (None, kind, _) => panic!("user {} first contact got {kind:?}", ev.user),
+                // Within the bound: a delta against the actual previous
+                // contact round, however many rounds stale.
+                (Some(&prev), SpanKind::Broadcast, SpanData::Broadcast { ref_round, .. }) => {
+                    assert!(round - prev <= RESYNC_EVERY, "user {} overdue", ev.user);
+                    assert_eq!(ref_round, prev, "user {} wrong reference", ev.user);
+                    if round - prev > 1 {
+                        stale_deltas += 1;
+                    }
+                }
+                // Beyond the bound: a full resync reporting the true gap.
+                (Some(&prev), SpanKind::StaleSync, SpanData::StaleSync { staleness, .. }) => {
+                    assert!(round - prev > RESYNC_EVERY, "user {} resynced early", ev.user);
+                    assert_eq!(staleness, round - prev, "user {}", ev.user);
+                    bound_resyncs += 1;
+                }
+                (_, kind, data) => panic!("user {}: {kind:?} carries {data:?}", ev.user),
+            }
+            last_contact.insert(ev.user, round);
+            // The driver's planner agrees with the span-replayed table.
+            assert_eq!(driver.broadcast_planner().ref_round(ev.user), Some(round));
+        }
+        assert!(rep.resyncs <= 3);
+    }
+    assert!(stale_deltas > 0, "no delta was ever coded against a stale reference");
+    assert!(bound_resyncs > 0, "the staleness bound never tripped");
+}
+
+/// (d) Exact reconciliation: report downlink accounting == span sums ==
+/// summarized round line, per round.
+#[test]
+fn downlink_accounting_reconciles_exactly_with_telemetry() {
+    let (shards, trainer) = setup(6, 25, 44);
+    let pool = ShardPool::new(&shards);
+    let uplink = quantizer::make("uveqfed-l2").unwrap();
+    let dl = quantizer::make("uveqfed-l2").unwrap();
+    let driver = FleetDriver::new(37, 2.0, 3, Scenario::full()).with_shards(2);
+    let collector = Collector::for_cohort(6);
+    let mut clock = VirtualClock::new();
+    let mut w = trainer.init_params(5);
+
+    for round in 0..3u64 {
+        let s = spec(round, &trainer, uplink.as_ref())
+            .with_downlink(DownlinkSpec::new(dl.as_ref(), 2.0))
+            .with_telemetry(&collector);
+        let rep = driver.run_round(&s, &mut w, &pool, &mut clock);
+        let events = collector.drain();
+        assert_eq!(collector.take_dropped(), 0, "for_cohort must fit downlink spans");
+
+        let mut bytes = 0u64;
+        let mut bits = 0u64;
+        let mut resyncs = 0usize;
+        for ev in downlink_spans(&events) {
+            match ev.data {
+                SpanData::Broadcast { assigned_bits, achieved_bits, wire_bytes, .. } => {
+                    assert!(achieved_bits <= assigned_bits, "broadcast blew its budget");
+                    bytes += wire_bytes;
+                    bits += achieved_bits;
+                }
+                SpanData::StaleSync { bits: b, wire_bytes, .. } => {
+                    bytes += wire_bytes;
+                    bits += b;
+                    resyncs += 1;
+                }
+                other => panic!("downlink span carries {other:?}"),
+            }
+        }
+        assert_eq!(bytes, rep.downlink_bytes as u64, "round {round} byte sum");
+        assert_eq!(bits, rep.downlink_bits as u64, "round {round} bit sum");
+        assert_eq!(resyncs, rep.resyncs, "round {round} resync count");
+        assert_eq!(
+            downlink_spans(&events).len(),
+            rep.aggregated + rep.budget_violations,
+            "one downlink span per arrival"
+        );
+
+        // The summarized round line folds the same totals.
+        let rounds = summarize(&events);
+        assert_eq!(rounds.len(), 1);
+        let sum = rounds[0];
+        assert_eq!(sum.downlink_bytes, rep.downlink_bytes as u64);
+        assert_eq!(sum.downlink_bits, rep.downlink_bits as u64);
+        assert_eq!(sum.resyncs, rep.resyncs);
+        assert!(sum.broadcast_secs >= 0.0);
+        // Round 0 is all first-contact resyncs; later rounds all deltas.
+        if round == 0 {
+            assert_eq!(rep.resyncs, rep.aggregated);
+        } else {
+            assert_eq!(rep.resyncs, 0);
+            assert!(rep.broadcast_distortion > 0.0);
+        }
+    }
+}

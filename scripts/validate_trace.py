@@ -14,11 +14,17 @@ Checks, exiting non-zero on the first violation:
   per-kind ``data`` fields;
 * per (round, user): a ``fold`` span implies the full lifecycle
   (``client_train``, ``encode``, ``transmit``, ``decode``) is present,
-  and every encode satisfies ``achieved_bits <= assigned_bits``;
+  and every encode — uplink ``encode`` and downlink ``broadcast`` alike —
+  satisfies ``achieved_bits <= assigned_bits``;
 * per round line: the aggregates reconcile exactly with the span lines of
   that round (clients / aggregated / rejected counts; assigned, achieved,
   uplink and wire sums — rejected transmits cost wire bytes but are never
   metered as uplink bits; alpha_sum within 1e-9 of the fold-span sum);
+* the downlink reconciles two ways: the round line's ``downlink_bytes`` /
+  ``downlink_bits`` / ``resyncs`` equal the sums over that round's
+  ``broadcast`` + ``stale_sync`` spans, and every downlink span lands in
+  a round whose line carries matching totals (a downlink-off round must
+  report all-zero downlink fields and own no downlink spans);
 * per (round, shard): at most one ``shard_fold`` span, the round line's
   ``shards`` field equals the shard-span count, and the per-shard
   folds / chunks / entries totals reconcile exactly — in both directions —
@@ -47,6 +53,8 @@ DATA_FIELDS = {
     "fold": ("chunks", "entries", "alpha", "shard"),
     "rate_alloc": ("clients", "capacity_mass", "assigned_mass"),
     "shard_fold": ("shard", "folds", "chunks", "entries", "decode_secs", "fold_secs"),
+    "broadcast": ("assigned_bits", "achieved_bits", "wire_bytes", "ref_round"),
+    "stale_sync": ("staleness", "bits", "wire_bytes"),
 }
 ROUND_SCOPED = ("rate_alloc", "shard_fold")
 LIFECYCLE = ("client_train", "encode", "transmit", "decode", "fold")
@@ -72,6 +80,9 @@ def blank_round_tally():
         "uplink_bits": 0,
         "wire_bytes": 0,
         "alpha_sum": 0.0,
+        "downlink_bytes": 0,
+        "downlink_bits": 0,
+        "resyncs": 0,
         "kinds_by_user": {},
         "fold_by_shard": {},
         "shard_lines": {},
@@ -123,6 +134,25 @@ def check_span(obj, lineno, tally):
         by["folds"] += 1
         by["chunks"] += data["chunks"]
         by["entries"] += data["entries"]
+    elif kind == "broadcast":
+        require(
+            data["achieved_bits"] <= data["assigned_bits"],
+            lineno,
+            f"user {user}: broadcast achieved {data['achieved_bits']} > "
+            f"assigned {data['assigned_bits']}",
+        )
+        require(
+            data["ref_round"] <= obj["round"],
+            lineno,
+            f"user {user}: broadcast references future round {data['ref_round']}",
+        )
+        r["downlink_bytes"] += data["wire_bytes"]
+        r["downlink_bits"] += data["achieved_bits"]
+    elif kind == "stale_sync":
+        require(data["staleness"] > 0, lineno, f"user {user}: resync with zero staleness")
+        r["downlink_bytes"] += data["wire_bytes"]
+        r["downlink_bits"] += data["bits"]
+        r["resyncs"] += 1
     elif kind == "shard_fold":
         shard = data["shard"]
         require(
@@ -149,6 +179,9 @@ def check_round_line(obj, lineno, tally):
         "achieved_bits",
         "uplink_bits",
         "wire_bytes",
+        "downlink_bytes",
+        "downlink_bits",
+        "resyncs",
     ):
         require(field in obj, lineno, f"round line missing '{field}'")
         require(
