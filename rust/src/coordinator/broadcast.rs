@@ -9,6 +9,15 @@
 //! coordinator thread in ascending arrival order, so the planner's lock
 //! is uncontended; it exists only so `run_round(&self)` can mutate
 //! cross-round downlink state, mirroring the `Channel` Markov cache.
+//!
+//! Lock-poisoning policy (DESIGN.md §13): unlike the telemetry collector
+//! — which *recovers* a poisoned lock because observability state is
+//! droppable — this table **propagates** poisoning. A panic mid-broadcast
+//! can leave a client's stale reference or error-feedback vector half
+//! updated; silently recovering would desynchronize the server's idea of
+//! what the client holds and corrupt every later delta against it. The
+//! `expect`s below are therefore deliberate: cross-round protocol state
+//! is only trustworthy if no writer ever died holding the lock.
 
 use crate::fleet::channel::Channel;
 use crate::fleet::downlink::{BroadcastOutcome, DownlinkSpec, SyncTable};
@@ -58,15 +67,10 @@ impl BroadcastPlanner {
         w: &[f32],
     ) -> BroadcastOutcome {
         let rate = self.rate_for(spec, user, round);
-        self.table.lock().expect("downlink sync table poisoned").broadcast(
-            spec.codec,
-            rate,
-            spec.resync_every,
-            seed,
-            round,
-            user,
-            w,
-        )
+        self.table
+            .lock()
+            .expect("downlink sync table poisoned mid-broadcast (DESIGN.md §13)")
+            .broadcast(spec.codec, rate, spec.resync_every, seed, round, user, w)
     }
 
     /// Number of clients with tracked downlink state.

@@ -5,7 +5,7 @@
 //! codes here encode *positive* integers (≥ 1); signed lattice coordinates
 //! go through zig-zag + 1.
 
-use super::{unzigzag, zigzag, BitReader, BitWriter, IntCoder};
+use super::{unzigzag, zigzag, BitReader, BitWriter, CodeError, IntCoder};
 
 /// Elias gamma: unary length prefix + binary remainder. Optimal for
 /// P(x) ∝ 2^{-2 log x} style heavy-tail distributions.
@@ -36,13 +36,15 @@ impl EliasGamma {
         w.push_bits(x, n + 1); // leading 1 + n remainder bits
     }
 
-    pub fn get(r: &mut BitReader) -> u64 {
+    pub fn get(r: &mut BitReader) -> Result<u64, CodeError> {
         let mut n = 0u32;
         while !r.read_bit() {
             n += 1;
-            assert!(n < 64, "corrupt gamma code");
+            if n >= 64 {
+                return Err(CodeError::IntOverflow { coder: "elias-gamma" });
+            }
         }
-        (1u64 << n) | r.read_bits(n)
+        Ok((1u64 << n) | r.read_bits(n))
     }
 }
 
@@ -54,9 +56,12 @@ impl EliasDelta {
         w.push_bits(x & !(1u64 << n), n); // remainder without leading 1
     }
 
-    pub fn get(r: &mut BitReader) -> u64 {
-        let len = EliasGamma::get(r) as u32 - 1;
-        (1u64 << len) | r.read_bits(len)
+    pub fn get(r: &mut BitReader) -> Result<u64, CodeError> {
+        let len = EliasGamma::get(r)? as u32 - 1;
+        if len >= 64 {
+            return Err(CodeError::IntOverflow { coder: "elias-delta" });
+        }
+        Ok((1u64 << len) | r.read_bits(len))
     }
 }
 
@@ -77,11 +82,14 @@ impl EliasOmega {
         w.push_bit(false); // terminator
     }
 
-    pub fn get(r: &mut BitReader) -> u64 {
+    pub fn get(r: &mut BitReader) -> Result<u64, CodeError> {
         let mut n = 1u64;
         loop {
             if !r.read_bit() {
-                return n;
+                return Ok(n);
+            }
+            if n >= 64 {
+                return Err(CodeError::IntOverflow { coder: "elias-omega" });
             }
             // The bit we just read is the leading 1 of a (n+1)-bit group.
             let rest = r.read_bits(n as u32);
@@ -98,8 +106,8 @@ macro_rules! impl_int_coder {
                     <$t>::put(w, zigzag(x) + 1);
                 }
             }
-            fn decode(&self, n: usize, r: &mut BitReader) -> Vec<i64> {
-                (0..n).map(|_| unzigzag(<$t>::get(r) - 1)).collect()
+            fn decode(&self, n: usize, r: &mut BitReader) -> Result<Vec<i64>, CodeError> {
+                (0..n).map(|_| <$t>::get(r).map(|v| unzigzag(v - 1))).collect()
             }
             fn name(&self) -> &'static str {
                 $name
@@ -136,17 +144,47 @@ mod tests {
 
     #[test]
     fn gamma_roundtrip() {
-        roundtrip_one(EliasGamma::put, EliasGamma::get);
+        roundtrip_one(EliasGamma::put, |r| EliasGamma::get(r).unwrap());
     }
 
     #[test]
     fn delta_roundtrip() {
-        roundtrip_one(EliasDelta::put, EliasDelta::get);
+        roundtrip_one(EliasDelta::put, |r| EliasDelta::get(r).unwrap());
     }
 
     #[test]
     fn omega_roundtrip() {
-        roundtrip_one(EliasOmega::put, EliasOmega::get);
+        roundtrip_one(EliasOmega::put, |r| EliasOmega::get(r).unwrap());
+    }
+
+    #[test]
+    fn corrupt_streams_return_err_not_panic() {
+        // An empty buffer reads as an endless run of zero bits: the gamma
+        // unary prefix never terminates and must surface as a typed error.
+        let mut r = BitReader::new(&[]);
+        assert_eq!(
+            EliasGamma::get(&mut r),
+            Err(CodeError::IntOverflow { coder: "elias-gamma" })
+        );
+        // Delta with a gamma-coded length claiming a >64-bit remainder.
+        let mut w = BitWriter::new();
+        EliasGamma::put(&mut w, 70); // delta len = 69 bits
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(
+            EliasDelta::get(&mut r),
+            Err(CodeError::IntOverflow { coder: "elias-delta" })
+        );
+        // Omega over all-ones bytes: the recursive groups double past 64.
+        let ones = [0xFFu8; 32];
+        let mut r = BitReader::new(&ones);
+        assert_eq!(
+            EliasOmega::get(&mut r),
+            Err(CodeError::IntOverflow { coder: "elias-omega" })
+        );
+        // The IntCoder batch path propagates the same error.
+        let mut r = BitReader::new(&[]);
+        assert!(EliasGamma.decode(5, &mut r).is_err());
     }
 
     #[test]
@@ -167,7 +205,7 @@ mod tests {
             coder.encode(&xs, &mut w);
             let bytes = w.into_bytes();
             let mut r = BitReader::new(&bytes);
-            assert_eq!(coder.decode(xs.len(), &mut r), xs, "{}", coder.name());
+            assert_eq!(coder.decode(xs.len(), &mut r).unwrap(), xs, "{}", coder.name());
         }
     }
 

@@ -9,7 +9,7 @@
 //! The codebook is serialized as (symbol, code-length) pairs; canonical
 //! code assignment means lengths alone reconstruct the code.
 
-use super::{unzigzag, zigzag, BitReader, BitWriter, IntCoder};
+use super::{unzigzag, zigzag, BitReader, BitWriter, CodeError, IntCoder};
 use std::collections::HashMap;
 
 /// Maximum admissible code length; streams here have ≤ a few thousand
@@ -64,12 +64,15 @@ fn code_lengths(counts: &[(i64, usize)]) -> Vec<(i64, u8)> {
     out
 }
 
-/// Canonical code assignment from (symbol, length) pairs.
+/// Canonical code assignment from (symbol, length) pairs. Lengths must be
+/// in `1..=MAX_LEN` (the decoder validates wire lengths before calling);
+/// the accumulator is u64 so even a maximal `MAX_LEN`-bit step cannot
+/// overflow the shift.
 fn canonical_codes(lengths: &[(i64, u8)]) -> Vec<(i64, u8, u32)> {
     let mut sorted: Vec<(i64, u8)> = lengths.to_vec();
     sorted.sort_by_key(|&(s, l)| (l, s));
     let mut codes = Vec::with_capacity(sorted.len());
-    let mut code: u32 = 0;
+    let mut code: u64 = 0;
     let mut prev_len: u8 = 0;
     for &(sym, len) in &sorted {
         if prev_len != 0 {
@@ -77,7 +80,7 @@ fn canonical_codes(lengths: &[(i64, u8)]) -> Vec<(i64, u8, u32)> {
         } else {
             code <<= len - prev_len;
         }
-        codes.push((sym, len, code));
+        codes.push((sym, len, code as u32));
         prev_len = len;
     }
     codes
@@ -138,16 +141,28 @@ impl IntCoder for HuffmanCoder {
         }
     }
 
-    fn decode(&self, n: usize, r: &mut BitReader) -> Vec<i64> {
+    fn decode(&self, n: usize, r: &mut BitReader) -> Result<Vec<i64>, CodeError> {
         let n_sym = r.read_u32() as usize;
         if n_sym == 0 {
-            assert_eq!(n, 0);
-            return Vec::new();
+            if n != 0 {
+                return Err(CodeError::BadCount { declared: 0, capacity: n });
+            }
+            return Ok(Vec::new());
+        }
+        // Each codebook entry costs 40 bits on the wire, so a declared
+        // count the remaining stream cannot hold is corruption — reject
+        // before allocating for it.
+        let capacity = r.remaining_bits() / 40;
+        if n_sym > capacity {
+            return Err(CodeError::BadCount { declared: n_sym, capacity });
         }
         let mut entries: Vec<(i64, u8)> = Vec::with_capacity(n_sym);
         for _ in 0..n_sym {
             let sym = unzigzag(r.read_u32() as u64);
             let len = r.read_bits(8) as u8;
+            if len == 0 || len as usize > MAX_LEN {
+                return Err(CodeError::BadCodeLength { len: len as usize, max: MAX_LEN });
+            }
             entries.push((sym, len));
         }
         let codes = canonical_codes(&entries);
@@ -167,14 +182,16 @@ impl IntCoder for HuffmanCoder {
             loop {
                 code = (code << 1) | r.read_bit() as u32;
                 len += 1;
-                assert!(len <= MAX_LEN, "corrupt huffman stream");
+                if len > MAX_LEN {
+                    return Err(CodeError::BadCodeLength { len, max: MAX_LEN });
+                }
                 if let Ok(i) = by_len[len].binary_search_by_key(&code, |&(c, _)| c) {
                     out.push(by_len[len][i].1);
                     break;
                 }
             }
         }
-        out
+        Ok(out)
     }
 
     fn name(&self) -> &'static str {
@@ -195,7 +212,7 @@ mod tests {
         c.encode(&xs, &mut w);
         let bytes = w.into_bytes();
         let mut r = BitReader::new(&bytes);
-        assert_eq!(c.decode(xs.len(), &mut r), xs);
+        assert_eq!(c.decode(xs.len(), &mut r).unwrap(), xs);
     }
 
     #[test]
@@ -206,7 +223,7 @@ mod tests {
         c.encode(&xs, &mut w);
         let bytes = w.into_bytes();
         let mut r = BitReader::new(&bytes);
-        assert_eq!(c.decode(xs.len(), &mut r), xs);
+        assert_eq!(c.decode(xs.len(), &mut r).unwrap(), xs);
     }
 
     #[test]
@@ -219,7 +236,63 @@ mod tests {
         c.encode(&xs, &mut w);
         let bytes = w.into_bytes();
         let mut r = BitReader::new(&bytes);
-        assert_eq!(c.decode(xs.len(), &mut r), xs);
+        assert_eq!(c.decode(xs.len(), &mut r).unwrap(), xs);
+    }
+
+    #[test]
+    fn corrupt_codebooks_return_err_not_panic() {
+        // Declared symbol count far beyond the stream's physical capacity.
+        let mut w = BitWriter::new();
+        w.push_u32(u32::MAX);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert!(matches!(
+            HuffmanCoder.decode(4, &mut r),
+            Err(CodeError::BadCount { .. })
+        ));
+        // Empty codebook but a nonzero symbol request.
+        let mut w = BitWriter::new();
+        w.push_u32(0);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert!(matches!(
+            HuffmanCoder.decode(1, &mut r),
+            Err(CodeError::BadCount { declared: 0, capacity: 1 })
+        ));
+        // Codebook entry with an inadmissible code length.
+        for bad_len in [0u64, (MAX_LEN + 1) as u64] {
+            let mut w = BitWriter::new();
+            w.push_u32(1);
+            w.push_u32(zigzag(3) as u32);
+            w.push_bits(bad_len, 8);
+            w.push_u32(0); // padding so the count check passes
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            assert!(matches!(
+                HuffmanCoder.decode(1, &mut r),
+                Err(CodeError::BadCodeLength { .. })
+            ));
+        }
+        // Valid codebook, garbage payload that never matches a code: the
+        // bit-by-bit walk must stop at MAX_LEN with an error. A single
+        // 1-bit code for one symbol means a payload of zero bits decodes
+        // that symbol forever — instead corrupt the codebook to two
+        // entries of length 2 covering codes 00 and 01, then feed 1-bits.
+        let mut w = BitWriter::new();
+        w.push_u32(2);
+        w.push_u32(zigzag(1) as u32);
+        w.push_bits(2, 8);
+        w.push_u32(zigzag(2) as u32);
+        w.push_bits(2, 8);
+        for _ in 0..8 {
+            w.push_byte(0xFF); // payload bits that match neither code
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert!(matches!(
+            HuffmanCoder.decode(1, &mut r),
+            Err(CodeError::BadCodeLength { .. })
+        ));
     }
 
     #[test]

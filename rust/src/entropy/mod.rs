@@ -23,12 +23,46 @@ pub mod range;
 
 pub use bitio::{BitReader, BitWriter};
 
+/// Typed decode failure for the lossless coders. A corrupt or truncated
+/// stream surfaces as `Err` — never a panic — so transport layers can
+/// quarantine the payload and keep the round alive. Every variant is
+/// `Copy` so errors can ride on zero-alloc telemetry spans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodeError {
+    /// A length/magnitude prefix exceeds the 64-bit value range — the
+    /// signature of a corrupt unary/recursive length code.
+    IntOverflow { coder: &'static str },
+    /// A code length outside the canonical table's admissible range.
+    BadCodeLength { len: usize, max: usize },
+    /// A declared count exceeds what the remaining stream can hold.
+    BadCount { declared: usize, capacity: usize },
+}
+
+impl std::fmt::Display for CodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            CodeError::IntOverflow { coder } => {
+                write!(f, "corrupt {coder} stream: length prefix exceeds 64 bits")
+            }
+            CodeError::BadCodeLength { len, max } => {
+                write!(f, "corrupt code length {len} (admissible 1..={max})")
+            }
+            CodeError::BadCount { declared, capacity } => {
+                write!(f, "declared count {declared} exceeds stream capacity {capacity}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodeError {}
+
 /// Uniform interface so quantizer codecs can swap integer coders.
 pub trait IntCoder {
     /// Append the encoding of `xs` (signed integers) to `w`.
     fn encode(&self, xs: &[i64], w: &mut BitWriter);
-    /// Decode exactly `n` integers from `r`.
-    fn decode(&self, n: usize, r: &mut BitReader) -> Vec<i64>;
+    /// Decode exactly `n` integers from `r`. Corrupt streams return a
+    /// typed [`CodeError`]; they never panic.
+    fn decode(&self, n: usize, r: &mut BitReader) -> Result<Vec<i64>, CodeError>;
     /// Human-readable name for logs/benches.
     fn name(&self) -> &'static str;
 }

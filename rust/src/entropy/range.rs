@@ -22,7 +22,7 @@
 //! against. The two produce different byte streams (the fleet frame version
 //! was bumped accordingly) but must decode identical symbol sequences.
 
-use super::{unzigzag, zigzag, BitReader, BitWriter, IntCoder};
+use super::{unzigzag, zigzag, BitReader, BitWriter, CodeError, IntCoder};
 
 const PROB_BITS: u32 = 12;
 const PROB_ONE: u16 = 1 << PROB_BITS;
@@ -249,18 +249,20 @@ impl IntModel {
         }
     }
 
-    fn decode(&mut self, dec: &mut RangeDecoder) -> u64 {
+    fn decode(&mut self, dec: &mut RangeDecoder) -> Result<u64, CodeError> {
         let mut n = 0usize;
         while dec.decode_bit_with(&mut self.len_ctx[n.min(MAX_CTX - 1)]) {
             n += 1;
-            assert!(n < 64, "corrupt range-coded stream");
+            if n >= 64 {
+                return Err(CodeError::IntOverflow { coder: "adaptive-range" });
+            }
         }
         let mut x = 1u64;
         for i in (0..n).rev() {
             let bit = dec.decode_bit_with(&mut self.bit_ctx[i.min(MAX_CTX - 1)]);
             x = (x << 1) | bit as u64;
         }
-        x - 1
+        Ok(x - 1)
     }
 }
 
@@ -329,7 +331,7 @@ impl SymbolModel {
         }
     }
 
-    fn decode(&mut self, dec: &mut RangeDecoder) -> u64 {
+    fn decode(&mut self, dec: &mut RangeDecoder) -> Result<u64, CodeError> {
         let t = dec.decode_target(self.ctx.total);
         let mut cum = 0u32;
         let mut s = 0usize;
@@ -340,9 +342,9 @@ impl SymbolModel {
         dec.decode_update(cum, self.ctx.freq[s] as u32, self.ctx.total);
         self.ctx.update(s);
         if s == ESCAPE {
-            DIRECT_SYMS as u64 + self.esc.decode(dec)
+            Ok(DIRECT_SYMS as u64 + self.esc.decode(dec)?)
         } else {
-            s as u64
+            Ok(s as u64)
         }
     }
 }
@@ -386,22 +388,26 @@ impl<'a> SymbolDecoder<'a> {
         Self::new(&bytes[start..end], dims)
     }
 
-    /// Decode the next signed symbol.
-    pub fn next_symbol(&mut self) -> i64 {
+    /// Decode the next signed symbol. Corrupt escape codes surface as a
+    /// typed error instead of a panic.
+    pub fn next_symbol(&mut self) -> Result<i64, CodeError> {
         let d = self.i % self.models.len();
         self.i += 1;
-        unzigzag(self.models[d].decode(&mut self.dec))
+        Ok(unzigzag(self.models[d].decode(&mut self.dec)?))
     }
 
     /// Batched decode: fill `out` with the next `out.len()` signed symbols
     /// (allocation-free; the session hot paths call this once per chunk).
-    pub fn decode_into(&mut self, out: &mut [i64]) {
+    /// Stops at the first corrupt symbol and reports it — entries past the
+    /// failure point are left untouched.
+    pub fn decode_into(&mut self, out: &mut [i64]) -> Result<(), CodeError> {
         let dims = self.models.len();
         for o in out.iter_mut() {
             let d = self.i % dims;
             self.i += 1;
-            *o = unzigzag(self.models[d].decode(&mut self.dec));
+            *o = unzigzag(self.models[d].decode(&mut self.dec)?);
         }
+        Ok(())
     }
 }
 
@@ -447,13 +453,17 @@ impl IntCoder for AdaptiveRangeCoder {
         }
     }
 
-    fn decode(&self, n: usize, r: &mut BitReader) -> Vec<i64> {
-        let len = r.read_u32() as usize;
+    fn decode(&self, n: usize, r: &mut BitReader) -> Result<Vec<i64>, CodeError> {
+        // Clamp the declared payload length to the physically remaining
+        // bytes (mirrors `SymbolDecoder::from_embedded`): a corrupt length
+        // prefix must not drive a huge allocation, and the range decoder
+        // zero-fills past the end anyway.
+        let len = (r.read_u32() as usize).min(r.remaining_bits() / 8);
         let bytes: Vec<u8> = (0..len).map(|_| r.read_byte()).collect();
         let mut sd = SymbolDecoder::new(&bytes, self.dims);
         let mut out = vec![0i64; n];
-        sd.decode_into(&mut out);
-        out
+        sd.decode_into(&mut out)?;
+        Ok(out)
     }
 
     fn name(&self) -> &'static str {
@@ -498,13 +508,15 @@ impl IntCoder for BitwiseRangeCoder {
         }
     }
 
-    fn decode(&self, n: usize, r: &mut BitReader) -> Vec<i64> {
-        let len = r.read_u32() as usize;
+    fn decode(&self, n: usize, r: &mut BitReader) -> Result<Vec<i64>, CodeError> {
+        let len = (r.read_u32() as usize).min(r.remaining_bits() / 8);
         let bytes: Vec<u8> = (0..len).map(|_| r.read_byte()).collect();
         let mut dec = RangeDecoder::new(&bytes);
         let mut models: Vec<IntModel> =
             (0..self.dims).map(|_| IntModel::default()).collect();
-        (0..n).map(|i| unzigzag(models[i % self.dims].decode(&mut dec))).collect()
+        (0..n)
+            .map(|i| models[i % self.dims].decode(&mut dec).map(unzigzag))
+            .collect()
     }
 
     fn name(&self) -> &'static str {
@@ -525,7 +537,7 @@ mod tests {
         coder.encode(&xs, &mut w);
         let bytes = w.into_bytes();
         let mut r = BitReader::new(&bytes);
-        assert_eq!(coder.decode(xs.len(), &mut r), xs);
+        assert_eq!(coder.decode(xs.len(), &mut r).unwrap(), xs);
     }
 
     #[test]
@@ -542,7 +554,7 @@ mod tests {
         coder.encode(&xs, &mut w);
         let bytes = w.into_bytes();
         let mut r = BitReader::new(&bytes);
-        assert_eq!(coder.decode(xs.len(), &mut r), xs);
+        assert_eq!(coder.decode(xs.len(), &mut r).unwrap(), xs);
     }
 
     #[test]
@@ -566,7 +578,7 @@ mod tests {
             coder.encode(&xs, &mut w);
             let bytes = w.into_bytes();
             let mut r = BitReader::new(&bytes);
-            assert_eq!(coder.decode(xs.len(), &mut r), xs, "dims={dims}");
+            assert_eq!(coder.decode(xs.len(), &mut r).unwrap(), xs, "dims={dims}");
         }
     }
 
@@ -590,7 +602,7 @@ mod tests {
         // and must round-trip
         let bytes = w.into_bytes();
         let mut r = BitReader::new(&bytes);
-        assert_eq!(coder.decode(xs.len(), &mut r), xs);
+        assert_eq!(coder.decode(xs.len(), &mut r).unwrap(), xs);
     }
 
     #[test]
@@ -607,12 +619,13 @@ mod tests {
             let bytes = w.into_bytes();
             // batch path
             let mut r = BitReader::new(&bytes);
-            let batch = coder.decode(xs.len(), &mut r);
+            let batch = coder.decode(xs.len(), &mut r).unwrap();
             assert_eq!(batch, xs);
             // streaming path over the raw payload slice (after u32 len)
             let len = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
             let mut sd = SymbolDecoder::new(&bytes[4..4 + len], dims);
-            let streamed: Vec<i64> = (0..xs.len()).map(|_| sd.next_symbol()).collect();
+            let streamed: Vec<i64> =
+                (0..xs.len()).map(|_| sd.next_symbol().unwrap()).collect();
             assert_eq!(streamed, xs);
             // batched pulls in uneven chunks
             let mut sd = SymbolDecoder::new(&bytes[4..4 + len], dims);
@@ -623,7 +636,7 @@ mod tests {
                     break;
                 }
                 let n = (*step).min(xs.len() - pos);
-                sd.decode_into(&mut chunked[pos..pos + n]);
+                sd.decode_into(&mut chunked[pos..pos + n]).unwrap();
                 pos += n;
             }
             assert_eq!(chunked, xs);
@@ -641,8 +654,41 @@ mod tests {
         coder.encode(&b, &mut w);
         let bytes = w.into_bytes();
         let mut r = BitReader::new(&bytes);
-        assert_eq!(coder.decode(a.len(), &mut r), a);
-        assert_eq!(coder.decode(b.len(), &mut r), b);
+        assert_eq!(coder.decode(a.len(), &mut r).unwrap(), a);
+        assert_eq!(coder.decode(b.len(), &mut r).unwrap(), b);
+    }
+
+    #[test]
+    fn corrupt_payloads_never_panic_and_bad_lengths_do_not_allocate() {
+        // Bit-flip every byte of a real payload: decode must return either
+        // in-range garbage or a typed error — never panic. (A flipped bit
+        // can desynchronize the adaptive models arbitrarily.)
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        let xs: Vec<i64> =
+            (0..300).map(|_| (rng.normal() * 200.0).round() as i64).collect();
+        for coder in
+            [&AdaptiveRangeCoder::default() as &dyn IntCoder, &BitwiseRangeCoder::default()]
+        {
+            let mut w = BitWriter::new();
+            coder.encode(&xs, &mut w);
+            let bytes = w.into_bytes();
+            for pos in 0..bytes.len() {
+                let mut bad = bytes.clone();
+                bad[pos] ^= 0x10;
+                let mut r = BitReader::new(&bad);
+                if let Ok(out) = coder.decode(xs.len(), &mut r) {
+                    assert_eq!(out.len(), xs.len(), "{} at byte {pos}", coder.name());
+                }
+            }
+            // A length prefix claiming ~4 GB of payload must be clamped to
+            // the physically remaining bytes, not allocated.
+            let mut w = BitWriter::new();
+            w.push_u32(u32::MAX);
+            w.push_byte(0xAB);
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            let _ = coder.decode(4, &mut r);
+        }
     }
 
     #[test]
@@ -657,7 +703,7 @@ mod tests {
             coder.encode(&xs, &mut w);
             let bytes = w.into_bytes();
             let mut r = BitReader::new(&bytes);
-            assert_eq!(coder.decode(xs.len(), &mut r), xs, "dims={dims}");
+            assert_eq!(coder.decode(xs.len(), &mut r).unwrap(), xs, "dims={dims}");
         }
     }
 }

@@ -2,7 +2,7 @@
 
 use crate::coordinator::rate_control::controller_by_name;
 use crate::fleet::{
-    Channel, ChannelModel, FaultPlan, LatencyModel, RatePlan, SamplerKind, Scenario,
+    Channel, ChannelModel, FaultPlan, LatencyModel, RatePlan, SamplerKind, Scenario, WirePlan,
 };
 
 use crate::data::Dataset;
@@ -287,6 +287,11 @@ impl FlConfig {
             LatencyModel::Fixed(0.0)
         };
         let deadline = c.f64_or("fleet.deadline", 0.0);
+        let corrupt = c.f64_or("fleet.corrupt", 0.0);
+        crate::ensure!(
+            (0.0..=1.0).contains(&corrupt),
+            "fleet.corrupt = {corrupt} must be a probability in [0, 1]"
+        );
         Ok(Scenario {
             sampler,
             over_select: c.f64_or("fleet.over_select", 0.0),
@@ -294,6 +299,10 @@ impl FlConfig {
                 latency,
                 dropout: c.f64_or("fleet.dropout", 0.0),
                 deadline: (deadline > 0.0).then_some(deadline),
+                wire: WirePlan {
+                    corrupt_prob: corrupt,
+                    max_retries: c.usize_or("fleet.max_retries", 0) as u32,
+                },
             },
         })
     }
@@ -359,7 +368,8 @@ mod tests {
     fn fleet_section_parses() {
         let c = Config::parse(
             "[fleet]\ncohort = 64\nsampler = \"weighted\"\nover_select = 0.25\n\
-             dropout = 0.05\ndeadline = 3.0\nlatency_median = 1.0\nlatency_sigma = 0.5",
+             dropout = 0.05\ndeadline = 3.0\nlatency_median = 1.0\nlatency_sigma = 0.5\n\
+             corrupt = 0.1\nmax_retries = 2",
         )
         .unwrap();
         let f = FlConfig::from_config(&c).unwrap();
@@ -371,6 +381,14 @@ mod tests {
             f.fleet.faults.latency,
             LatencyModel::LogNormal { median: 1.0, sigma: 0.5 }
         );
+        assert_eq!(f.fleet.faults.wire, WirePlan { corrupt_prob: 0.1, max_retries: 2 });
+        assert!(f.fleet.faults.wire.active());
+    }
+
+    #[test]
+    fn corrupt_probability_is_validated() {
+        let c = Config::parse("[fleet]\ncorrupt = 1.5").unwrap();
+        assert!(FlConfig::from_config(&c).is_err(), "corrupt > 1 must be rejected at load");
     }
 
     #[test]

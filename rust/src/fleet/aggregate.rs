@@ -16,7 +16,7 @@
 //! update), which leaves ≥ 2⁶⁴ folds of headroom before an `i128` could
 //! overflow.
 
-use crate::quantizer::DecodeStream;
+use crate::quantizer::{DecodeError, DecodeStream};
 
 /// Fractional bits of the accumulation grid.
 pub const SCALE_BITS: u32 = 40;
@@ -98,19 +98,31 @@ impl StreamingAggregator {
     /// Drain a codec [`DecodeStream`] straight into the accumulator —
     /// chunks fold as they are decoded, O(chunk) transient memory. The
     /// stream must yield exactly `m` entries.
-    pub fn fold_stream(&mut self, alpha: f64, stream: &mut dyn DecodeStream) {
+    ///
+    /// A mid-stream decode error (or a stream of the wrong length)
+    /// returns `Err` **with the already-folded chunks left in the
+    /// accumulator** — callers that need rejection semantics must stage
+    /// the stream into a scratch vector first and fold only on success
+    /// (see `fleet::shard`).
+    pub fn fold_stream(
+        &mut self,
+        alpha: f64,
+        stream: &mut dyn DecodeStream,
+    ) -> Result<(), DecodeError> {
         let mut offset = 0;
-        while let Some(chunk) = stream.next_chunk() {
+        while let Some(chunk) = stream.next_chunk()? {
+            let end = offset + chunk.len();
+            if end > self.acc.len() {
+                return Err(DecodeError::Length { got: end, want: self.acc.len() });
+            }
             self.fold_chunk(offset, alpha, chunk);
-            offset += chunk.len();
+            offset = end;
         }
-        assert_eq!(
-            offset,
-            self.acc.len(),
-            "decode stream yielded {offset} of {} entries",
-            self.acc.len()
-        );
+        if offset != self.acc.len() {
+            return Err(DecodeError::Length { got: offset, want: self.acc.len() });
+        }
         self.commit(alpha);
+        Ok(())
     }
 
     /// Merge another accumulator (sharded-server reduction). Exact: the
@@ -239,7 +251,7 @@ mod tests {
         let enc = codec.encode(&up, &ctx);
         let mut via_stream = StreamingAggregator::new(m);
         let mut stream = codec.decoder(&enc, m, &ctx);
-        via_stream.fold_stream(0.7, stream.as_mut());
+        via_stream.fold_stream(0.7, stream.as_mut()).unwrap();
         let mut via_vec = StreamingAggregator::new(m);
         via_vec.fold(0.7, &codec.decode(&enc, m, &ctx));
         assert_eq!(via_stream.acc, via_vec.acc);

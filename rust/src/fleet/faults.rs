@@ -1,4 +1,4 @@
-//! Straggler and dropout model.
+//! Straggler, dropout, and wire-corruption model.
 //!
 //! Every selected client gets a simulated uplink latency and a dropout
 //! draw, both pure functions of `(root seed, client, round)` through the
@@ -7,7 +7,14 @@
 //! with over-selection it aggregates the first `target` arrivals and cuts
 //! the rest, which is the K_a-active-devices-per-round regime the
 //! partial-participation literature evaluates.
+//!
+//! [`WirePlan`] extends the model below the framing layer: each transmit
+//! attempt may deterministically corrupt the encoded frame (bit flips,
+//! truncation, trailing garbage, header tampering) with all draws taken
+//! from the `(user, round, WireFault)` stream, so a corrupted round is as
+//! bit-reproducible as a clean one and independent of worker/shard count.
 
+use super::wire::{crc32, HEADER_BYTES, TRAILER_BYTES};
 use crate::prng::{CommonRandomness, Rng, StreamKind};
 
 /// Per-client latency distribution (virtual seconds — nothing sleeps).
@@ -51,6 +58,100 @@ pub enum ClientFate {
     Late { latency: f64 },
     /// Crashed / lost connectivity; nothing is sent.
     Dropped,
+    /// Every transmit attempt was corrupted (or the payload failed to
+    /// decode); the partial contribution was discarded and the client
+    /// quarantined for the round. `reason` names the terminal failure.
+    Rejected { reason: &'static str },
+}
+
+/// Per-attempt wire corruption drawn from `StreamKind::WireFault`.
+///
+/// `corrupt_prob` gates each transmit attempt independently; a corrupted
+/// attempt then draws one of five modes: single bit flip, burst of 2–8
+/// bit flips, truncation, 1–4 trailing garbage bytes, or a phantom-bits
+/// header tamper (the `bits` field inflated past the payload capacity and
+/// the CRC restamped — exercising the post-CRC header validation).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct WirePlan {
+    /// Probability each transmit attempt is corrupted, in `[0, 1]`.
+    pub corrupt_prob: f64,
+    /// Additional transmit attempts a rejected client may make before the
+    /// server quarantines it for the round (0 = no retransmission).
+    pub max_retries: u32,
+}
+
+impl WirePlan {
+    /// No wire faults (the seed semantics).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Whether any attempt can corrupt.
+    pub fn active(&self) -> bool {
+        self.corrupt_prob > 0.0
+    }
+
+    /// Maybe corrupt one transmit attempt's frame in place. Draws come
+    /// sequentially from `rng` (one `(user, round, WireFault)` stream per
+    /// client-round, shared across that client's attempts), so the k-th
+    /// attempt's corruption is a pure function of `(seed, user, round, k)`.
+    /// Returns the number of frame bytes disturbed (0 = clean attempt).
+    pub fn corrupt_attempt<R: Rng>(&self, rng: &mut R, frame: &mut Vec<u8>) -> usize {
+        if self.corrupt_prob <= 0.0 || rng.uniform() >= self.corrupt_prob || frame.is_empty() {
+            return 0;
+        }
+        match rng.gen_index(5) {
+            0 => {
+                // Single bit flip anywhere in the frame.
+                let byte = rng.gen_index(frame.len());
+                frame[byte] ^= 1 << rng.gen_index(8);
+                1
+            }
+            1 => {
+                // Burst: 2..=8 independent bit flips (may share a byte).
+                let flips = 2 + rng.gen_index(7);
+                for _ in 0..flips {
+                    let byte = rng.gen_index(frame.len());
+                    frame[byte] ^= 1 << rng.gen_index(8);
+                }
+                flips
+            }
+            2 => {
+                // Truncation: keep a strict prefix (possibly empty).
+                let keep = rng.gen_index(frame.len());
+                let cut = frame.len() - keep;
+                frame.truncate(keep);
+                cut
+            }
+            3 => {
+                // Trailing garbage: 1..=4 extra bytes past the trailer.
+                let extra = 1 + rng.gen_index(4);
+                for _ in 0..extra {
+                    frame.push((rng.next_u64() & 0xFF) as u8);
+                }
+                extra
+            }
+            _ => {
+                // Phantom bits: inflate the header's `bits` field past the
+                // payload's capacity and restamp the CRC, so the frame
+                // passes the checksum but fails semantic validation.
+                if frame.len() < HEADER_BYTES + TRAILER_BYTES {
+                    // Already-truncated frames can't be tampered coherently;
+                    // flip a bit instead so the attempt still corrupts.
+                    let byte = rng.gen_index(frame.len());
+                    frame[byte] ^= 1 << rng.gen_index(8);
+                    return 1;
+                }
+                let payload = frame.len() - HEADER_BYTES - TRAILER_BYTES;
+                let phantom = 8 * payload as u64 + 1 + (rng.next_u64() & 0x3FF);
+                frame[24..32].copy_from_slice(&phantom.to_le_bytes());
+                let body = frame.len() - TRAILER_BYTES;
+                let crc = crc32(&frame[..body]);
+                frame[body..].copy_from_slice(&crc.to_le_bytes());
+                8 + TRAILER_BYTES
+            }
+        }
+    }
 }
 
 /// Fault-injection plan for a scenario.
@@ -61,6 +162,8 @@ pub struct FaultPlan {
     pub dropout: f64,
     /// Round deadline in virtual seconds (`None` = wait for everyone).
     pub deadline: Option<f64>,
+    /// Frame-level corruption and retransmission policy.
+    pub wire: WirePlan,
 }
 
 impl FaultPlan {
@@ -103,6 +206,7 @@ mod tests {
             latency: LatencyModel::LogNormal { median: 1.0, sigma: 0.8 },
             dropout: 0.3,
             deadline: Some(2.0),
+            wire: WirePlan::none(),
         };
         let a = plan.fate(&cr, 5, 9);
         assert_eq!(a, plan.fate(&cr, 5, 9), "fate must be reproducible");
@@ -156,13 +260,90 @@ mod tests {
             latency: LatencyModel::Uniform { lo: 0.0, hi: 10.0 },
             dropout: 0.0,
             deadline: Some(5.0),
+            wire: WirePlan::none(),
         };
         for u in 0..500 {
             match plan.fate(&cr, u, 0) {
                 ClientFate::Arrives { latency } => assert!(latency <= 5.0),
                 ClientFate::Late { latency } => assert!(latency > 5.0),
-                ClientFate::Dropped => panic!("dropout disabled"),
+                other => panic!("dropout and wire faults disabled: {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn wire_corruption_is_deterministic_per_attempt_sequence() {
+        let cr = CommonRandomness::new(77);
+        let plan = WirePlan { corrupt_prob: 0.6, max_retries: 2 };
+        let pristine: Vec<u8> = (0..120u8).collect();
+        let run = || {
+            let mut rng = cr.stream(4, 9, StreamKind::WireFault);
+            (0..5)
+                .map(|_| {
+                    let mut f = pristine.clone();
+                    let disturbed = plan.corrupt_attempt(&mut rng, &mut f);
+                    (disturbed, f)
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run(), "attempt sequence must be bit-reproducible");
+    }
+
+    #[test]
+    fn wire_corruption_covers_all_modes_and_respects_gate() {
+        let cr = CommonRandomness::new(31);
+        let always = WirePlan { corrupt_prob: 1.0, max_retries: 0 };
+        let pristine: Vec<u8> = (0..80u8).collect();
+        let mut shorter = false;
+        let mut longer = false;
+        let mut same_len_changed = false;
+        for user in 0..200 {
+            let mut rng = cr.stream(user, 0, StreamKind::WireFault);
+            let mut f = pristine.clone();
+            let disturbed = always.corrupt_attempt(&mut rng, &mut f);
+            assert!(disturbed > 0, "corrupt_prob 1.0 must disturb every attempt");
+            match f.len().cmp(&pristine.len()) {
+                std::cmp::Ordering::Less => shorter = true,
+                std::cmp::Ordering::Greater => longer = true,
+                std::cmp::Ordering::Equal => {
+                    assert_ne!(f, pristine, "same-length attempt must alter bytes");
+                    same_len_changed = true;
+                }
+            }
+        }
+        assert!(shorter && longer && same_len_changed, "all mode families must occur");
+
+        let never = WirePlan::none();
+        let mut rng = cr.stream(0, 0, StreamKind::WireFault);
+        let mut f = pristine.clone();
+        assert_eq!(never.corrupt_attempt(&mut rng, &mut f), 0);
+        assert_eq!(f, pristine, "inactive plan must pass frames through");
+    }
+
+    #[test]
+    fn phantom_tamper_keeps_crc_valid_but_inflates_bits() {
+        // Force mode 4 by scanning users until the tampered frame keeps
+        // its length and has a valid restamped CRC over the body.
+        let cr = CommonRandomness::new(12);
+        let plan = WirePlan { corrupt_prob: 1.0, max_retries: 0 };
+        let pristine = vec![0u8; HEADER_BYTES + 16 + TRAILER_BYTES];
+        let mut seen_phantom = false;
+        for user in 0..400 {
+            let mut rng = cr.stream(user, 1, StreamKind::WireFault);
+            let mut f = pristine.clone();
+            plan.corrupt_attempt(&mut rng, &mut f);
+            if f.len() != pristine.len() {
+                continue;
+            }
+            let body = f.len() - TRAILER_BYTES;
+            let crc = u32::from_le_bytes(f[body..].try_into().unwrap());
+            if crc == crc32(&f[..body]) && f[24..32] != pristine[24..32] {
+                let bits = u64::from_le_bytes(f[24..32].try_into().unwrap());
+                assert!(bits > 8 * 16, "tampered bits {bits} must exceed capacity");
+                seen_phantom = true;
+                break;
+            }
+        }
+        assert!(seen_phantom, "phantom-bits mode never drawn in 400 streams");
     }
 }

@@ -12,7 +12,12 @@
 //!   participation), deterministic from `(seed, round)`;
 //! * [`faults`] — per-client latency + dropout with a round deadline and
 //!   over-selection: the server aggregates the first `target` arrivals
-//!   and reports completion rate and effective α mass;
+//!   and reports completion rate and effective α mass; a [`WirePlan`]
+//!   additionally injects deterministic frame corruption with bounded
+//!   retransmission, and clients whose frames never survive the wire (or
+//!   whose CRC-valid payloads fail shard decode) are quarantined as
+//!   [`ClientFate::Rejected`] — partial contributions discarded, α
+//!   re-normalized over the folded set (DESIGN.md §13);
 //! * [`wire`] — framed binary uplink messages (header, exact bit count,
 //!   CRC), so the channel meters real serialized bytes;
 //! * [`aggregate`] — order-independent fixed-point streaming fold of
@@ -50,7 +55,7 @@ pub use aggregate::StreamingAggregator;
 pub use channel::{AsymmetricChannel, Channel, ChannelModel};
 pub use clock::{RoundTiming, VirtualClock};
 pub use downlink::{BroadcastOutcome, DownlinkSpec, SyncTable};
-pub use faults::{ClientFate, FaultPlan, LatencyModel};
+pub use faults::{ClientFate, FaultPlan, LatencyModel, WirePlan};
 pub use sampler::{CohortSampler, SamplerKind};
 pub use shard::{ShardRoundStats, MAX_SHARDS};
 pub use wire::{decode_frame, encode_frame, Frame, FrameKind, WireError};
@@ -61,7 +66,7 @@ use crate::coordinator::UplinkChannel;
 use crate::data::Dataset;
 use crate::fl::Trainer;
 use crate::metrics::Timer;
-use crate::prng::{CommonRandomness, SplitMix64};
+use crate::prng::{CommonRandomness, SplitMix64, StreamKind};
 use crate::quantizer::{self, CodecContext, UpdateCodec, DEFAULT_CHUNK};
 use crate::telemetry::{probe, Collector, HistMetric, SpanData, SpanEvent, SpanKind};
 use crate::util::threadpool::parallel_map_fold;
@@ -310,6 +315,7 @@ impl Scenario {
                 latency: LatencyModel::LogNormal { median: 1.0, sigma: 0.8 },
                 dropout: 0.02,
                 deadline: Some(deadline),
+                wire: WirePlan::none(),
             },
         }
     }
@@ -324,6 +330,7 @@ impl Scenario {
                 latency: LatencyModel::Exponential { mean: 1.0 },
                 dropout: 0.2,
                 deadline: Some(deadline),
+                wire: WirePlan::none(),
             },
         }
     }
@@ -362,6 +369,12 @@ pub struct ClientRoundRecord {
     pub deadline_miss: bool,
     /// Client dropped out (sent nothing).
     pub dropped: bool,
+    /// Client was quarantined: wire corruption survived every retransmit,
+    /// or its CRC-valid payload failed shard decode.
+    pub rejected: bool,
+    /// Retransmission attempts this client made beyond its first
+    /// transmit (0 on a clean wire).
+    pub retries: u32,
 }
 
 /// Round-level summary of the rate allocation (all zeros when the driver
@@ -410,6 +423,18 @@ pub struct FleetRoundReport {
     pub wire_bytes: usize,
     /// Rate-budget violations observed (messages rejected, not folded).
     pub budget_violations: usize,
+    /// Clients quarantined this round: wire corruption survived every
+    /// retransmit attempt, or a CRC-valid payload failed shard decode.
+    /// Their partial contributions never touch the aggregate; `alpha_sum`
+    /// re-normalizes over the clients that actually folded.
+    pub rejected: usize,
+    /// Total retransmission attempts across the round (beyond each
+    /// client's first transmit). Every attempt burns wire bytes and one
+    /// more latency period of virtual time.
+    pub retries: usize,
+    /// Frame bytes disturbed by injected wire corruption (0 when the
+    /// scenario's [`WirePlan`] is inactive).
+    pub corrupt_wire_bytes: usize,
     /// ‖Σα(ĥ−h)‖²/m — the measured Theorem-2 quantity.
     pub aggregate_distortion: f64,
     /// Real compute seconds spent inside client jobs (sum over clients).
@@ -584,6 +609,9 @@ impl FleetDriver {
                 ClientFate::Arrives { latency } => arrivals.push((latency, u)),
                 ClientFate::Late { .. } => late += 1,
                 ClientFate::Dropped => dropped += 1,
+                // `fate()` never pre-rejects — rejection is an uplink
+                // outcome, patched into `fates` after the fold.
+                ClientFate::Rejected { .. } => {}
             }
             fates.push(fate);
         }
@@ -716,18 +744,30 @@ impl FleetDriver {
         let wire_codec_id =
             quantizer::codec_id(&spec.codec.name()).unwrap_or(quantizer::CODEC_ID_UNREGISTERED);
         let n_shards = self.shards;
+        let wire_plan = self.scenario.faults.wire;
         let mut client_secs = 0.0f64;
         let mut wire_bytes = 0usize;
         let mut budget_violations = 0usize;
+        let mut corrupt_wire_bytes = 0usize;
         let mut achieved_bits = vec![0usize; arrivals.len()];
         let mut folded = vec![false; arrivals.len()];
-        let (agg, desired, shard_stats) = {
+        // Quarantine bookkeeping, indexed by arrival so it accumulates
+        // order-independently: the terminal failure reason (None = not
+        // rejected), retransmissions spent, and the effective latency
+        // (base latency × attempts) the virtual clock must charge.
+        let mut reject_reasons: Vec<Option<&'static str>> = vec![None; arrivals.len()];
+        let mut attempts_used = vec![0u32; arrivals.len()];
+        let mut eff_latency: Vec<f64> = arrivals.iter().map(|&(l, _)| l).collect();
+        let (agg, desired, shard_stats, shard_rejects) = {
             let w_snapshot: &[f32] = w;
             let recon_ref: Option<&[Vec<f32>]> = reconstructions.as_deref();
             let arrivals_ref: &[(f64, usize)] = &arrivals;
             let rates_ref: &[f64] = &rates;
             let achieved_ref = &mut achieved_bits;
             let folded_ref = &mut folded;
+            let reject_ref = &mut reject_reasons;
+            let attempts_ref = &mut attempts_used;
+            let eff_latency_ref = &mut eff_latency;
             let seed = self.seed;
             let codec = spec.codec;
             std::thread::scope(|scope| {
@@ -833,56 +873,163 @@ impl FleetDriver {
                     },
                     |i, (frame, h, secs)| {
                         client_secs += secs;
-                        wire_bytes += frame.len();
-                        let f = wire::decode_frame(&frame)
-                            .expect("in-memory frame failed integrity check");
-                        debug_assert_eq!(f.user, arrivals_ref[i].1 as u64);
-                        // In virtual time the message lands when its client's
-                        // latency elapses; transmit/decode/fold all happen at
-                        // that instant (the server folds as frames arrive).
-                        let arrival_virt = virt_start + arrivals_ref[i].0;
-                        let tx_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
-                        let tx_timer = Timer::start();
-                        let admitted =
-                            uplink.try_transmit_rate(f.user, &f.payload, m, rates_ref[i]);
-                        if let Some(c) = tel {
-                            c.record(SpanEvent {
-                                kind: SpanKind::Transmit,
-                                round,
-                                user: f.user,
-                                wall_start_s: tx_start,
-                                wall_dur_s: tx_timer.elapsed_secs(),
-                                virt_s: arrival_virt,
-                                data: SpanData::Transmit {
-                                    wire_bytes: frame.len() as u64,
-                                    payload_bits: f.payload.bits as u64,
-                                    accepted: admitted.is_ok(),
-                                },
-                            });
-                        }
-                        match admitted {
-                            Ok(()) => {
-                                achieved_ref[i] = f.payload.bits;
-                                folded_ref[i] = true;
-                                let alpha = pool.weight(arrivals_ref[i].1) / arrived_weight;
-                                // Hand off to the owning shard, which rebuilds
-                                // the decoder context (same per-client rate the
-                                // encoder saw) and stream-folds the chunks into
-                                // its fixed-point partial. `send` blocks when
-                                // the shard is `QUEUE_DEPTH` jobs behind.
-                                senders[i % n_shards]
-                                    .send(shard::ShardJob {
-                                        user: f.user,
-                                        round: f.round,
-                                        rate: rates_ref[i],
-                                        alpha,
-                                        virt_s: arrival_virt,
-                                        payload: f.payload,
-                                        h,
-                                    })
-                                    .expect("aggregation shard hung up");
+                        let user = arrivals_ref[i].1 as u64;
+                        let base_latency = arrivals_ref[i].0;
+                        // Hostile wire: every transmit attempt re-frames the
+                        // pristine encoder output, re-draws deterministic
+                        // corruption from the per-(user, round) WireFault
+                        // stream, burns wire bytes, and costs one more
+                        // latency period of virtual time. A frame that fails
+                        // integrity/parse checks retransmits up to
+                        // `max_retries` times while the deadline allows;
+                        // exhaustion quarantines the client for the round.
+                        // Every draw is a pure function of (seed, user,
+                        // round, attempt), so the outcome is independent of
+                        // worker count and completion order.
+                        let mut wf_rng = crand.stream(user, round, StreamKind::WireFault);
+                        let mut attempt = 0u32;
+                        loop {
+                            let mut attempt_frame = frame.clone();
+                            if wire_plan.active() {
+                                corrupt_wire_bytes +=
+                                    wire_plan.corrupt_attempt(&mut wf_rng, &mut attempt_frame);
                             }
-                            Err(_) => budget_violations += 1,
+                            wire_bytes += attempt_frame.len();
+                            // In virtual time attempt k lands after k full
+                            // latency periods; transmit/decode/fold all
+                            // happen at that instant.
+                            eff_latency_ref[i] = base_latency * (attempt + 1) as f64;
+                            let arrival_virt = virt_start + eff_latency_ref[i];
+                            let tx_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
+                            let tx_timer = Timer::start();
+                            match wire::decode_frame(&attempt_frame) {
+                                Ok(f) => {
+                                    debug_assert_eq!(f.user, user);
+                                    let admitted = uplink.try_transmit_rate(
+                                        f.user,
+                                        &f.payload,
+                                        m,
+                                        rates_ref[i],
+                                    );
+                                    if let Some(c) = tel {
+                                        c.record(SpanEvent {
+                                            kind: SpanKind::Transmit,
+                                            round,
+                                            user: f.user,
+                                            wall_start_s: tx_start,
+                                            wall_dur_s: tx_timer.elapsed_secs(),
+                                            virt_s: arrival_virt,
+                                            data: SpanData::Transmit {
+                                                wire_bytes: attempt_frame.len() as u64,
+                                                payload_bits: f.payload.bits as u64,
+                                                accepted: admitted.is_ok(),
+                                            },
+                                        });
+                                    }
+                                    match admitted {
+                                        Ok(()) => {
+                                            achieved_ref[i] = f.payload.bits;
+                                            folded_ref[i] = true;
+                                            let alpha = pool.weight(arrivals_ref[i].1)
+                                                / arrived_weight;
+                                            // Hand off to the owning shard, which
+                                            // rebuilds the decoder context (same
+                                            // per-client rate the encoder saw) and
+                                            // stage-folds the stream into its
+                                            // fixed-point partial. `send` blocks
+                                            // when the shard is `QUEUE_DEPTH` jobs
+                                            // behind.
+                                            senders[i % n_shards]
+                                                .send(shard::ShardJob {
+                                                    arrival: i,
+                                                    user: f.user,
+                                                    round: f.round,
+                                                    rate: rates_ref[i],
+                                                    alpha,
+                                                    virt_s: arrival_virt,
+                                                    payload: f.payload,
+                                                    h,
+                                                })
+                                                .expect("aggregation shard hung up");
+                                        }
+                                        // A budget violation is a deterministic
+                                        // function of the coded bytes — a resend
+                                        // would fail identically, so it never
+                                        // retries (DESIGN.md §13).
+                                        Err(_) => budget_violations += 1,
+                                    }
+                                    break;
+                                }
+                                Err(werr) => {
+                                    if let Some(c) = tel {
+                                        // The corrupt attempt still burned wire
+                                        // bytes; its payload bits are unknowable.
+                                        c.record(SpanEvent {
+                                            kind: SpanKind::Transmit,
+                                            round,
+                                            user,
+                                            wall_start_s: tx_start,
+                                            wall_dur_s: tx_timer.elapsed_secs(),
+                                            virt_s: arrival_virt,
+                                            data: SpanData::Transmit {
+                                                wire_bytes: attempt_frame.len() as u64,
+                                                payload_bits: 0,
+                                                accepted: false,
+                                            },
+                                        });
+                                    }
+                                    let next_eff = base_latency * (attempt + 2) as f64;
+                                    let deadline_ok = self
+                                        .scenario
+                                        .faults
+                                        .deadline
+                                        .map_or(true, |d| next_eff <= d);
+                                    if attempt < wire_plan.max_retries && deadline_ok {
+                                        attempt += 1;
+                                        attempts_ref[i] = attempt;
+                                        if let Some(c) = tel {
+                                            c.record(SpanEvent {
+                                                kind: SpanKind::Retry,
+                                                round,
+                                                user,
+                                                wall_start_s: tx_start,
+                                                wall_dur_s: 0.0,
+                                                virt_s: arrival_virt,
+                                                data: SpanData::Retry {
+                                                    attempt,
+                                                    wire_bytes: attempt_frame.len() as u64,
+                                                    reason: werr.reason(),
+                                                },
+                                            });
+                                        }
+                                        continue;
+                                    }
+                                    // Terminal: retries exhausted, or another
+                                    // attempt could not land before the round
+                                    // deadline.
+                                    let reason = if attempt >= wire_plan.max_retries {
+                                        werr.reason()
+                                    } else {
+                                        "retransmit deadline exceeded"
+                                    };
+                                    reject_ref[i] = Some(reason);
+                                    if let Some(c) = tel {
+                                        c.record(SpanEvent {
+                                            kind: SpanKind::Reject,
+                                            round,
+                                            user,
+                                            wall_start_s: tx_start,
+                                            wall_dur_s: 0.0,
+                                            virt_s: arrival_virt,
+                                            data: SpanData::Reject {
+                                                attempts: attempt + 1,
+                                                reason,
+                                            },
+                                        });
+                                    }
+                                    break;
+                                }
+                            }
                         }
                     },
                 );
@@ -897,8 +1044,10 @@ impl FleetDriver {
                 let mut agg = StreamingAggregator::new(m);
                 let mut desired = StreamingAggregator::new(m);
                 let mut shard_stats: Vec<ShardRoundStats> = Vec::with_capacity(n_shards);
+                let mut shard_rejects: Vec<shard::ShardReject> = Vec::new();
                 for handle in handles {
                     let out = handle.join().expect("aggregation shard panicked");
+                    shard_rejects.extend(out.rejects.iter().copied());
                     agg.merge(&out.agg);
                     desired.merge(&out.desired);
                     if let Some(c) = tel {
@@ -921,9 +1070,51 @@ impl FleetDriver {
                     }
                     shard_stats.push(out.stats);
                 }
-                (agg, desired, shard_stats)
+                (agg, desired, shard_stats, shard_rejects)
             })
         };
+
+        // Shard-level rejections surface only after the join: the
+        // admission path recorded these clients optimistically, so roll
+        // back their `folded`/bit accounting and quarantine them. Their
+        // staged contribution never touched the accumulators (the shard
+        // folds only fully-decoded streams), so no arithmetic rollback is
+        // needed and the merged model stays bit-identical for any
+        // worker/shard topology. Their uplink bits stay metered — the
+        // payload was transmitted and admitted before it failed decode.
+        for r in &shard_rejects {
+            folded[r.arrival] = false;
+            achieved_bits[r.arrival] = 0;
+            reject_reasons[r.arrival] = Some(r.reason);
+            if let Some(c) = tel {
+                c.record(SpanEvent {
+                    kind: SpanKind::Reject,
+                    round,
+                    user: r.user,
+                    wall_start_s: c.wall_now(),
+                    wall_dur_s: 0.0,
+                    virt_s: virt_start + eff_latency[r.arrival],
+                    data: SpanData::Reject {
+                        attempts: attempts_used[r.arrival] + 1,
+                        reason: r.reason,
+                    },
+                });
+            }
+        }
+        // Patch the quarantined clients' fates so per-client records (and
+        // any caller inspecting them) see the terminal outcome.
+        let rejected = reject_reasons.iter().flatten().count();
+        if rejected > 0 {
+            for (i, reason) in reject_reasons.iter().enumerate() {
+                if let Some(reason) = *reason {
+                    let u = arrivals[i].1;
+                    if let Some(pos) = selected.iter().position(|&s| s == u) {
+                        fates[pos] = ClientFate::Rejected { reason };
+                    }
+                }
+            }
+        }
+        let retries: usize = attempts_used.iter().map(|&a| a as usize).sum();
 
         // Apply w ← w + Σ α_k ĥ_k and measure the Theorem-2 distortion.
         let aggregate_distortion = StreamingAggregator::mean_sq_diff(&agg, &desired);
@@ -934,11 +1125,11 @@ impl FleetDriver {
             0.0
         };
 
-        // Virtual time: the round closes at the slowest aggregated
-        // arrival, or at the deadline when the quota went unmet.
-        let latencies: Vec<f64> = arrivals.iter().map(|&(l, _)| l).collect();
+        // Virtual time: the round closes at the slowest effective arrival
+        // (retransmissions multiply a client's base latency by its
+        // attempt count), or at the deadline when the quota went unmet.
         let waited = if arrivals.len() < target { self.scenario.faults.deadline } else { None };
-        let timing = clock.close_round(&latencies, waited);
+        let timing = clock.close_round(&eff_latency, waited);
 
         // The folded α mass, re-summed in ascending arrival order: the
         // shard partials accumulate `alpha_sum` in completion order, so
@@ -981,6 +1172,8 @@ impl FleetDriver {
                     achieved_bits: idx.map(|i| achieved_bits[i]).unwrap_or(0),
                     deadline_miss: matches!(fate, ClientFate::Late { .. }),
                     dropped: matches!(fate, ClientFate::Dropped),
+                    rejected: matches!(fate, ClientFate::Rejected { .. }),
+                    retries: idx.map(|i| attempts_used[i]).unwrap_or(0),
                 }
             };
             match spec.client_records {
@@ -1027,6 +1220,9 @@ impl FleetDriver {
             uplink_bits: uplink.stats().total_bits,
             wire_bytes,
             budget_violations,
+            rejected,
+            retries,
+            corrupt_wire_bytes,
             aggregate_distortion,
             client_secs,
             wall_secs: round_timer.elapsed_secs(),

@@ -6,9 +6,17 @@
 //! of a round is owned by shard `i % n_shards`. Each shard owns a full
 //! pair of fixed-point [`StreamingAggregator`]s (the quantized aggregate
 //! and the "desired" unquantized reference) and folds whole client
-//! streams — decode and fold interleave chunk-by-chunk on the shard
-//! thread, so at most one `DEFAULT_CHUNK` of decoded entries is ever
-//! buffered per shard. The coordinator feeds shards through bounded
+//! streams — each stream is **staged** into a reusable per-shard `m`-entry
+//! scratch vector and folded only after it decodes completely, so a
+//! mid-stream decode failure (CRC-valid but semantically corrupt payload)
+//! rejects the client without ever touching the accumulators — no
+//! rollback, and the merged model stays bit-identical to the serial fold
+//! because per-entry fixed-point folds are chunking-independent. The
+//! staging vector (4·m bytes) is dominated by the shard's own aggregator
+//! pair (32·m bytes), so per-shard memory stays O(m). Decode panics are
+//! contained with `catch_unwind` and surface as rejects too — a hostile
+//! payload can quarantine one client, never a shard thread.
+//! The coordinator feeds shards through bounded
 //! [`std::sync::mpsc::sync_channel`]s of depth [`QUEUE_DEPTH`]
 //! (backpressure, never unbounded buffering) and, after dropping the
 //! senders, joins and merges the partials **in ascending shard order**.
@@ -16,10 +24,11 @@
 //! model is bit-identical for any shard count and any worker/channel
 //! interleaving.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::Receiver;
 
 use crate::metrics::Timer;
-use crate::quantizer::{CodecContext, Encoded, UpdateCodec};
+use crate::quantizer::{CodecContext, DecodeError, Encoded, UpdateCodec};
 use crate::telemetry::{Collector, HistMetric, SpanData, SpanEvent, SpanKind};
 
 use super::aggregate::StreamingAggregator;
@@ -64,6 +73,9 @@ pub struct ShardRoundStats {
 /// decoder context deterministically plus the client's raw update `h`
 /// for the "desired" (unquantized) reference aggregate.
 pub(crate) struct ShardJob {
+    /// Arrival index within the round's client arrays — the coordinator
+    /// uses it to patch `folded`/bit accounting if the shard rejects.
+    pub arrival: usize,
     pub user: u64,
     pub round: u64,
     /// The rate the controller assigned this client — the decoder must
@@ -77,6 +89,16 @@ pub(crate) struct ShardJob {
     pub h: Vec<f32>,
 }
 
+/// A client whose CRC-valid payload failed to decode on the shard (or
+/// whose decoder panicked). The contribution never touched the
+/// accumulators; the coordinator patches round accounting from this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct ShardReject {
+    pub arrival: usize,
+    pub user: u64,
+    pub reason: &'static str,
+}
+
 /// What a shard thread returns when its channel closes.
 pub(crate) struct ShardOutcome {
     pub agg: StreamingAggregator,
@@ -85,16 +107,45 @@ pub(crate) struct ShardOutcome {
     /// Wall instant the shard started (0 when untraced) — the start of
     /// its round-scoped `shard_fold` span.
     pub wall_start_s: f64,
+    /// Clients rejected at decode time, in this shard's arrival order.
+    pub rejects: Vec<ShardReject>,
+}
+
+/// Decode one payload completely into `staging` (cleared first), chunk by
+/// chunk. Returns the chunk count on success; a typed error on a corrupt
+/// or wrong-length stream. Never touches the aggregators.
+fn stage_decode(
+    codec: &dyn UpdateCodec,
+    payload: &Encoded,
+    m: usize,
+    ctx: &CodecContext,
+    staging: &mut Vec<f32>,
+) -> Result<u32, DecodeError> {
+    staging.clear();
+    let mut stream = codec.decoder(payload, m, ctx);
+    let mut chunks = 0u32;
+    while let Some(chunk) = stream.next_chunk()? {
+        if staging.len() + chunk.len() > m {
+            return Err(DecodeError::Length { got: staging.len() + chunk.len(), want: m });
+        }
+        staging.extend_from_slice(chunk);
+        chunks += 1;
+    }
+    if staging.len() != m {
+        return Err(DecodeError::Length { got: staging.len(), want: m });
+    }
+    Ok(chunks)
 }
 
 /// Drain `rx` until every sender is dropped, folding each job into this
 /// shard's fixed-point partials.
 ///
-/// The chunk loop is the same `next_chunk → fold_chunk → … → commit`
-/// sequence as `StreamingAggregator::fold_stream`, so the arithmetic is
-/// bit-identical to the pre-shard serial fold; the per-chunk timers only
-/// observe. Per-client `decode`/`fold` spans (shard-tagged) are recorded
-/// only when tracing; the coarse [`ShardRoundStats`] are always kept.
+/// Each job stages its full decode first and folds only on success, so
+/// the arithmetic is bit-identical to the pre-shard serial fold (per-entry
+/// fixed-point folds are chunking-independent) and a failed decode leaves
+/// the partials untouched. Decode panics are contained per job. Per-client
+/// `decode`/`fold` spans (shard-tagged) are recorded only when tracing;
+/// the coarse [`ShardRoundStats`] are always kept.
 pub(crate) fn run_shard(
     shard: u32,
     m: usize,
@@ -106,44 +157,46 @@ pub(crate) fn run_shard(
     let mut agg = StreamingAggregator::new(m);
     let mut desired = StreamingAggregator::new(m);
     let mut stats = ShardRoundStats { shard: shard as usize, ..Default::default() };
+    let mut rejects = Vec::new();
+    let mut staging: Vec<f32> = Vec::with_capacity(m);
     let wall_start_s = tel.map(|c| c.wall_now()).unwrap_or(0.0);
     while let Ok(job) = rx.recv() {
         let t_job = Timer::start();
         let ctx = CodecContext::new(job.user, job.round, seed, job.rate);
-        let mut stream = codec.decoder(&job.payload, m, &ctx);
-        let stream = stream.as_mut();
         let dec_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
-        let mut fold_start = dec_start;
-        let mut dec_secs = 0.0f64;
-        let mut fold_secs = 0.0f64;
-        let mut offset = 0usize;
-        let mut chunks = 0u32;
-        loop {
-            let t_dec = Timer::start();
-            let Some(chunk) = stream.next_chunk() else {
-                break;
-            };
-            dec_secs += t_dec.elapsed_secs();
-            if chunks == 0 {
-                if let Some(c) = tel {
-                    fold_start = c.wall_now();
-                }
+        let t_dec = Timer::start();
+        let staged = catch_unwind(AssertUnwindSafe(|| {
+            stage_decode(codec, &job.payload, m, &ctx, &mut staging)
+        }));
+        let dec_secs = t_dec.elapsed_secs();
+        let chunks = match staged {
+            Ok(Ok(chunks)) => chunks,
+            Ok(Err(err)) => {
+                rejects.push(ShardReject {
+                    arrival: job.arrival,
+                    user: job.user,
+                    reason: err.reason(),
+                });
+                stats.busy_secs += t_job.elapsed_secs();
+                continue;
             }
-            let t_fold = Timer::start();
-            agg.fold_chunk(offset, job.alpha, chunk);
-            let dt = t_fold.elapsed_secs();
-            fold_secs += dt;
-            if let Some(c) = tel {
-                c.record_hist(HistMetric::FoldChunkNanos, (dt * 1e9) as u64);
+            Err(_panic) => {
+                rejects.push(ShardReject {
+                    arrival: job.arrival,
+                    user: job.user,
+                    reason: "decoder panicked",
+                });
+                stats.busy_secs += t_job.elapsed_secs();
+                continue;
             }
-            offset += chunk.len();
-            chunks += 1;
-        }
-        assert_eq!(offset, m, "decode stream yielded {offset} of {m} entries");
-        let t_commit = Timer::start();
+        };
+        let fold_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
+        let t_fold = Timer::start();
+        agg.fold_chunk(0, job.alpha, &staging);
         agg.commit(job.alpha);
-        fold_secs += t_commit.elapsed_secs();
+        let fold_secs = t_fold.elapsed_secs();
         if let Some(c) = tel {
+            c.record_hist(HistMetric::FoldChunkNanos, (fold_secs * 1e9) as u64);
             c.record(SpanEvent {
                 kind: SpanKind::Decode,
                 round: job.round,
@@ -151,7 +204,7 @@ pub(crate) fn run_shard(
                 wall_start_s: dec_start,
                 wall_dur_s: dec_secs,
                 virt_s: job.virt_s,
-                data: SpanData::Decode { chunks, entries: offset as u64, shard },
+                data: SpanData::Decode { chunks, entries: m as u64, shard },
             });
             c.record(SpanEvent {
                 kind: SpanKind::Fold,
@@ -160,16 +213,16 @@ pub(crate) fn run_shard(
                 wall_start_s: fold_start,
                 wall_dur_s: fold_secs,
                 virt_s: job.virt_s,
-                data: SpanData::Fold { chunks, entries: offset as u64, alpha: job.alpha, shard },
+                data: SpanData::Fold { chunks, entries: m as u64, alpha: job.alpha, shard },
             });
         }
         desired.fold(job.alpha, &job.h);
         stats.folds += 1;
         stats.chunks += u64::from(chunks);
-        stats.entries += offset as u64;
+        stats.entries += m as u64;
         stats.decode_secs += dec_secs;
         stats.fold_secs += fold_secs;
         stats.busy_secs += t_job.elapsed_secs();
     }
-    ShardOutcome { agg, desired, stats, wall_start_s }
+    ShardOutcome { agg, desired, stats, wall_start_s, rejects }
 }

@@ -124,6 +124,22 @@ impl fmt::Display for WireError {
     }
 }
 
+impl WireError {
+    /// Short static label for quarantine accounting and telemetry span
+    /// data (which must stay `Copy` — no formatted strings on that path).
+    pub fn reason(self) -> &'static str {
+        match self {
+            WireError::Truncated { .. } => "truncated frame",
+            WireError::BadMagic(_) => "bad frame magic",
+            WireError::BadVersion(_) => "unsupported frame version",
+            WireError::BadKind(_) => "unknown frame kind",
+            WireError::TrailingGarbage { .. } => "trailing garbage",
+            WireError::PhantomBits { .. } => "phantom bits header",
+            WireError::Crc { .. } => "crc mismatch",
+        }
+    }
+}
+
 impl std::error::Error for WireError {}
 
 const fn crc32_table() -> [u32; 256] {

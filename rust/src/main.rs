@@ -50,6 +50,7 @@ fn main() {
                  fleet   --population N --cohort K --scenario NAME [--rounds N] [--codec SPEC]\n          \
                  [--channel uniform|tiers|lognormal|markov --policy uniform|proportional|theory]\n          \
                  [--shards N] [--trace FILE.jsonl --trace-report FILE.md]\n          \
+                 [--corrupt P --max-retries N]\n          \
                  [--downlink-codec SPEC --downlink-rate R --downlink-resync N]\n  \
                  distort --codec SPEC --rate R [--size N]\n  info\n\n\
                  Codec SPEC grammar: name[:key=value,...] — e.g. uveqfed-l2, qsgd:max_levels=4096.\n\
@@ -194,6 +195,8 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
         .opt("shards", "1", "server aggregation shards (bit-identical for any value)")
         .opt("deadline", "", "override round deadline (virtual seconds)")
         .opt("dropout", "", "override per-client dropout probability")
+        .opt("corrupt", "", "per-attempt frame corruption probability")
+        .opt("max-retries", "", "retransmit attempts after a corrupt frame")
         .opt("templates", "16", "distinct template shards backing the population")
         .opt("samples", "120", "samples per template shard")
         .opt("channel", "", "uplink capacity model: uniform|tiers|lognormal|markov")
@@ -224,6 +227,16 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
     }
     if !args.get("dropout").is_empty() {
         scenario.faults.dropout = args.get_f64("dropout");
+    }
+    if !args.get("corrupt").is_empty() {
+        let p = args.get_f64("corrupt");
+        if !(0.0..=1.0).contains(&p) {
+            return Err(Error::msg(format!("--corrupt {p} must be a probability in [0, 1]")));
+        }
+        scenario.faults.wire.corrupt_prob = p;
+    }
+    if !args.get("max-retries").is_empty() {
+        scenario.faults.wire.max_retries = args.get_usize("max-retries") as u32;
     }
 
     // Population backed by round-robin template shards: millions of
@@ -303,6 +316,8 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
     let mut wire_total = 0usize;
     let mut downlink_total = 0usize;
     let mut violations = 0usize;
+    let mut rejected_total = 0usize;
+    let mut retries_total = 0usize;
     for round in 0..rounds {
         let mut spec = RoundSpec {
             round: round as u64,
@@ -325,6 +340,8 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
         wire_total += rep.wire_bytes;
         downlink_total += rep.downlink_bytes;
         violations += rep.budget_violations;
+        rejected_total += rep.rejected;
+        retries_total += rep.retries;
         if collector.is_enabled() {
             let events = collector.drain();
             let dropped = collector.take_dropped();
@@ -354,6 +371,15 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
             rep.channel.mean_rate,
             rep.channel.max_rate,
         );
+        if scenario.faults.wire.active() {
+            // Quarantine accounting under injected wire faults. Every
+            // figure is a pure function of (seed, user, round), so CI
+            // diffs this line across worker/shard topologies too.
+            println!(
+                "      faults: {:>4} rejected  {:>5} retries  {:>8} corrupt bytes  αΣ {:.3}",
+                rep.rejected, rep.retries, rep.corrupt_wire_bytes, rep.alpha_sum,
+            );
+        }
         if downlink_codec.is_some() {
             // Broadcasts run sequentially on the coordinator, so every
             // figure here is bit-identical for any worker/shard count —
@@ -426,11 +452,16 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
     }
     let eval = trainer.evaluate(&w, &test);
     println!(
-        "\nfinal: acc {:.4}  loss {:.4}  virtual time {:.2}s  wire {:.2} MB  budget violations {violations}{}",
+        "\nfinal: acc {:.4}  loss {:.4}  virtual time {:.2}s  wire {:.2} MB  budget violations {violations}{}{}",
         eval.accuracy,
         eval.loss,
         clock.now(),
         wire_total as f64 / 1e6,
+        if scenario.faults.wire.active() {
+            format!("  rejected {rejected_total}  retries {retries_total}")
+        } else {
+            String::new()
+        },
         if downlink_codec.is_some() {
             format!("  downlink {:.2} MB", downlink_total as f64 / 1e6)
         } else {

@@ -36,6 +36,10 @@ pub enum StreamKind {
     /// Per-(client, round) uplink-capacity draw (`fleet::channel`): tier
     /// assignment, log-normal bandwidth, Markov fading transitions.
     Channel = 8,
+    /// Per-(client, round) wire-corruption draws (`fleet::faults`): whether
+    /// each transmit attempt corrupts, which corruption mode, and the
+    /// affected bit/byte positions.
+    WireFault = 9,
 }
 
 impl CommonRandomness {

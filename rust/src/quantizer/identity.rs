@@ -52,7 +52,7 @@ impl UpdateCodec for IdentityCodec {
         _ctx: &CodecContext,
     ) -> Box<dyn DecodeStream + 'a> {
         let mut r = BitReader::new(&msg.bytes);
-        Box::new(EntryStream::new(m, move || r.read_f32()))
+        Box::new(EntryStream::new(m, move || Ok(r.read_f32())))
     }
 
     /// Skip the session scratch buffer for the whole-buffer entry point.

@@ -60,7 +60,55 @@ pub use terngrad::TernGrad;
 pub use topk::TopK;
 pub use uveqfed::UVeQFed;
 
+use crate::entropy::CodeError;
 use crate::prng::CommonRandomness;
+
+/// Typed decode failure for a codec session. Everything reachable from
+/// untrusted payload bytes surfaces here — the entropy layer's
+/// [`CodeError`], a stream that yields the wrong entry count, or an
+/// inconsistent in-payload header. `Copy`, so the fleet can carry it on
+/// zero-alloc telemetry spans and `ClientFate` records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The entropy layer rejected the payload.
+    Code(CodeError),
+    /// The stream ended with the wrong number of entries.
+    Length { got: usize, want: usize },
+    /// A structural in-payload header was inconsistent.
+    Header(&'static str),
+}
+
+impl DecodeError {
+    /// Static quarantine reason for fate records and telemetry spans
+    /// (which are `Copy` and carry no allocations).
+    pub fn reason(self) -> &'static str {
+        match self {
+            DecodeError::Code(_) => "corrupt entropy stream",
+            DecodeError::Length { .. } => "decoded stream length mismatch",
+            DecodeError::Header(what) => what,
+        }
+    }
+}
+
+impl From<CodeError> for DecodeError {
+    fn from(e: CodeError) -> Self {
+        DecodeError::Code(e)
+    }
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            DecodeError::Code(e) => write!(f, "{e}"),
+            DecodeError::Length { got, want } => {
+                write!(f, "decode stream yielded {got} of {want} entries")
+            }
+            DecodeError::Header(what) => write!(f, "corrupt payload header: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 /// Everything an encoder/decoder pair shares per (user, round) message:
 /// the common-randomness source (assumption A3) and the rate budget.
@@ -126,9 +174,12 @@ pub trait EncodeSink {
 /// in order. The concatenation of all chunks is exactly the `m`-entry
 /// decoded update (identical to [`UpdateCodec::decode`]).
 pub trait DecodeStream {
-    /// The next decoded chunk, or `None` once all `m` entries were
+    /// The next decoded chunk, or `Ok(None)` once all `m` entries were
     /// yielded. The returned slice is only valid until the next call.
-    fn next_chunk(&mut self) -> Option<&[f32]>;
+    /// Corrupt payloads surface as a typed [`DecodeError`] — sessions
+    /// never panic on untrusted bytes. After an `Err` the stream is
+    /// poisoned: further calls may return anything except a panic.
+    fn next_chunk(&mut self) -> Result<Option<&[f32]>, DecodeError>;
 }
 
 /// A lossy model-update codec. Encoders MUST stay within
@@ -160,15 +211,35 @@ pub trait UpdateCodec: Send + Sync {
         sink.finish()
     }
 
-    /// Whole-buffer decode: drains the decode session into a vector.
+    /// Whole-buffer decode for **trusted** bytes (a message this process
+    /// encoded): drains the decode session into a vector, panicking on a
+    /// corrupt payload. Untrusted bytes go through [`Self::try_decode`]
+    /// or [`Self::decoder`] instead.
     fn decode(&self, msg: &Encoded, m: usize, ctx: &CodecContext) -> Vec<f32> {
+        self.try_decode(msg, m, ctx)
+            .expect("corrupt payload: decode untrusted bytes via try_decode/decoder")
+    }
+
+    /// Fallible whole-buffer decode: drains the decode session, surfacing
+    /// corruption as a typed [`DecodeError`] instead of a panic.
+    fn try_decode(
+        &self,
+        msg: &Encoded,
+        m: usize,
+        ctx: &CodecContext,
+    ) -> Result<Vec<f32>, DecodeError> {
         let mut out = Vec::with_capacity(m);
         let mut stream = self.decoder(msg, m, ctx);
-        while let Some(chunk) = stream.next_chunk() {
+        while let Some(chunk) = stream.next_chunk()? {
             out.extend_from_slice(chunk);
+            if out.len() > m {
+                return Err(DecodeError::Length { got: out.len(), want: m });
+            }
         }
-        debug_assert_eq!(out.len(), m, "decode stream length mismatch");
-        out
+        if out.len() != m {
+            return Err(DecodeError::Length { got: out.len(), want: m });
+        }
+        Ok(out)
     }
 
     /// Whether the codec respects the bit budget (identity does not).

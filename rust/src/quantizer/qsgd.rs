@@ -172,7 +172,7 @@ impl UpdateCodec for Qsgd {
         let range_coded = raw & RANGE_CODED_FLAG != 0;
         let levels = raw & !RANGE_CODED_FLAG;
         if norm == 0.0 || levels == 0 {
-            return Box::new(EntryStream::new(m, || 0.0));
+            return Box::new(EntryStream::new(m, || Ok(0.0)));
         }
         let s = levels as f64;
         if range_coded {
@@ -181,12 +181,12 @@ impl UpdateCodec for Qsgd {
             Box::new(SymbolMapStream::new(sd, m, move |xi| (norm * xi as f64 / s) as f32))
         } else {
             Box::new(EntryStream::new(m, move || {
-                let xi = EliasGamma::get(&mut r) - 1;
+                let xi = EliasGamma::get(&mut r)? - 1;
                 let mut v = norm * xi as f64 / s;
                 if xi > 0 && r.read_bit() {
                     v = -v;
                 }
-                v as f32
+                Ok(v as f32)
             }))
         }
     }

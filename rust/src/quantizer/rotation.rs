@@ -109,10 +109,13 @@ impl RotationUniform {
         let lo = r.read_f32() as f64;
         let hi = r.read_f32() as f64;
         let b_hdr = r.read_bits(8) as u32;
-        if b_hdr == 0 {
+        if b_hdr != b {
+            // Header width disagrees with the width this budget implies:
+            // either an empty message (b_hdr == 0) or a tampered payload
+            // that survived the outer CRC. Reconstruct as zeros rather
+            // than misparse the bit stream.
             return vec![0.0; m];
         }
-        debug_assert_eq!(b_hdr, b);
         let levels = (1u64 << b) - 1;
         let span = (hi - lo).max(1e-30);
         let mut y = vec![0.0f64; n2];

@@ -20,7 +20,7 @@
 //! [`EncodeSink::state_bytes`] reports what the sink actually holds, and
 //! the `fleet_scale` bench meters it.
 
-use super::{DecodeStream, Encoded, EncodeSink};
+use super::{DecodeError, DecodeStream, Encoded, EncodeSink};
 use crate::entropy::range::SymbolDecoder;
 
 /// Entries per chunk yielded by buffered decode streams and used by the
@@ -83,14 +83,14 @@ impl SliceStream {
 }
 
 impl DecodeStream for SliceStream {
-    fn next_chunk(&mut self) -> Option<&[f32]> {
+    fn next_chunk(&mut self) -> Result<Option<&[f32]>, DecodeError> {
         if self.pos >= self.buf.len() {
-            return None;
+            return Ok(None);
         }
         let end = (self.pos + DEFAULT_CHUNK).min(self.buf.len());
         let chunk = &self.buf[self.pos..end];
         self.pos = end;
-        Some(chunk)
+        Ok(Some(chunk))
     }
 }
 
@@ -99,15 +99,17 @@ impl DecodeStream for SliceStream {
 ///
 /// This is the shared chunking skeleton behind the single-pass streams
 /// (identity, sign-SGD, QSGD, TernGrad, and the degenerate all-zero
-/// message `EntryStream::new(m, || 0.0)`) — the per-codec decoders supply
-/// only the per-entry closure.
+/// message `EntryStream::new(m, || Ok(0.0))`) — the per-codec decoders
+/// supply only the per-entry closure. A closure `Err` (corrupt entropy
+/// stream) propagates out of `next_chunk` without yielding the partial
+/// chunk.
 pub struct EntryStream<F> {
     remaining: usize,
     scratch: Vec<f32>,
     next_entry: F,
 }
 
-impl<F: FnMut() -> f32> EntryStream<F> {
+impl<F: FnMut() -> Result<f32, DecodeError>> EntryStream<F> {
     /// Stream of exactly `m` entries drawn from `next_entry`. The chunk
     /// buffer is preallocated here so steady-state `next_chunk` never
     /// allocates.
@@ -116,19 +118,19 @@ impl<F: FnMut() -> f32> EntryStream<F> {
     }
 }
 
-impl<F: FnMut() -> f32> DecodeStream for EntryStream<F> {
-    fn next_chunk(&mut self) -> Option<&[f32]> {
+impl<F: FnMut() -> Result<f32, DecodeError>> DecodeStream for EntryStream<F> {
+    fn next_chunk(&mut self) -> Result<Option<&[f32]>, DecodeError> {
         if self.remaining == 0 {
-            return None;
+            return Ok(None);
         }
         let n = self.remaining.min(DEFAULT_CHUNK);
         self.scratch.clear();
         for _ in 0..n {
-            let v = (self.next_entry)();
+            let v = (self.next_entry)()?;
             self.scratch.push(v);
         }
         self.remaining -= n;
-        Some(&self.scratch)
+        Ok(Some(&self.scratch))
     }
 }
 
@@ -162,21 +164,21 @@ impl<'a, F: FnMut(i64) -> f32> SymbolMapStream<'a, F> {
 }
 
 impl<F: FnMut(i64) -> f32> DecodeStream for SymbolMapStream<'_, F> {
-    fn next_chunk(&mut self) -> Option<&[f32]> {
+    fn next_chunk(&mut self) -> Result<Option<&[f32]>, DecodeError> {
         if self.remaining == 0 {
-            return None;
+            return Ok(None);
         }
         let n = self.remaining.min(DEFAULT_CHUNK);
         self.ibuf.clear();
         self.ibuf.resize(n, 0);
-        self.sym.decode_into(&mut self.ibuf);
+        self.sym.decode_into(&mut self.ibuf)?;
         self.scratch.clear();
         for &v in self.ibuf.iter() {
             let f = (self.map)(v);
             self.scratch.push(f);
         }
         self.remaining -= n;
-        Some(&self.scratch)
+        Ok(Some(&self.scratch))
     }
 }
 
@@ -215,7 +217,7 @@ mod tests {
         let mut s = SliceStream::new(data.clone());
         let mut out = Vec::new();
         let mut chunks = 0;
-        while let Some(c) = s.next_chunk() {
+        while let Some(c) = s.next_chunk().unwrap() {
             assert!(c.len() <= DEFAULT_CHUNK);
             out.extend_from_slice(c);
             chunks += 1;
@@ -227,7 +229,7 @@ mod tests {
     #[test]
     fn slice_stream_empty() {
         let mut s = SliceStream::new(Vec::new());
-        assert!(s.next_chunk().is_none());
+        assert!(s.next_chunk().unwrap().is_none());
     }
 
     #[test]
@@ -236,15 +238,29 @@ mod tests {
             let mut i = 0u32;
             let mut s = EntryStream::new(m, move || {
                 i += 1;
-                i as f32
+                Ok(i as f32)
             });
             let mut drained = Vec::new();
-            while let Some(c) = s.next_chunk() {
+            while let Some(c) = s.next_chunk().unwrap() {
                 assert!(c.len() <= DEFAULT_CHUNK && !c.is_empty());
                 drained.extend_from_slice(c);
             }
             let want: Vec<f32> = (1..=m as u32).map(|v| v as f32).collect();
             assert_eq!(drained, want);
         }
+    }
+
+    #[test]
+    fn entry_stream_propagates_decode_error() {
+        let mut i = 0u32;
+        let mut s = EntryStream::new(DEFAULT_CHUNK + 5, move || {
+            i += 1;
+            if i > 3 {
+                Err(DecodeError::Header("synthetic corruption"))
+            } else {
+                Ok(i as f32)
+            }
+        });
+        assert!(s.next_chunk().is_err());
     }
 }

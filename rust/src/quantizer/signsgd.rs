@@ -66,7 +66,7 @@ impl UpdateCodec for SignSgd {
     ) -> Box<dyn DecodeStream + 'a> {
         let mut r = BitReader::new(&msg.bytes);
         let mag = r.read_f32();
-        Box::new(EntryStream::new(m, move || if r.read_bit() { -mag } else { mag }))
+        Box::new(EntryStream::new(m, move || Ok(if r.read_bit() { -mag } else { mag })))
     }
 }
 

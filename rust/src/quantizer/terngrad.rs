@@ -76,7 +76,7 @@ impl UpdateCodec for TernGrad {
         let mut r = BitReader::new(&msg.bytes);
         let max = r.read_f32() as f64;
         if max == 0.0 {
-            return Box::new(EntryStream::new(m, || 0.0));
+            return Box::new(EntryStream::new(m, || Ok(0.0)));
         }
         let sd = SymbolDecoder::from_embedded(&msg.bytes, &mut r, 1);
         // Batched symbol pulls (one `decode_into` per chunk).

@@ -356,16 +356,17 @@ struct UveqfedStream<'a> {
 }
 
 impl DecodeStream for UveqfedStream<'_> {
-    fn next_chunk(&mut self) -> Option<&[f32]> {
+    fn next_chunk(&mut self) -> Result<Option<&[f32]>, super::DecodeError> {
         if self.next_block >= self.n_sub {
-            return None;
+            return Ok(None);
         }
         self.scratch.clear();
         let blocks = (self.n_sub - self.next_block).min(self.blocks_per_chunk);
         for _ in 0..blocks {
             // D1: entropy-decode one sub-vector's coordinates (batched
-            // symbol pull).
-            self.sym.decode_into(&mut self.coords);
+            // symbol pull). A corrupt range stream surfaces here as a
+            // typed error; the partial chunk is discarded.
+            self.sym.decode_into(&mut self.coords)?;
             self.base.recorrelate(&mut self.coords);
             // lattice point at base scale
             self.base.point_into(&self.coords, &mut self.point);
@@ -387,7 +388,7 @@ impl DecodeStream for UveqfedStream<'_> {
             }
             self.next_block += 1;
         }
-        Some(&self.scratch)
+        Ok(Some(&self.scratch))
     }
 }
 
@@ -419,7 +420,7 @@ impl UpdateCodec for UVeQFed {
         let scale_factor = r.read_f32() as f64;
         let s = r.read_f32() as f64;
         if scale_factor == 0.0 || s == 0.0 {
-            return Box::new(EntryStream::new(m, || 0.0));
+            return Box::new(EntryStream::new(m, || Ok(0.0)));
         }
         let sym = SymbolDecoder::from_embedded(&msg.bytes, &mut r, l);
         let rng = ctx.crand.stream(ctx.user, ctx.round, StreamKind::Dither);
@@ -490,7 +491,7 @@ mod tests {
         let mut stream = codec.decoder(&enc, h.len(), &ctx);
         let mut total = 0usize;
         let mut chunks = 0usize;
-        while let Some(c) = stream.next_chunk() {
+        while let Some(c) = stream.next_chunk().unwrap() {
             total += c.len();
             chunks += 1;
             if total < h.len() {

@@ -102,6 +102,15 @@ pub fn span_to_json(ev: &SpanEvent) -> Json {
             d.push("bits", Json::num(bits as f64));
             d.push("wire_bytes", Json::num(wire_bytes as f64));
         }
+        SpanData::Retry { attempt, wire_bytes, reason } => {
+            d.push("attempt", Json::num(attempt as f64));
+            d.push("wire_bytes", Json::num(wire_bytes as f64));
+            d.push("reason", Json::str(reason));
+        }
+        SpanData::Reject { attempts, reason } => {
+            d.push("attempts", Json::num(attempts as f64));
+            d.push("reason", Json::str(reason));
+        }
     }
     o.push("data", d);
     o
@@ -115,6 +124,8 @@ pub fn round_to_json(s: &RoundSummary, dropped_events: u64) -> Json {
     o.push("clients", Json::num(s.clients as f64));
     o.push("aggregated", Json::num(s.aggregated as f64));
     o.push("rejected", Json::num(s.rejected as f64));
+    o.push("retries", Json::num(s.retries as f64));
+    o.push("quarantined", Json::num(s.quarantined as f64));
     o.push("assigned_bits", Json::num(s.assigned_bits as f64));
     o.push("achieved_bits", Json::num(s.achieved_bits as f64));
     o.push("uplink_bits", Json::num(s.uplink_bits as f64));

@@ -66,6 +66,15 @@ pub enum SpanKind {
     /// (coordinator thread; a client gets `Broadcast` *or* `StaleSync`
     /// per downlink round, never both).
     StaleSync,
+    /// One scheduled retransmission after a corrupt/unparseable frame
+    /// (coordinator thread; up to `WirePlan::max_retries` per client per
+    /// round). Appended after `StaleSync` so pre-existing traces keep
+    /// their drain sort order.
+    Retry,
+    /// Terminal quarantine of one client's round contribution: wire
+    /// corruption survived every retransmit, or a CRC-valid payload
+    /// failed shard decode (coordinator thread).
+    Reject,
 }
 
 impl SpanKind {
@@ -81,6 +90,8 @@ impl SpanKind {
             SpanKind::ShardFold => "shard_fold",
             SpanKind::Broadcast => "broadcast",
             SpanKind::StaleSync => "stale_sync",
+            SpanKind::Retry => "retry",
+            SpanKind::Reject => "reject",
         }
     }
 }
@@ -135,6 +146,13 @@ pub enum SpanData {
     /// Full-model downlink resync: how many rounds the client's
     /// reference lagged, raw payload bits (32·m), and frame bytes.
     StaleSync { staleness: u64, bits: u64, wire_bytes: u64 },
+    /// One retransmission: which attempt just failed (1-based), the
+    /// frame bytes it burned on the wire, and the decode failure that
+    /// triggered the resend (`reason` is static — span data stays `Copy`).
+    Retry { attempt: u32, wire_bytes: u64, reason: &'static str },
+    /// Terminal rejection: total transmit attempts spent (1 + retries)
+    /// and the failure that exhausted them.
+    Reject { attempts: u32, reason: &'static str },
 }
 
 /// One recorded span. `user` is [`SpanEvent::ROUND_SCOPED`] for events
@@ -383,13 +401,14 @@ impl Collector {
 
     /// Capacity sized for per-round drains over cohorts of `n` clients:
     /// ≈5 uplink spans plus one downlink `broadcast`/`stale_sync` span
-    /// each, one `shard_fold` span per aggregation shard
-    /// (≤ `fleet::MAX_SHARDS`), plus round-scoped headroom — a traced
-    /// bidirectional round at any legal shard count fits without
-    /// dropping events.
+    /// each, headroom for wire-fault `retry`/`reject` spans (each retry
+    /// adds one extra `transmit` + one `retry` span), one `shard_fold`
+    /// span per aggregation shard (≤ `fleet::MAX_SHARDS`), plus
+    /// round-scoped headroom — a traced bidirectional round at any legal
+    /// shard count fits without dropping events.
     pub fn for_cohort(n: usize) -> Self {
         Self::new(
-            n.saturating_mul(8).saturating_add(crate::fleet::MAX_SHARDS).saturating_add(64),
+            n.saturating_mul(12).saturating_add(crate::fleet::MAX_SHARDS).saturating_add(64),
         )
     }
 
@@ -421,7 +440,11 @@ impl Collector {
         if !self.enabled {
             return;
         }
-        self.ring.lock().expect("telemetry ring poisoned").push(ev);
+        // Observability must never turn one contained panic into a
+        // cascade: a recorder that panicked while holding this lock can
+        // at worst have torn its own event slot, so recover the lock and
+        // keep tracing (DESIGN.md §13 poisoning policy).
+        self.ring.lock().unwrap_or_else(|p| p.into_inner()).push(ev);
     }
 
     /// Record one histogram sample. Zero-allocation, lock-free.
@@ -437,7 +460,7 @@ impl Collector {
         if !self.enabled {
             return;
         }
-        self.counters.lock().expect("telemetry counters poisoned").add(key, v);
+        self.counters.lock().unwrap_or_else(|p| p.into_inner()).add(key, v);
     }
 
     /// Take all buffered events, emptying the ring. Events are sorted by
@@ -445,7 +468,7 @@ impl Collector {
     /// count (the recording order is completion order, which is not).
     /// Off the hot path — allocation here is fine.
     pub fn drain(&self) -> Vec<SpanEvent> {
-        let mut ring = self.ring.lock().expect("telemetry ring poisoned");
+        let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
         let cap = ring.buf.len();
         let mut out = Vec::with_capacity(ring.len);
         for k in 0..ring.len {
@@ -460,7 +483,7 @@ impl Collector {
 
     /// Events lost to ring overflow since the last call; resets to zero.
     pub fn take_dropped(&self) -> u64 {
-        let mut ring = self.ring.lock().expect("telemetry ring poisoned");
+        let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
         std::mem::take(&mut ring.dropped)
     }
 
@@ -472,7 +495,7 @@ impl Collector {
     /// Snapshot of all counters (key, value), in first-use order, plus
     /// the number of adds lost to slot exhaustion.
     pub fn counters_snapshot(&self) -> (Vec<(&'static str, f64)>, u64) {
-        let bank = self.counters.lock().expect("telemetry counters poisoned");
+        let bank = self.counters.lock().unwrap_or_else(|p| p.into_inner());
         (bank.slots.clone(), bank.overflowed)
     }
 }

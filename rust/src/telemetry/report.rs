@@ -8,7 +8,11 @@
 //! `uplink_bits` = Σ payload bits of *accepted* transmit spans (rejected
 //! messages never enter the uplink meter), `wire_bytes` = Σ frame bytes
 //! of *all* transmit spans (frames cost wire whether or not they are
-//! admitted), `rejected` = `budget_violations`.
+//! admitted — retransmitted attempts each emit their own transmit span),
+//! `rejected` = refused transmit attempts (budget violations plus
+//! corrupt-frame attempts), `retries` = retry spans = scheduled
+//! retransmissions, `quarantined` = reject spans = clients terminally
+//! rejected (`FleetRoundReport::rejected`).
 
 use crate::metrics::CsvTable;
 
@@ -22,8 +26,15 @@ pub struct RoundSummary {
     pub clients: usize,
     /// Updates folded into the aggregate (= fold spans).
     pub aggregated: usize,
-    /// Messages rejected by the uplink budget check.
+    /// Transmit attempts the server refused: uplink budget rejections
+    /// plus wire-corrupt frames (each failed retransmission counts once).
     pub rejected: usize,
+    /// Retransmissions scheduled after corrupt frames (= `retry` spans).
+    pub retries: usize,
+    /// Clients terminally quarantined this round (= `reject` spans):
+    /// corruption survived every retransmit, or a CRC-valid payload
+    /// failed shard decode.
+    pub quarantined: usize,
     /// Σ assigned budgets ⌊R_u·m⌋ over encode spans.
     pub assigned_bits: u64,
     /// Σ exact coded bits over encode spans.
@@ -130,6 +141,14 @@ impl RoundSummary {
                 self.resyncs += 1;
                 self.broadcast_secs += ev.wall_dur_s;
             }
+            // Retry/reject wire bytes are already counted by the transmit
+            // span every attempt emits; only the counts are tallied here.
+            SpanData::Retry { .. } => {
+                self.retries += 1;
+            }
+            SpanData::Reject { .. } => {
+                self.quarantined += 1;
+            }
         }
     }
 }
@@ -167,6 +186,8 @@ const SUMMARY_COLUMNS: &[SummaryColumn] = &[
     ("clients", |s| s.clients as f64),
     ("aggregated", |s| s.aggregated as f64),
     ("rejected", |s| s.rejected as f64),
+    ("retries", |s| s.retries as f64),
+    ("quarantined", |s| s.quarantined as f64),
     ("assigned_bits", |s| s.assigned_bits as f64),
     ("achieved_bits", |s| s.achieved_bits as f64),
     ("uplink_bits", |s| s.uplink_bits as f64),
@@ -406,6 +427,44 @@ mod tests {
         // Column lookup by name stays stable for downstream consumers.
         let col = table.header.iter().position(|h| h == "uplink_bits").unwrap();
         assert_eq!(table.rows[0][col], 180.0);
+    }
+
+    #[test]
+    fn summarize_tallies_retries_and_quarantines() {
+        let mut events = client_events(0, 4, true);
+        // Client 4's first attempt was corrupt: one unaccepted transmit
+        // plus the retry span that scheduled the successful resend above.
+        events.push(SpanEvent {
+            kind: SpanKind::Transmit,
+            round: 0,
+            user: 4,
+            data: SpanData::Transmit { wire_bytes: 40, payload_bits: 0, accepted: false },
+            ..SpanEvent::default()
+        });
+        events.push(SpanEvent {
+            kind: SpanKind::Retry,
+            round: 0,
+            user: 4,
+            data: SpanData::Retry { attempt: 1, wire_bytes: 40, reason: "crc mismatch" },
+            ..SpanEvent::default()
+        });
+        // Client 6 exhausted its retransmit budget and was quarantined.
+        events.push(SpanEvent {
+            kind: SpanKind::Reject,
+            round: 0,
+            user: 6,
+            data: SpanData::Reject { attempts: 3, reason: "truncated frame" },
+            ..SpanEvent::default()
+        });
+        let rounds = summarize(&events);
+        assert_eq!(rounds.len(), 1);
+        let r = &rounds[0];
+        assert_eq!(r.retries, 1);
+        assert_eq!(r.quarantined, 1);
+        assert_eq!(r.rejected, 1, "the corrupt attempt counts as a refused transmit");
+        assert_eq!(r.aggregated, 1, "the retried client still folds once");
+        assert_eq!(r.wire_bytes, 80, "every attempt burns wire bytes");
+        assert_eq!(r.uplink_bits, 180, "only the accepted attempt is metered");
     }
 
     #[test]

@@ -99,9 +99,9 @@ fn steady_state_sessions_do_not_allocate() {
         // ── DecodeStream: first chunk warms the per-session scratch,
         //    the rest of the drain must not allocate.
         let mut stream = codec.decoder(&enc, m, &ctx);
-        let mut total = stream.next_chunk().expect("empty decode stream").len();
+        let mut total = stream.next_chunk().unwrap().expect("empty decode stream").len();
         let n = counted(|| {
-            while let Some(c) = stream.next_chunk() {
+            while let Some(c) = stream.next_chunk().unwrap() {
                 total += c.len();
             }
         });
@@ -120,9 +120,9 @@ fn steady_state_sessions_do_not_allocate() {
     let ctx = CodecContext::new(0, 0, 7, 0.2);
     let enc = codec.encode(&sparse, &ctx);
     let mut stream = codec.decoder(&enc, m, &ctx);
-    let mut total = stream.next_chunk().expect("empty qsgd range stream").len();
+    let mut total = stream.next_chunk().unwrap().expect("empty qsgd range stream").len();
     let n = counted(|| {
-        while let Some(c) = stream.next_chunk() {
+        while let Some(c) = stream.next_chunk().unwrap() {
             total += c.len();
         }
     });
@@ -189,13 +189,13 @@ fn steady_state_sessions_do_not_allocate() {
     let mut agg = StreamingAggregator::new(m);
     let mut stream = codec.decoder(&enc, m, &ctx);
     let mut offset = {
-        let first = stream.next_chunk().expect("empty decode stream");
+        let first = stream.next_chunk().unwrap().expect("empty decode stream");
         agg.fold_chunk(0, 0.5, first);
         collector.record_hist(HistMetric::FoldChunkNanos, 100);
         first.len()
     };
     let n = counted(|| {
-        while let Some(chunk) = stream.next_chunk() {
+        while let Some(chunk) = stream.next_chunk().unwrap() {
             agg.fold_chunk(offset, 0.5, chunk);
             collector.record_hist(HistMetric::FoldChunkNanos, 100);
             offset += chunk.len();

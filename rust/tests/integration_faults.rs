@@ -1,0 +1,345 @@
+//! Integration: the hostile wire, end to end.
+//!
+//! DESIGN.md §13 promises that every path from serialized frame bytes to
+//! the sharded fold is panic-free and deterministically fault-injectable:
+//!
+//! * any disturbed frame surfaces as a typed [`WireError`] from
+//!   `decode_frame` — a single bit flip anywhere is always caught (header
+//!   field validation or CRC-32, which detects all 1-bit errors);
+//! * a CRC-valid frame whose *payload* was tampered (restamped checksum)
+//!   decodes to a typed [`DecodeError`] or to garbage values — never a
+//!   panic — for every registered codec;
+//! * under an active [`WirePlan`] the round completes with quarantine
+//!   accounting (`rejected` / `retries` / `corrupt_wire_bytes`), and the
+//!   model weights plus the deterministic report slice are bit-identical
+//!   for any worker count × shard count × tracing combination;
+//! * retransmissions burn real wire bytes and stretch virtual time, and
+//!   the round deadline bounds them.
+
+use uveqfed::data::{Dataset, SynthMnist};
+use uveqfed::fl::{NativeTrainer, Trainer};
+use uveqfed::fleet::{
+    decode_frame, encode_frame, ChannelRoundStats, ClientRoundRecord, FaultPlan, FleetDriver,
+    FleetRoundReport, LatencyModel, RoundSpec, Scenario, ShardPool, VirtualClock, WirePlan,
+};
+use uveqfed::models::LogReg;
+use uveqfed::prng::{Rng, Xoshiro256pp};
+use uveqfed::quantizer::{self, CodecContext, Encoded};
+use uveqfed::telemetry::{Collector, SpanData, SpanKind};
+
+// ─── frame layer: corruption always surfaces as a typed error ───────────
+
+/// Encode one real update with `name` and return (frame, payload, ctx).
+fn framed_update(name: &str, m: usize, seed: u64) -> (Vec<u8>, Encoded, CodecContext) {
+    let codec = quantizer::make(name).unwrap();
+    let ctx = CodecContext::new(3, 5, seed, 2.0);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let h: Vec<f32> = (0..m).map(|_| rng.normal_f32() * 0.2).collect();
+    let enc = codec.encode(&h, &ctx);
+    let id = quantizer::codec_id(name).unwrap_or(quantizer::CODEC_ID_UNREGISTERED);
+    (encode_frame(3, 5, id, &enc), enc, ctx)
+}
+
+#[test]
+fn any_single_bit_flip_is_rejected_by_the_frame_layer() {
+    let m = 256;
+    for name in quantizer::registered_codec_names() {
+        let (frame, _, _) = framed_update(name, m, 0xF1A6 ^ name.len() as u64);
+        assert!(decode_frame(&frame).is_ok(), "{name}: pristine frame must decode");
+        // Every header and trailer bit, plus a pseudo-random sample of
+        // payload bits: CRC-32 catches all single-bit errors, and the
+        // header field checks fire first for the fields they validate.
+        let mut bits: Vec<usize> = (0..36 * 8).collect(); // header
+        bits.extend((frame.len() - 4) * 8..frame.len() * 8); // trailer
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        bits.extend((0..200).map(|_| rng.gen_index(frame.len() * 8)));
+        for bit in bits {
+            let mut f = frame.clone();
+            f[bit / 8] ^= 1 << (bit % 8);
+            assert!(
+                decode_frame(&f).is_err(),
+                "{name}: flipped bit {bit} must yield a typed WireError"
+            );
+        }
+        // Truncation to every interesting prefix length, and garbage tails.
+        for keep in [0, 1, 35, 36, 39, frame.len() - 5, frame.len() - 1] {
+            assert!(decode_frame(&frame[..keep]).is_err(), "{name}: prefix {keep}");
+        }
+        let mut long = frame.clone();
+        long.push(0xEE);
+        assert!(decode_frame(&long).is_err(), "{name}: trailing garbage");
+    }
+}
+
+#[test]
+fn tampered_payloads_decode_to_typed_errors_or_garbage_never_panic() {
+    // A frame whose payload was altered *and* whose CRC was restamped
+    // passes the wire layer — the codec session must then survive the
+    // garbage: Ok(m values) or a typed DecodeError, never a panic. This
+    // is exactly the surface the shard's stage-decode quarantine guards.
+    let m = 300;
+    let mut rng = Xoshiro256pp::seed_from_u64(0xBAD);
+    for name in quantizer::registered_codec_names() {
+        let codec = quantizer::make(name).unwrap();
+        let (_, enc, ctx) = framed_update(name, m, 0xD00D ^ name.len() as u64);
+        for trial in 0..40 {
+            let mut tampered = enc.clone();
+            if trial % 4 == 3 && !tampered.bytes.is_empty() {
+                // Truncated payload with a coherent header.
+                tampered.bytes.truncate(tampered.bytes.len() / 2);
+                tampered.bits = tampered.bits.min(8 * tampered.bytes.len());
+            } else {
+                for _ in 0..1 + rng.gen_index(8) {
+                    if tampered.bytes.is_empty() {
+                        break;
+                    }
+                    let i = rng.gen_index(tampered.bytes.len());
+                    tampered.bytes[i] ^= (1 + rng.gen_index(255)) as u8;
+                }
+            }
+            // Re-framing restamps the CRC: the wire layer must admit it...
+            let id = quantizer::codec_id(name).unwrap_or(quantizer::CODEC_ID_UNREGISTERED);
+            let reframed = encode_frame(3, 5, id, &tampered);
+            let admitted = decode_frame(&reframed).expect("restamped CRC must pass the frame layer");
+            // ...and the codec must contain the damage.
+            match codec.try_decode(&admitted.payload, m, &ctx) {
+                Ok(v) => assert_eq!(v.len(), m, "{name}: Ok decode must be full-length"),
+                Err(e) => {
+                    assert!(!e.reason().is_empty(), "{name}: reasons feed fate records");
+                }
+            }
+        }
+    }
+}
+
+// ─── fleet layer: quarantine accounting, bit-identical across topology ──
+
+/// The deterministic slice of a [`FleetRoundReport`] under fault
+/// injection — everything except wall-clock timings, float aggregates
+/// compared bit-for-bit.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    round: u64,
+    selected: usize,
+    aggregated: usize,
+    dropped: usize,
+    late: usize,
+    rejected: usize,
+    retries: usize,
+    corrupt_wire_bytes: usize,
+    budget_violations: usize,
+    uplink_bits: usize,
+    wire_bytes: usize,
+    alpha_sum: u64,
+    alpha_mass: u64,
+    aggregate_distortion: u64,
+    duration: u64,
+    max_latency: u64,
+    channel: ChannelRoundStats,
+    clients: Vec<ClientRoundRecord>,
+}
+
+impl Fingerprint {
+    fn of(rep: &FleetRoundReport) -> Self {
+        Self {
+            round: rep.round,
+            selected: rep.selected,
+            aggregated: rep.aggregated,
+            dropped: rep.dropped,
+            late: rep.late,
+            rejected: rep.rejected,
+            retries: rep.retries,
+            corrupt_wire_bytes: rep.corrupt_wire_bytes,
+            budget_violations: rep.budget_violations,
+            uplink_bits: rep.uplink_bits,
+            wire_bytes: rep.wire_bytes,
+            alpha_sum: rep.alpha_sum.to_bits(),
+            alpha_mass: rep.alpha_mass.to_bits(),
+            aggregate_distortion: rep.aggregate_distortion.to_bits(),
+            duration: rep.timing.duration.to_bits(),
+            max_latency: rep.timing.max_latency.to_bits(),
+            channel: rep.channel,
+            clients: rep.clients.clone(),
+        }
+    }
+}
+
+fn setup(k: usize, per: usize) -> (Vec<Dataset>, NativeTrainer<LogReg>) {
+    let ds = SynthMnist::new(21).dataset(k * per);
+    let shards: Vec<Dataset> = (0..k)
+        .map(|u| ds.subset(&(u * per..(u + 1) * per).collect::<Vec<_>>()))
+        .collect();
+    (shards, NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3)))
+}
+
+/// A hostile-wire scenario: fixed 1 s uplink latency so retransmission
+/// arithmetic is exact, no dropout, and an aggressive corruption plan.
+fn hostile(cohort: usize, corrupt_prob: f64, max_retries: u32, deadline: Option<f64>) -> Scenario {
+    Scenario {
+        faults: FaultPlan {
+            latency: LatencyModel::Fixed(1.0),
+            dropout: 0.0,
+            deadline,
+            wire: WirePlan { corrupt_prob, max_retries },
+        },
+        ..Scenario::sampled(cohort)
+    }
+}
+
+fn run_rounds(
+    shards: &[Dataset],
+    trainer: &NativeTrainer<LogReg>,
+    scenario: &Scenario,
+    workers: usize,
+    agg_shards: usize,
+    traced: bool,
+    rounds: u64,
+) -> (Vec<f32>, Vec<Fingerprint>, VirtualClock) {
+    let pool = ShardPool::new(shards);
+    let codec = quantizer::make("uveqfed-l2").unwrap();
+    let driver =
+        FleetDriver::new(33, 2.0, workers, scenario.clone()).with_shards(agg_shards);
+    let collector = if traced { Collector::for_cohort(16) } else { Collector::disabled() };
+    let mut clock = VirtualClock::new();
+    let mut w = trainer.init_params(2);
+    let mut prints = Vec::new();
+    for round in 0..rounds {
+        let spec = RoundSpec::new(round, 1, 0.5, 0, trainer, codec.as_ref())
+            .with_telemetry(&collector);
+        let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
+        if traced {
+            // Telemetry reconciliation — the executable form of what
+            // scripts/validate_trace.py checks on JSONL traces: span
+            // counts and byte totals must match the report exactly.
+            let spans = collector.drain();
+            assert_eq!(collector.take_dropped(), 0, "ring sized for retries/rejects");
+            let retries = spans.iter().filter(|s| s.kind == SpanKind::Retry).count();
+            let rejects = spans.iter().filter(|s| s.kind == SpanKind::Reject).count();
+            let tx_bytes: u64 = spans
+                .iter()
+                .filter_map(|s| match s.data {
+                    SpanData::Transmit { wire_bytes, .. } => Some(wire_bytes),
+                    _ => None,
+                })
+                .sum();
+            assert_eq!(retries, rep.retries, "retry spans must match the report");
+            assert_eq!(rejects, rep.rejected, "reject spans must match the report");
+            assert_eq!(tx_bytes as usize, rep.wire_bytes, "every attempt is metered");
+        }
+        prints.push(Fingerprint::of(&rep));
+    }
+    (w, prints, clock)
+}
+
+#[test]
+fn corrupted_rounds_are_bit_identical_across_topologies() {
+    let (shards, trainer) = setup(12, 20);
+    let scenario = hostile(6, 0.9, 2, None);
+    let (w0, p0, _) = run_rounds(&shards, &trainer, &scenario, 1, 1, false, 2);
+
+    // The fixed seed must actually exercise the machinery.
+    let rejected: usize = p0.iter().map(|p| p.rejected).sum();
+    let retries: usize = p0.iter().map(|p| p.retries).sum();
+    assert!(rejected > 0, "scenario must quarantine someone");
+    assert!(retries > 0, "scenario must retransmit");
+    for p in &p0 {
+        assert!(p.corrupt_wire_bytes > 0, "corruption must be metered");
+        // No dropout, no deadline, rate-constrained codec: every arrival
+        // either folds or is quarantined.
+        assert_eq!(p.aggregated + p.rejected, 6, "arrivals partition into fold/quarantine");
+        assert_eq!(p.budget_violations, 0);
+        // α re-normalizes over the *pre-rejection* arrivals, so the
+        // folded mass is exactly the surviving fraction (uniform shards).
+        let alpha = f64::from_bits(p.alpha_sum);
+        assert!((alpha - p.aggregated as f64 / 6.0).abs() < 1e-9, "alpha_sum {alpha}");
+        // Per-client records agree with the round aggregates.
+        let rec_rejected = p.clients.iter().filter(|c| c.rejected).count();
+        let rec_retries: usize = p.clients.iter().map(|c| c.retries as usize).sum();
+        assert_eq!(rec_rejected, p.rejected);
+        assert_eq!(rec_retries, p.retries);
+        for c in p.clients.iter().filter(|c| c.rejected) {
+            assert_eq!(c.achieved_bits, 0, "quarantined client keeps no folded bits");
+        }
+    }
+
+    for (workers, agg_shards) in [(8usize, 1usize), (1, 4), (8, 4)] {
+        for traced in [false, true] {
+            let (w, p, _) =
+                run_rounds(&shards, &trainer, &scenario, workers, agg_shards, traced, 2);
+            assert_eq!(
+                w0, w,
+                "weights diverged at workers={workers} shards={agg_shards} traced={traced}"
+            );
+            assert_eq!(
+                p0, p,
+                "report diverged at workers={workers} shards={agg_shards} traced={traced}"
+            );
+        }
+    }
+}
+
+#[test]
+fn total_corruption_quarantines_the_whole_round_and_leaves_the_model_unchanged() {
+    let (shards, trainer) = setup(12, 20);
+    let scenario = hostile(6, 1.0, 0, None);
+    let pool = ShardPool::new(&shards);
+    let codec = quantizer::make("uveqfed-l2").unwrap();
+    let driver = FleetDriver::new(7, 2.0, 2, scenario);
+    let mut clock = VirtualClock::new();
+    let mut w = trainer.init_params(4);
+    let w_before = w.clone();
+    let spec = RoundSpec::new(0, 1, 0.5, 0, &trainer, codec.as_ref());
+    let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
+
+    assert_eq!(rep.aggregated, 0, "nothing survives a fully hostile wire");
+    assert_eq!(rep.rejected, 6, "every arrival is quarantined");
+    assert_eq!(rep.retries, 0, "max_retries = 0 forbids retransmission");
+    assert_eq!(rep.alpha_sum, 0.0);
+    assert_eq!(rep.completion_rate, 0.0);
+    assert!(rep.corrupt_wire_bytes > 0);
+    assert_eq!(w, w_before, "quarantined contributions must never touch the model");
+    // Failed attempts still burn virtual time: the round closes at the
+    // (single) attempt latency.
+    assert!((clock.now() - 1.0).abs() < 1e-12, "clock {}", clock.now());
+    for c in &rep.clients {
+        assert_eq!(c.achieved_bits, 0);
+    }
+    assert_eq!(rep.clients.iter().filter(|c| c.rejected).count(), 6);
+}
+
+#[test]
+fn retransmits_burn_wire_bytes_and_stretch_virtual_time() {
+    let (shards, trainer) = setup(12, 20);
+    let clean = hostile(6, 0.0, 0, None);
+    let noisy = hostile(6, 0.9, 3, None);
+    let (_, p_clean, clock_clean) = run_rounds(&shards, &trainer, &clean, 2, 2, false, 1);
+    let (_, p_noisy, clock_noisy) = run_rounds(&shards, &trainer, &noisy, 2, 2, false, 1);
+
+    assert_eq!(p_clean[0].retries, 0);
+    assert!(p_noisy[0].retries > 0, "0.9 corruption over 6 clients must retry");
+    assert!(
+        p_noisy[0].wire_bytes > p_clean[0].wire_bytes,
+        "every retransmitted frame is metered: {} vs {}",
+        p_noisy[0].wire_bytes,
+        p_clean[0].wire_bytes
+    );
+    // Attempt k lands after k·latency: with ≥1 retry the noisy round
+    // closes at ≥ 2 virtual seconds, the clean one at exactly 1.
+    assert!((clock_clean.now() - 1.0).abs() < 1e-12);
+    assert!(clock_noisy.now() >= 2.0 - 1e-12, "clock {}", clock_noisy.now());
+}
+
+#[test]
+fn round_deadline_bounds_retransmission() {
+    // Latency 1.0 with a 1.5 s deadline: a first attempt lands in time,
+    // but any retransmit would land at 2.0 > deadline — so a corrupted
+    // client is quarantined immediately with zero retries even though
+    // max_retries allows five.
+    let (shards, trainer) = setup(12, 20);
+    let scenario = hostile(6, 1.0, 5, Some(1.5));
+    let (_, prints, clock) = run_rounds(&shards, &trainer, &scenario, 2, 1, true, 1);
+    assert_eq!(prints[0].retries, 0, "deadline must cut retransmission");
+    assert_eq!(prints[0].rejected, 6);
+    assert_eq!(prints[0].aggregated, 0);
+    assert!((clock.now() - 1.0).abs() < 1e-12, "no retry, no stretched round");
+}

@@ -112,7 +112,7 @@ fn decode_stream_drains_to_whole_buffer_decode() {
             let whole = codec.decode(&enc, h.len(), &ctx);
             let mut streamed = Vec::with_capacity(h.len());
             let mut stream = codec.decoder(&enc, h.len(), &ctx);
-            while let Some(chunk) = stream.next_chunk() {
+            while let Some(chunk) = stream.next_chunk().unwrap() {
                 streamed.extend_from_slice(chunk);
             }
             // Bit-exact: decoded f32s must be identical, not just close.
@@ -134,7 +134,7 @@ fn fold_stream_equals_fold_of_materialized_decode_for_every_codec() {
 
         let mut via_stream = StreamingAggregator::new(m);
         let mut stream = codec.decoder(&enc, m, &ctx);
-        via_stream.fold_stream(0.35, stream.as_mut());
+        via_stream.fold_stream(0.35, stream.as_mut()).unwrap();
 
         let mut via_vec = StreamingAggregator::new(m);
         via_vec.fold(0.35, &codec.decode(&enc, m, &ctx));

@@ -20,6 +20,11 @@ Checks, exiting non-zero on the first violation:
   that round (clients / aggregated / rejected counts; assigned, achieved,
   uplink and wire sums — rejected transmits cost wire bytes but are never
   metered as uplink bits; alpha_sum within 1e-9 of the fold-span sum);
+* the hostile-wire machinery reconciles two ways: the round line's
+  ``retries`` equals the ``retry``-span count and ``quarantined`` equals
+  the ``reject``-span count; every retry/reject span carries a non-empty
+  reason and an attempt count ≥ 1 (a clean round must report zero for
+  both and own no such spans);
 * the downlink reconciles two ways: the round line's ``downlink_bytes`` /
   ``downlink_bits`` / ``resyncs`` equal the sums over that round's
   ``broadcast`` + ``stale_sync`` spans, and every downlink span lands in
@@ -55,6 +60,8 @@ DATA_FIELDS = {
     "shard_fold": ("shard", "folds", "chunks", "entries", "decode_secs", "fold_secs"),
     "broadcast": ("assigned_bits", "achieved_bits", "wire_bytes", "ref_round"),
     "stale_sync": ("staleness", "bits", "wire_bytes"),
+    "retry": ("attempt", "wire_bytes", "reason"),
+    "reject": ("attempts", "reason"),
 }
 ROUND_SCOPED = ("rate_alloc", "shard_fold")
 LIFECYCLE = ("client_train", "encode", "transmit", "decode", "fold")
@@ -75,6 +82,8 @@ def blank_round_tally():
         "clients": 0,
         "aggregated": 0,
         "rejected": 0,
+        "retries": 0,
+        "quarantined": 0,
         "assigned_bits": 0,
         "achieved_bits": 0,
         "uplink_bits": 0,
@@ -153,6 +162,30 @@ def check_span(obj, lineno, tally):
         r["downlink_bytes"] += data["wire_bytes"]
         r["downlink_bits"] += data["bits"]
         r["resyncs"] += 1
+    elif kind == "retry":
+        require(
+            data["attempt"] >= 1,
+            lineno,
+            f"user {user}: retry span with attempt {data['attempt']}",
+        )
+        require(
+            isinstance(data["reason"], str) and data["reason"],
+            lineno,
+            f"user {user}: retry span with empty reason",
+        )
+        r["retries"] += 1
+    elif kind == "reject":
+        require(
+            data["attempts"] >= 1,
+            lineno,
+            f"user {user}: reject span with {data['attempts']} attempts",
+        )
+        require(
+            isinstance(data["reason"], str) and data["reason"],
+            lineno,
+            f"user {user}: reject span with empty reason",
+        )
+        r["quarantined"] += 1
     elif kind == "shard_fold":
         shard = data["shard"]
         require(
@@ -175,6 +208,8 @@ def check_round_line(obj, lineno, tally):
         "clients",
         "aggregated",
         "rejected",
+        "retries",
+        "quarantined",
         "assigned_bits",
         "achieved_bits",
         "uplink_bits",
