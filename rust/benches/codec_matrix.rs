@@ -1,0 +1,111 @@
+//! Codec comparison matrix: UVeQFed (lattice VQ) vs FedVQCS
+//! (sketch + top-k + lattice VQ, IHT reconstruction) vs QSGD, across the
+//! heterogeneous-channel presets the rate controller supports.
+//!
+//! Two sections:
+//!   A. rate–distortion roundtrips on a synthetic Gaussian update — the
+//!      per-codec mse / realized-rate trade at R ∈ {2, 4};
+//!   B. end-to-end fleet rounds under each channel preset (uniform,
+//!      tiers, lognormal, markov) with the theory-guided rate controller
+//!      assigning per-client budgets — wall time per round plus the
+//!      aggregate-distortion and uplink-bit figures the round report
+//!      already carries.
+//!
+//! Timings merge into `BENCH_baseline.json` via [`Recorder`]; the
+//! distortion/bit figures ride the printed report (they are comparisons,
+//! not perf trajectories). `--smoke` shrinks sizes and swaps fedvqcs to a
+//! cheap solver configuration so CI can execute every cell.
+
+use uveqfed::bench::{run, smoke_mode, BenchConfig, Recorder};
+use uveqfed::coordinator::rate_control::TheoryGuided;
+use uveqfed::data::{gaussian_matrix, partition, PartitionScheme, SynthMnist};
+use uveqfed::fl::{NativeTrainer, Trainer};
+use uveqfed::fleet::{
+    Channel, ChannelModel, FleetDriver, RatePlan, RoundSpec, Scenario, ShardPool, VirtualClock,
+};
+use uveqfed::models::LogReg;
+use uveqfed::quantizer::{self, measure_distortion};
+
+/// Registry base name of a codec spec (`"fedvqcs:ratio=…"` → `"fedvqcs"`).
+fn short(name: &str) -> &str {
+    name.split(':').next().unwrap_or(name)
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let smoke = smoke_mode();
+    let mut rec = Recorder::new("codec_matrix");
+
+    // The sketch matrix is d×m (regenerated, never stored on the wire,
+    // but materialized per decode), so the solver configuration scales
+    // with the update size under test.
+    let fedvqcs = if smoke {
+        "fedvqcs:ratio=0.01,sparsity=0.05,solver_iters=5"
+    } else {
+        "fedvqcs:ratio=0.05,sparsity=0.05,solver_iters=20"
+    };
+    let codecs = ["uveqfed-l2", fedvqcs, "qsgd"];
+
+    // ── A. rate–distortion on a synthetic Gaussian update ──────────────
+    let h = gaussian_matrix(if smoke { 32 } else { 64 }, 5);
+    let m = h.len();
+    println!("# codec_matrix — A: rate–distortion, {m}-entry update");
+    for name in codecs {
+        for rate in [2.0f64, 4.0] {
+            let probe = quantizer::make(name).expect("codec spec");
+            let d = measure_distortion(probe.as_ref(), &h, rate, 7, 0);
+            let r = run(&format!("roundtrip/{}/r{rate}", short(name)), cfg, || {
+                // Fresh instance per iteration: warm-start hints must not
+                // leak between timed encodes.
+                let codec = quantizer::make(name).expect("codec spec");
+                std::hint::black_box(measure_distortion(codec.as_ref(), &h, rate, 7, 0));
+            });
+            rec.add_with_items(&r, m as f64);
+            println!(
+                "    ↳ mse {:.4e}, {:.3} bits/entry realized",
+                d.mse, d.bits_per_entry
+            );
+        }
+    }
+
+    // ── B. fleet rounds across heterogeneous-channel presets ───────────
+    let presets = ["uniform", "tiers", "lognormal", "markov"];
+    let (k, per, rounds) = if smoke { (6usize, 10usize, 1u64) } else { (12, 20, 2) };
+    let gen = SynthMnist::new(11);
+    let ds = gen.dataset(k * per);
+    let shards = partition(&ds, k, per, PartitionScheme::Iid, 11);
+    let trainer = NativeTrainer::new(LogReg::new(ds.features, ds.classes, 1e-3));
+    let pool = ShardPool::new(&shards);
+    println!("# codec_matrix — B: {k}-client fleet, {rounds} round(s) per preset");
+    for name in codecs {
+        for preset in presets {
+            let codec = quantizer::make(name).expect("codec spec");
+            let run_fleet = || {
+                let plan = RatePlan::new(
+                    Channel::new(ChannelModel::by_name(preset, 2.0).unwrap(), 9),
+                    Box::new(TheoryGuided),
+                );
+                let driver =
+                    FleetDriver::new(9, 2.0, 2, Scenario::full()).with_rate_plan(plan);
+                let mut clock = VirtualClock::new();
+                let mut w = trainer.init_params(3);
+                let mut last = None;
+                for round in 0..rounds {
+                    let spec = RoundSpec::new(round, 1, 0.5, 0, &trainer, codec.as_ref());
+                    last = Some(driver.run_round(&spec, &mut w, &pool, &mut clock));
+                }
+                last.expect("at least one round")
+            };
+            let rep = run_fleet(); // warm + the comparison figures
+            let r = run(&format!("fleet/{}/{preset}", short(name)), cfg, || {
+                std::hint::black_box(run_fleet());
+            });
+            rec.add_with_items(&r, rounds as f64 * rep.aggregated as f64);
+            println!(
+                "    ↳ {} folded, aggregate distortion {:.4e}, {} uplink bits",
+                rep.aggregated, rep.aggregate_distortion, rep.uplink_bits
+            );
+        }
+    }
+    rec.save_or_warn();
+}

@@ -155,7 +155,10 @@ fn main() {
     // ── C: streaming encode sessions — per-codec encode throughput and
     //      peak client-side sink state across chunk sizes. A streaming
     //      codec (identity, signsgd) holds far less than the 4·m bytes a
-    //      two-pass codec must buffer; the numbers below measure that.
+    //      two-pass codec must buffer; the buffered transform codecs
+    //      (rotation, topk, subsample) now report honest `state_bytes`,
+    //      so their full-update footprint shows up here instead of
+    //      pretending to be zero. The numbers below measure all of that.
     let m_big = if smoke { 1usize << 14 } else { 1 << 20 }; // 1M parameters
     let mut rng = Xoshiro256pp::seed_from_u64(7);
     let h_big = Normal::new(0.0, 0.02).vec_f32(&mut rng, m_big);
@@ -164,7 +167,9 @@ fn main() {
         m_big * 4 / 1_000_000,
         m_big * 4 / 1024
     );
-    for name in ["uveqfed-l2", "qsgd", "signsgd", "identity"] {
+    for name in
+        ["uveqfed-l2", "qsgd", "signsgd", "identity", "rotation", "topk", "subsample"]
+    {
         let codec = quantizer::make(name).expect("codec spec");
         let ctx = CodecContext::new(1, 1, 7, 2.0);
         let chunk_sizes: &[usize] =

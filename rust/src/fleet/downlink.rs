@@ -299,14 +299,16 @@ mod tests {
         let e2: Vec<f32> = {
             let w0 = model(m, 0.0);
             let d1: Vec<f32> = (0..m).map(|j| w1[j] - w0[j]).collect();
-            let ctx = CodecContext::new(9, 1, 2 ^ DOWNLINK_SEED_SALT, 2.0);
+            // Matches broadcast's internal CodecContext::new(user, round,
+            // seed ^ SALT, rate) for the user = 2 / seed = 9 calls above.
+            let ctx = CodecContext::new(2, 1, 9 ^ DOWNLINK_SEED_SALT, 2.0);
             let enc = codec.encode(&d1, &ctx);
             let d1_hat = codec.decode(&enc, m, &ctx);
             (0..m).map(|j| d1[j] - d1_hat[j]).collect()
         };
         let w2 = model(m, 0.7);
         let expect: Vec<f32> = {
-            let ctx = CodecContext::new(9, 2, 2 ^ DOWNLINK_SEED_SALT, 2.0);
+            let ctx = CodecContext::new(2, 2, 9 ^ DOWNLINK_SEED_SALT, 2.0);
             let d2: Vec<f32> =
                 (0..m).map(|j| w2[j] - out1.reconstruction[j] + e2[j]).collect();
             let enc = codec.encode(&d2, &ctx);
@@ -315,6 +317,53 @@ mod tests {
         };
         let out2 = table.broadcast(codec.as_ref(), 2.0, 0, 9, 2, 2, &w2);
         assert_eq!(out2.reconstruction, expect, "EF recursion mismatch");
+    }
+
+    #[test]
+    fn fedvqcs_downlink_carries_error_feedback_through_the_solver() {
+        // The pipeline codec must slot into the broadcast path unchanged:
+        // the sketch + IHT reconstruction is deterministic in
+        // (user, round, seed ^ SALT), so the simulated client decode is
+        // exactly reproducible, and the (large — top-k keeps 10% of the
+        // delta) quantization residue must ride the EF accumulator into
+        // the next round's delta. Same manual-replay shape as the
+        // uveqfed-l2 test above; shared-instance encodes are safe because
+        // the terminal's warm-start hints are round-frozen.
+        let spec = "fedvqcs:ratio=0.25,sparsity=0.1,solver_iters=10";
+        let codec = quantizer::make(spec).unwrap();
+        let mut table = SyncTable::default();
+        let m = 128;
+        table.broadcast(codec.as_ref(), 2.0, 0, 9, 0, 2, &model(m, 0.0));
+        let w1 = model(m, 0.3);
+        let out1 = table.broadcast(codec.as_ref(), 2.0, 0, 9, 1, 2, &w1);
+        assert!(!out1.resync, "rate-constrained fedvqcs must take the delta path");
+        assert!(out1.sq_err > 0.0, "a sketched 10%-sparse broadcast must leave residue");
+        assert!(out1.payload_bits <= out1.assigned_bits, "fedvqcs delta over budget");
+        // Replay contexts mirror `broadcast`'s own
+        // `CodecContext::new(user, round, seed ^ DOWNLINK_SEED_SALT, rate)`
+        // with the user = 2 / seed = 9 used above: the sketch matrix is
+        // drawn from (user, round, seed), so any swap desynchronizes the
+        // IHT solver from the table's simulated client decode.
+        let e2: Vec<f32> = {
+            let w0 = model(m, 0.0);
+            let d1: Vec<f32> = (0..m).map(|j| w1[j] - w0[j]).collect();
+            let ctx = CodecContext::new(2, 1, 9 ^ DOWNLINK_SEED_SALT, 2.0);
+            let enc = codec.encode(&d1, &ctx);
+            let d1_hat = codec.decode(&enc, m, &ctx);
+            (0..m).map(|j| d1[j] - d1_hat[j]).collect()
+        };
+        assert!(e2.iter().any(|&v| v != 0.0), "residue must be non-trivial");
+        let w2 = model(m, 0.7);
+        let expect: Vec<f32> = {
+            let ctx = CodecContext::new(2, 2, 9 ^ DOWNLINK_SEED_SALT, 2.0);
+            let d2: Vec<f32> =
+                (0..m).map(|j| w2[j] - out1.reconstruction[j] + e2[j]).collect();
+            let enc = codec.encode(&d2, &ctx);
+            let d2_hat = codec.decode(&enc, m, &ctx);
+            (0..m).map(|j| out1.reconstruction[j] + d2_hat[j]).collect()
+        };
+        let out2 = table.broadcast(codec.as_ref(), 2.0, 0, 9, 2, 2, &w2);
+        assert_eq!(out2.reconstruction, expect, "fedvqcs EF recursion mismatch");
     }
 
     #[test]

@@ -66,10 +66,18 @@ use crate::coordinator::UplinkChannel;
 use crate::data::Dataset;
 use crate::fl::Trainer;
 use crate::metrics::Timer;
+use std::sync::atomic::{AtomicBool, Ordering};
+
 use crate::prng::{CommonRandomness, SplitMix64, StreamKind};
-use crate::quantizer::{self, CodecContext, UpdateCodec, DEFAULT_CHUNK};
+use crate::quantizer::{self, CodecContext, DecodeBudget, UpdateCodec, DEFAULT_CHUNK};
 use crate::telemetry::{probe, Collector, HistMetric, SpanData, SpanEvent, SpanKind};
 use crate::util::threadpool::parallel_map_fold;
+
+/// One-time (process-wide) latch for the "a buffered encode session held
+/// more than 1 MiB" telemetry counter — the counter fires at most once
+/// per process, so traced large-model runs get exactly one marker instead
+/// of one per client encode.
+static ENCODE_STATE_OVER_1MIB: AtomicBool = AtomicBool::new(false);
 
 /// Everything one round needs beyond the mutable state (`w`, the pool and
 /// the clock): the schedule position plus the client-side algorithm —
@@ -499,6 +507,11 @@ pub struct FleetDriver {
     rate_plan: Option<RatePlan>,
     /// Aggregation shards the server fold is split across (≥ 1).
     shards: usize,
+    /// Compute credit each shard decode session may spend (solver
+    /// iterations for fedvqcs-style codecs). Default unlimited; a bounded
+    /// budget turns an over-budget decode into a typed `ShardReject`
+    /// ("decode budget exhausted"), never a partial fold.
+    decode_budget: DecodeBudget,
     /// Downlink broadcast state: per-client reference table + error
     /// feedback, plus an optional downlink capacity model. Only consulted
     /// when a round's spec carries a [`DownlinkSpec`].
@@ -515,8 +528,17 @@ impl FleetDriver {
             sampler: CohortSampler::new(seed),
             rate_plan: None,
             shards: 1,
+            decode_budget: DecodeBudget::UNLIMITED,
             broadcast: BroadcastPlanner::new(),
         }
+    }
+
+    /// Cap the compute credit each server-side decode session may spend
+    /// (one unit per reconstruction-solver iteration). Exhaustion rejects
+    /// that client's update for the round — it never partially folds.
+    pub fn with_decode_budget(mut self, budget: DecodeBudget) -> Self {
+        self.decode_budget = budget;
+        self
     }
 
     /// Split the server fold across `n` aggregation shards. The merged
@@ -770,6 +792,7 @@ impl FleetDriver {
             let eff_latency_ref = &mut eff_latency;
             let seed = self.seed;
             let codec = spec.codec;
+            let decode_budget = self.decode_budget;
             std::thread::scope(|scope| {
                 // Leaf shards: arrival `i` belongs to shard `i % n_shards`.
                 let mut senders = Vec::with_capacity(n_shards);
@@ -778,7 +801,7 @@ impl FleetDriver {
                     let (tx, rx) = std::sync::mpsc::sync_channel(shard::QUEUE_DEPTH);
                     senders.push(tx);
                     handles.push(scope.spawn(move || {
-                        shard::run_shard(s as u32, m, seed, codec, tel, rx)
+                        shard::run_shard(s as u32, m, seed, codec, decode_budget, tel, rx)
                     }));
                 }
                 parallel_map_fold(
@@ -844,6 +867,20 @@ impl FleetDriver {
                             sink.push(chunk);
                             enc_chunks += 1;
                         }
+                        if let Some(c) = tel {
+                            // One-time (process-wide) flag when a buffered
+                            // session holds > 1 MiB: `state_bytes` is now
+                            // honest for every codec, so the §C bench's
+                            // peak-state figures stop under-reporting —
+                            // this counter marks runs where buffering was
+                            // actually significant.
+                            let state = sink.state_bytes();
+                            if state > 1 << 20
+                                && !ENCODE_STATE_OVER_1MIB.swap(true, Ordering::Relaxed)
+                            {
+                                c.add_counter("encode_state_over_1mib_bytes", state as f64);
+                            }
+                        }
                         let enc = sink.finish();
                         let frame = wire::encode_frame(u as u64, round, wire_codec_id, &enc);
                         if let Some(c) = tel {
@@ -868,6 +905,11 @@ impl FleetDriver {
                             });
                             c.record_hist(HistMetric::EncodeNanos, (enc_secs * 1e9) as u64);
                             c.record_hist(HistMetric::MessageBytes, frame.len() as u64);
+                            if p.transform_nanos > 0 {
+                                // Pipeline codecs only — closed-form codecs
+                                // never touch a transform stage.
+                                c.record_hist(HistMetric::TransformNanos, p.transform_nanos);
+                            }
                         }
                         (frame, h, t.elapsed_secs())
                     },

@@ -28,8 +28,8 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::Receiver;
 
 use crate::metrics::Timer;
-use crate::quantizer::{CodecContext, DecodeError, Encoded, UpdateCodec};
-use crate::telemetry::{Collector, HistMetric, SpanData, SpanEvent, SpanKind};
+use crate::quantizer::{CodecContext, DecodeBudget, DecodeError, Encoded, UpdateCodec};
+use crate::telemetry::{probe, Collector, HistMetric, SpanData, SpanEvent, SpanKind};
 
 use super::aggregate::StreamingAggregator;
 
@@ -151,6 +151,7 @@ pub(crate) fn run_shard(
     m: usize,
     seed: u64,
     codec: &dyn UpdateCodec,
+    decode_budget: DecodeBudget,
     tel: Option<&Collector>,
     rx: Receiver<ShardJob>,
 ) -> ShardOutcome {
@@ -162,13 +163,21 @@ pub(crate) fn run_shard(
     let wall_start_s = tel.map(|c| c.wall_now()).unwrap_or(0.0);
     while let Ok(job) = rx.recv() {
         let t_job = Timer::start();
-        let ctx = CodecContext::new(job.user, job.round, seed, job.rate);
+        let ctx = CodecContext::new(job.user, job.round, seed, job.rate)
+            .with_decode_budget(decode_budget);
         let dec_start = tel.map(|c| c.wall_now()).unwrap_or(0.0);
+        // Bracket the decode with the thread-local probe (same contract
+        // as the worker's encode bracketing) so solver iterations land on
+        // this client's decode span.
+        if tel.is_some() {
+            probe::reset();
+        }
         let t_dec = Timer::start();
         let staged = catch_unwind(AssertUnwindSafe(|| {
             stage_decode(codec, &job.payload, m, &ctx, &mut staging)
         }));
         let dec_secs = t_dec.elapsed_secs();
+        let solver_iters = if tel.is_some() { probe::take().solver_iters } else { 0 };
         let chunks = match staged {
             Ok(Ok(chunks)) => chunks,
             Ok(Err(err)) => {
@@ -204,7 +213,7 @@ pub(crate) fn run_shard(
                 wall_start_s: dec_start,
                 wall_dur_s: dec_secs,
                 virt_s: job.virt_s,
-                data: SpanData::Decode { chunks, entries: m as u64, shard },
+                data: SpanData::Decode { chunks, entries: m as u64, shard, solver_iters },
             });
             c.record(SpanEvent {
                 kind: SpanKind::Fold,

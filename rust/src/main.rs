@@ -28,6 +28,7 @@ use uveqfed::lattice;
 use uveqfed::models::LogReg;
 use uveqfed::models::{CnnLite, MlpMnist};
 use uveqfed::quantizer;
+use uveqfed::quantizer::DecodeBudget;
 use uveqfed::runtime;
 use uveqfed::telemetry::{summarize, Collector, TelemetryReport, TraceWriter};
 use uveqfed::util::cli::{Args, Cli};
@@ -49,7 +50,7 @@ fn main() {
                  subcommands:\n  train   --config <file> [--codec SPEC] [--rate R] [--rounds N]\n  \
                  fleet   --population N --cohort K --scenario NAME [--rounds N] [--codec SPEC]\n          \
                  [--channel uniform|tiers|lognormal|markov --policy uniform|proportional|theory]\n          \
-                 [--shards N] [--trace FILE.jsonl --trace-report FILE.md]\n          \
+                 [--shards N] [--decode-budget N] [--trace FILE.jsonl --trace-report FILE.md]\n          \
                  [--corrupt P --max-retries N]\n          \
                  [--downlink-codec SPEC --downlink-rate R --downlink-resync N]\n  \
                  distort --codec SPEC --rate R [--size N]\n  info\n\n\
@@ -193,6 +194,7 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
         .opt("seed", "1", "root seed")
         .opt("workers", "0", "fan-out threads (0 = auto)")
         .opt("shards", "1", "server aggregation shards (bit-identical for any value)")
+        .opt("decode-budget", "", "solver-iteration credit per decode (empty = unlimited)")
         .opt("deadline", "", "override round deadline (virtual seconds)")
         .opt("dropout", "", "override per-client dropout probability")
         .opt("corrupt", "", "per-attempt frame corruption probability")
@@ -266,6 +268,10 @@ fn cmd_fleet(argv: &[String]) -> uveqfed::Result<()> {
     let downlink_resync = args.get_usize("downlink-resync") as u64;
     let mut driver =
         FleetDriver::new(seed, rate, workers, scenario.clone()).with_shards(agg_shards);
+    if !args.get("decode-budget").is_empty() {
+        let credit = args.get_usize("decode-budget") as u64;
+        driver = driver.with_decode_budget(DecodeBudget::units(credit));
+    }
     let channel_name = args.get("channel");
     let hetero = !channel_name.is_empty() && channel_name != "uniform";
     if !channel_name.is_empty() {
@@ -516,7 +522,7 @@ fn cmd_info() -> uveqfed::Result<()> {
         );
     }
     println!(
-        "codecs: uveqfed-l1/-l2/-l4/-l8, qsgd, rotation, subsample, terngrad, signsgd, topk, identity"
+        "codecs: uveqfed-l1/-l2/-l4/-l8, qsgd, rotation, subsample, terngrad, signsgd, topk, fedvqcs, identity"
     );
     println!("codec spec grammar: name[:key=value,...] — see `quantizer::CodecSpec`");
     print!("artifacts: ");

@@ -40,6 +40,10 @@ pub enum StreamKind {
     /// each transmit attempt corrupts, which corruption mode, and the
     /// affected bit/byte positions.
     WireFault = 9,
+    /// Gaussian sketch matrix for the fedvqcs compressed-sensing codec:
+    /// encoder and decoder regenerate the same projection `A` row by row
+    /// from this stream, so `A` never travels on the wire.
+    Sketch = 10,
 }
 
 impl CommonRandomness {

@@ -1,0 +1,392 @@
+//! FedVQCS-style compressed-sensing codec (arXiv 2204.07692), the first
+//! pipeline-native codec of Codec API v3.
+//!
+//! The encode chain is three stages behind one [`PipelineCodec`]:
+//!
+//! ```text
+//! x ──block-topk──▶ sparse x ──sketch (A·x)──▶ y ──UVeQFed lattice VQ──▶ bits
+//! ```
+//!
+//! * **Block top-k** keeps the `⌈sparsity·64⌉` largest-magnitude entries
+//!   of every 64-entry block (at least one per block), zeroing the rest.
+//!   Blockwise selection keeps the projection local and deterministic.
+//! * **Sketch** multiplies by a seeded Gaussian matrix `A ∈ ℝ^{d×m}`,
+//!   `d = ⌈ratio·m⌉`, entries `N(0, 1/d)`. `A` is regenerated from the
+//!   common-randomness stream [`StreamKind::Sketch`] on both sides and
+//!   never travels on the wire.
+//! * The sketch `y` is coded by the existing UVeQFed hexagonal-lattice
+//!   quantizer via [`CodecTerminal`], which hands it the *exact* outer
+//!   bit budget (computed over the original `m`, not `d`).
+//!
+//! Reconstruction inverts the sketch with **iterative hard thresholding**
+//! (IHT): `x ← P_k(x + Aᵀ(y − A·x))` with unit step — `AᵀA ≈ I` in
+//! expectation for this normalization — where `P_k` is the same block
+//! top-k projection (the sparsity prior; the block-topk stage's own
+//! inverse is therefore the identity). Every solver iteration charges one
+//! unit of the context's [`DecodeBudget`](super::DecodeBudget) and bumps
+//! [`probe::add_solver_iters`]; exhaustion surfaces as the typed
+//! [`DecodeError::Budget`](super::DecodeError::Budget), never a partial
+//! reconstruction. Non-finite iterates (possible under hostile wire
+//! bytes) reset to zero and stop — decode is panic-free by construction.
+
+use super::pipeline::{CodecTerminal, PipelineCodec, TransformStage};
+use super::{CodecContext, DecodeBudget, DecodeError, UVeQFed};
+use crate::prng::{Rng, StreamKind};
+use crate::telemetry::probe;
+
+/// Block size for the top-k sparsity pattern.
+const BLOCK: usize = 64;
+
+/// Kept entries per `block_len`-entry block: `⌈sparsity·block_len⌉`,
+/// clamped to `[1, block_len]`.
+fn block_k(sparsity: f64, block_len: usize) -> usize {
+    ((sparsity * block_len as f64).ceil() as usize).clamp(1, block_len)
+}
+
+/// Sketch dimension `d = ⌈ratio·m⌉`, clamped to `[1, max(m, 1)]`.
+fn sketch_dim(ratio: f64, m: usize) -> usize {
+    ((ratio * m as f64).ceil() as usize).clamp(1, m.max(1))
+}
+
+/// Zero all but the `block_k` largest-magnitude entries of each block.
+/// Deterministic under ties and NaN-safe (`f64::total_cmp` on magnitude,
+/// then ascending index), so hostile solver iterates cannot panic or
+/// diverge between replicas.
+fn block_top_k_project(x: &mut [f64], sparsity: f64) {
+    let mut idx = [0usize; BLOCK];
+    for start in (0..x.len()).step_by(BLOCK) {
+        let len = BLOCK.min(x.len() - start);
+        let k = block_k(sparsity, len);
+        if k >= len {
+            continue;
+        }
+        let block = &mut x[start..start + len];
+        let ids = &mut idx[..len];
+        for (j, id) in ids.iter_mut().enumerate() {
+            *id = j;
+        }
+        ids.sort_unstable_by(|&a, &b| {
+            block[b].abs().total_cmp(&block[a].abs()).then(a.cmp(&b))
+        });
+        for &j in &ids[k..] {
+            block[j] = 0.0;
+        }
+    }
+}
+
+/// Encode-side sparsification stage. Its `inverse` is the identity: the
+/// sparsity prior is enforced *inside* the sketch stage's IHT projection,
+/// so re-projecting here would be redundant work charged to the budget.
+struct BlockTopKStage {
+    sparsity: f64,
+}
+
+impl TransformStage for BlockTopKStage {
+    fn name(&self) -> &'static str {
+        "block-topk"
+    }
+
+    fn out_len(&self, m_in: usize, _ctx: &CodecContext) -> usize {
+        m_in
+    }
+
+    fn forward(&self, mut x: Vec<f64>, _ctx: &CodecContext) -> Vec<f64> {
+        block_top_k_project(&mut x, self.sparsity);
+        x
+    }
+
+    fn inverse(
+        &self,
+        y: Vec<f64>,
+        _m_in: usize,
+        _ctx: &CodecContext,
+        _budget: &mut DecodeBudget,
+    ) -> Result<Vec<f64>, DecodeError> {
+        Ok(y)
+    }
+}
+
+/// Seeded Gaussian sketch `y = A·x` with a budgeted IHT inverse.
+struct SketchStage {
+    ratio: f64,
+    sparsity: f64,
+    solver_iters: u32,
+}
+
+impl SketchStage {
+    /// The shared-seed stream both sides draw `A` from, row-major.
+    fn sketch_rng(ctx: &CodecContext) -> impl Rng {
+        ctx.crand.stream(ctx.user, ctx.round, StreamKind::Sketch)
+    }
+}
+
+impl TransformStage for SketchStage {
+    fn name(&self) -> &'static str {
+        "sketch"
+    }
+
+    fn out_len(&self, m_in: usize, _ctx: &CodecContext) -> usize {
+        sketch_dim(self.ratio, m_in)
+    }
+
+    /// `y[r] = Σ_i A[r][i]·x[i]`, streaming `A` row by row — O(d·m) time,
+    /// O(1) extra memory beyond the output.
+    fn forward(&self, x: Vec<f64>, ctx: &CodecContext) -> Vec<f64> {
+        let m = x.len();
+        let d = sketch_dim(self.ratio, m);
+        let inv_sqrt_d = 1.0 / (d as f64).sqrt();
+        let mut rng = Self::sketch_rng(ctx);
+        let mut y = vec![0.0f64; d];
+        for yr in y.iter_mut() {
+            let mut acc = 0.0f64;
+            for &xi in &x {
+                acc += rng.normal() * inv_sqrt_d * xi;
+            }
+            *yr = acc;
+        }
+        y
+    }
+
+    /// Budgeted IHT: each iteration charges one [`DecodeBudget`] unit
+    /// before running. An all-zero sketch (the empty-message convention)
+    /// short-circuits to zeros without charging — decoding a silent
+    /// client must stay free.
+    fn inverse(
+        &self,
+        y: Vec<f64>,
+        m_in: usize,
+        ctx: &CodecContext,
+        budget: &mut DecodeBudget,
+    ) -> Result<Vec<f64>, DecodeError> {
+        let d = sketch_dim(self.ratio, m_in);
+        if y.len() != d {
+            return Err(DecodeError::Length { got: y.len(), want: d });
+        }
+        if m_in == 0 || y.iter().all(|&v| v == 0.0) {
+            return Ok(vec![0.0f64; m_in]);
+        }
+
+        // Materialize A once (row-major, same draw order as `forward`):
+        // the solver touches it 2·solver_iters times, so regenerating per
+        // pass would dominate the decode cost.
+        let inv_sqrt_d = 1.0 / (d as f64).sqrt();
+        let mut rng = Self::sketch_rng(ctx);
+        let a: Vec<f64> = (0..d * m_in).map(|_| rng.normal() * inv_sqrt_d).collect();
+
+        let mut x = vec![0.0f64; m_in];
+        let mut prev = vec![0.0f64; m_in];
+        let mut resid = vec![0.0f64; d];
+        for _ in 0..self.solver_iters {
+            budget.charge(1)?;
+            probe::add_solver_iters(1);
+            prev.copy_from_slice(&x);
+            // resid = y − A·x
+            for (r, (yr, row)) in resid.iter_mut().zip(y.iter().zip(a.chunks_exact(m_in))) {
+                let ax: f64 = row.iter().zip(&x).map(|(av, xv)| av * xv).sum();
+                *r = yr - ax;
+            }
+            // x += Aᵀ·resid (unit step)
+            for (row, &rr) in a.chunks_exact(m_in).zip(&resid) {
+                for (xv, &av) in x.iter_mut().zip(row) {
+                    *xv += av * rr;
+                }
+            }
+            block_top_k_project(&mut x, self.sparsity);
+            if x.iter().any(|v| !v.is_finite()) {
+                // Hostile bytes can push the iteration to overflow; a
+                // zero reconstruction is the safe, deterministic fallback.
+                x.iter_mut().for_each(|v| *v = 0.0);
+                break;
+            }
+            if x == prev {
+                break; // converged exactly; further iterations are no-ops
+            }
+        }
+        Ok(x)
+    }
+}
+
+/// FedVQCS codec parameters. Build the actual codec with
+/// [`FedVqcs::pipeline`]; the registry spelling is
+/// `"fedvqcs:ratio=0.25,sparsity=0.05,solver_iters=50"`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FedVqcs {
+    /// Sketch compression ratio `d/m`, in `(0, 1]`.
+    pub ratio: f64,
+    /// Kept fraction per 64-entry block, in `(0, 1]`.
+    pub sparsity: f64,
+    /// IHT iteration cap (each iteration costs one decode-budget unit).
+    pub solver_iters: u32,
+}
+
+impl Default for FedVqcs {
+    fn default() -> Self {
+        Self { ratio: 0.25, sparsity: 0.05, solver_iters: 50 }
+    }
+}
+
+impl FedVqcs {
+    /// Assemble the staged codec: block top-k → Gaussian sketch →
+    /// UVeQFed hexagonal-lattice terminal.
+    pub fn pipeline(self) -> PipelineCodec {
+        PipelineCodec::new(
+            "fedvqcs",
+            vec![
+                Box::new(BlockTopKStage { sparsity: self.sparsity }),
+                Box::new(SketchStage {
+                    ratio: self.ratio,
+                    sparsity: self.sparsity,
+                    solver_iters: self.solver_iters,
+                }),
+            ],
+            Box::new(CodecTerminal::new(UVeQFed::hexagonal())),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Normal, Xoshiro256pp};
+    use crate::quantizer::{measure_distortion, UpdateCodec};
+
+    /// A genuinely block-sparse signal: two large entries per 64-block.
+    fn block_sparse(m: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut h = vec![0.0f32; m];
+        for b in 0..m.div_ceil(BLOCK) {
+            for j in 0..2 {
+                let i = b * BLOCK + j * 17;
+                if i < m {
+                    h[i] = 8.0 + Normal::new(0.0, 1.0).sample(&mut rng) as f32;
+                }
+            }
+        }
+        h
+    }
+
+    fn dense(m: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        Normal::new(0.0, 1.0).vec_f32(&mut rng, m)
+    }
+
+    fn cheap() -> FedVqcs {
+        FedVqcs { ratio: 0.5, sparsity: 0.05, solver_iters: 30 }
+    }
+
+    #[test]
+    fn recovers_block_sparse_signal() {
+        let h = block_sparse(512, 11);
+        let rep = measure_distortion(&cheap().pipeline(), &h, 4.0, 3, 0);
+        let power: f64 =
+            h.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / h.len() as f64;
+        // The sketch keeps d = m/2 measurements for ~16 nonzeros per 512
+        // entries; IHT must recover most of the signal energy.
+        assert!(rep.mse < 0.1 * power, "mse {} vs power {power}", rep.mse);
+        assert!(rep.bits_per_entry <= 4.0 + 1e-9, "{}", rep.bits_per_entry);
+    }
+
+    #[test]
+    fn within_budget_at_all_rates() {
+        let h = dense(2048, 12);
+        for rate in [1.0, 2.0, 4.0] {
+            let rep = measure_distortion(&cheap().pipeline(), &h, rate, 3, 0);
+            assert!(rep.bits_per_entry <= rate + 1e-9, "rate {rate}: {}", rep.bits_per_entry);
+        }
+    }
+
+    #[test]
+    fn encode_and_decode_are_deterministic() {
+        // Fresh instances per encode: the UVeQFed terminal warm-starts
+        // its scale search across rounds on one instance (same contract
+        // as the registry-wide session-parity tests).
+        let h = dense(700, 13);
+        let ctx = CodecContext::new(4, 9, 77, 2.0);
+        let e1 = cheap().pipeline().encode(&h, &ctx);
+        let e2 = cheap().pipeline().encode(&h, &ctx);
+        assert_eq!(e1, e2, "encode must be deterministic");
+        let d1 = cheap().pipeline().decode(&e1, h.len(), &ctx);
+        let d2 = cheap().pipeline().decode(&e1, h.len(), &ctx);
+        assert_eq!(d1, d2, "decode must be deterministic");
+    }
+
+    #[test]
+    fn exhausted_solver_budget_is_a_typed_error() {
+        let spec = FedVqcs { ratio: 0.5, sparsity: 0.05, solver_iters: 8 };
+        let h = dense(256, 14);
+        let ctx = CodecContext::new(0, 0, 5, 2.0);
+        let enc = spec.pipeline().encode(&h, &ctx);
+
+        let tight = ctx.with_decode_budget(DecodeBudget::units(3));
+        let err = spec.pipeline().try_decode(&enc, h.len(), &tight).unwrap_err();
+        assert_eq!(err, DecodeError::Budget);
+
+        let enough = ctx.with_decode_budget(DecodeBudget::units(8));
+        assert!(spec.pipeline().try_decode(&enc, h.len(), &enough).is_ok());
+    }
+
+    #[test]
+    fn zero_update_is_an_empty_message_and_decodes_for_free() {
+        let h = vec![0.0f32; 300];
+        let ctx = CodecContext::new(1, 1, 9, 2.0);
+        let codec = cheap().pipeline();
+        let enc = codec.encode(&h, &ctx);
+        assert!(enc.bytes.is_empty(), "zero update must stay an empty message");
+        // An empty sketch decodes to zeros without touching the solver —
+        // zero budget suffices.
+        let free = ctx.with_decode_budget(DecodeBudget::units(0));
+        let dec = codec.try_decode(&enc, h.len(), &free).unwrap();
+        assert!(dec.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn garbage_bytes_never_panic_the_solver_path() {
+        use crate::quantizer::Encoded;
+        use crate::prng::Rng;
+        let ctx = CodecContext::new(2, 3, 4, 2.0);
+        let codec = cheap().pipeline();
+        let mut rng = Xoshiro256pp::seed_from_u64(0xBAD);
+        for m in [1usize, 65, 256] {
+            for _ in 0..8 {
+                let n = rng.gen_index(64) + 1;
+                let bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+                let msg = Encoded { bits: bytes.len() * 8, bytes };
+                // Ok or typed Err both fine; panics are not.
+                let _ = codec.try_decode(&msg, m, &ctx);
+            }
+        }
+    }
+
+    #[test]
+    fn block_projection_is_deterministic_and_nan_safe() {
+        let mut x = vec![0.0f64; 130];
+        x[3] = f64::NAN;
+        x[70] = 5.0;
+        x[128] = -2.0;
+        block_top_k_project(&mut x, 0.05); // k = 1 per 64-block
+        // NaN has the largest total_cmp magnitude → kept; the rest of its
+        // block is zeroed. No panic, fully deterministic.
+        assert!(x[3].is_nan());
+        assert_eq!(x[70], 5.0);
+        assert_eq!(x[128], -2.0);
+        assert_eq!(x.iter().filter(|v| **v != 0.0).count(), 3);
+
+        // Tie-break: equal magnitudes keep the smaller index.
+        let mut t = vec![1.0f64; 64];
+        block_top_k_project(&mut t, 0.02); // k = 2
+        assert_eq!(t[0], 1.0);
+        assert_eq!(t[1], 1.0);
+        assert!(t[2..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn sketch_dims_are_sane() {
+        assert_eq!(sketch_dim(0.25, 1000), 250);
+        assert_eq!(sketch_dim(0.25, 1), 1);
+        assert_eq!(sketch_dim(1.0, 7), 7);
+        assert_eq!(sketch_dim(0.25, 0), 1);
+        assert_eq!(block_k(0.05, 64), 4);
+        assert_eq!(block_k(0.05, 3), 1);
+        assert_eq!(block_k(1.0, 64), 64);
+    }
+}

@@ -15,6 +15,7 @@
 //! | sign-SGD with norm scaling (extension) | [21] | [`signsgd`] | streaming (ℓ1 + sign side-buffer) | streaming |
 //! | top-k sparsification (extension) | [13]–[15] | [`topk`] | buffered (global sort) | buffered (scatter) |
 //! | identity (unquantized FedAvg reference) | — | [`identity`] | streaming | streaming |
+//! | FedVQCS compressed sensing (arXiv 2204.07692) | PAPERS.md | [`fedvqcs`] | buffered (sketch) | buffered (budgeted IHT solver) |
 //!
 //! ## Sessions
 //!
@@ -30,14 +31,26 @@
 //! `tests/integration_sessions.rs`).
 //!
 //! Codec construction is **fallible and parameterized** via
-//! [`CodecSpec`] / [`make`]; the old panicking [`by_name`] survives only
-//! as a deprecated wrapper.
+//! [`CodecSpec`] / [`make`]; the old panicking `by_name` wrapper is gone.
+//!
+//! ## Staged pipelines (Codec API v3)
+//!
+//! [`pipeline`] decomposes codecs into composable [`TransformStage`]s in
+//! front of a [`TerminalCoder`], assembled by [`PipelineCodec`] behind the
+//! unchanged [`UpdateCodec`] session surface. Decode sessions carry typed
+//! cross-chunk state and draw on the context's [`DecodeBudget`], so a
+//! decoder may legally buffer, run a bounded iterative solver, and
+//! finalize before yielding its first chunk. [`fedvqcs`] is the first
+//! pipeline-native codec; [`rotation`] is ported onto the same stages with
+//! its legacy implementation retained as a bit-parity oracle.
 //!
 //! Every encoder reports the **exact** number of bits it used; the uplink
 //! accounting in `fl::` and the distortion figures consume that number, so
 //! rate comparisons are honest (headers included).
 
+pub mod fedvqcs;
 pub mod identity;
+pub mod pipeline;
 pub mod qsgd;
 pub mod rate;
 pub mod rotation;
@@ -49,7 +62,9 @@ pub mod terngrad;
 pub mod topk;
 pub mod uveqfed;
 
+pub use fedvqcs::FedVqcs;
 pub use identity::IdentityCodec;
+pub use pipeline::{PipelineCodec, TerminalCoder, TransformStage};
 pub use qsgd::Qsgd;
 pub use rotation::RotationUniform;
 pub use session::{BufferedSink, EntryStream, SliceStream, SymbolMapStream, DEFAULT_CHUNK};
@@ -76,6 +91,9 @@ pub enum DecodeError {
     Length { got: usize, want: usize },
     /// A structural in-payload header was inconsistent.
     Header(&'static str),
+    /// The session's [`DecodeBudget`] ran out before reconstruction
+    /// finished (e.g. the fedvqcs iterative solver hit its credit limit).
+    Budget,
 }
 
 impl DecodeError {
@@ -86,6 +104,7 @@ impl DecodeError {
             DecodeError::Code(_) => "corrupt entropy stream",
             DecodeError::Length { .. } => "decoded stream length mismatch",
             DecodeError::Header(what) => what,
+            DecodeError::Budget => "decode budget exhausted",
         }
     }
 }
@@ -104,14 +123,63 @@ impl std::fmt::Display for DecodeError {
                 write!(f, "decode stream yielded {got} of {want} entries")
             }
             DecodeError::Header(what) => write!(f, "corrupt payload header: {what}"),
+            DecodeError::Budget => write!(f, "decode budget exhausted"),
         }
     }
 }
 
 impl std::error::Error for DecodeError {}
 
+/// Compute credit for one decode session: how many units of expensive
+/// reconstruction work (iterative-solver iterations, inverse-transform
+/// passes) the server is willing to spend on a single message. Stages
+/// draw credit via [`DecodeBudget::charge`]; exhaustion surfaces as the
+/// typed [`DecodeError::Budget`], which the shard fold turns into a
+/// quarantine — never a partial fold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeBudget {
+    credit: u64,
+}
+
+impl DecodeBudget {
+    /// Effectively unbounded credit — the default for trusted pipelines.
+    pub const UNLIMITED: DecodeBudget = DecodeBudget { credit: u64::MAX };
+
+    /// A budget of exactly `credit` work units.
+    pub fn units(credit: u64) -> Self {
+        Self { credit }
+    }
+
+    /// Remaining credit.
+    pub fn remaining(&self) -> u64 {
+        self.credit
+    }
+
+    /// Spend `n` units, or fail with [`DecodeError::Budget`] if fewer
+    /// than `n` remain (the budget is left drained either way, so a
+    /// poisoned session cannot keep charging).
+    pub fn charge(&mut self, n: u64) -> Result<(), DecodeError> {
+        if self.credit == u64::MAX {
+            return Ok(());
+        }
+        if self.credit < n {
+            self.credit = 0;
+            return Err(DecodeError::Budget);
+        }
+        self.credit -= n;
+        Ok(())
+    }
+}
+
+impl Default for DecodeBudget {
+    fn default() -> Self {
+        Self::UNLIMITED
+    }
+}
+
 /// Everything an encoder/decoder pair shares per (user, round) message:
-/// the common-randomness source (assumption A3) and the rate budget.
+/// the common-randomness source (assumption A3), the rate budget, and the
+/// server-side decode-compute budget.
 #[derive(Debug, Clone, Copy)]
 pub struct CodecContext {
     pub user: u64,
@@ -119,16 +187,48 @@ pub struct CodecContext {
     pub crand: CommonRandomness,
     /// Bit budget per tensor entry (the paper's quantization rate `R`).
     pub rate: f64,
+    /// Compute credit a decode session opened from this context may
+    /// spend. Defaults to [`DecodeBudget::UNLIMITED`].
+    pub decode_budget: DecodeBudget,
+    /// Exact total-bit override for [`Self::budget_bits`]. Private:
+    /// pipeline internals use [`Self::with_exact_budget`] to hand an
+    /// inner terminal coder an exact budget without the float
+    /// rate-times-m round trip losing a bit.
+    budget_override: Option<usize>,
 }
 
 impl CodecContext {
     pub fn new(user: u64, round: u64, seed: u64, rate: f64) -> Self {
-        Self { user, round, crand: CommonRandomness::new(seed), rate }
+        Self {
+            user,
+            round,
+            crand: CommonRandomness::new(seed),
+            rate,
+            decode_budget: DecodeBudget::UNLIMITED,
+            budget_override: None,
+        }
+    }
+
+    /// Same context with a decode-compute budget attached.
+    pub fn with_decode_budget(mut self, budget: DecodeBudget) -> Self {
+        self.decode_budget = budget;
+        self
+    }
+
+    /// Same context whose [`Self::budget_bits`] returns exactly `bits`
+    /// for any `m`. Used by pipeline codecs to pass an already-computed
+    /// bit budget to an inner coder without float rounding drift.
+    pub fn with_exact_budget(mut self, bits: usize) -> Self {
+        self.budget_override = Some(bits);
+        self
     }
 
     /// Total bit budget for an `m`-entry update.
     pub fn budget_bits(&self, m: usize) -> usize {
-        (self.rate * m as f64).floor() as usize
+        match self.budget_override {
+            Some(bits) => bits,
+            None => (self.rate * m as f64).floor() as usize,
+        }
     }
 }
 
@@ -180,6 +280,13 @@ pub trait DecodeStream {
     /// never panic on untrusted bytes. After an `Err` the stream is
     /// poisoned: further calls may return anything except a panic.
     fn next_chunk(&mut self) -> Result<Option<&[f32]>, DecodeError>;
+
+    /// Approximate bytes of decoder state currently held (output
+    /// buffers, solver scratch). Mirrors [`EncodeSink::state_bytes`]:
+    /// metered, never asserted.
+    fn state_bytes(&self) -> usize {
+        0
+    }
 }
 
 /// A lossy model-update codec. Encoders MUST stay within
@@ -256,15 +363,6 @@ pub fn make(spec: &str) -> crate::Result<Box<dyn UpdateCodec>> {
     CodecSpec::parse(spec).map(|s| s.build())
 }
 
-/// Construct a codec from a config-style name.
-#[deprecated(
-    since = "0.2.0",
-    note = "panics on unknown names; use `quantizer::make` / `CodecSpec::parse`"
-)]
-pub fn by_name(name: &str) -> Box<dyn UpdateCodec> {
-    make(name).unwrap_or_else(|e| panic!("{e}"))
-}
-
 /// Stable codec ids for the fleet wire format (`fleet::wire`).
 ///
 /// Each row is `(id, canonical config name, display-name aliases)`. The
@@ -282,6 +380,7 @@ const WIRE_CODECS: &[(u8, &str, &[&str])] = &[
     (8, "terngrad", &[]),
     (9, "signsgd", &[]),
     (10, "topk", &[]),
+    (11, "fedvqcs", &[]),
 ];
 
 /// Wire id for a codec name — accepts both the registry config keys and
@@ -357,19 +456,6 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_by_name_still_constructs() {
-        assert_eq!(by_name("uveqfed-l2").name(), "uveqfed-hex-paper");
-    }
-
-    #[test]
-    #[should_panic]
-    #[allow(deprecated)]
-    fn deprecated_by_name_panics_on_unknown() {
-        let _ = by_name("nope");
-    }
-
-    #[test]
     fn wire_ids_cover_registry_and_display_names() {
         for name in registered_codec_names() {
             let id = codec_id(name).expect(name);
@@ -386,5 +472,24 @@ mod tests {
     fn budget_math() {
         let ctx = CodecContext::new(0, 0, 1, 2.0);
         assert_eq!(ctx.budget_bits(100), 200);
+        let exact = ctx.with_exact_budget(137);
+        assert_eq!(exact.budget_bits(100), 137, "override wins for any m");
+        assert_eq!(exact.budget_bits(7), 137);
+    }
+
+    #[test]
+    fn decode_budget_charges_and_exhausts() {
+        let mut b = DecodeBudget::units(3);
+        assert!(b.charge(2).is_ok());
+        assert_eq!(b.remaining(), 1);
+        assert_eq!(b.charge(2), Err(DecodeError::Budget));
+        assert_eq!(b.remaining(), 0, "failed charge drains the budget");
+        assert_eq!(b.charge(1), Err(DecodeError::Budget));
+
+        let mut unlimited = DecodeBudget::UNLIMITED;
+        assert!(unlimited.charge(u64::MAX).is_ok());
+        assert!(unlimited.charge(u64::MAX).is_ok(), "unlimited never drains");
+        assert_eq!(DecodeBudget::default(), DecodeBudget::UNLIMITED);
+        assert_eq!(DecodeError::Budget.reason(), "decode budget exhausted");
     }
 }

@@ -1,0 +1,499 @@
+//! Staged codec pipelines — **Codec API v3**.
+//!
+//! A pipeline codec is a chain of [`TransformStage`]s in front of one
+//! [`TerminalCoder`], assembled by [`PipelineCodec`] behind the unchanged
+//! [`UpdateCodec`] session surface:
+//!
+//! ```text
+//! encode:  x ──stage₀.forward──▶ … ──stageₙ.forward──▶ y ──coder.encode──▶ bits
+//! decode:  bits ──coder.decode──▶ ŷ ──stageₙ.inverse──▶ … ──stage₀.inverse──▶ x̂
+//! ```
+//!
+//! The internal stage domain is `f64`: the legacy codecs (rotation
+//! foremost) do all intermediate math in doubles with a single final
+//! `f32` cast, so an `f32` stage boundary would break the bit-parity
+//! guarantee the pipeline ports must uphold. The `f32` casts happen
+//! exactly once on each side — when the encode sink seals its buffered
+//! input, and when the decode session materializes its output.
+//!
+//! ## Cross-chunk decode state and budgets
+//!
+//! Unlike v2 streams, a pipeline decode session legally **buffers**: the
+//! whole reconstruction (terminal decode + inverse stages, including any
+//! iterative solver) runs once, inside the first `next_chunk` call, and
+//! the finished output is then served in [`DEFAULT_CHUNK`]-entry slices
+//! with zero steady-state allocation. Expensive inverse work draws on the
+//! context's [`DecodeBudget`]; exhaustion surfaces as the typed
+//! [`DecodeError::Budget`] from `next_chunk`, never as a panic or a
+//! partial output.
+
+use std::time::Instant;
+
+use super::session::DEFAULT_CHUNK;
+use super::{
+    CodecContext, DecodeBudget, DecodeError, DecodeStream, Encoded, EncodeSink, UpdateCodec,
+};
+use crate::telemetry::probe;
+
+/// One composable transform in a pipeline codec. `forward` must be a pure
+/// function of `(x, ctx)` and `inverse` of `(y, m_in, ctx)` — common
+/// randomness comes from `ctx.crand`, never from ambient state — so a
+/// pipeline codec inherits the registry-wide bit-identity guarantee
+/// across worker/shard topologies.
+pub trait TransformStage: Send + Sync {
+    /// Stage name for diagnostics.
+    fn name(&self) -> &'static str;
+
+    /// Output length of [`Self::forward`] for an `m_in`-entry input.
+    /// `inverse` receives the same `m_in` so it can undo padding or
+    /// projection without in-band length headers.
+    fn out_len(&self, m_in: usize, ctx: &CodecContext) -> usize;
+
+    /// Encode-side transform.
+    fn forward(&self, x: Vec<f64>, ctx: &CodecContext) -> Vec<f64>;
+
+    /// Decode-side inverse. Expensive reconstruction (solver iterations,
+    /// transform passes) must charge `budget`; an `Err` poisons the
+    /// session.
+    fn inverse(
+        &self,
+        y: Vec<f64>,
+        m_in: usize,
+        ctx: &CodecContext,
+        budget: &mut DecodeBudget,
+    ) -> Result<Vec<f64>, DecodeError>;
+}
+
+/// The quantize-and-entropy-code tail of a pipeline: turns the last
+/// stage's output into wire bits and back. `budget_bits` is the exact
+/// whole-message bit budget (headers included) — the pipeline computes it
+/// once from the *original* input length so stage-induced length changes
+/// never shift the rate accounting.
+pub trait TerminalCoder: Send + Sync {
+    /// Coder name for diagnostics.
+    fn name(&self) -> &'static str;
+
+    /// Code `y` into at most `budget_bits` bits.
+    fn encode(&self, y: &[f64], budget_bits: usize, ctx: &CodecContext) -> Encoded;
+
+    /// Reconstruct the `y_len`-entry stage output from `msg`. Must never
+    /// panic on untrusted bytes.
+    fn decode(
+        &self,
+        msg: &Encoded,
+        y_len: usize,
+        budget_bits: usize,
+        ctx: &CodecContext,
+    ) -> Result<Vec<f64>, DecodeError>;
+}
+
+/// Adapter running any whole-buffer [`UpdateCodec`] as a pipeline
+/// terminal. The inner codec sees a context whose `budget_bits` returns
+/// the pipeline's exact budget (via [`CodecContext::with_exact_budget`]),
+/// so no rate·m float round trip can lose a bit; the `f64`↔`f32` casts at
+/// the boundary are the adapter's price and acceptable for new codecs
+/// that define their own math (fedvqcs).
+pub struct CodecTerminal<C> {
+    inner: C,
+}
+
+impl<C: UpdateCodec> CodecTerminal<C> {
+    pub fn new(inner: C) -> Self {
+        Self { inner }
+    }
+}
+
+impl<C: UpdateCodec> TerminalCoder for CodecTerminal<C> {
+    fn name(&self) -> &'static str {
+        "codec-terminal"
+    }
+
+    fn encode(&self, y: &[f64], budget_bits: usize, ctx: &CodecContext) -> Encoded {
+        let y32: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+        let ictx = ctx.with_exact_budget(budget_bits);
+        self.inner.encode(&y32, &ictx)
+    }
+
+    fn decode(
+        &self,
+        msg: &Encoded,
+        y_len: usize,
+        budget_bits: usize,
+        ctx: &CodecContext,
+    ) -> Result<Vec<f64>, DecodeError> {
+        let ictx = ctx.with_exact_budget(budget_bits);
+        let out = self.inner.try_decode(msg, y_len, &ictx)?;
+        Ok(out.iter().map(|&v| v as f64).collect())
+    }
+}
+
+/// A staged codec: transform stages + terminal coder behind the
+/// [`UpdateCodec`] session surface.
+pub struct PipelineCodec {
+    name: &'static str,
+    stages: Vec<Box<dyn TransformStage>>,
+    coder: Box<dyn TerminalCoder>,
+}
+
+impl PipelineCodec {
+    pub fn new(
+        name: &'static str,
+        stages: Vec<Box<dyn TransformStage>>,
+        coder: Box<dyn TerminalCoder>,
+    ) -> Self {
+        Self { name, stages, coder }
+    }
+
+    /// Stage names, front to back (diagnostics / tests).
+    pub fn stage_names(&self) -> Vec<&'static str> {
+        self.stages.iter().map(|s| s.name()).collect()
+    }
+
+    /// The per-stage input lengths `m = len₀ → len₁ → … → y_len` for an
+    /// `m`-entry update: `lens[i]` is the input length of stage `i`, and
+    /// the final element is the terminal coder's input length.
+    fn stage_lens(&self, m: usize, ctx: &CodecContext) -> Vec<usize> {
+        let mut lens = Vec::with_capacity(self.stages.len() + 1);
+        let mut len = m;
+        lens.push(len);
+        for stage in &self.stages {
+            len = stage.out_len(len, ctx);
+            lens.push(len);
+        }
+        lens
+    }
+
+    fn encode_whole(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+        let m = h.len();
+        let budget = ctx.budget_bits(m);
+        let mut x: Vec<f64> = h.iter().map(|&v| v as f64).collect();
+        for stage in &self.stages {
+            let t0 = Instant::now();
+            x = stage.forward(x, ctx);
+            probe::add_transform_nanos(t0.elapsed().as_nanos() as u64);
+        }
+        self.coder.encode(&x, budget, ctx)
+    }
+
+    fn decode_whole(
+        &self,
+        msg: &Encoded,
+        m: usize,
+        ctx: &CodecContext,
+    ) -> Result<Vec<f32>, DecodeError> {
+        let budget_bits = ctx.budget_bits(m);
+        let lens = self.stage_lens(m, ctx);
+        let y_len = *lens.last().expect("stage_lens is never empty");
+        let mut budget = ctx.decode_budget;
+        let mut y = self.coder.decode(msg, y_len, budget_bits, ctx)?;
+        if y.len() != y_len {
+            return Err(DecodeError::Length { got: y.len(), want: y_len });
+        }
+        for (i, stage) in self.stages.iter().enumerate().rev() {
+            let t0 = Instant::now();
+            let r = stage.inverse(y, lens[i], ctx, &mut budget);
+            probe::add_transform_nanos(t0.elapsed().as_nanos() as u64);
+            y = r?;
+            if y.len() != lens[i] {
+                return Err(DecodeError::Length { got: y.len(), want: lens[i] });
+            }
+        }
+        Ok(y.iter().map(|&v| v as f32).collect())
+    }
+}
+
+impl UpdateCodec for PipelineCodec {
+    fn name(&self) -> String {
+        self.name.into()
+    }
+
+    fn encoder(&self, ctx: &CodecContext, m: usize) -> Box<dyn EncodeSink + '_> {
+        Box::new(PipelineSink { codec: self, ctx: *ctx, buf: Vec::with_capacity(m), m })
+    }
+
+    fn decoder<'a>(
+        &'a self,
+        msg: &'a Encoded,
+        m: usize,
+        ctx: &CodecContext,
+    ) -> Box<dyn DecodeStream + 'a> {
+        Box::new(PipelineStream {
+            codec: self,
+            msg,
+            m,
+            ctx: *ctx,
+            state: StreamState::Pending,
+        })
+    }
+
+    fn encode(&self, h: &[f32], ctx: &CodecContext) -> Encoded {
+        self.encode_whole(h, ctx)
+    }
+}
+
+/// Encode session: buffers the pushed chunks (every current pipeline's
+/// first stage is a global transform) and runs the stage chain once at
+/// `finish`. `state_bytes` is honest — the fleet's buffered-session
+/// telemetry counter keys off it.
+struct PipelineSink<'a> {
+    codec: &'a PipelineCodec,
+    ctx: CodecContext,
+    buf: Vec<f32>,
+    m: usize,
+}
+
+impl EncodeSink for PipelineSink<'_> {
+    fn push(&mut self, chunk: &[f32]) {
+        self.buf.extend_from_slice(chunk);
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.buf.capacity() * std::mem::size_of::<f32>()
+    }
+
+    fn finish(self: Box<Self>) -> Encoded {
+        assert_eq!(
+            self.buf.len(),
+            self.m,
+            "EncodeSink fed {} entries, session opened for {}",
+            self.buf.len(),
+            self.m
+        );
+        self.codec.encode_whole(&self.buf, &self.ctx)
+    }
+}
+
+/// Typed cross-chunk decode state: the reconstruction runs once, then the
+/// finished buffer is served chunk by chunk.
+enum StreamState {
+    /// Reconstruction has not run yet.
+    Pending,
+    /// Finished output, being served from `pos`.
+    Ready { out: Vec<f32>, pos: usize },
+    /// A previous call failed; the session is poisoned.
+    Poisoned,
+}
+
+struct PipelineStream<'a> {
+    codec: &'a PipelineCodec,
+    msg: &'a Encoded,
+    m: usize,
+    ctx: CodecContext,
+    state: StreamState,
+}
+
+impl DecodeStream for PipelineStream<'_> {
+    fn next_chunk(&mut self) -> Result<Option<&[f32]>, DecodeError> {
+        if let StreamState::Pending = self.state {
+            match self.codec.decode_whole(self.msg, self.m, &self.ctx) {
+                Ok(out) => self.state = StreamState::Ready { out, pos: 0 },
+                Err(e) => {
+                    self.state = StreamState::Poisoned;
+                    return Err(e);
+                }
+            }
+        }
+        match &mut self.state {
+            StreamState::Ready { out, pos } => {
+                if *pos >= out.len() {
+                    return Ok(None);
+                }
+                let end = (*pos + DEFAULT_CHUNK).min(out.len());
+                let start = *pos;
+                *pos = end;
+                Ok(Some(&out[start..end]))
+            }
+            StreamState::Poisoned => Err(DecodeError::Header("poisoned pipeline session")),
+            StreamState::Pending => unreachable!("reconstruction just ran"),
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        match &self.state {
+            StreamState::Ready { out, .. } => out.capacity() * std::mem::size_of::<f32>(),
+            _ => 0,
+        }
+    }
+}
+
+/// Shared fixed-width uniform quantization arithmetic. These are the
+/// *exact* expressions the rotation/top-k/subsample codecs have always
+/// used — extracted here so the pipeline ports and the legacy oracles
+/// provably share one implementation (bit parity by construction).
+///
+/// `levels = 2^b − 1`, `span = max(hi − lo, 1e-30)`:
+/// quantize `v ↦ min(round((v−lo)/span · levels), levels)`,
+/// dequantize `q ↦ lo + q/levels · span`.
+pub fn quantize_uniform(v: f64, lo: f64, hi: f64, b: u32) -> u64 {
+    let levels = (1u64 << b) - 1;
+    let span = (hi - lo).max(1e-30);
+    let q = (((v - lo) / span) * levels as f64).round() as u64;
+    q.min(levels)
+}
+
+/// Inverse of [`quantize_uniform`] (same `lo`/`hi`/`b`).
+pub fn dequantize_uniform(q: u64, lo: f64, hi: f64, b: u32) -> f64 {
+    let levels = (1u64 << b) - 1;
+    let span = (hi - lo).max(1e-30);
+    lo + q as f64 / levels as f64 * span
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Doubles every entry; inverse halves (charging one budget unit).
+    struct DoubleStage;
+
+    impl TransformStage for DoubleStage {
+        fn name(&self) -> &'static str {
+            "double"
+        }
+        fn out_len(&self, m_in: usize, _ctx: &CodecContext) -> usize {
+            m_in
+        }
+        fn forward(&self, mut x: Vec<f64>, _ctx: &CodecContext) -> Vec<f64> {
+            for v in x.iter_mut() {
+                *v *= 2.0;
+            }
+            x
+        }
+        fn inverse(
+            &self,
+            mut y: Vec<f64>,
+            _m_in: usize,
+            _ctx: &CodecContext,
+            budget: &mut DecodeBudget,
+        ) -> Result<Vec<f64>, DecodeError> {
+            budget.charge(1)?;
+            for v in y.iter_mut() {
+                *v *= 0.5;
+            }
+            Ok(y)
+        }
+    }
+
+    /// Lossless f32 terminal: 32 bits per entry, budget ignored (tests
+    /// only exercise the plumbing, not the rate accounting).
+    struct RawCoder;
+
+    impl TerminalCoder for RawCoder {
+        fn name(&self) -> &'static str {
+            "raw"
+        }
+        fn encode(&self, y: &[f64], _budget_bits: usize, _ctx: &CodecContext) -> Encoded {
+            let mut bytes = Vec::with_capacity(y.len() * 4);
+            for &v in y {
+                bytes.extend_from_slice(&(v as f32).to_le_bytes());
+            }
+            Encoded { bits: bytes.len() * 8, bytes }
+        }
+        fn decode(
+            &self,
+            msg: &Encoded,
+            y_len: usize,
+            _budget_bits: usize,
+            _ctx: &CodecContext,
+        ) -> Result<Vec<f64>, DecodeError> {
+            if msg.bytes.len() != y_len * 4 {
+                return Err(DecodeError::Length { got: msg.bytes.len() / 4, want: y_len });
+            }
+            Ok(msg
+                .bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64)
+                .collect())
+        }
+    }
+
+    fn test_codec() -> PipelineCodec {
+        PipelineCodec::new("test-pipeline", vec![Box::new(DoubleStage)], Box::new(RawCoder))
+    }
+
+    #[test]
+    fn pipeline_round_trips_through_sessions() {
+        let codec = test_codec();
+        let ctx = CodecContext::new(1, 2, 3, 32.0);
+        let h: Vec<f32> = (0..2500).map(|i| (i as f32).sin()).collect();
+        let enc = codec.encode(&h, &ctx);
+        // Whole-buffer and chunked decode agree and recover the input
+        // (the stage chain is lossless here).
+        let dec = codec.try_decode(&enc, h.len(), &ctx).unwrap();
+        assert_eq!(dec.len(), h.len());
+        for (a, b) in dec.iter().zip(&h) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        // Chunked encode is bit-identical to whole-buffer encode.
+        let mut sink = codec.encoder(&ctx, h.len());
+        for c in h.chunks(700) {
+            sink.push(c);
+        }
+        assert!(sink.state_bytes() >= h.len() * 4, "buffered sink must report its buffer");
+        assert_eq!(sink.finish(), enc);
+    }
+
+    #[test]
+    fn exhausted_budget_is_a_typed_error_then_poisons() {
+        let codec = test_codec();
+        let ctx = CodecContext::new(1, 2, 3, 32.0)
+            .with_decode_budget(DecodeBudget::units(0));
+        let h = vec![1.0f32; 64];
+        let enc = codec.encode(&h, &ctx);
+        let mut stream = codec.decoder(&enc, h.len(), &ctx);
+        assert_eq!(stream.next_chunk().unwrap_err(), DecodeError::Budget);
+        assert!(stream.next_chunk().is_err(), "poisoned session must keep failing");
+        // With one unit of credit the same message decodes fine.
+        let ok_ctx = CodecContext::new(1, 2, 3, 32.0)
+            .with_decode_budget(DecodeBudget::units(1));
+        assert!(codec.try_decode(&enc, h.len(), &ok_ctx).is_ok());
+    }
+
+    #[test]
+    fn uniform_quant_helpers_invert() {
+        for b in [1u32, 3, 8, 16] {
+            let (lo, hi) = (-2.5f64, 7.25);
+            for i in 0..50 {
+                let v = lo + (hi - lo) * i as f64 / 49.0;
+                let q = quantize_uniform(v, lo, hi, b);
+                assert!(q <= (1u64 << b) - 1);
+                let r = dequantize_uniform(q, lo, hi, b);
+                let step = (hi - lo) / ((1u64 << b) - 1) as f64;
+                assert!((r - v).abs() <= step / 2.0 + 1e-12, "b={b} v={v} r={r}");
+            }
+        }
+        // Degenerate span must not divide by zero.
+        assert_eq!(quantize_uniform(1.0, 1.0, 1.0, 4), 0);
+        assert_eq!(dequantize_uniform(0, 1.0, 1.0, 4), 1.0);
+    }
+
+    #[test]
+    fn codec_terminal_passes_exact_budget_through() {
+        // The adapter must hand the inner codec the pipeline's exact bit
+        // budget, not a rate-derived recomputation over the stage length.
+        struct BudgetEcho;
+        impl UpdateCodec for BudgetEcho {
+            fn name(&self) -> String {
+                "budget-echo".into()
+            }
+            fn encoder(&self, ctx: &CodecContext, m: usize) -> Box<dyn EncodeSink + '_> {
+                let bits = ctx.budget_bits(m);
+                Box::new(super::super::BufferedSink::new(m, move |_: &[f32]| Encoded {
+                    bytes: (bits as u64).to_le_bytes().to_vec(),
+                    bits: 64,
+                }))
+            }
+            fn decoder<'a>(
+                &'a self,
+                _msg: &'a Encoded,
+                m: usize,
+                _ctx: &CodecContext,
+            ) -> Box<dyn DecodeStream + 'a> {
+                Box::new(super::super::EntryStream::new(m, || Ok(0.0)))
+            }
+        }
+        let term = CodecTerminal::new(BudgetEcho);
+        let ctx = CodecContext::new(0, 0, 1, 2.0);
+        let enc = term.encode(&[0.0; 10], 12_345, &ctx);
+        assert_eq!(u64::from_le_bytes(enc.bytes.try_into().unwrap()), 12_345);
+    }
+}

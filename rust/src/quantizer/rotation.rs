@@ -10,9 +10,20 @@
 //!
 //! Sessions are buffered on both sides: the FWHT is a global transform of
 //! the whole (power-of-two padded) vector, on encode and on decode.
+//!
+//! Since Codec API v3 the registry builds the **pipeline port**
+//! ([`RotationUniform::pipeline`]): a [`RotationStage`] (pad → sign flip →
+//! FWHT → 1/√n₂) in front of a [`UniformPrefixCoder`] terminal. The
+//! monolithic [`RotationUniform`] implementation below is retained
+//! verbatim as the bit-parity oracle — `pipeline_matches_legacy_oracle`
+//! asserts byte-identical wire output and identical decodes.
 
+use super::pipeline::{
+    dequantize_uniform, quantize_uniform, PipelineCodec, TerminalCoder, TransformStage,
+};
 use super::{
-    BufferedSink, CodecContext, DecodeStream, Encoded, EncodeSink, SliceStream, UpdateCodec,
+    BufferedSink, CodecContext, DecodeBudget, DecodeError, DecodeStream, Encoded, EncodeSink,
+    SliceStream, UpdateCodec,
 };
 use crate::entropy::{BitReader, BitWriter};
 use crate::prng::{Rng, StreamKind};
@@ -55,10 +66,7 @@ impl RotationUniform {
         // or heavy padding), only the first n_tx coordinates travel — the
         // rotation spreads energy uniformly, so a prefix is an unbiased
         // 1/p-scaled sketch (same common-randomness trick as subsampling).
-        let header = 64 + 8;
-        let payload = budget.saturating_sub(header);
-        let b = ((payload / n2).clamp(1, 16)) as u32;
-        let n_tx = (payload / b as usize).min(n2);
+        let (b, n_tx) = prefix_geometry(budget, n2);
         if n_tx == 0 {
             // Budget below the header: empty zero message (the decoder
             // recomputes n_tx == 0 from the same budget and never reads).
@@ -98,10 +106,7 @@ impl RotationUniform {
     fn decode_whole(&self, msg: &Encoded, m: usize, ctx: &CodecContext) -> Vec<f32> {
         let n2 = m.next_power_of_two();
         let budget = ctx.budget_bits(m);
-        let header = 64 + 8;
-        let payload = budget.saturating_sub(header);
-        let b = ((payload / n2).clamp(1, 16)) as u32;
-        let n_tx = (payload / b as usize).min(n2);
+        let (b, n_tx) = prefix_geometry(budget, n2);
         if n_tx == 0 {
             return vec![0.0; m];
         }
@@ -130,6 +135,134 @@ impl RotationUniform {
         let scale = 1.0 / (n2 as f64).sqrt();
         let d = sign_diag(n2, ctx);
         (0..m).map(|i| (y[i] * scale * d[i]) as f32).collect()
+    }
+}
+
+/// Fixed-width bits per coded coordinate and the transmitted prefix
+/// length for an n₂-point rotated vector under `budget` total bits.
+/// Shared by the legacy oracle and the pipeline terminal so the wire
+/// geometry cannot drift between them.
+fn prefix_geometry(budget: usize, n2: usize) -> (u32, usize) {
+    let header = 64 + 8;
+    let payload = budget.saturating_sub(header);
+    let b = ((payload / n2).clamp(1, 16)) as u32;
+    let n_tx = (payload / b as usize).min(n2);
+    (b, n_tx)
+}
+
+/// Pipeline stage: pad to the next power of two, apply the shared-seed
+/// sign diagonal `D`, FWHT, and the 1/√n₂ normalization. The inverse
+/// (H symmetric, H² = n₂·I) is the same transform followed by the sign
+/// flip and truncation back to `m_in` entries.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RotationStage;
+
+impl TransformStage for RotationStage {
+    fn name(&self) -> &'static str {
+        "rotation"
+    }
+
+    fn out_len(&self, m_in: usize, _ctx: &CodecContext) -> usize {
+        m_in.next_power_of_two()
+    }
+
+    fn forward(&self, x: Vec<f64>, ctx: &CodecContext) -> Vec<f64> {
+        let m = x.len();
+        let n2 = m.next_power_of_two();
+        let d = sign_diag(n2, ctx);
+        let mut y = vec![0.0f64; n2];
+        for i in 0..m {
+            y[i] = x[i] * d[i];
+        }
+        fwht(&mut y);
+        let scale = 1.0 / (n2 as f64).sqrt();
+        for v in y.iter_mut() {
+            *v *= scale;
+        }
+        y
+    }
+
+    fn inverse(
+        &self,
+        mut y: Vec<f64>,
+        m_in: usize,
+        ctx: &CodecContext,
+        budget: &mut DecodeBudget,
+    ) -> Result<Vec<f64>, DecodeError> {
+        budget.charge(1)?;
+        let n2 = y.len();
+        fwht(&mut y);
+        let scale = 1.0 / (n2 as f64).sqrt();
+        let d = sign_diag(n2, ctx);
+        Ok((0..m_in).map(|i| y[i] * scale * d[i]).collect())
+    }
+}
+
+/// Pipeline terminal: fixed-width uniform quantization of the prefix the
+/// budget can afford, with the unbiased 1/p tail scaling applied on
+/// decode — byte-identical to the legacy monolith's wire format.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UniformPrefixCoder;
+
+impl TerminalCoder for UniformPrefixCoder {
+    fn name(&self) -> &'static str {
+        "uniform-prefix"
+    }
+
+    fn encode(&self, y: &[f64], budget_bits: usize, _ctx: &CodecContext) -> Encoded {
+        let n2 = y.len();
+        let (b, n_tx) = prefix_geometry(budget_bits, n2);
+        if n_tx == 0 {
+            return Encoded { bytes: Vec::new(), bits: 0 };
+        }
+        let lo = y[..n_tx].iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = y[..n_tx].iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut w = BitWriter::with_capacity(budget_bits / 8 + 16);
+        w.push_f32(lo as f32);
+        w.push_f32(hi as f32);
+        w.push_bits(b as u64, 8);
+        for &v in &y[..n_tx] {
+            w.push_bits(quantize_uniform(v, lo, hi, b), b);
+        }
+        let bits = w.bit_len();
+        debug_assert!(bits <= budget_bits, "rotation over budget: {bits} > {budget_bits}");
+        Encoded { bytes: w.into_bytes(), bits }
+    }
+
+    fn decode(
+        &self,
+        msg: &Encoded,
+        y_len: usize,
+        budget_bits: usize,
+        _ctx: &CodecContext,
+    ) -> Result<Vec<f64>, DecodeError> {
+        let (b, n_tx) = prefix_geometry(budget_bits, y_len);
+        let mut y = vec![0.0f64; y_len];
+        if n_tx == 0 {
+            return Ok(y);
+        }
+        let mut r = BitReader::new(&msg.bytes);
+        let lo = r.read_f32() as f64;
+        let hi = r.read_f32() as f64;
+        let b_hdr = r.read_bits(8) as u32;
+        if b_hdr != b {
+            // Same policy as the oracle: zeros rather than a misparse.
+            return Ok(y);
+        }
+        let inv_p = y_len as f64 / n_tx as f64;
+        for v in y.iter_mut().take(n_tx) {
+            let q = r.read_bits(b);
+            *v = dequantize_uniform(q, lo, hi, b) * inv_p;
+        }
+        Ok(y)
+    }
+}
+
+impl RotationUniform {
+    /// The staged pipeline port — what `quantizer::make("rotation")`
+    /// builds since Codec API v3. Byte-identical to the legacy monolith.
+    pub fn pipeline() -> PipelineCodec {
+        PipelineCodec::new("rotation", vec![Box::new(RotationStage)], Box::new(UniformPrefixCoder))
     }
 }
 
@@ -237,6 +370,42 @@ mod tests {
             .sum::<f64>()
             / h.len() as f64;
         assert!(rot < direct, "rotated {rot} !< direct {direct}");
+    }
+
+    #[test]
+    fn pipeline_matches_legacy_oracle() {
+        // The registry's pipeline port must be indistinguishable from the
+        // retained monolith: byte-identical wire output, identical exact
+        // bit counts, and bitwise-equal decodes — across sizes (including
+        // non-power-of-two and sub-header budgets), rates, and contexts.
+        for (m, seed) in [(1000usize, 3u64), (512, 7), (300, 11), (7, 5)] {
+            let h = gaussian(m, seed);
+            for rate in [0.05, 2.0, 4.0] {
+                for (user, round) in [(0u64, 0u64), (42, 17)] {
+                    let ctx = CodecContext::new(user, round, seed, rate);
+                    let pipe = RotationUniform::pipeline();
+                    let legacy_enc = RotationUniform.encode(&h, &ctx);
+                    let pipe_enc = pipe.encode(&h, &ctx);
+                    assert_eq!(pipe_enc, legacy_enc, "m={m} rate={rate}");
+                    let legacy_dec = RotationUniform.decode(&legacy_enc, m, &ctx);
+                    let pipe_dec = pipe.decode(&pipe_enc, m, &ctx);
+                    assert_eq!(pipe_dec, legacy_dec, "m={m} rate={rate}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_decode_budget_exhaustion_is_typed() {
+        use crate::quantizer::{DecodeBudget, DecodeError};
+        let h = gaussian(256, 21);
+        let pipe = RotationUniform::pipeline();
+        let ctx = CodecContext::new(1, 1, 9, 4.0);
+        let enc = pipe.encode(&h, &ctx);
+        let starved = ctx.with_decode_budget(DecodeBudget::units(0));
+        assert_eq!(pipe.try_decode(&enc, h.len(), &starved), Err(DecodeError::Budget));
+        let fed = ctx.with_decode_budget(DecodeBudget::units(1));
+        assert_eq!(pipe.try_decode(&enc, h.len(), &fed).unwrap(), pipe.decode(&enc, h.len(), &ctx));
     }
 
     #[test]

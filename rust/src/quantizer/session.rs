@@ -92,6 +92,10 @@ impl DecodeStream for SliceStream {
         self.pos = end;
         Ok(Some(chunk))
     }
+
+    fn state_bytes(&self) -> usize {
+        self.buf.capacity() * std::mem::size_of::<f32>()
+    }
 }
 
 /// [`DecodeStream`] adapter for per-entry decoders: pulls one entry at a
@@ -131,6 +135,10 @@ impl<F: FnMut() -> Result<f32, DecodeError>> DecodeStream for EntryStream<F> {
         }
         self.remaining -= n;
         Ok(Some(&self.scratch))
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.scratch.capacity() * std::mem::size_of::<f32>()
     }
 }
 
@@ -179,6 +187,11 @@ impl<F: FnMut(i64) -> f32> DecodeStream for SymbolMapStream<'_, F> {
         }
         self.remaining -= n;
         Ok(Some(&self.scratch))
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.ibuf.capacity() * std::mem::size_of::<i64>()
+            + self.scratch.capacity() * std::mem::size_of::<f32>()
     }
 }
 

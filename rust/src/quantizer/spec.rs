@@ -18,10 +18,12 @@
 //! | `qsgd` | `max_levels=<u32 ≥ 1>` |
 //! | `topk` | `value_bits=<1..=16>` |
 //! | `subsample` | `value_bits=<1..=16>` |
+//! | `fedvqcs` | `ratio=<f64 in (0,1]>`, `sparsity=<f64 in (0,1]>`, `solver_iters=<u32 ≥ 1>` |
 //! | others | *(no parameters)* |
 //!
 //! Examples: `uveqfed-l4`, `uveqfed-l2:zeta=3.0,subtractive=false`,
-//! `qsgd:max_levels=4096`, `topk:value_bits=6`.
+//! `qsgd:max_levels=4096`, `topk:value_bits=6`,
+//! `fedvqcs:ratio=0.25,sparsity=0.05,solver_iters=50`.
 //!
 //! Every failure — unknown base, malformed `key=value`, unknown key, bad
 //! value — is a [`crate::Result`] error naming the valid alternatives;
@@ -29,8 +31,8 @@
 
 use super::uveqfed::ZetaMode;
 use super::{
-    codec_id, codec_name, registered_codec_names, IdentityCodec, Qsgd, RotationUniform,
-    SignSgd, SubsampleUniform, TernGrad, TopK, UVeQFed, UpdateCodec,
+    codec_id, codec_name, registered_codec_names, FedVqcs, IdentityCodec, Qsgd,
+    RotationUniform, SignSgd, SubsampleUniform, TernGrad, TopK, UVeQFed, UpdateCodec,
 };
 
 /// Lattice dimension of a UVeQFed configuration.
@@ -70,6 +72,9 @@ pub enum CodecSpec {
     SignSgd,
     /// Top-k sparsification.
     TopK { value_bits: u32 },
+    /// FedVQCS compressed sensing: block top-k → Gaussian sketch →
+    /// UVeQFed lattice VQ, decoded by a budgeted IHT solver.
+    FedVqcs { ratio: f64, sparsity: f64, solver_iters: u32 },
     /// Unquantized passthrough.
     Identity,
 }
@@ -119,6 +124,14 @@ impl CodecSpec {
             "terngrad" => CodecSpec::TernGrad,
             "signsgd" => CodecSpec::SignSgd,
             "topk" => CodecSpec::TopK { value_bits: TopK::default().value_bits },
+            "fedvqcs" => {
+                let d = FedVqcs::default();
+                CodecSpec::FedVqcs {
+                    ratio: d.ratio,
+                    sparsity: d.sparsity,
+                    solver_iters: d.solver_iters,
+                }
+            }
             "identity" => CodecSpec::Identity,
             _ => return None,
         })
@@ -176,6 +189,33 @@ impl CodecSpec {
                     crate::bail!("codec 'topk' has no parameter '{other}' (valid: value_bits)")
                 }
             },
+            CodecSpec::FedVqcs { ratio, sparsity, solver_iters } => {
+                fn frac(key: &str, val: &str) -> crate::Result<f64> {
+                    let f: f64 = val
+                        .parse()
+                        .map_err(|e| crate::format_err!("codec param '{key}={val}': {e}"))?;
+                    crate::ensure!(
+                        f.is_finite() && f > 0.0 && f <= 1.0,
+                        "codec param '{key}' must be in (0, 1]"
+                    );
+                    Ok(f)
+                }
+                match key {
+                    "ratio" => *ratio = frac(key, val)?,
+                    "sparsity" => *sparsity = frac(key, val)?,
+                    "solver_iters" => {
+                        let it: u32 = val.parse().map_err(|e| {
+                            crate::format_err!("codec param 'solver_iters={val}': {e}")
+                        })?;
+                        crate::ensure!(it >= 1, "codec param 'solver_iters' must be ≥ 1");
+                        *solver_iters = it;
+                    }
+                    other => crate::bail!(
+                        "codec 'fedvqcs' has no parameter '{other}' \
+                         (valid: ratio, sparsity, solver_iters)"
+                    ),
+                }
+            }
             CodecSpec::Rotation
             | CodecSpec::TernGrad
             | CodecSpec::SignSgd
@@ -201,6 +241,7 @@ impl CodecSpec {
             CodecSpec::TernGrad => "terngrad",
             CodecSpec::SignSgd => "signsgd",
             CodecSpec::TopK { .. } => "topk",
+            CodecSpec::FedVqcs { .. } => "fedvqcs",
             CodecSpec::Identity => "identity",
         }
     }
@@ -225,11 +266,17 @@ impl CodecSpec {
                 Box::new(c)
             }
             CodecSpec::Qsgd { max_levels } => Box::new(Qsgd { max_levels }),
-            CodecSpec::Rotation => Box::new(RotationUniform),
+            // Rotation builds as its pipeline port — bit-identical to the
+            // legacy implementation (proved by the oracle-parity tests in
+            // `quantizer::rotation`).
+            CodecSpec::Rotation => Box::new(RotationUniform::pipeline()),
             CodecSpec::Subsample { value_bits } => Box::new(SubsampleUniform { value_bits }),
             CodecSpec::TernGrad => Box::new(TernGrad),
             CodecSpec::SignSgd => Box::new(SignSgd),
             CodecSpec::TopK { value_bits } => Box::new(TopK { value_bits }),
+            CodecSpec::FedVqcs { ratio, sparsity, solver_iters } => {
+                Box::new(FedVqcs { ratio, sparsity, solver_iters }.pipeline())
+            }
             CodecSpec::Identity => Box::new(IdentityCodec),
         }
     }
@@ -295,6 +342,45 @@ mod tests {
             "uveqfed-l2:zeta=-1",     // non-positive
         ] {
             assert!(CodecSpec::parse(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn fedvqcs_params_parse_and_apply() {
+        assert_eq!(
+            CodecSpec::parse("fedvqcs:ratio=0.25,sparsity=0.05,solver_iters=50").unwrap(),
+            CodecSpec::FedVqcs { ratio: 0.25, sparsity: 0.05, solver_iters: 50 }
+        );
+        assert_eq!(CodecSpec::parse("fedvqcs").unwrap().canonical_name(), "fedvqcs");
+        assert_eq!(
+            CodecSpec::parse("fedvqcs:ratio=0.5").unwrap(),
+            CodecSpec::FedVqcs { ratio: 0.5, sparsity: 0.05, solver_iters: 50 }
+        );
+    }
+
+    #[test]
+    fn fedvqcs_bad_params_are_descriptive_errors() {
+        // Out-of-range / malformed values name the offending key.
+        for (bad, needle) in [
+            ("fedvqcs:ratio=0", "'ratio' must be in (0, 1]"),
+            ("fedvqcs:ratio=1.5", "'ratio' must be in (0, 1]"),
+            ("fedvqcs:ratio=nan", "'ratio' must be in (0, 1]"),
+            ("fedvqcs:sparsity=-0.1", "'sparsity' must be in (0, 1]"),
+            ("fedvqcs:sparsity=inf", "'sparsity' must be in (0, 1]"),
+            ("fedvqcs:solver_iters=0", "'solver_iters' must be ≥ 1"),
+            ("fedvqcs:solver_iters=many", "solver_iters=many"),
+            ("fedvqcs:iters=5", "no parameter 'iters'"),
+        ] {
+            let err = CodecSpec::parse(bad).unwrap_err().to_string();
+            assert!(err.contains(needle), "{bad}: {err}");
+        }
+        // Unknown-key errors list the valid keys.
+        let err = CodecSpec::parse("fedvqcs:bogus=1").unwrap_err().to_string();
+        assert!(err.contains("valid: ratio, sparsity, solver_iters"), "{err}");
+        // Unknown-base errors still list every valid codec name.
+        let err = CodecSpec::parse("fedvqc").unwrap_err().to_string();
+        for name in registered_codec_names() {
+            assert!(err.contains(name), "error should list '{name}': {err}");
         }
     }
 

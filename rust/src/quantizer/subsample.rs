@@ -9,7 +9,19 @@
 //! Sessions are buffered on both sides: the encoder quantizes over the
 //! kept subset's global dynamic range, and the decoder scatter-writes the
 //! kept coordinates into their (unsorted-in-stream-order) positions.
+//!
+//! **Pipeline-v3 stage mapping**: subsampling is `mask-project →
+//! uniform-quantize`, i.e. a subsampling
+//! [`TransformStage`](super::pipeline::TransformStage) fused into its
+//! terminal coder — the mask comes from common randomness (no in-band
+//! index list), but `k` and the scatter positions depend on the *outer*
+//! budget and `m`, so cutting a stage boundary here would re-derive them
+//! from a stage-local length and change bytes. The value quantization is
+//! the shared [`pipeline::quantize_uniform`](super::pipeline::quantize_uniform)
+//! arithmetic, keeping the wire format bit-identical to the pre-pipeline
+//! implementation.
 
+use super::pipeline::{dequantize_uniform, quantize_uniform};
 use super::{
     BufferedSink, CodecContext, DecodeStream, Encoded, EncodeSink, SliceStream, UpdateCodec,
 };
@@ -58,11 +70,8 @@ impl SubsampleUniform {
         let hi = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
         w.push_f32(lo as f32);
         w.push_f32(hi as f32);
-        let levels = (1u64 << self.value_bits) - 1;
-        let span = (hi - lo).max(1e-30);
         for &v in &vals {
-            let q = (((v - lo) / span) * levels as f64).round() as u64;
-            w.push_bits(q.min(levels), self.value_bits);
+            w.push_bits(quantize_uniform(v, lo, hi, self.value_bits), self.value_bits);
         }
         let bits = w.bit_len();
         debug_assert!(bits <= budget);
@@ -89,13 +98,11 @@ impl SubsampleUniform {
             return out;
         }
         let idx = self.kept_indices(m, k, ctx);
-        let levels = (1u64 << self.value_bits) - 1;
-        let span = (hi - lo).max(1e-30);
         // unbiased inverse-probability scaling
         let inv_p = m as f64 / k as f64;
         for &i in &idx {
             let q = r.read_bits(self.value_bits);
-            out[i] = ((lo + q as f64 / levels as f64 * span) * inv_p) as f32;
+            out[i] = (dequantize_uniform(q, lo, hi, self.value_bits) * inv_p) as f32;
         }
         out
     }

@@ -5,7 +5,18 @@
 //! Sessions are buffered on both sides: the encoder needs a global sort
 //! by magnitude, and the decoder scatter-writes into arbitrary positions,
 //! so neither can operate on an in-order chunk stream.
+//!
+//! **Pipeline-v3 stage mapping**: top-k is `sparsify → uniform-quantize`
+//! with the support indices coded in-band, i.e. a sparsification
+//! [`TransformStage`](super::pipeline::TransformStage) fused into its
+//! terminal coder (the index list *is* part of the wire format, so the
+//! stage boundary cannot be cut without changing bytes). The uniform
+//! value quantization is the shared
+//! [`pipeline::quantize_uniform`](super::pipeline::quantize_uniform)
+//! arithmetic, so the wire format stays bit-identical to the
+//! pre-pipeline implementation.
 
+use super::pipeline::{dequantize_uniform, quantize_uniform};
 use super::{
     BufferedSink, CodecContext, DecodeStream, Encoded, EncodeSink, SliceStream, UpdateCodec,
 };
@@ -50,12 +61,9 @@ impl TopK {
         w.push_f32(if k > 0 { lo as f32 } else { 0.0 });
         w.push_f32(if k > 0 { hi as f32 } else { 0.0 });
         w.push_u32(k as u32);
-        let levels = (1u64 << self.value_bits) - 1;
-        let span = (hi - lo).max(1e-30);
         for &i in kept {
             w.push_bits(i as u64, ib);
-            let q = (((h[i] as f64 - lo) / span) * levels as f64).round() as u64;
-            w.push_bits(q.min(levels), self.value_bits);
+            w.push_bits(quantize_uniform(h[i] as f64, lo, hi, self.value_bits), self.value_bits);
         }
         let bits = w.bit_len();
         debug_assert!(bits <= budget || k == 0);
@@ -70,13 +78,11 @@ impl TopK {
         let hi = r.read_f32() as f64;
         let k = r.read_u32() as usize;
         let mut out = vec![0.0f32; m];
-        let levels = (1u64 << self.value_bits) - 1;
-        let span = (hi - lo).max(1e-30);
         for _ in 0..k {
             let i = r.read_bits(ib) as usize;
             let q = r.read_bits(self.value_bits);
             if i < m {
-                out[i] = (lo + q as f64 / levels as f64 * span) as f32;
+                out[i] = dequantize_uniform(q, lo, hi, self.value_bits) as f32;
             }
         }
         out

@@ -67,10 +67,11 @@ pub fn span_to_json(ev: &SpanEvent) -> Json {
             d.push("payload_bits", Json::num(payload_bits as f64));
             d.push("accepted", Json::Bool(accepted));
         }
-        SpanData::Decode { chunks, entries, shard } => {
+        SpanData::Decode { chunks, entries, shard, solver_iters } => {
             d.push("chunks", Json::num(chunks as f64));
             d.push("entries", Json::num(entries as f64));
             d.push("shard", Json::num(shard as f64));
+            d.push("solver_iters", Json::num(solver_iters as f64));
         }
         SpanData::Fold { chunks, entries, alpha, shard } => {
             d.push("chunks", Json::num(chunks as f64));
@@ -137,6 +138,7 @@ pub fn round_to_json(s: &RoundSummary, dropped_events: u64) -> Json {
     o.push("scale_probes", Json::num(s.scale_probes as f64));
     o.push("range_symbols", Json::num(s.range_symbols as f64));
     o.push("range_escapes", Json::num(s.range_escapes as f64));
+    o.push("solver_iters", Json::num(s.solver_iters as f64));
     o.push("train_secs", Json::num(s.train_secs));
     o.push("encode_secs", Json::num(s.encode_secs));
     o.push("decode_secs", Json::num(s.decode_secs));

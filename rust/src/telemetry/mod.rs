@@ -118,9 +118,11 @@ pub enum SpanData {
     /// Uplink admission: serialized frame bytes, exact payload bits, and
     /// whether the budget check admitted the message.
     Transmit { wire_bytes: u64, payload_bits: u64, accepted: bool },
-    /// Decode-stream drain: chunks yielded, entries produced, and the
-    /// aggregation shard that owned the stream.
-    Decode { chunks: u32, entries: u64, shard: u32 },
+    /// Decode-stream drain: chunks yielded, entries produced, the
+    /// aggregation shard that owned the stream, and iterations spent by
+    /// budgeted reconstruction solvers (fedvqcs IHT; 0 for closed-form
+    /// codecs) from [`probe`].
+    Decode { chunks: u32, entries: u64, shard: u32, solver_iters: u64 },
     /// Aggregator fold: chunks folded, entries, the client's
     /// re-normalized weight α, and the owning aggregation shard.
     Fold { chunks: u32, entries: u64, alpha: f64, shard: u32 },
@@ -201,15 +203,22 @@ pub enum HistMetric {
     MessageBytes = 1,
     /// Per-chunk aggregator fold time, nanoseconds.
     FoldChunkNanos = 2,
+    /// Per-client wall nanoseconds inside pipeline transform stages
+    /// (forward on encode; zero for non-pipeline codecs).
+    TransformNanos = 3,
 }
 
 impl HistMetric {
     /// Number of distinct metrics (histogram array length).
-    pub const COUNT: usize = 3;
+    pub const COUNT: usize = 4;
 
     /// All metrics, in index order.
-    pub const ALL: [HistMetric; Self::COUNT] =
-        [HistMetric::EncodeNanos, HistMetric::MessageBytes, HistMetric::FoldChunkNanos];
+    pub const ALL: [HistMetric; Self::COUNT] = [
+        HistMetric::EncodeNanos,
+        HistMetric::MessageBytes,
+        HistMetric::FoldChunkNanos,
+        HistMetric::TransformNanos,
+    ];
 
     /// Stable name for reports.
     pub fn name(self) -> &'static str {
@@ -217,6 +226,7 @@ impl HistMetric {
             HistMetric::EncodeNanos => "encode_nanos",
             HistMetric::MessageBytes => "message_bytes",
             HistMetric::FoldChunkNanos => "fold_chunk_nanos",
+            HistMetric::TransformNanos => "transform_nanos",
         }
     }
 }

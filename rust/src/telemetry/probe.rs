@@ -27,6 +27,13 @@ pub struct EncodeProbe {
     pub symbols: u64,
     /// Symbols that escaped the direct table into the long-tail model.
     pub escapes: u64,
+    /// Iterations spent by budgeted reconstruction solvers (fedvqcs IHT).
+    /// Bumped on the decode path; the shard thread brackets each decode
+    /// the same way the worker brackets each encode.
+    pub solver_iters: u64,
+    /// Wall nanoseconds spent inside pipeline transform stages (forward
+    /// on encode, inverse on decode).
+    pub transform_nanos: u64,
 }
 
 thread_local! {
@@ -36,6 +43,8 @@ thread_local! {
             scale_probes_exact: 0,
             symbols: 0,
             escapes: 0,
+            solver_iters: 0,
+            transform_nanos: 0,
         })
     };
 }
@@ -79,6 +88,24 @@ pub fn add_symbols(symbols: u64, escapes: u64) {
     });
 }
 
+/// Count `n` iterations of a budgeted reconstruction solver.
+pub fn add_solver_iters(n: u64) {
+    PROBE.with(|p| {
+        let mut v = p.get();
+        v.solver_iters = v.solver_iters.saturating_add(n);
+        p.set(v);
+    });
+}
+
+/// Count `n` wall nanoseconds spent in pipeline transform stages.
+pub fn add_transform_nanos(n: u64) {
+    PROBE.with(|p| {
+        let mut v = p.get();
+        v.transform_nanos = v.transform_nanos.saturating_add(n);
+        p.set(v);
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,6 +117,8 @@ mod tests {
         add_scale_exact(2);
         add_symbols(100, 7);
         add_symbols(50, 0);
+        add_solver_iters(4);
+        add_transform_nanos(250);
         let p = take();
         assert_eq!(
             p,
@@ -97,7 +126,9 @@ mod tests {
                 scale_probes_est: 3,
                 scale_probes_exact: 2,
                 symbols: 150,
-                escapes: 7
+                escapes: 7,
+                solver_iters: 4,
+                transform_nanos: 250,
             }
         );
         assert_eq!(take(), EncodeProbe::default(), "take must zero the probe");

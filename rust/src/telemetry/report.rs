@@ -57,6 +57,9 @@ pub struct RoundSummary {
     pub range_symbols: u64,
     /// Σ range-coder escape symbols.
     pub range_escapes: u64,
+    /// Σ budgeted reconstruction-solver iterations over decode spans
+    /// (fedvqcs IHT; 0 for closed-form codecs).
+    pub solver_iters: u64,
     /// Σ wall seconds per stage.
     pub train_secs: f64,
     pub encode_secs: f64,
@@ -111,8 +114,9 @@ impl RoundSummary {
                     self.rejected += 1;
                 }
             }
-            SpanData::Decode { .. } => {
+            SpanData::Decode { solver_iters, .. } => {
                 self.decode_secs += ev.wall_dur_s;
+                self.solver_iters += solver_iters;
             }
             SpanData::Fold { chunks, entries, alpha, .. } => {
                 self.aggregated += 1;
@@ -198,6 +202,7 @@ const SUMMARY_COLUMNS: &[SummaryColumn] = &[
     ("scale_probes", |s| s.scale_probes as f64),
     ("range_symbols", |s| s.range_symbols as f64),
     ("range_escapes", |s| s.range_escapes as f64),
+    ("solver_iters", |s| s.solver_iters as f64),
     ("train_secs", |s| s.train_secs),
     ("encode_secs", |s| s.encode_secs),
     ("decode_secs", |s| s.decode_secs),
@@ -318,7 +323,7 @@ mod tests {
             evs.push(SpanEvent {
                 kind: SpanKind::Decode,
                 wall_dur_s: 0.001,
-                data: SpanData::Decode { chunks: 2, entries: 100, shard: 0 },
+                data: SpanData::Decode { chunks: 2, entries: 100, shard: 0, solver_iters: 4 },
                 ..base
             });
             evs.push(SpanEvent {
@@ -400,6 +405,7 @@ mod tests {
         assert_eq!(r0.scale_probes, 21);
         assert_eq!(r0.range_symbols, 300);
         assert_eq!(r0.range_escapes, 9);
+        assert_eq!(r0.solver_iters, 8, "two accepted decodes at 4 iters each");
         assert!((r0.alpha_sum - 1.0).abs() < 1e-12);
         assert!(r0.rate_alloc_secs > 0.0);
         assert_eq!(r0.shards, 1, "one shard_fold span = one shard");

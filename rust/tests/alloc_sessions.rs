@@ -7,7 +7,10 @@
 //! `#[global_allocator]` and asserts the contract the session API
 //! documents: after the first (warm-up) chunk, `push` and `next_chunk`
 //! perform **zero** heap allocations for every single-pass/streaming
-//! codec (uveqfed, qsgd, terngrad, identity, signsgd).
+//! codec (uveqfed, qsgd, terngrad, identity, signsgd). Buffered
+//! pipeline codecs (fedvqcs) are audited under their own contract: all
+//! pushes allocation-free, all solver scratch confined to the first
+//! decode chunk.
 //!
 //! This file deliberately contains exactly one `#[test]`: the counter is
 //! process-global, so no other test may run concurrently in this binary.
@@ -108,6 +111,37 @@ fn steady_state_sessions_do_not_allocate() {
         assert_eq!(n, 0, "{name}: DecodeStream::next_chunk allocated {n} time(s)");
         assert_eq!(total, m, "{name}: decode stream yielded wrong length");
     }
+
+    // ── Pipeline codecs (fedvqcs): the session contract differs by
+    //    design, so the audit points differ too. The encode sink buffers
+    //    into one vector pre-reserved at session open, so *every* push —
+    //    including the first — must be allocation-free. On decode, the
+    //    first `next_chunk` is the documented solver-scratch allowance:
+    //    the terminal decode, the regenerated sketch matrix, and the IHT
+    //    iterate/residual buffers all materialize there (and only there).
+    //    After that warm-up the drain serves slices of the finished
+    //    reconstruction and must not allocate.
+    let codec = quantizer::make("fedvqcs:ratio=0.02,sparsity=0.05,solver_iters=5")
+        .expect("fedvqcs spec");
+    let ctx = CodecContext::new(3, 7, 11, 2.0);
+    let mut sink = codec.encoder(&ctx, m);
+    let chunks: Vec<&[f32]> = h.chunks(512).collect();
+    let n = counted(|| {
+        for c in &chunks {
+            sink.push(c);
+        }
+    });
+    assert_eq!(n, 0, "fedvqcs: buffered EncodeSink::push allocated {n} time(s)");
+    let enc = sink.finish();
+    let mut stream = codec.decoder(&enc, m, &ctx);
+    let mut total = stream.next_chunk().unwrap().expect("empty fedvqcs stream").len();
+    let n = counted(|| {
+        while let Some(c) = stream.next_chunk().unwrap() {
+            total += c.len();
+        }
+    });
+    assert_eq!(n, 0, "fedvqcs: steady-state next_chunk allocated {n} time(s)");
+    assert_eq!(total, m, "fedvqcs: decode stream yielded wrong length");
 
     // QSGD's sub-1-bit budget switches to the range-coded wire format,
     // which decodes through the batched SymbolMapStream — audit that

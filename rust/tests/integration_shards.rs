@@ -16,7 +16,7 @@ use uveqfed::fleet::{
     RatePlan, RoundSpec, Scenario, ShardPool, VirtualClock,
 };
 use uveqfed::models::LogReg;
-use uveqfed::quantizer;
+use uveqfed::quantizer::{self, DecodeBudget};
 use uveqfed::telemetry::Collector;
 
 /// The deterministic slice of a [`FleetRoundReport`]: everything except
@@ -147,6 +147,76 @@ fn shard_count_never_changes_model_or_report() {
             }
         }
     }
+}
+
+#[test]
+fn fedvqcs_round_is_bit_identical_across_topologies() {
+    // The pipeline codec's sketch + IHT solver draw only from the shared
+    // (user, round) randomness streams, so a full fedvqcs fleet round
+    // must honor the same invariant as every closed-form codec:
+    // bit-identical weights and reports across workers × shards × tracing.
+    // Cheap solver parameters keep the d×m sketch small on the 7850-entry
+    // LogReg model.
+    let spec = "fedvqcs:ratio=0.01,sparsity=0.05,solver_iters=5";
+    let (shards, trainer) = setup(12, 20, 43);
+    let pool = ShardPool::new(&shards);
+    let (w0, p0) = run_rounds(&trainer, &pool, spec, 1, 1, false, false);
+    assert!(p0.iter().all(|p| p.aggregated > 0), "empty rounds prove nothing");
+    for agg_shards in [1usize, 4] {
+        for workers in [1usize, 8] {
+            for traced in [false, true] {
+                if (agg_shards, workers, traced) == (1, 1, false) {
+                    continue; // the baseline itself
+                }
+                let (w, p) =
+                    run_rounds(&trainer, &pool, spec, agg_shards, workers, traced, false);
+                assert_eq!(
+                    w0, w,
+                    "fedvqcs: weights diverged at shards={agg_shards} \
+                     workers={workers} traced={traced}"
+                );
+                assert_eq!(
+                    p0, p,
+                    "fedvqcs: report diverged at shards={agg_shards} \
+                     workers={workers} traced={traced}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn exhausted_decode_budget_rejects_and_never_partially_folds() {
+    // Five solver iterations needed, two units of credit granted: every
+    // decode hits the typed budget error, every client quarantines, and
+    // the model must come through the round untouched — a budget-killed
+    // decode never contributes a partial fold.
+    let (shards, trainer) = setup(6, 20, 44);
+    let pool = ShardPool::new(&shards);
+    let codec = quantizer::make("fedvqcs:ratio=0.01,sparsity=0.05,solver_iters=5").unwrap();
+    let driver = FleetDriver::new(9, 2.0, 2, Scenario::full())
+        .with_shards(2)
+        .with_decode_budget(DecodeBudget::units(2));
+    let mut clock = VirtualClock::new();
+    let mut w = trainer.init_params(3);
+    let w_before = w.clone();
+    let spec = RoundSpec::new(0, 1, 0.5, 0, &trainer, codec.as_ref());
+    let rep = driver.run_round(&spec, &mut w, &pool, &mut clock);
+    assert!(rep.selected > 0);
+    assert_eq!(rep.aggregated, 0, "over-budget decodes must never fold");
+    assert_eq!(rep.rejected, rep.selected, "every decode exhausts the budget");
+    assert_eq!(w, w_before, "model must be bit-identical when nothing folds");
+
+    // The same round with enough credit folds everyone.
+    let driver_ok = FleetDriver::new(9, 2.0, 2, Scenario::full())
+        .with_shards(2)
+        .with_decode_budget(DecodeBudget::units(5));
+    let mut clock_ok = VirtualClock::new();
+    let mut w_ok = trainer.init_params(3);
+    let rep_ok = driver_ok.run_round(&spec, &mut w_ok, &pool, &mut clock_ok);
+    assert_eq!(rep_ok.rejected, 0);
+    assert_eq!(rep_ok.aggregated, rep_ok.selected);
+    assert_ne!(w_ok, w_before, "with credit the round must make progress");
 }
 
 #[test]

@@ -19,7 +19,10 @@ Checks, exiting non-zero on the first violation:
 * per round line: the aggregates reconcile exactly with the span lines of
   that round (clients / aggregated / rejected counts; assigned, achieved,
   uplink and wire sums — rejected transmits cost wire bytes but are never
-  metered as uplink bits; alpha_sum within 1e-9 of the fold-span sum);
+  metered as uplink bits; ``solver_iters`` equal to the sum over the
+  round's accepted decode spans — a budget-rejected decode records no
+  decode span, so its burned iterations never count; alpha_sum within
+  1e-9 of the fold-span sum);
 * the hostile-wire machinery reconciles two ways: the round line's
   ``retries`` equals the ``retry``-span count and ``quarantined`` equals
   the ``reject``-span count; every retry/reject span carries a non-empty
@@ -54,7 +57,7 @@ DATA_FIELDS = {
         "escapes",
     ),
     "transmit": ("wire_bytes", "payload_bits", "accepted"),
-    "decode": ("chunks", "entries", "shard"),
+    "decode": ("chunks", "entries", "shard", "solver_iters"),
     "fold": ("chunks", "entries", "alpha", "shard"),
     "rate_alloc": ("clients", "capacity_mass", "assigned_mass"),
     "shard_fold": ("shard", "folds", "chunks", "entries", "decode_secs", "fold_secs"),
@@ -88,6 +91,7 @@ def blank_round_tally():
         "achieved_bits": 0,
         "uplink_bits": 0,
         "wire_bytes": 0,
+        "solver_iters": 0,
         "alpha_sum": 0.0,
         "downlink_bytes": 0,
         "downlink_bits": 0,
@@ -134,6 +138,13 @@ def check_span(obj, lineno, tally):
             r["uplink_bits"] += data["payload_bits"]
         else:
             r["rejected"] += 1
+    elif kind == "decode":
+        require(
+            data["solver_iters"] >= 0,
+            lineno,
+            f"user {user}: negative solver_iters {data['solver_iters']}",
+        )
+        r["solver_iters"] += data["solver_iters"]
     elif kind == "fold":
         r["aggregated"] += 1
         r["alpha_sum"] += data["alpha"]
@@ -214,6 +225,7 @@ def check_round_line(obj, lineno, tally):
         "achieved_bits",
         "uplink_bits",
         "wire_bytes",
+        "solver_iters",
         "downlink_bytes",
         "downlink_bits",
         "resyncs",
